@@ -1,0 +1,68 @@
+//! Multi-GPU inference (TTFT) demo — the Fig 19 / Apdx D.3 scenario.
+//!
+//! Runs (a) a *measured* forward-only pass through the real sharded TP
+//! coordinator on the `small` config, and (b) the paper-scale TTFT table
+//! from the cost model (774M..8.3B on H200+NVLink).
+//!
+//! ```sh
+//! cargo run --release --example inference_tp -- [--tp 2]
+//! ```
+
+use std::path::Path;
+
+use fal::config::{ModelConfig, TrainConfig, Variant, NVLINK, PCIE_GEN4, H200};
+use fal::coordinator::tp_trainer::TpTrainer;
+use fal::costmodel::timemodel::inference_time;
+use fal::experiments::ExpCtx;
+use fal::util::cli::Args;
+use fal::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let tp = args.usize_or("tp", 2)?;
+    let ctx = ExpCtx::new(Path::new("artifacts"), 1.0)?;
+
+    // (a) Measured forward-only TP pass.
+    for variant in [Variant::PreLn, Variant::Fal] {
+        let mut t = TpTrainer::new(
+            &ctx.engine, "small", variant, tp, PCIE_GEN4,
+            TrainConfig::default())?;
+        let (_, loader) = ctx.loader("small", 0)?;
+        let b = loader.fixed_batch(1);
+        let t0 = std::time::Instant::now();
+        let loss = t.forward_loss(&b)?;
+        let s = t.ledger.stats();
+        println!(
+            "measured fwd ({}, tp={tp}): loss {loss:.3}, {} ARs, \
+             {:.2} MB, wall {:.2}s",
+            variant.name(),
+            s.allreduces,
+            s.allreduce_bytes / 1e6,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    // (b) Paper-scale TTFT table (Fig 19).
+    let mut table = Table::new(
+        "TTFT (s), H200 + NVLink, batch 1, seq 2048 (cost model)",
+        &["model", "gpus", "GPT-2", "FAL", "saving"],
+    );
+    for scale in ["774M", "2.5B", "8.3B"] {
+        let cfg = ModelConfig::paper_scale(scale)?;
+        for gpus in [1usize, 4, 8] {
+            let b = inference_time(&cfg, Variant::PreLn, &H200, &NVLINK,
+                                   gpus, 1, 2048);
+            let f = inference_time(&cfg, Variant::Fal, &H200, &NVLINK,
+                                   gpus, 1, 2048);
+            table.row(vec![
+                scale.into(),
+                gpus.to_string(),
+                format!("{b:.4}"),
+                format!("{f:.4}"),
+                format!("{:.1}%", 100.0 * (1.0 - f / b)),
+            ]);
+        }
+    }
+    print!("{}", table.render_text());
+    Ok(())
+}

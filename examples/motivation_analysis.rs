@@ -1,0 +1,23 @@
+//! Standalone motivation analysis (paper Sec 3): trains a Pre-LN model and
+//! reproduces Fig 3 (CKA, connection ablation) and Fig 4 (gradient
+//! magnitude, per-layer omission) at the `tiny` scale — fast enough for a
+//! laptop smoke run.
+//!
+//! ```sh
+//! cargo run --release --example motivation_analysis -- [--scale 0.5]
+//! ```
+
+use std::path::Path;
+
+use fal::experiments::{self, ExpCtx};
+use fal::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[])?;
+    let scale = args.f64_or("scale", 0.5)?;
+    let ctx = ExpCtx::new(Path::new("artifacts"), scale)?;
+    let report = experiments::run(&ctx, "appendix-c")?;
+    print!("{}", report.render_text());
+    report.save(Path::new("reports"))?;
+    Ok(())
+}

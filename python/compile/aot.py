@@ -1,0 +1,346 @@
+"""AOT pipeline: lower every L2 function to HLO text + a JSON manifest.
+
+Run once by `make artifacts`; Python never appears on the training hot path.
+
+Interchange format is HLO *text* (NOT lowered.compiler_ir("hlo").serialize()):
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the HLO text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs in --out (default ../artifacts):
+  <name>.hlo.txt          one per lowered function
+  params_<cfg>_s<seed>.bin  raw little-endian f32 initial parameters,
+                            concatenated in manifest order
+  manifest.json           artifact index: inputs/outputs (name,shape,dtype),
+                          parameter schema per config, artifact roles
+
+The Rust runtime (rust/src/runtime/artifact.rs) consumes manifest.json with a
+hand-rolled JSON parser, so this file keeps the JSON flat and predictable.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, model, stages, train_step
+from .configs import ModelConfig, TrainConfig
+
+DT = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_with_names(tree):
+    """Flatten a pytree to (dotted-name, leaf) pairs in canonical order."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        parts = []
+        for p in path:
+            if hasattr(p, "key"):
+                parts.append(str(p.key))
+            elif hasattr(p, "idx"):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        out.append((".".join(parts), leaf))
+    return out
+
+
+def spec_of(x):
+    return {"shape": list(x.shape), "dtype": DT[jnp.asarray(x).dtype]
+            if not isinstance(x, jax.ShapeDtypeStruct) else DT[x.dtype]}
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out = out_dir
+        self.force = force
+        self.entries = []
+        self.param_schemas = {}
+        self.configs_meta = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def _note_config(self, cfg: ModelConfig):
+        if cfg.name not in self.configs_meta:
+            self.configs_meta[cfg.name] = {
+                "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
+                "n_head": cfg.n_head, "n_kv_head": cfg.kv_heads,
+                "n_layer": cfg.n_layer, "d_ff": cfg.d_ff,
+                "seq_len": cfg.seq_len, "n_params": cfg.n_params,
+            }
+
+    def lower(self, name: str, fn, example_args, in_names, meta):
+        """Lower fn(example_args) to <name>.hlo.txt and record the entry."""
+        path = os.path.join(self.out, name + ".hlo.txt")
+        outs = jax.eval_shape(fn, *example_args)
+        flat_out, _ = jax.tree_util.tree_flatten(outs)
+        entry = {
+            "name": name,
+            "file": name + ".hlo.txt",
+            "inputs": [dict(spec_of(a), name=n)
+                       for n, a in zip(in_names, example_args)],
+            "outputs": [spec_of(o) for o in flat_out],
+            "meta": meta,
+        }
+        self.entries.append(entry)
+        if os.path.exists(path) and not self.force:
+            return
+        print(f"  lowering {name} ...", flush=True)
+        text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*example_args))
+        with open(path, "w") as fh:
+            fh.write(text)
+
+    # ---------------- model-level artifacts ----------------
+
+    def model_artifact(self, kind: str, cfg: ModelConfig,
+                       tc: TrainConfig = None, batch: int = 8):
+        """kind in {train_step, grad_step, eval_masked, score_options,
+        gradmag, capture}."""
+        self._note_config(cfg)
+        tc = tc or TrainConfig()
+        params = jax.eval_shape(lambda: model.init_params(cfg))
+        named = flatten_with_names(params)
+        pnames = [n for n, _ in named]
+        pspecs = [l for _, l in named]
+        self._param_schema(cfg, named)
+        b, s, l = batch, cfg.seq_len, cfg.n_layer
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        vecl = jax.ShapeDtypeStruct((l,), jnp.float32)
+        scal = jax.ShapeDtypeStruct((), jnp.float32)
+        tree = jax.tree_util.tree_structure(params)
+        unf = lambda flat: jax.tree_util.tree_unflatten(tree, flat)
+        np_ = len(pspecs)
+        vname = variant_tag(cfg)
+        name = f"{kind}_{cfg.name}_{vname}_b{batch}"
+        meta = {"kind": kind, "config": cfg.name, "variant": cfg.variant,
+                "batch": batch, "n_layer": l, "reuse_layer": cfg.reuse_layer,
+                "tag": vname, "use_pallas": cfg.use_pallas}
+
+        if kind == "train_step":
+            step = train_step.make_train_step(cfg, tc)
+
+            def fn(*args):
+                p = unf(args[:np_])
+                m = unf(args[np_:2 * np_])
+                v = unf(args[2 * np_:3 * np_])
+                stepc, lrs, tk, tg = args[3 * np_:3 * np_ + 4]
+                return step(p, m, v, stepc, lrs, tk, tg)
+
+            args = pspecs * 3 + [scal, scal, tok, tok]
+            names = ([f"p.{n}" for n in pnames] + [f"m.{n}" for n in pnames]
+                     + [f"v.{n}" for n in pnames]
+                     + ["step", "lr_scale", "tokens", "targets"])
+            meta["outputs"] = ["loss", "gnorm", "params", "m", "v"]
+        elif kind == "grad_step":
+            g = train_step.make_grad_step(cfg)
+
+            def fn(*args):
+                return g(unf(args[:np_]), args[np_], args[np_ + 1])
+
+            args = pspecs + [tok, tok]
+            names = [f"p.{n}" for n in pnames] + ["tokens", "targets"]
+            meta["outputs"] = ["loss", "grads"]
+        elif kind == "eval_masked":
+            def fn(*args):
+                p = unf(args[:np_])
+                tk, tg, ms, cs = args[np_:np_ + 4]
+                return model.eval_masked(cfg, p, tk, tg, ms, cs)
+
+            args = pspecs + [tok, tok, vecl, vecl]
+            names = [f"p.{n}" for n in pnames] + [
+                "tokens", "targets", "mha_scale", "conn_scale"]
+            meta["outputs"] = ["loss_sum", "count"]
+        elif kind == "score_options":
+            msk = jax.ShapeDtypeStruct((b, s), jnp.float32)
+
+            def fn(*args):
+                p = unf(args[:np_])
+                tk, tg, mk = args[np_:np_ + 3]
+                return model.score_options(cfg, p, tk, tg, mk)
+
+            args = pspecs + [tok, tok, msk]
+            names = [f"p.{n}" for n in pnames] + ["tokens", "targets", "mask"]
+            meta["outputs"] = ["loglik"]
+        elif kind == "gradmag":
+            def fn(*args):
+                p = unf(args[:np_])
+                return model.grad_magnitude(cfg, p, args[np_], args[np_ + 1])
+
+            args = pspecs + [tok, tok]
+            names = [f"p.{n}" for n in pnames] + ["tokens", "targets"]
+            meta["outputs"] = ["grad_norms"]
+        elif kind == "capture":
+            def fn(*args):
+                p = unf(args[:np_])
+                return model.capture_activations(cfg, p, args[np_])
+
+            args = pspecs + [tok]
+            names = [f"p.{n}" for n in pnames] + ["tokens"]
+            meta["outputs"] = ["mha_out", "mlp_in", "mlp_out"]
+        else:
+            raise ValueError(kind)
+        self.lower(name, fn, args, names, meta)
+
+    def _param_schema(self, cfg: ModelConfig, named):
+        if cfg.name in self.param_schemas:
+            return
+        self.param_schemas[cfg.name] = [
+            {"name": n, "shape": list(l.shape), "dtype": DT[l.dtype]}
+            for n, l in named
+        ]
+
+    def params_bin(self, cfg: ModelConfig, seed: int = 0):
+        """Write the initial parameter snapshot for `cfg` (all variants share
+        the schema, so one file per config+seed serves every variant)."""
+        self._note_config(cfg)
+        path = os.path.join(self.out, f"params_{cfg.name}_s{seed}.bin")
+        params = model.init_params(cfg, seed)
+        named = flatten_with_names(params)
+        self._param_schema(cfg, named)
+        if os.path.exists(path) and not self.force:
+            return
+        print(f"  writing {os.path.basename(path)}", flush=True)
+        with open(path, "wb") as fh:
+            for _, leaf in named:
+                fh.write(np.asarray(leaf, np.float32).tobytes())
+
+    # ---------------- TP stage artifacts ----------------
+
+    def tp_stages(self, cfg: ModelConfig, tp: int, batch: int,
+                  only=None):
+        self._note_config(cfg)
+        specs = stages.stage_specs(cfg, tp, batch)
+        for sname, (fn, args) in specs.items():
+            if only and sname not in only:
+                continue
+            name = f"tp{tp}_{cfg.name}_b{batch}_{sname}"
+            in_names = [f"in{i}" for i in range(len(args))]
+            self.lower(name, fn, args, in_names, {
+                "kind": "tp_stage", "stage": sname, "tp": tp,
+                "config": cfg.name, "batch": batch,
+            })
+
+    def write_manifest(self):
+        manifest = {
+            "version": 1,
+            "configs": self.configs_meta,
+            "param_schemas": self.param_schemas,
+            "artifacts": self.entries,
+        }
+        path = os.path.join(self.out, "manifest.json")
+        with open(path, "w") as fh:
+            json.dump(manifest, fh, indent=1)
+        print(f"manifest: {len(self.entries)} artifacts -> {path}")
+
+
+def variant_tag(cfg: ModelConfig) -> str:
+    tag = cfg.variant
+    if cfg.reuse_layer != 1:
+        tag += f"_k{cfg.reuse_layer}"
+    if cfg.n_kv_head and cfg.n_kv_head != cfg.n_head:
+        tag += "_gqa"
+    if cfg.n_expert > 1:
+        tag += "_moe"
+    return tag
+
+
+# ----------------------------------------------------------------------------
+# Artifact groups
+# ----------------------------------------------------------------------------
+
+QUALITY_VARIANTS = ("preln", "parallel", "fal", "falplus",
+                    "ablation1", "ablation2")
+
+
+def build_group(b: Builder, group: str):
+    g = configs.get_config
+    if group == "tiny":
+        cfg = g("tiny")
+        b.params_bin(cfg)
+        for v in QUALITY_VARIANTS:
+            b.model_artifact("train_step", cfg.with_variant(v), batch=4)
+        b.model_artifact("eval_masked", cfg, batch=4)
+        b.model_artifact("eval_masked", cfg.with_variant("fal"), batch=4)
+        b.model_artifact("grad_step", cfg, batch=4)
+        b.model_artifact("grad_step", cfg.with_variant("fal"), batch=4)
+        b.model_artifact("gradmag", cfg, batch=4)
+        b.model_artifact("capture", cfg, batch=4)
+        b.model_artifact("score_options", cfg, batch=4)
+        b.tp_stages(cfg, tp=2, batch=4)
+    elif group == "small":
+        cfg = g("small")
+        b.params_bin(cfg)
+        for v in QUALITY_VARIANTS:
+            b.model_artifact("train_step", cfg.with_variant(v), batch=8)
+        for v in ("preln", "parallel", "fal", "falplus"):
+            b.model_artifact("eval_masked", cfg.with_variant(v), batch=8)
+            b.model_artifact("score_options", cfg.with_variant(v), batch=8)
+        b.model_artifact("grad_step", cfg, batch=8)
+        b.model_artifact("grad_step", cfg.with_variant("fal"), batch=8)
+        b.model_artifact("gradmag", cfg, batch=8)
+        b.model_artifact("capture", cfg, batch=8)
+        b.model_artifact("gradmag", cfg.with_variant("fal"), batch=8)
+        # Fig 17: FAL+ reusing later layers.
+        for k in (2, 3):
+            b.model_artifact(
+                "train_step", cfg.with_variant("falplus", reuse_layer=k),
+                batch=8)
+        # Fig 20: GQA and MoE-attention hosts.
+        for v in ("preln", "fal", "falplus"):
+            b.model_artifact(
+                "train_step", cfg.with_variant(v, n_kv_head=2), batch=8)
+            b.model_artifact(
+                "train_step", cfg.with_variant(v, n_expert=2), batch=8)
+    elif group == "tp":
+        cfg = g("small")
+        b.params_bin(cfg)
+        for tp in (2, 4):
+            b.tp_stages(cfg, tp=tp, batch=8)
+    elif group == "deep":
+        for cname in ("deep8", "deep12"):
+            cfg = g(cname)
+            b.params_bin(cfg)
+            for v in ("preln", "fal", "falplus"):
+                b.model_artifact("train_step", cfg.with_variant(v), batch=8)
+    elif group == "e2e":
+        cfg = g("e2e")
+        b.params_bin(cfg)
+        for v in ("preln", "fal"):
+            b.model_artifact("train_step", cfg.with_variant(v), batch=4)
+        b.model_artifact("eval_masked", cfg.with_variant("fal"), batch=4)
+    else:
+        raise ValueError(group)
+
+
+DEFAULT_GROUPS = ("tiny", "small", "tp", "deep", "e2e")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--groups", default=",".join(DEFAULT_GROUPS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+    b = Builder(args.out, force=args.force)
+    for group in args.groups.split(","):
+        print(f"group {group}:")
+        build_group(b, group.strip())
+    b.write_manifest()
+
+
+if __name__ == "__main__":
+    main()

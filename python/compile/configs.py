@@ -1,0 +1,120 @@
+"""Model / training configurations shared by the compile pipeline.
+
+These mirror the Rust-side `config` module (rust/src/config/mod.rs); the
+manifest emitted by aot.py carries enough shape metadata that the Rust
+coordinator never needs to re-derive anything from here at runtime.
+"""
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+VARIANTS = (
+    "preln",      # eq (1)/(5): standard Pre-LN GPT block
+    "parallel",   # GPT-J/PaLM-style: MHA and MLP share the block input
+    "fal",        # eq (2)/(6): first attention replaces MHA->MLP connection
+    "falplus",    # eq (7): first attention augments MHA->MLP connection
+    "ablation1",  # eq (3): LN+LN reconfiguration but with the *latest* attn
+    "ablation2",  # eq (4): drop all MHA->MLP connections except block 1
+)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_head: int
+    n_layer: int
+    d_ff: int
+    seq_len: int
+    variant: str = "preln"
+    # Grouped-query attention: number of KV heads (== n_head -> MHA).
+    n_kv_head: Optional[int] = None
+    # MoE-attention (Switch-style): number of query-projection experts.
+    n_expert: int = 0
+    # FAL+/FAL reuse source layer (1-based). 1 == the paper's FAL; Fig 17
+    # ablates 2, 3, ... Only meaningful for fal/falplus variants.
+    reuse_layer: int = 1
+    # Route the attention forward through the Pallas kernel (custom_vjp with a
+    # jnp backward). False falls back to the pure-jnp reference path, which
+    # lowers to a smaller HLO (used for the large e2e config on CPU).
+    use_pallas: bool = True
+    dtype: str = "f32"
+
+    def __post_init__(self):
+        assert self.variant in VARIANTS, self.variant
+        assert self.d_model % self.n_head == 0
+        kv = self.n_kv_head or self.n_head
+        assert self.n_head % kv == 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_head
+
+    @property
+    def kv_heads(self) -> int:
+        return self.n_kv_head or self.n_head
+
+    @property
+    def n_params(self) -> int:
+        """Parameter count (tied input/output embedding)."""
+        d, f, l = self.d_model, self.d_ff, self.n_layer
+        kv = self.kv_heads * self.head_dim
+        attn = d * d + 2 * d * kv + d * d  # wq, wk, wv, wo
+        if self.n_expert > 1:
+            attn += (self.n_expert - 1) * d * d + d * self.n_expert
+        mlp = d * f + f + f * d + d
+        lns = 4 * d  # ln1, ln2 (gamma+beta)
+        extra = 2 * d  # lnf (fal block1 / falplus+ablation1 per-block)
+        per_layer = attn + mlp + lns + extra
+        return (
+            self.vocab_size * d
+            + self.seq_len * d
+            + l * per_layer
+            + 2 * d  # final LN
+        )
+
+    def with_variant(self, variant: str, **kw) -> "ModelConfig":
+        return replace(self, variant=variant, **kw)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    batch_size: int = 8
+    lr: float = 1e-3
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+# ----------------------------------------------------------------------------
+# Presets. `tiny` drives unit tests, `small` drives the quality experiments,
+# `smalldeep`/`deep*` drive the Fig 9 depth scaling, `e2e` is the ~100M-param
+# end-to-end training demo. Paper-scale shapes (774M..8.3B) are *not* lowered;
+# they exist only inside the Rust cost model.
+# ----------------------------------------------------------------------------
+
+PRESETS = {
+    "tiny": ModelConfig("tiny", vocab_size=256, d_model=64, n_head=4,
+                        n_layer=4, d_ff=256, seq_len=64),
+    # CPU-testbed choice: the `small`/`deep*`/`e2e` experiment configs lower
+    # the pure-jnp reference path (use_pallas=False) — the interpret-mode
+    # Pallas emulation is ~2x slower on CPU PJRT and numerically identical
+    # (kernel-vs-ref equivalence is pytest-enforced); `tiny` keeps the Pallas
+    # path end-to-end so the kernels are exercised from Rust as well.
+    "small": ModelConfig("small", vocab_size=1024, d_model=192, n_head=8,
+                         n_layer=6, d_ff=768, seq_len=96, use_pallas=False),
+    "deep8": ModelConfig("deep8", vocab_size=1024, d_model=192, n_head=8,
+                         n_layer=8, d_ff=768, seq_len=96, use_pallas=False),
+    "deep12": ModelConfig("deep12", vocab_size=1024, d_model=192, n_head=8,
+                          n_layer=12, d_ff=768, seq_len=96,
+                          use_pallas=False),
+    "e2e": ModelConfig("e2e", vocab_size=8192, d_model=768, n_head=12,
+                       n_layer=12, d_ff=3072, seq_len=128, use_pallas=False),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    return PRESETS[name]

@@ -1,0 +1,9 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .attention import flash_attention, vmem_footprint_bytes  # noqa: F401
+from .fused_ln_add import (  # noqa: F401
+    dual_layernorm_add,
+    hbm_bytes_saved,
+    ln_residual_add,
+)

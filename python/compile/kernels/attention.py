@@ -1,0 +1,135 @@
+"""Flash-style causal attention as a Pallas kernel (L1 hot-spot).
+
+The paper's single-GPU result leans on FlashAttention to raise the arithmetic
+intensity of the attention phase (Sec 6.3). The CUDA formulation (threadblocks
+staging K/V tiles through shared memory) is re-expressed for the TPU memory
+hierarchy: each grid step holds one Q tile resident in VMEM and streams K/V
+tiles from HBM under an online-softmax recurrence, so the S = QK^T matrix is
+never materialized in HBM. BlockSpec plays the role the CUDA grid played.
+
+Kernels are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls); the real-TPU efficiency estimate lives in DESIGN.md §9.
+
+Autodiff: pallas_call has no derivative rule, so `flash_attention` carries a
+custom_vjp whose backward is the (recomputing) pure-jnp formula from ref.py —
+the standard flash split of "tiled forward, rematerializing backward".
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, block_k, seq_len):
+    """One (batch, head, q-tile) grid step of the online-softmax recurrence."""
+    block_q, head_dim = q_ref.shape
+    iq = pl.program_id(2)
+    q = q_ref[...] * scale  # [BQ, Dh], VMEM-resident for the whole step
+
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)  # global rows
+
+    # Only KV tiles at or below the diagonal contribute under causal masking.
+    num_kb = (iq * block_q + block_q + block_k - 1) // block_k
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k = pl.load(k_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(j * block_k, block_k), slice(None)))
+        s = q @ k.T  # [BQ, BK]
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        valid = k_pos[None, :] < seq_len
+        s = jnp.where(causal & valid, s, -1e30)
+
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, head_dim), jnp.float32)
+    m0 = jnp.full((block_q,), -1e30, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, _, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+    o_ref[...] = acc / l_i[:, None]
+
+
+def _flash_attention_fwd_impl(q, k, v, *, block_q, block_k):
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    # Clamp tile sizes to the next power of two >= s (keeps both tile sizes
+    # powers of two, so padding to the larger one satisfies both).
+    p2 = 1
+    while p2 < s:
+        p2 *= 2
+    block_q = min(block_q, p2)
+    block_k = min(block_k, p2)
+    # Pad S so both tile sizes divide it; masked out by the kernel.
+    s_pad = -(-s // max(block_q, block_k)) * max(block_q, block_k)
+    if s_pad != s:
+        pad = ((0, 0), (0, 0), (0, s_pad - s), (0, 0))
+        q, k, v = jnp.pad(q, pad), jnp.pad(k, pad), jnp.pad(v, pad)
+    grid = (b, h, s_pad // block_q)
+    group = h // hkv  # GQA: query head -> serving KV head
+
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel, scale=scale, block_k=block_k, seq_len=s
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, block_q, dh), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, s_pad, dh), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((None, None, s_pad, dh), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, block_q, dh), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s_pad, dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+    return out[:, :, :s, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K):
+    """Causal attention. q [B,H,S,Dh]; k,v [B,Hkv,S,Dh]; GQA when Hkv < H."""
+    return _flash_attention_fwd_impl(q, k, v, block_q=block_q, block_k=block_k)
+
+
+def _fwd(q, k, v, block_q, block_k):
+    o = _flash_attention_fwd_impl(q, k, v, block_q=block_q, block_k=block_k)
+    return o, (q, k, v)
+
+
+def _bwd(block_q, block_k, res, do):
+    q, k, v = res
+    # Rematerializing backward through the reference formula (numerically
+    # identical attention); this is what the flash backward kernel computes.
+    _, vjp = jax.vjp(ref.causal_attention, q, k, v)
+    return vjp(do)
+
+
+flash_attention.defvjp(_fwd, _bwd)
+
+
+def vmem_footprint_bytes(block_q: int, block_k: int, head_dim: int,
+                         seq_len: int) -> int:
+    """Estimated VMEM working set per grid step, f32.
+
+    q tile + streamed k/v tile + accumulator + softmax stats. Used by the
+    DESIGN.md §9 TPU estimate and the kernel-shape perf sweep.
+    """
+    q_tile = block_q * head_dim
+    kv_tile = 2 * block_k * head_dim
+    acc = block_q * head_dim
+    stats = 2 * block_q
+    out = block_q * head_dim
+    return 4 * (q_tile + kv_tile + acc + stats + out)

@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle to tight f32 tolerances
+(pytest + hypothesis sweeps in python/tests/). These are also the fallback
+forward path for configs with use_pallas=False, and they supply the backward
+formulas for the kernels' custom_vjp rules.
+"""
+
+import jax.numpy as jnp
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis with affine parameters."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jnp.reciprocal(jnp.sqrt(var + eps)) * gamma + beta
+
+
+def dual_layernorm_add(x, a, gx, bx, ga, ba, eps: float = 1e-5):
+    """FAL MLP-input fusion: LN(x; gx, bx) + LN(a; ga, ba) in one pass.
+
+    In the FAL block, `x` is the block input and `a` the first block's MHA
+    output; both normalizations feed a single add, so a fused kernel does one
+    VMEM round-trip instead of three (two LNs + add).
+    """
+    return layernorm(x, gx, bx, eps) + layernorm(a, ga, ba, eps)
+
+
+def causal_attention(q, k, v, scale=None):
+    """Causal multi-head attention.
+
+    q: [B, H, S, Dh]; k, v: [B, Hkv, S, Dh] with H % Hkv == 0 (GQA: each KV
+    head serves H/Hkv query heads). Returns [B, H, S, Dh].
+    """
+    b, h, s, dh = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    logits = jnp.where(mask, logits, jnp.asarray(-1e30, q.dtype))
+    probs = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def gelu(x):
+    """tanh-approximated GeLU (matches GPT-2)."""
+    c = jnp.asarray(0.7978845608028654, x.dtype)  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def softmax_xent(logits, targets):
+    """Mean token-level cross entropy. logits [N, V], targets [N] int32."""
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    gold = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)

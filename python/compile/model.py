@@ -1,0 +1,284 @@
+"""L2: the transformer model family (all paper variants), in JAX.
+
+Build-time only. Every function here is lowered to HLO text by aot.py and
+executed from the Rust coordinator; nothing in this package runs on the
+training hot path.
+
+Variant semantics (paper eq. numbers in parentheses):
+
+  preln     (1)/(5): X + MHA(LN1(X)) + MLP(LN2(X + MHA(LN1(X))))
+  parallel        : X + MHA(N) + MLP(N),  N = LN1(X)   (GPT-J / PaLM style)
+  fal       (2)/(6): X + MHA_i(LN1(X)) + MLP(LN2(X) + FA),
+                     FA = LNf(MHA_1(LN1(X_1))) computed once in block 1
+  falplus      (7): block 1 = X + A + MLP(LN2(X) + A);
+                     i>1: X + A_i + MLP(LN2(X + A_i) + LNf_i(A_1))
+  ablation1    (3): X + A_i + MLP(LN2(X) + LNf_i(A_i))   (latest attention)
+  ablation2    (4): block 1 = preln; i>1: X + A_i + MLP(LN2(X))
+
+Eval-time connection surgery (Fig 3b / Fig 4b / Apdx C) is expressed through
+two runtime vectors `mha_scale[L]` and `conn_scale[L]`: the block output uses
+A_i * mha_scale[i] in the residual stream and the MLP input sees
+A_i * conn_scale[i], so one compiled eval executable covers "All MHA",
+"All Connect" and every per-layer omission without recompilation.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import attention as attn_k
+from .kernels import fused_ln_add as ln_k
+from .kernels import ref
+
+
+# ----------------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------------
+
+def init_params(cfg: configs.ModelConfig, seed: int = 0):
+    """GPT-2-style init: N(0, 0.02), residual projections scaled 1/sqrt(2L)."""
+    key = jax.random.PRNGKey(seed)
+    d, f = cfg.d_model, cfg.d_ff
+    dkv = cfg.kv_heads * cfg.head_dim
+    std = 0.02
+    resid_std = std / (2 * cfg.n_layer) ** 0.5
+
+    def nrm(key, shape, s=std):
+        return (s * jax.random.normal(key, shape)).astype(jnp.float32)
+
+    keys = jax.random.split(key, 4 + cfg.n_layer)
+    params = {
+        "wte": nrm(keys[0], (cfg.vocab_size, d)),
+        "wpe": nrm(keys[1], (cfg.seq_len, d), 0.01),
+        "lnF_g": jnp.ones(d), "lnF_b": jnp.zeros(d),
+        "blocks": [],
+    }
+    for li in range(cfg.n_layer):
+        ks = jax.random.split(keys[4 + li], 8)
+        blk = {
+            "ln1_g": jnp.ones(d), "ln1_b": jnp.zeros(d),
+            "ln2_g": jnp.ones(d), "ln2_b": jnp.zeros(d),
+            "lnf_g": jnp.ones(d), "lnf_b": jnp.zeros(d),
+            "wq": nrm(ks[0], (d, d)),
+            "wk": nrm(ks[1], (d, dkv)),
+            "wv": nrm(ks[2], (d, dkv)),
+            "wo": nrm(ks[3], (d, d), resid_std),
+            "w1": nrm(ks[4], (d, f)), "b1": jnp.zeros(f),
+            "w2": nrm(ks[5], (f, d), resid_std), "b2": jnp.zeros(d),
+        }
+        if cfg.n_expert > 1:
+            blk["router"] = nrm(ks[6], (d, cfg.n_expert))
+            blk["wq_experts"] = nrm(ks[7], (cfg.n_expert, d, d))
+        params["blocks"].append(blk)
+    return params
+
+
+# ----------------------------------------------------------------------------
+# Modules
+# ----------------------------------------------------------------------------
+
+def _split_heads(x, n_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_head, -1).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def mha(cfg: configs.ModelConfig, blk, xn):
+    """Multi-head attention over a pre-normalized input xn [B,S,D].
+
+    Supports GQA (n_kv_head < n_head) and Switch-style MoE query projection
+    (per-token softmax mixture over expert Q projections, Apdx E.1).
+    """
+    if cfg.n_expert > 1:
+        gate = jax.nn.softmax(xn @ blk["router"], axis=-1)  # [B,S,E]
+        qs = jnp.einsum("bsd,edk->bsek", xn, blk["wq_experts"])
+        q = jnp.einsum("bse,bsek->bsk", gate, qs) + xn @ blk["wq"]
+    else:
+        q = xn @ blk["wq"]
+    k = xn @ blk["wk"]
+    v = xn @ blk["wv"]
+    qh = _split_heads(q, cfg.n_head)
+    kh = _split_heads(k, cfg.kv_heads)
+    vh = _split_heads(v, cfg.kv_heads)
+    if cfg.use_pallas:
+        oh = attn_k.flash_attention(qh, kh, vh)
+    else:
+        oh = ref.causal_attention(qh, kh, vh)
+    return _merge_heads(oh) @ blk["wo"]
+
+
+def mlp(blk, h):
+    return ref.gelu(h @ blk["w1"] + blk["b1"]) @ blk["w2"] + blk["b2"]
+
+
+def _ln(x, g, b):
+    return ref.layernorm(x, g, b)
+
+
+def block_fwd(cfg, blk, x, fa, li, mha_s=1.0, conn_s=1.0, probe=None):
+    """One transformer block.
+
+    x: block input [B,S,D]; fa: stored first-attention signal (LNf(A_1) for
+    fal, raw A_1 for falplus; None before the reuse layer has run); li: layer
+    index (0-based); mha_s / conn_s: eval-surgery gates (1.0 in training);
+    probe: optional [B,S,D] tensor added to the MHA output (Fig 4a probe).
+
+    Returns (x_out, new_fa, aux dict of mha_out / mlp_in / mlp_out).
+    """
+    v = cfg.variant
+    a = mha(cfg, blk, _ln(x, blk["ln1_g"], blk["ln1_b"]))
+    if probe is not None:
+        a = a + probe
+    a_out = a * mha_s   # contribution to the residual stream
+    a_conn = a * conn_s  # contribution to the MLP input path
+
+    if v == "preln":
+        mlp_in = _ln(x + a_conn, blk["ln2_g"], blk["ln2_b"])
+    elif v == "parallel":
+        mlp_in = _ln(x, blk["ln2_g"], blk["ln2_b"])
+    elif v == "fal":
+        if fa is None:
+            # Preparation block: LN repositioned onto the MHA output
+            # (footnote 3) so later blocks reuse the normalized tensor.
+            fa = _ln(a_conn, blk["lnf_g"], blk["lnf_b"])
+        if cfg.use_pallas:
+            mlp_in = ln_k.ln_residual_add(x, fa, blk["ln2_g"], blk["ln2_b"])
+        else:
+            mlp_in = _ln(x, blk["ln2_g"], blk["ln2_b"]) + fa
+    elif v == "falplus":
+        if fa is None:
+            fa = a_conn  # stored raw; each later block applies its own LNf
+            mlp_in = _ln(x, blk["ln2_g"], blk["ln2_b"]) + fa
+        elif cfg.use_pallas:
+            mlp_in = ln_k.dual_layernorm_add(
+                x + a_conn, fa, blk["ln2_g"], blk["ln2_b"],
+                blk["lnf_g"], blk["lnf_b"],
+            )
+        else:
+            mlp_in = _ln(x + a_conn, blk["ln2_g"], blk["ln2_b"]) + _ln(
+                fa, blk["lnf_g"], blk["lnf_b"]
+            )
+    elif v == "ablation1":
+        if cfg.use_pallas:
+            mlp_in = ln_k.dual_layernorm_add(
+                x, a_conn, blk["ln2_g"], blk["ln2_b"],
+                blk["lnf_g"], blk["lnf_b"],
+            )
+        else:
+            mlp_in = _ln(x, blk["ln2_g"], blk["ln2_b"]) + _ln(
+                a_conn, blk["lnf_g"], blk["lnf_b"]
+            )
+    elif v == "ablation2":
+        if li == 0:
+            mlp_in = _ln(x + a_conn, blk["ln2_g"], blk["ln2_b"])
+        else:
+            mlp_in = _ln(x, blk["ln2_g"], blk["ln2_b"])
+    else:  # pragma: no cover
+        raise ValueError(v)
+
+    m = mlp(blk, mlp_in)
+    out = x + a_out + m
+    return out, fa, {"mha_out": a, "mlp_in": mlp_in, "mlp_out": m}
+
+
+def model_fwd(cfg, params, tokens, mha_scale=None, conn_scale=None,
+              capture=False, probes=None):
+    """Full forward. tokens [B,S] int32 -> logits [B,S,V].
+
+    mha_scale / conn_scale: optional [L] gates for eval-time surgery.
+    probes: optional [L,B,S,D] tensor added to each block's MHA output —
+    grad(loss, probes) is the Fig 4a gradient-magnitude measurement.
+    capture=True additionally returns stacked per-block activations.
+    """
+    b, s = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][None, :s, :]
+    fa = None
+    caps = {"mha_out": [], "mlp_in": [], "mlp_out": []}
+    for li, blk in enumerate(params["blocks"]):
+        ms = 1.0 if mha_scale is None else mha_scale[li]
+        cs = 1.0 if conn_scale is None else conn_scale[li]
+        pr = None if probes is None else probes[li]
+        # reuse_layer > 1 (Fig 17): run as preln until the reuse source block.
+        store = (li + 1) >= cfg.reuse_layer
+        eff_cfg = cfg if store else cfg.with_variant("preln")
+        x, fa_new, aux = block_fwd(eff_cfg, blk, x, fa, li, ms, cs, pr)
+        if store:
+            fa = fa_new
+        if capture:
+            for k in caps:
+                caps[k].append(aux[k])
+    xn = _ln(x, params["lnF_g"], params["lnF_b"])
+    logits = xn @ params["wte"].T
+    if capture:
+        return logits, {k: jnp.stack(v) for k, v in caps.items()}
+    return logits
+
+
+# ----------------------------------------------------------------------------
+# Losses / eval heads
+# ----------------------------------------------------------------------------
+
+def loss_fn(cfg, params, tokens, targets, mha_scale=None, conn_scale=None):
+    """Mean next-token cross-entropy. targets [B,S] int32 (already shifted)."""
+    logits = model_fwd(cfg, params, tokens, mha_scale, conn_scale)
+    v = logits.shape[-1]
+    return ref.softmax_xent(logits.reshape(-1, v), targets.reshape(-1))
+
+
+def eval_masked(cfg, params, tokens, targets, mha_scale, conn_scale):
+    """Per-batch total loss + token count (Rust accumulates exact PPL)."""
+    logits = model_fwd(cfg, params, tokens, mha_scale, conn_scale)
+    v = logits.shape[-1]
+    flat = logits.reshape(-1, v)
+    t = targets.reshape(-1)
+    m = jnp.max(flat, axis=-1, keepdims=True)
+    lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(flat - m), axis=-1))
+    gold = jnp.take_along_axis(flat, t[:, None], axis=-1)[:, 0]
+    return jnp.sum(lse - gold), jnp.asarray(t.shape[0], jnp.float32)
+
+
+def score_options(cfg, params, tokens, targets, mask):
+    """Zero-shot option scoring: total log-likelihood of masked positions.
+
+    tokens/targets [B,S]; mask [B,S] in {0,1} marks the completion region.
+    Returns [B] sum log p(target | prefix) over masked positions — the
+    SuperGLUE-style likelihood-ranking primitive (Table 1 right).
+    """
+    logits = model_fwd(cfg, params, tokens)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum((gold - lse) * mask, axis=-1)
+
+
+def grad_magnitude(cfg, params, tokens, targets):
+    """Fig 4a: L2 norm of dLoss/d(MHA_i output) for every block -> [L]."""
+    b, s = tokens.shape
+    shape = (cfg.n_layer, b, s, cfg.d_model)
+
+    def f(probes):
+        logits = model_fwd(cfg, params, tokens, probes=probes)
+        v = logits.shape[-1]
+        return ref.softmax_xent(logits.reshape(-1, v), targets.reshape(-1))
+
+    g = jax.grad(f)(jnp.zeros(shape, jnp.float32))
+    return jnp.sqrt(jnp.sum(jnp.square(g), axis=(1, 2, 3)))
+
+
+def capture_activations(cfg, params, tokens):
+    """Fig 3a inputs: stacked [L,B,S,D] mha_out / mlp_in / mlp_out."""
+    _, caps = model_fwd(cfg, params, tokens, capture=True)
+    return caps["mha_out"], caps["mlp_in"], caps["mlp_out"]
+
+
+def ln_scales(cfg, params):
+    """Fig 18: per-block [mean |gamma_lnf|, mean |gamma_ln2|] -> [L, 2]."""
+    rows = []
+    for blk in params["blocks"]:
+        rows.append([jnp.mean(jnp.abs(blk["lnf_g"])),
+                     jnp.mean(jnp.abs(blk["ln2_g"]))])
+    return jnp.asarray(rows)

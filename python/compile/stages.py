@@ -1,0 +1,216 @@
+"""TP-sharded stage functions (L2) — the compute between Rust collectives.
+
+Megatron-style tensor parallelism over t shards: attention is split by heads
+(wq/wk/wv column-sharded, wo row-sharded), the MLP by hidden dim (w1 column-,
+w2 row-sharded). Each stage below is the *per-shard* computation; the Rust
+coordinator (rust/src/coordinator/tp_trainer.rs) performs the all-reduce /
+broadcast / aggregate between stages and therefore owns the paper's
+communication schedule:
+
+  Pre-LN block:  attn_fwd -> AR -> mlp_preln_fwd -> AR          (2 AR fwd)
+                 mlp bwd  -> AR -> attn bwd -> AR               (2 AR bwd)
+  FAL block i>1: fal_fused_fwd -> AR                            (1 AR fwd)
+                 fal_fused_bwd -> AR (dx; dfa folded in)        (1 AR bwd)
+  FAL block 1:   attn_fwd -> AR -> lnf_fwd -> mlp_fal_fwd -> AR
+
+Replication conventions (documented in DESIGN.md §4): LN parameters are
+replicated (their grads are summed across shards by the coordinator); mlp b2
+lives on shard 0 (other shards receive zeros); embedding and loss head run on
+shard 0 with the full vocabulary, with the block input broadcast to shards
+(the paper's Fig 2 "Broadcast"/"Aggregate" steps).
+
+Every stage has a `*_bwd` companion lowered from jax.vjp so the Rust TP
+trainer can run a full backward pass with real numerics.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs
+from .kernels import ref
+
+
+# ----------------------------------------------------------------------------
+# Shard geometry
+# ----------------------------------------------------------------------------
+
+def shard_dims(cfg: configs.ModelConfig, tp: int):
+    assert cfg.n_head % tp == 0, (cfg.n_head, tp)
+    assert cfg.kv_heads % tp == 0, (cfg.kv_heads, tp)
+    assert cfg.d_ff % tp == 0
+    return {
+        "heads": cfg.n_head // tp,
+        "kv_heads": cfg.kv_heads // tp,
+        "d_attn": (cfg.n_head // tp) * cfg.head_dim,
+        "d_kv": (cfg.kv_heads // tp) * cfg.head_dim,
+        "d_ff": cfg.d_ff // tp,
+    }
+
+
+# ----------------------------------------------------------------------------
+# Forward stages
+# ----------------------------------------------------------------------------
+
+def embed_fwd(tokens, wte, wpe):
+    """tokens [B,S] i32 -> x [B,S,D]. Shard-0 only."""
+    s = tokens.shape[1]
+    return wte[tokens] + wpe[None, :s, :]
+
+
+def embed_bwd(tokens, wte, wpe, dx):
+    """-> (dwte, dwpe). (wte/wpe passed for shape; grads are data-independent
+    of their values but vjp keeps the signature uniform.)"""
+    _, vjp = jax.vjp(lambda a, b: embed_fwd(tokens, a, b), wte, wpe)
+    return vjp(dx)
+
+
+def make_attn_fwd(cfg: configs.ModelConfig, tp: int):
+    sd = shard_dims(cfg, tp)
+
+    def f(x, ln1_g, ln1_b, wq, wk, wv, wo):
+        """x [B,S,D] replicated -> partial attention output [B,S,D].
+
+        wq [D, d_attn], wk/wv [D, d_kv], wo [d_attn, D]. Summing the result
+        over shards (all-reduce) yields the full MHA output.
+        """
+        xn = ref.layernorm(x, ln1_g, ln1_b)
+        b, s, _ = x.shape
+        q = (xn @ wq).reshape(b, s, sd["heads"], cfg.head_dim)
+        k = (xn @ wk).reshape(b, s, sd["kv_heads"], cfg.head_dim)
+        v = (xn @ wv).reshape(b, s, sd["kv_heads"], cfg.head_dim)
+        o = ref.causal_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3),
+        )
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, sd["d_attn"])
+        return o @ wo
+
+    return f
+
+
+def make_mlp_preln_fwd(cfg: configs.ModelConfig, tp: int):
+    def f(h, ln2_g, ln2_b, w1, b1, w2, b2):
+        """h = x + full MHA out (replicated) -> partial MLP output."""
+        hn = ref.layernorm(h, ln2_g, ln2_b)
+        return ref.gelu(hn @ w1 + b1) @ w2 + b2
+
+    return f
+
+
+def make_mlp_fal_fwd(cfg: configs.ModelConfig, tp: int):
+    def f(x, fa, ln2_g, ln2_b, w1, b1, w2, b2):
+        """FAL block-1 MLP: input LN2(x) + fa (fa already normalized)."""
+        hn = ref.layernorm(x, ln2_g, ln2_b) + fa
+        return ref.gelu(hn @ w1 + b1) @ w2 + b2
+
+    return f
+
+
+def lnf_fwd(a, g, b):
+    """FAL block-1 LNf over the assembled first MHA output."""
+    return ref.layernorm(a, g, b)
+
+
+def lnf_bwd(a, g, b, dout):
+    _, vjp = jax.vjp(lambda a_, g_, b_: ref.layernorm(a_, g_, b_), a, g, b)
+    return vjp(dout)
+
+
+def make_fal_fused_fwd(cfg: configs.ModelConfig, tp: int):
+    attn = make_attn_fwd(cfg, tp)
+    mlp = make_mlp_fal_fwd(cfg, tp)
+
+    def f(x, fa, ln1_g, ln1_b, ln2_g, ln2_b, wq, wk, wv, wo,
+          w1, b1, w2, b2):
+        """FAL block i>1: MHA and MLP are independent given (x, fa), so one
+        stage returns a_partial + mlp_partial and the block needs a single
+        all-reduce: X' = X + AR(out). This is the paper's Fig 2(b)."""
+        a_p = attn(x, ln1_g, ln1_b, wq, wk, wv, wo)
+        m_p = mlp(x, fa, ln2_g, ln2_b, w1, b1, w2, b2)
+        return a_p + m_p
+
+    return f
+
+
+def head_fwd_bwd(x, lnF_g, lnF_b, wte, targets):
+    """Loss head on shard 0: -> (loss_sum, count, dx, dlnF_g, dlnF_b, dwte).
+
+    Combined fwd+bwd in one executable: the backward starts here anyway, and
+    fusing avoids shipping [B,S,V] logits back to the coordinator.
+    """
+
+    def f(x_, g_, b_, w_):
+        xn = ref.layernorm(x_, g_, b_)
+        logits = xn @ w_.T
+        v = logits.shape[-1]
+        flat = logits.reshape(-1, v)
+        t = targets.reshape(-1)
+        m = jnp.max(flat, axis=-1, keepdims=True)
+        lse = m[:, 0] + jnp.log(jnp.sum(jnp.exp(flat - m), axis=-1))
+        gold = jnp.take_along_axis(flat, t[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    loss, vjp = jax.vjp(f, x, lnF_g, lnF_b, wte)
+    dx, dg, db, dwte = vjp(jnp.asarray(1.0, jnp.float32))
+    count = jnp.asarray(targets.size, jnp.float32)
+    return loss, count, dx, dg, db, dwte
+
+
+def make_bwd(fwd_fn, n_args: int):
+    """Generic VJP stage: (primals..., dout) -> grads for every primal."""
+
+    def b(*args):
+        primals, dout = args[:n_args], args[n_args]
+        _, vjp = jax.vjp(fwd_fn, *primals)
+        return vjp(dout)
+
+    return b
+
+
+# ----------------------------------------------------------------------------
+# Example-argument builders (shapes for AOT lowering)
+# ----------------------------------------------------------------------------
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def stage_specs(cfg: configs.ModelConfig, tp: int, batch: int):
+    """Name -> (callable, [ShapeDtypeStruct inputs]) for every TP stage."""
+    sd = shard_dims(cfg, tp)
+    b, s, d, f = batch, cfg.seq_len, cfg.d_model, cfg.d_ff
+    x = _sds((b, s, d))
+    vec = _sds((d,))
+    tok = _sds((b, s), jnp.int32)
+    wte = _sds((cfg.vocab_size, d))
+    wpe = _sds((s, d))
+    attn_w = [_sds((d, sd["d_attn"])), _sds((d, sd["d_kv"])),
+              _sds((d, sd["d_kv"])), _sds((sd["d_attn"], d))]
+    mlp_w = [_sds((d, sd["d_ff"])), _sds((sd["d_ff"],)),
+             _sds((sd["d_ff"], d)), vec]
+
+    attn_f = make_attn_fwd(cfg, tp)
+    mlpP_f = make_mlp_preln_fwd(cfg, tp)
+    mlpF_f = make_mlp_fal_fwd(cfg, tp)
+    fused_f = make_fal_fused_fwd(cfg, tp)
+
+    attn_in = [x, vec, vec] + attn_w
+    mlpP_in = [x, vec, vec] + mlp_w
+    mlpF_in = [x, x, vec, vec] + mlp_w
+    fused_in = [x, x, vec, vec, vec, vec] + attn_w + mlp_w
+
+    return {
+        "embed_fwd": (embed_fwd, [tok, wte, wpe]),
+        "embed_bwd": (embed_bwd, [tok, wte, wpe, x]),
+        "attn_fwd": (attn_f, attn_in),
+        "attn_bwd": (make_bwd(attn_f, len(attn_in)), attn_in + [x]),
+        "mlp_preln_fwd": (mlpP_f, mlpP_in),
+        "mlp_preln_bwd": (make_bwd(mlpP_f, len(mlpP_in)), mlpP_in + [x]),
+        "mlp_fal_fwd": (mlpF_f, mlpF_in),
+        "mlp_fal_bwd": (make_bwd(mlpF_f, len(mlpF_in)), mlpF_in + [x]),
+        "lnf_fwd": (lnf_fwd, [x, vec, vec]),
+        "lnf_bwd": (lnf_bwd, [x, vec, vec, x]),
+        "fal_fused_fwd": (fused_f, fused_in),
+        "fal_fused_bwd": (make_bwd(fused_f, len(fused_in)), fused_in + [x]),
+        "head_fwd_bwd": (head_fwd_bwd, [x, vec, vec, wte, tok]),
+    }

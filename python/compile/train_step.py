@@ -1,0 +1,81 @@
+"""Single-executable training step: loss + grads + AdamW, fused by XLA.
+
+The Rust single-process trainer (rust/src/coordinator/sp_trainer.rs) feeds
+(params, m, v, step, tokens, targets) and receives (loss, params', m', v');
+parameters stay in the same flat order on both sides (the manifest records
+the flattened path names). Weight decay is applied only to matrices (ndim >=
+2), matching GPT-2 practice; gradients are clipped by global norm.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import configs, model
+
+
+def _decay_mask(params):
+    return jax.tree_util.tree_map(lambda p: float(p.ndim >= 2), params)
+
+
+def make_train_step(cfg: configs.ModelConfig, tc: configs.TrainConfig):
+    """(params, m, v, step, lr_scale, tokens, targets)
+    -> (loss, gnorm, params', m', v')
+
+    lr_scale is a runtime scalar so the Rust side owns the LR schedule
+    (one-cycle for the Fig 9 cramming runs, constant elsewhere) without
+    recompiling.
+    """
+
+    def step_fn(params, m, v, step, lr_scale, tokens, targets):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, tokens, targets)
+        )(params)
+        p2, m2, v2, gnorm = _adamw_scaled(params, grads, m, v, step, tc,
+                                          lr_scale)
+        return loss, gnorm, p2, m2, v2
+
+    return step_fn
+
+
+def _adamw_scaled(params, grads, m, v, step, tc, lr_scale):
+    gsq = sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    clip = jnp.minimum(1.0, tc.grad_clip / (gnorm + 1e-6))
+    bc1 = 1.0 - tc.beta1 ** step
+    bc2 = 1.0 - tc.beta2 ** step
+    mask = _decay_mask(params)
+    lr = tc.lr * lr_scale
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    flat_dm = jax.tree_util.tree_leaves(mask)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_, v_, dm in zip(flat_p, flat_g, flat_m, flat_v, flat_dm):
+        g = g * clip
+        m_n = tc.beta1 * m_ + (1.0 - tc.beta1) * g
+        v_n = tc.beta2 * v_ + (1.0 - tc.beta2) * jnp.square(g)
+        p_n = p - lr * (
+            (m_n / bc1) / (jnp.sqrt(v_n / bc2) + tc.eps)
+            + tc.weight_decay * dm * p
+        )
+        new_p.append(p_n)
+        new_m.append(m_n)
+        new_v.append(v_n)
+    unflat = jax.tree_util.tree_unflatten
+    return (unflat(tree, new_p), unflat(tree, new_m), unflat(tree, new_v),
+            gnorm)
+
+
+def make_grad_step(cfg: configs.ModelConfig):
+    """(params, tokens, targets) -> (loss, grads) — used by the TP trainer
+    equivalence tests and by the compression baselines (Fig 7), where the
+    Rust side owns the optimizer so it can compress gradients in between."""
+
+    def fn(params, tokens, targets):
+        return jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, tokens, targets)
+        )(params)
+
+    return fn

@@ -1,0 +1,210 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+hypothesis sweeps shapes/dtypes-relevant parameters; assert_allclose against
+ref.py is the core correctness signal for everything the AOT pipeline lowers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    dual_layernorm_add,
+    flash_attention,
+    ln_residual_add,
+    ref,
+)
+from compile.kernels.attention import vmem_footprint_bytes
+from compile.kernels.fused_ln_add import hbm_bytes_saved
+
+ATOL = 2e-5
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape)
+
+
+# ----------------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.integers(1, 70),
+    dh=st.sampled_from([4, 8, 16]),
+    bq=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+)
+def test_attention_matches_ref(b, h, s, dh, bq, bk):
+    q = rand(0, (b, h, s, dh))
+    k = rand(1, (b, h, s, dh))
+    v = rand(2, (b, h, s, dh))
+    out = flash_attention(q, k, v, bq, bk)
+    exp = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(out, exp, atol=ATOL, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    hkv=st.sampled_from([1, 2]),
+    group=st.sampled_from([2, 4]),
+    s=st.integers(4, 48),
+)
+def test_attention_gqa(hkv, group, s):
+    h = hkv * group
+    q = rand(3, (2, h, s, 8))
+    k = rand(4, (2, hkv, s, 8))
+    v = rand(5, (2, hkv, s, 8))
+    out = flash_attention(q, k, v)
+    exp = ref.causal_attention(q, k, v)
+    np.testing.assert_allclose(out, exp, atol=ATOL, rtol=1e-4)
+
+
+def test_attention_causality():
+    """Changing future keys/values must not change earlier outputs."""
+    q = rand(0, (1, 2, 33, 8))
+    k = rand(1, (1, 2, 33, 8))
+    v = rand(2, (1, 2, 33, 8))
+    base = flash_attention(q, k, v)
+    k2 = k.at[:, :, 20:, :].set(99.0)
+    v2 = v.at[:, :, 20:, :].set(-99.0)
+    pert = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(base[:, :, :20], pert[:, :, :20], atol=ATOL)
+    assert not np.allclose(base[:, :, 20:], pert[:, :, 20:], atol=1e-2)
+
+
+def test_attention_scale_invariance_of_softmax_shift():
+    """Online softmax must be stable for large logits (no overflow)."""
+    q = 30.0 * rand(0, (1, 1, 16, 8))
+    k = 30.0 * rand(1, (1, 1, 16, 8))
+    v = rand(2, (1, 1, 16, 8))
+    out = flash_attention(q, k, v)
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out, ref.causal_attention(q, k, v),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_attention_grad_matches_ref():
+    q = rand(0, (1, 2, 24, 8))
+    k = rand(1, (1, 2, 24, 8))
+    v = rand(2, (1, 2, 24, 8))
+
+    def f_pal(q, k, v):
+        return jnp.sum(flash_attention(q, k, v) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.causal_attention(q, k, v) ** 2)
+
+    gp = jax.grad(f_pal, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-3)
+
+
+def test_attention_first_row_attends_only_self():
+    q = rand(0, (1, 1, 8, 4))
+    k = rand(1, (1, 1, 8, 4))
+    v = rand(2, (1, 1, 8, 4))
+    out = flash_attention(q, k, v)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], atol=ATOL)
+
+
+def test_vmem_footprint_monotone():
+    small = vmem_footprint_bytes(16, 16, 64, 1024)
+    big = vmem_footprint_bytes(128, 128, 64, 1024)
+    assert small < big
+    # A 128x128 f32 tile set must fit comfortably in 16 MiB VMEM.
+    assert big < 16 * 2 ** 20
+
+
+# ----------------------------------------------------------------------------
+# fused dual-LN-add
+# ----------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 130),
+    d=st.sampled_from([8, 32, 64, 192]),
+    br=st.sampled_from([16, 64, 128]),
+)
+def test_dual_ln_matches_ref(rows, d, br):
+    x = rand(0, (rows, d), 2.0)
+    a = rand(1, (rows, d), 0.5)
+    gx, bx = rand(2, (d,)), rand(3, (d,), 0.1)
+    ga, ba = rand(4, (d,)), rand(5, (d,), 0.1)
+    out = dual_layernorm_add(x, a, gx, bx, ga, ba, br)
+    exp = ref.dual_layernorm_add(x, a, gx, bx, ga, ba)
+    np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(rows=st.integers(1, 80), d=st.sampled_from([16, 64]))
+def test_ln_residual_add_matches_ref(rows, d):
+    x = rand(0, (rows, d), 3.0)
+    a = rand(1, (rows, d))
+    g, bb = rand(2, (d,)), rand(3, (d,), 0.1)
+    out = ln_residual_add(x, a, g, bb)
+    exp = ref.layernorm(x, g, bb) + a
+    np.testing.assert_allclose(out, exp, atol=1e-4, rtol=1e-4)
+
+
+def test_dual_ln_batched_shapes():
+    x = rand(0, (2, 7, 32))
+    a = rand(1, (2, 7, 32))
+    g, b = jnp.ones(32), jnp.zeros(32)
+    out = dual_layernorm_add(x, a, g, b, g, b)
+    assert out.shape == (2, 7, 32)
+    np.testing.assert_allclose(
+        out, ref.dual_layernorm_add(x, a, g, b, g, b), atol=1e-4)
+
+
+def test_dual_ln_grads_match_ref():
+    x = rand(0, (5, 16))
+    a = rand(1, (5, 16))
+    g, b = rand(2, (16,)), rand(3, (16,))
+
+    def f_pal(x, a, g, b):
+        return jnp.sum(dual_layernorm_add(x, a, g, b, g, b) ** 2)
+
+    def f_ref(x, a, g, b):
+        return jnp.sum(ref.dual_layernorm_add(x, a, g, b, g, b) ** 2)
+
+    gp = jax.grad(f_pal, argnums=(0, 1, 2, 3))(x, a, g, b)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, a, g, b)
+    for p, r in zip(gp, gr):
+        np.testing.assert_allclose(p, r, atol=1e-4, rtol=1e-3)
+
+
+def test_ln_normalizes():
+    """LN output (gamma=1, beta=0) has ~zero mean, ~unit variance per row."""
+    x = rand(0, (50, 64), 5.0)
+    g, b = jnp.ones(64), jnp.zeros(64)
+    out = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.mean(out, -1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(np.std(out, -1), 1.0, atol=1e-2)
+
+
+def test_hbm_saving_positive():
+    assert hbm_bytes_saved(8, 1024, 1024) > 0
+
+
+# ----------------------------------------------------------------------------
+# reference-op sanity
+# ----------------------------------------------------------------------------
+
+def test_softmax_xent_uniform():
+    v = 16
+    logits = jnp.zeros((10, v))
+    t = jnp.arange(10, dtype=jnp.int32) % v
+    loss = ref.softmax_xent(logits, t)
+    np.testing.assert_allclose(loss, np.log(v), rtol=1e-5)
+
+
+def test_gelu_limits():
+    x = jnp.asarray([-10.0, 0.0, 10.0])
+    g = ref.gelu(x)
+    np.testing.assert_allclose(g, [0.0, 0.0, 10.0], atol=1e-3)

@@ -1,0 +1,250 @@
+"""L2 model family: variant equations, shapes, surgery gates, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import configs, model, train_step
+from compile.kernels import ref
+
+CFG = configs.ModelConfig("t", vocab_size=64, d_model=32, n_head=4,
+                          n_layer=3, d_ff=64, seq_len=16, use_pallas=False)
+
+
+def toks(b=2, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (b, CFG.seq_len), 0, CFG.vocab_size)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, seed=0)
+
+
+@pytest.mark.parametrize("variant", configs.VARIANTS)
+def test_forward_shapes(params, variant):
+    cfg = CFG.with_variant(variant)
+    logits = model.model_fwd(cfg, params, toks())
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab_size)
+    assert np.all(np.isfinite(logits))
+
+
+@pytest.mark.parametrize("variant", configs.VARIANTS)
+def test_grads_finite(params, variant):
+    cfg = CFG.with_variant(variant)
+    g = jax.grad(lambda p: model.loss_fn(cfg, p, toks(), toks(seed=1)))(params)
+    leaves = jax.tree_util.tree_leaves(g)
+    assert all(np.all(np.isfinite(x)) for x in leaves)
+    # The model must actually use every parameter tensor that its variant
+    # touches: wq gradient nonzero everywhere.
+    assert np.any(np.abs(g["blocks"][1]["wq"]) > 0)
+
+
+def test_variant_equations_differ(params):
+    """Each variant must compute a genuinely different function."""
+    outs = {}
+    for v in configs.VARIANTS:
+        outs[v] = model.model_fwd(CFG.with_variant(v), params, toks())
+    names = list(outs)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            assert not np.allclose(outs[a], outs[b], atol=1e-5), (a, b)
+
+
+def test_preln_equation_explicit(params):
+    """Pre-LN block output matches eq. (1) computed by hand."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, CFG.d_model))
+    blk = params["blocks"][0]
+    out, _, _ = model.block_fwd(CFG, blk, x, None, 0)
+    a = model.mha(CFG, blk, ref.layernorm(x, blk["ln1_g"], blk["ln1_b"]))
+    h = x + a
+    exp = h + model.mlp(blk, ref.layernorm(h, blk["ln2_g"], blk["ln2_b"]))
+    np.testing.assert_allclose(out, exp, atol=1e-5)
+
+
+def test_fal_equation_explicit(params):
+    """FAL block i>1 matches eq. (6): MLP sees LN2(X) + LNf(A1)."""
+    cfg = CFG.with_variant("fal")
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, CFG.d_model))
+    fa = jax.random.normal(jax.random.PRNGKey(2), (1, 8, CFG.d_model))
+    blk = params["blocks"][1]
+    out, fa2, _ = model.block_fwd(cfg, blk, x, fa, 1)
+    assert fa2 is fa  # signal must not be overwritten after block 1
+    a = model.mha(cfg, blk, ref.layernorm(x, blk["ln1_g"], blk["ln1_b"]))
+    mlp_in = ref.layernorm(x, blk["ln2_g"], blk["ln2_b"]) + fa
+    np.testing.assert_allclose(out, x + a + model.mlp(blk, mlp_in), atol=1e-5)
+
+
+def test_falplus_block1_matches_eq7(params):
+    cfg = CFG.with_variant("falplus")
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, CFG.d_model))
+    blk = params["blocks"][0]
+    out, fa, _ = model.block_fwd(cfg, blk, x, None, 0)
+    a = model.mha(cfg, blk, ref.layernorm(x, blk["ln1_g"], blk["ln1_b"]))
+    np.testing.assert_allclose(fa, a, atol=1e-6)  # raw A_1 stored
+    mlp_in = ref.layernorm(x, blk["ln2_g"], blk["ln2_b"]) + a
+    np.testing.assert_allclose(out, x + a + model.mlp(blk, mlp_in), atol=1e-5)
+
+
+def test_fal_mha_mlp_independent_given_inputs(params):
+    """The FAL>1 block's MLP path must not depend on the block's own MHA:
+    zeroing the attention weights changes the residual stream only through
+    a_out, not the MLP input — the property that enables both the single
+    all-reduce and MHA/MLP overlap."""
+    cfg = CFG.with_variant("fal")
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, CFG.d_model))
+    fa = jax.random.normal(jax.random.PRNGKey(2), (1, 8, CFG.d_model))
+    blk = dict(params["blocks"][1])
+    _, _, aux1 = model.block_fwd(cfg, blk, x, fa, 1)
+    blk2 = dict(blk)
+    blk2["wo"] = jnp.zeros_like(blk["wo"])
+    _, _, aux2 = model.block_fwd(cfg, blk2, x, fa, 1)
+    np.testing.assert_allclose(aux1["mlp_in"], aux2["mlp_in"], atol=1e-6)
+    np.testing.assert_allclose(aux1["mlp_out"], aux2["mlp_out"], atol=1e-6)
+
+
+def test_preln_mlp_depends_on_own_mha(params):
+    """Contrast: the Pre-LN MLP input *does* change with the block's MHA —
+    this is the dependency that forces the per-block all-reduce."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, CFG.d_model))
+    blk = dict(params["blocks"][1])
+    _, _, aux1 = model.block_fwd(CFG, blk, x, None, 1)
+    blk2 = dict(blk)
+    blk2["wo"] = jnp.zeros_like(blk["wo"])
+    _, _, aux2 = model.block_fwd(CFG, blk2, x, None, 1)
+    assert not np.allclose(aux1["mlp_in"], aux2["mlp_in"], atol=1e-5)
+
+
+def test_surgery_gates_all_mha(params):
+    """mha_scale=0 everywhere == removing every MHA layer."""
+    t = toks()
+    gated = model.model_fwd(CFG, params, t,
+                            mha_scale=jnp.zeros(CFG.n_layer),
+                            conn_scale=jnp.zeros(CFG.n_layer))
+    # Hand-build the no-attention model.
+    x = params["wte"][t] + params["wpe"][None, :CFG.seq_len, :]
+    for blk in params["blocks"]:
+        x = x + model.mlp(blk, ref.layernorm(x, blk["ln2_g"], blk["ln2_b"]))
+    xn = ref.layernorm(x, params["lnF_g"], params["lnF_b"])
+    np.testing.assert_allclose(gated, xn @ params["wte"].T, atol=1e-4)
+
+
+def test_surgery_gates_all_connect(params):
+    """conn_scale=0, mha_scale=1 == removing MHA->MLP connections only:
+    attention stays in the residual stream."""
+    t = toks()
+    gated = model.model_fwd(CFG, params, t,
+                            mha_scale=jnp.ones(CFG.n_layer),
+                            conn_scale=jnp.zeros(CFG.n_layer))
+    x = params["wte"][t] + params["wpe"][None, :CFG.seq_len, :]
+    for blk in params["blocks"]:
+        a = model.mha(CFG, blk, ref.layernorm(x, blk["ln1_g"], blk["ln1_b"]))
+        mlp_in = ref.layernorm(x, blk["ln2_g"], blk["ln2_b"])  # no a
+        x = x + a + model.mlp(blk, mlp_in)
+    xn = ref.layernorm(x, params["lnF_g"], params["lnF_b"])
+    np.testing.assert_allclose(gated, xn @ params["wte"].T, atol=1e-4)
+
+
+def test_gates_identity(params):
+    ones = jnp.ones(CFG.n_layer)
+    a = model.model_fwd(CFG, params, toks(), ones, ones)
+    b = model.model_fwd(CFG, params, toks())
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_reuse_layer_k(params):
+    """Fig 17 variants: reuse_layer=k runs preln blocks before k and stores
+    A_k; k=1 equals plain falplus."""
+    cfg1 = CFG.with_variant("falplus", reuse_layer=1)
+    cfgk = CFG.with_variant("falplus", reuse_layer=2)
+    o1 = model.model_fwd(cfg1, params, toks())
+    ok = model.model_fwd(cfgk, params, toks())
+    assert not np.allclose(o1, ok, atol=1e-5)
+
+
+def test_gqa_and_moe_variants(params):
+    cfg = configs.ModelConfig("t", 64, 32, 4, 3, 64, 16, n_kv_head=2,
+                              use_pallas=False)
+    p = model.init_params(cfg)
+    out = model.model_fwd(cfg, p, toks())
+    assert out.shape == (2, 16, 64)
+    cfg_moe = configs.ModelConfig("t", 64, 32, 4, 3, 64, 16, n_expert=2,
+                                  use_pallas=False)
+    p = model.init_params(cfg_moe)
+    out = model.model_fwd(cfg_moe, p, toks())
+    assert np.all(np.isfinite(out))
+
+
+def test_capture_shapes(params):
+    mha_o, mlp_i, mlp_o = model.capture_activations(CFG, params, toks())
+    L, B, S, D = CFG.n_layer, 2, CFG.seq_len, CFG.d_model
+    assert mha_o.shape == mlp_i.shape == mlp_o.shape == (L, B, S, D)
+
+
+def test_grad_magnitude_shape_and_first_layer(params):
+    g = model.grad_magnitude(CFG, params, toks(), toks(seed=1))
+    assert g.shape == (CFG.n_layer,)
+    assert np.all(g > 0)
+
+
+def test_score_options_prefers_gold():
+    """After a few steps of training on a fixed batch, the gold continuation
+    must outscore a random one."""
+    cfg = CFG
+    tc = configs.TrainConfig(lr=3e-3)
+    p = model.init_params(cfg, 1)
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    step = jax.jit(train_step.make_train_step(cfg, tc))
+    t = toks()
+    tgt = jnp.roll(t, -1, axis=1)
+    for i in range(30):
+        loss, _, p, m, v = step(p, m, v, float(i + 1), 1.0, t, tgt)
+    mask = jnp.ones_like(t, jnp.float32)
+    gold = model.score_options(cfg, p, t, tgt, mask)
+    rand = model.score_options(cfg, p, t, (tgt + 7) % cfg.vocab_size, mask)
+    assert np.all(gold > rand)
+
+
+def test_train_step_reduces_loss():
+    cfg = CFG.with_variant("fal")
+    tc = configs.TrainConfig(lr=3e-3)
+    p = model.init_params(cfg, 2)
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    step = jax.jit(train_step.make_train_step(cfg, tc))
+    t = toks(seed=3)
+    tgt = jnp.roll(t, -1, axis=1)
+    first = None
+    for i in range(25):
+        loss, gnorm, p, m, v = step(p, m, v, float(i + 1), 1.0, t, tgt)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first - 0.5
+    assert np.isfinite(float(gnorm))
+
+
+def test_lr_scale_zero_freezes_params():
+    p = model.init_params(CFG, 0)
+    m = jax.tree_util.tree_map(jnp.zeros_like, p)
+    v = jax.tree_util.tree_map(jnp.zeros_like, p)
+    step = jax.jit(train_step.make_train_step(CFG, configs.TrainConfig()))
+    t = toks()
+    _, _, p2, _, _ = step(p, m, v, 1.0, 0.0, t, jnp.roll(t, -1, 1))
+    np.testing.assert_allclose(p2["blocks"][0]["wq"],
+                               p["blocks"][0]["wq"], atol=1e-7)
+
+
+def test_eval_masked_returns_token_count(params):
+    t = toks()
+    ones = jnp.ones(CFG.n_layer)
+    s, c = model.eval_masked(CFG, params, t, jnp.roll(t, -1, 1), ones, ones)
+    assert float(c) == t.size
+    assert float(s) / float(c) > 0  # positive mean NLL at init
+
+
+def test_param_count_matches_config():
+    got = sum(x.size for x in jax.tree_util.tree_leaves(
+        model.init_params(CFG)))
+    assert got == CFG.n_params

@@ -1,0 +1,82 @@
+//! Paper-figure benches: regenerate every cost-model table/figure and time
+//! the generation itself. One bench per paper artifact (Fig 6, Fig 8,
+//! Fig 10, Fig 19), printing the same rows the paper reports.
+//!
+//! `cargo bench --bench paper_figures [-- --filter fig6]`
+
+use fal::config::{
+    ModelConfig, Variant, H200, NVLINK, PCIE_GEN4, RTX_3090, RTX_4090,
+    RTX_A6000,
+};
+use fal::coordinator::dp_pp::{dp_cost, pp_cost, tp_cost};
+use fal::costmodel::timemodel::{
+    inference_time, single_gpu_throughput, train_step_time,
+};
+use fal::util::benchkit::Bench;
+
+fn main() {
+    let mut b = Bench::from_env();
+
+    // Fig 6: multi-GPU normalized training time.
+    b.bench("fig6_multigpu_sweep (24 cells)", 24.0, || {
+        let mut acc = 0.0;
+        for (gpu, link) in [(&H200, &NVLINK), (&RTX_3090, &PCIE_GEN4)] {
+            for scale in ["774M", "1.5B", "2.5B", "8.3B"] {
+                let cfg = ModelConfig::paper_scale(scale).unwrap();
+                for tp in [2usize, 4, 8] {
+                    let base = train_step_time(
+                        &cfg, Variant::PreLn, gpu, link, tp, 8 * tp, true);
+                    let fal = train_step_time(
+                        &cfg, Variant::Fal, gpu, link, tp, 8 * tp, true);
+                    acc += fal.total() / base.total();
+                }
+            }
+        }
+        acc
+    });
+
+    // Fig 8a: single-GPU throughput ratios on three GPUs x flash on/off.
+    b.bench("fig8_single_gpu_ratios (6 cells)", 6.0, || {
+        let cfg = ModelConfig::paper_scale("774M").unwrap();
+        let mut acc = 0.0;
+        for gpu in [&RTX_3090, &RTX_4090, &RTX_A6000] {
+            for flash in [false, true] {
+                acc += single_gpu_throughput(&cfg, Variant::Fal, gpu, 8, flash)
+                    / single_gpu_throughput(
+                        &cfg, Variant::PreLn, gpu, 8, flash);
+            }
+        }
+        acc
+    });
+
+    // Fig 10: DP vs PP vs TP.
+    b.bench("fig10_parallelism_compare", 4.0, || {
+        let mut cfg = ModelConfig::paper_scale("774M").unwrap();
+        cfg.n_layer = 42;
+        cfg.n_params = cfg.count_params();
+        let dp = dp_cost(&cfg, &RTX_3090, &PCIE_GEN4, 2, 2);
+        let pp = pp_cost(&cfg, &RTX_3090, &PCIE_GEN4, 2, 2, 4);
+        let tp = tp_cost(&cfg, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 2, 2);
+        let fal = tp_cost(&cfg, Variant::Fal, &RTX_3090, &PCIE_GEN4, 2, 2);
+        dp.step_secs + pp.step_secs + tp.step_secs + fal.step_secs
+    });
+
+    // Fig 19: inference TTFT sweep.
+    b.bench("fig19_inference_sweep (48 cells)", 48.0, || {
+        let mut acc = 0.0;
+        for scale in ["774M", "2.5B", "8.3B"] {
+            let cfg = ModelConfig::paper_scale(scale).unwrap();
+            for seq in [1024usize, 2048] {
+                for tp in [1usize, 2, 4, 8] {
+                    acc += inference_time(
+                        &cfg, Variant::PreLn, &H200, &NVLINK, tp, 1, seq);
+                    acc += inference_time(
+                        &cfg, Variant::Fal, &H200, &NVLINK, tp, 1, seq);
+                }
+            }
+        }
+        acc
+    });
+
+    println!("\n== summary ==\n{}", b.summary());
+}

@@ -1,0 +1,92 @@
+//! L3 hot-path microbenches (the §Perf profile): literal conversion,
+//! executable dispatch, collectives, compression codecs, corpus/loader.
+//!
+//! `cargo bench --bench runtime_hotpath [-- --filter literal]`
+//! Requires `make artifacts` (tiny group) for the engine benches.
+
+use std::path::Path;
+
+use fal::comm::error_feedback::ErrorFeedback;
+use fal::comm::powersgd::PowerSgd;
+use fal::comm::qsgd::Qsgd;
+use fal::config::PCIE_GEN4;
+use fal::coordinator::collectives::CommLedger;
+use fal::data::{Corpus, CorpusSpec, Loader};
+use fal::runtime::Engine;
+use fal::tensor::HostTensor;
+use fal::util::benchkit::Bench;
+use fal::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::from_env();
+    let mut rng = Rng::new(0);
+
+    // HostTensor <-> Literal conversion (1M f32).
+    let t1m = HostTensor::randn(&[1024, 1024], 1.0, &mut rng);
+    b.bench("literal_convert_roundtrip_4MB", 4e6, || {
+        let l = fal::runtime::to_literal(&t1m).unwrap();
+        fal::runtime::from_literal(&l).unwrap().len()
+    });
+
+    // Collectives: all-reduce of 4 x 1 MB shards.
+    let ledger = CommLedger::new(PCIE_GEN4, 4);
+    let shards: Vec<HostTensor> = (0..4)
+        .map(|i| HostTensor::randn(&[256 * 1024], 1.0, &mut Rng::new(i)))
+        .collect();
+    b.bench("allreduce_4x1MB", 4e6, || {
+        ledger.all_reduce(&shards).len()
+    });
+
+    // Compression codecs on a 192x768 gradient (the small config's w1).
+    let grad = HostTensor::randn(&[192, 768], 0.02, &mut rng);
+    let mut qsgd = ErrorFeedback::new(Qsgd::new(4, 512, 7));
+    b.bench("qsgd_ef_transmit_147k", grad.len() as f64, || {
+        qsgd.transmit("w", &grad).1
+    });
+    let mut psgd = ErrorFeedback::new(PowerSgd::new(4, 7));
+    b.bench("powersgd_ef_transmit_147k", grad.len() as f64, || {
+        psgd.transmit("w", &grad).1
+    });
+
+    // Data pipeline.
+    b.bench("corpus_generate_100k_tokens", 100_000.0, || {
+        Corpus::generate(CorpusSpec::for_vocab(1024), 100_000, 1)
+            .tokens
+            .len()
+    });
+    let corpus = Corpus::generate(CorpusSpec::for_vocab(1024), 600_000, 1);
+    let mut loader = Loader::new(&corpus, 96, 8, 0.05, 2);
+    b.bench("loader_next_train_batch", (8 * 96) as f64, || {
+        loader.next_train().tokens.len()
+    });
+
+    // Engine: tiny eval executable end-to-end (compile amortized).
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if let Ok(engine) = Engine::new(&dir) {
+        if let Ok(spec) = engine.manifest.find("eval_masked", "tiny", "preln")
+        {
+            let name = spec.name.clone();
+            let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+            let cfg = engine.manifest.config("tiny").unwrap().clone();
+            let params = engine.manifest.load_params("tiny", 0).unwrap();
+            let mut inputs = params;
+            let toks: Vec<i32> = (0..batch * cfg.seq_len)
+                .map(|i| (i % cfg.vocab_size) as i32)
+                .collect();
+            inputs.push(HostTensor::from_i32(&[batch, cfg.seq_len], &toks));
+            inputs.push(HostTensor::from_i32(&[batch, cfg.seq_len], &toks));
+            inputs.push(HostTensor::ones(&[cfg.n_layer]));
+            inputs.push(HostTensor::ones(&[cfg.n_layer]));
+            engine.execute(&name, &inputs).unwrap(); // compile
+            b.bench(
+                "engine_execute_tiny_eval",
+                (batch * cfg.seq_len) as f64,
+                || engine.execute(&name, &inputs).unwrap()[0].data[0],
+            );
+        }
+    } else {
+        eprintln!("(skip engine benches: run `make artifacts` first)");
+    }
+
+    println!("\n== summary ==\n{}", b.summary());
+}

@@ -1,0 +1,58 @@
+//! End-to-end TP coordinator step bench (tiny config): the paper's central
+//! comparison run live — Pre-LN (2 AR/block) vs FAL (1 AR/block) — with the
+//! real sharded executables. Also times forward-only (TTFT path).
+//!
+//! `cargo bench --bench tp_step`
+
+use std::path::Path;
+
+use fal::config::{TrainConfig, Variant, PCIE_GEN4};
+use fal::coordinator::tp_trainer::TpTrainer;
+use fal::data::{Corpus, CorpusSpec, Loader};
+use fal::runtime::Engine;
+use fal::util::benchkit::Bench;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = match Engine::new(&dir) {
+        Ok(e) => e,
+        Err(_) => {
+            eprintln!("skip: run `make artifacts` first");
+            return;
+        }
+    };
+    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let corpus =
+        Corpus::generate(CorpusSpec::for_vocab(cfg.vocab_size), 50_000, 1);
+    let loader = Loader::new(&corpus, cfg.seq_len, 4, 0.1, 2);
+    let batch = loader.fixed_batch(3);
+    let tokens_per_step = (4 * cfg.seq_len) as f64;
+
+    let mut b = Bench::from_env();
+    for (variant, name) in
+        [(Variant::PreLn, "preln"), (Variant::Fal, "fal")]
+    {
+        let mut t = TpTrainer::new(
+            &engine, "tiny", variant, 2, PCIE_GEN4, TrainConfig::default())
+        .unwrap();
+        // Warm the stage executables.
+        t.train_step(&batch).unwrap();
+        b.bench(
+            &format!("tp2_tiny_train_step_{name}"),
+            tokens_per_step,
+            || t.train_step(&batch).unwrap().0,
+        );
+        let mut f = TpTrainer::new(
+            &engine, "tiny", variant, 2, PCIE_GEN4, TrainConfig::default())
+        .unwrap();
+        f.forward_loss(&batch).unwrap();
+        b.bench(
+            &format!("tp2_tiny_forward_{name}"),
+            tokens_per_step,
+            || f.forward_loss(&batch).unwrap(),
+        );
+    }
+    println!("\n== summary ==\n{}", b.summary());
+    println!("(comm-volume halving is asserted in tests/tp_equivalence.rs; \
+              wall-clock here is CPU-execution bound)");
+}

@@ -1,0 +1,163 @@
+//! Linear Centered Kernel Alignment (Kornblith et al., ICML 2019).
+//!
+//! The paper's Fig 3(a) measures CKA between *consecutive blocks'*
+//! activations for three streams (MHA out, MLP in, MLP out) to show that
+//! MLP inputs barely change across blocks while MHA outputs vary — the
+//! observation motivating the MHA->MLP reconfiguration.
+//!
+//! Linear CKA over features X [n, d1], Y [n, d2] (rows = samples):
+//!   CKA = ||Yc^T Xc||_F^2 / (||Xc^T Xc||_F * ||Yc^T Yc||_F)
+//! with column-centered Xc, Yc. Computed via d×d grams (n never squared).
+
+use crate::tensor::HostTensor;
+
+/// Column-center a [n, d] matrix in place.
+fn center(x: &mut [f32], n: usize, d: usize) {
+    for j in 0..d {
+        let mut mu = 0.0f64;
+        for i in 0..n {
+            mu += x[i * d + j] as f64;
+        }
+        let mu = (mu / n as f64) as f32;
+        for i in 0..n {
+            x[i * d + j] -= mu;
+        }
+    }
+}
+
+/// ||A^T B||_F^2 for A [n, da], B [n, db] without materializing n×n.
+fn cross_fro_sq(a: &[f32], da: usize, b: &[f32], db: usize, n: usize) -> f64 {
+    // M = A^T B is [da, db]; accumulate M then Frobenius.
+    let mut m = vec![0.0f64; da * db];
+    for i in 0..n {
+        let arow = &a[i * da..(i + 1) * da];
+        let brow = &b[i * db..(i + 1) * db];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let av = av as f64;
+            let mrow = &mut m[p * db..(p + 1) * db];
+            for (q, &bv) in brow.iter().enumerate() {
+                mrow[q] += av * bv as f64;
+            }
+        }
+    }
+    m.iter().map(|v| v * v).sum()
+}
+
+/// Linear CKA between two activation matrices with equal row counts.
+pub fn cka_linear(x: &HostTensor, y: &HostTensor) -> f64 {
+    assert_eq!(x.shape.len(), 2, "expect [n, d]");
+    assert_eq!(y.shape.len(), 2);
+    let (n, dx) = (x.shape[0], x.shape[1]);
+    let dy = y.shape[1];
+    assert_eq!(y.shape[0], n);
+    let mut xc = x.data.clone();
+    let mut yc = y.data.clone();
+    center(&mut xc, n, dx);
+    center(&mut yc, n, dy);
+    let num = cross_fro_sq(&yc, dy, &xc, dx, n);
+    let dx_ = cross_fro_sq(&xc, dx, &xc, dx, n).sqrt();
+    let dy_ = cross_fro_sq(&yc, dy, &yc, dy, n).sqrt();
+    num / (dx_ * dy_).max(1e-30)
+}
+
+/// Fig 3(a): CKA between consecutive layers of a stacked activation tensor
+/// [L, B, S, D] -> L-1 similarity scores.
+pub fn consecutive_cka(stack: &HostTensor) -> Vec<f64> {
+    assert_eq!(stack.shape.len(), 4, "expect [L,B,S,D]");
+    let (l, b, s, d) = (
+        stack.shape[0],
+        stack.shape[1],
+        stack.shape[2],
+        stack.shape[3],
+    );
+    let n = b * s;
+    let layer = |li: usize| {
+        HostTensor::from_vec(
+            &[n, d],
+            stack.data[li * n * d..(li + 1) * n * d].to_vec(),
+        )
+    };
+    (0..l - 1)
+        .map(|li| cka_linear(&layer(li), &layer(li + 1)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randmat(n: usize, d: usize, seed: u64) -> HostTensor {
+        let mut rng = Rng::new(seed);
+        HostTensor::randn(&[n, d], 1.0, &mut rng)
+    }
+
+    #[test]
+    fn self_similarity_is_one() {
+        let x = randmat(64, 16, 0);
+        let c = cka_linear(&x, &x);
+        assert!((c - 1.0).abs() < 1e-9, "{c}");
+    }
+
+    #[test]
+    fn invariant_to_orthogonal_ish_scaling() {
+        // CKA is invariant to isotropic scaling.
+        let x = randmat(64, 16, 1);
+        let mut y = x.clone();
+        y.scale(3.7);
+        assert!((cka_linear(&x, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn independent_features_low_similarity() {
+        let x = randmat(128, 32, 2);
+        let y = randmat(128, 32, 3);
+        let c = cka_linear(&x, &y);
+        assert!(c < 0.3, "independent CKA {c}");
+    }
+
+    #[test]
+    fn shared_signal_raises_similarity() {
+        // y = x + small noise should be close to 1.
+        let x = randmat(96, 24, 4);
+        let mut rng = Rng::new(5);
+        let mut y = x.clone();
+        let noise = HostTensor::randn(&[96, 24], 0.05, &mut rng);
+        y.add_assign(&noise);
+        assert!(cka_linear(&x, &y) > 0.95);
+    }
+
+    #[test]
+    fn invariant_to_feature_permutation() {
+        let x = randmat(50, 8, 6);
+        // Permute columns of x into y.
+        let mut y = HostTensor::zeros(&[50, 8]);
+        let perm = [3usize, 1, 7, 0, 5, 2, 6, 4];
+        for i in 0..50 {
+            for (j, &pj) in perm.iter().enumerate() {
+                y.data[i * 8 + j] = x.data[i * 8 + pj];
+            }
+        }
+        assert!((cka_linear(&x, &y) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn consecutive_over_stack() {
+        // Build a [3, 2, 4, 5] stack where layer 1 = layer 0, layer 2
+        // independent: expect [ ~1, low ].
+        let base = randmat(8, 5, 7);
+        let other = randmat(8, 5, 8);
+        let mut data = vec![];
+        data.extend(&base.data);
+        data.extend(&base.data);
+        data.extend(&other.data);
+        let stack = HostTensor::from_vec(&[3, 2, 4, 5], data);
+        let sims = consecutive_cka(&stack);
+        assert_eq!(sims.len(), 2);
+        assert!(sims[0] > 0.999);
+        assert!(sims[1] < 0.7);
+    }
+}

@@ -1,0 +1,62 @@
+//! Analysis substrate: CKA similarity, gradient-magnitude probes, LN-scale
+//! extraction — the measurements behind the paper's motivation (Sec 3,
+//! Fig 3/4) and interpretation (Fig 18) sections.
+
+pub mod cka;
+
+pub use cka::{cka_linear, consecutive_cka};
+
+use crate::coordinator::topology::NamedParams;
+
+/// Fig 18: relative LN scaling of the first-attention term per block.
+/// Returns, per layer, mean|gamma_lnf| / mean|gamma_ln2| — the learned
+/// weight later blocks assign to the first-attention signal relative to
+/// their own block-input normalization.
+pub fn lnf_relative_scale(params: &NamedParams, n_layer: usize) -> Vec<f64> {
+    (0..n_layer)
+        .map(|li| {
+            let lnf = params.blk(li, "lnf_g").expect("lnf_g");
+            let ln2 = params.blk(li, "ln2_g").expect("ln2_g");
+            lnf.mean_abs() / ln2.mean_abs().max(1e-12)
+        })
+        .collect()
+}
+
+/// Normalize a vector so its maximum is 1 (paper's Fig 4a presentation).
+pub fn normalize_max(xs: &[f64]) -> Vec<f64> {
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(1e-12);
+    xs.iter().map(|x| x / hi).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::HostTensor;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn lnf_scale_identity_at_init() {
+        // gamma all-ones => ratio 1 per layer.
+        let mut by_name = BTreeMap::new();
+        for li in 0..3 {
+            by_name.insert(
+                format!("blocks.{li}.lnf_g"),
+                HostTensor::ones(&[8]),
+            );
+            by_name.insert(
+                format!("blocks.{li}.ln2_g"),
+                HostTensor::ones(&[8]),
+            );
+        }
+        let p = NamedParams { by_name, order: vec![] };
+        let r = lnf_relative_scale(&p, 3);
+        assert_eq!(r, vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn normalize_max_peaks_at_one() {
+        let n = normalize_max(&[2.0, 4.0, 1.0]);
+        assert_eq!(n[1], 1.0);
+        assert_eq!(n[0], 0.5);
+    }
+}

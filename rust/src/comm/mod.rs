@@ -1,0 +1,77 @@
+//! Lossy communication-reduction baselines the paper compares against
+//! (Sec 6.2, Fig 7): QSGD stochastic quantization [36] and PowerSGD
+//! low-rank approximation [37], both with error feedback.
+//!
+//! These are real codecs operating on gradient tensors: `compress` returns
+//! an encoded payload with an exact wire-size in bytes (what would cross
+//! the interconnect), `decompress` reconstructs the (lossy) gradient. The
+//! Fig 7 harness charges (de)compression wall-clock to the "(De)Comp"
+//! bucket and wire bytes to the "Comm" bucket.
+
+pub mod error_feedback;
+pub mod powersgd;
+pub mod qsgd;
+
+use crate::tensor::HostTensor;
+
+/// A gradient codec: anything that can stand in for the all-reduce payload.
+pub trait Compressor {
+    fn name(&self) -> &'static str;
+
+    /// Encode; returns (payload, wire_bytes).
+    fn compress(&mut self, grad: &HostTensor) -> (Payload, usize);
+
+    /// Decode back to a dense gradient of the original shape.
+    fn decompress(&self, payload: &Payload, shape: &[usize]) -> HostTensor;
+
+    /// Compression ratio vs raw f32 for a tensor of n elements.
+    fn ratio(&self, numel: usize, wire_bytes: usize) -> f64 {
+        (numel * 4) as f64 / wire_bytes as f64
+    }
+}
+
+/// Encoded gradient payloads.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// QSGD: per-bucket scale + packed signed levels.
+    Quantized { scales: Vec<f32>, levels: Vec<i8>, bucket: usize },
+    /// PowerSGD: left/right factors (rank-r).
+    LowRank { p: HostTensor, q: HostTensor, rows: usize, cols: usize },
+    /// Identity (no compression) — baseline path.
+    Dense(HostTensor),
+}
+
+/// No-op codec (the GPT-2 baseline path in Fig 7).
+pub struct DenseCodec;
+
+impl Compressor for DenseCodec {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn compress(&mut self, grad: &HostTensor) -> (Payload, usize) {
+        (Payload::Dense(grad.clone()), grad.size_bytes())
+    }
+
+    fn decompress(&self, payload: &Payload, _shape: &[usize]) -> HostTensor {
+        match payload {
+            Payload::Dense(t) => t.clone(),
+            _ => unreachable!("dense codec got foreign payload"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip_exact() {
+        let g = HostTensor::from_vec(&[2, 2], vec![1.0, -2.0, 3.0, 4.0]);
+        let mut c = DenseCodec;
+        let (p, bytes) = c.compress(&g);
+        assert_eq!(bytes, 16);
+        assert_eq!(c.decompress(&p, &[2, 2]), g);
+        assert!((c.ratio(4, bytes) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,165 @@
+//! Collectives over host tensors, with exact communication accounting.
+//!
+//! The virtual devices of the TP simulation live in one address space, so
+//! the *data movement* of a collective is a host-memory reduction — but the
+//! *accounting* (bytes that would cross the interconnect, per the ring
+//! algorithm) is recorded faithfully and drives the paper's timing model.
+//! `CommLedger` is shared by the TP trainer, the Fig 7 breakdown and the
+//! cost-model calibration test.
+
+use std::sync::Mutex;
+
+use crate::config::LinkSpec;
+use crate::costmodel::{broadcast_time, ring_allreduce_time};
+use crate::tensor::HostTensor;
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct CommStats {
+    pub allreduces: u64,
+    pub broadcasts: u64,
+    /// Payload bytes handed to all-reduce (pre-ring-factor).
+    pub allreduce_bytes: f64,
+    pub broadcast_bytes: f64,
+    /// Modeled wall-clock on the configured link.
+    pub modeled_secs: f64,
+}
+
+/// Thread-safe communication ledger for one device group.
+#[derive(Debug)]
+pub struct CommLedger {
+    pub link: LinkSpec,
+    pub world: usize,
+    stats: Mutex<CommStats>,
+}
+
+impl CommLedger {
+    pub fn new(link: LinkSpec, world: usize) -> Self {
+        CommLedger { link, world, stats: Mutex::new(CommStats::default()) }
+    }
+
+    pub fn stats(&self) -> CommStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn reset(&self) {
+        *self.stats.lock().unwrap() = CommStats::default();
+    }
+
+    /// Sum `parts` elementwise into a single tensor (the all-reduce result
+    /// every shard receives) and account for it.
+    pub fn all_reduce(&self, parts: &[HostTensor]) -> HostTensor {
+        assert!(!parts.is_empty());
+        let mut out = parts[0].clone();
+        for p in &parts[1..] {
+            out.add_assign(p);
+        }
+        let bytes = out.size_bytes() as f64;
+        let mut s = self.stats.lock().unwrap();
+        s.allreduces += 1;
+        s.allreduce_bytes += bytes;
+        s.modeled_secs += ring_allreduce_time(bytes, self.world, &self.link);
+        out
+    }
+
+    /// In-place variant reducing into `acc` (hot path: avoids a clone).
+    pub fn all_reduce_into(&self, acc: &mut HostTensor, rest: &[&HostTensor]) {
+        for p in rest {
+            acc.add_assign(p);
+        }
+        let bytes = acc.size_bytes() as f64;
+        let mut s = self.stats.lock().unwrap();
+        s.allreduces += 1;
+        s.allreduce_bytes += bytes;
+        s.modeled_secs += ring_allreduce_time(bytes, self.world, &self.link);
+    }
+
+    /// Record a broadcast of `t` from one rank to all others.
+    pub fn broadcast(&self, t: &HostTensor) -> HostTensor {
+        let bytes = t.size_bytes() as f64;
+        let mut s = self.stats.lock().unwrap();
+        s.broadcasts += 1;
+        s.broadcast_bytes += bytes;
+        s.modeled_secs +=
+            broadcast_time(bytes, self.world, &self.link) * (self.world - 1).max(0) as f64;
+        t.clone()
+    }
+
+    /// Account an all-reduce of raw `bytes` without moving data (used when a
+    /// codec already produced the reconstruction, Fig 7).
+    pub fn account_allreduce_bytes(&self, bytes: f64) {
+        let mut s = self.stats.lock().unwrap();
+        s.allreduces += 1;
+        s.allreduce_bytes += bytes;
+        s.modeled_secs += ring_allreduce_time(bytes, self.world, &self.link);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::PCIE_GEN4;
+    use crate::util::proptest::{vec_f32, Prop};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allreduce_is_sum() {
+        let ledger = CommLedger::new(PCIE_GEN4, 2);
+        let a = HostTensor::from_vec(&[3], vec![1., 2., 3.]);
+        let b = HostTensor::from_vec(&[3], vec![10., 20., 30.]);
+        let out = ledger.all_reduce(&[a, b]);
+        assert_eq!(out.data, vec![11., 22., 33.]);
+        let s = ledger.stats();
+        assert_eq!(s.allreduces, 1);
+        assert_eq!(s.allreduce_bytes, 12.0);
+        assert!(s.modeled_secs > 0.0);
+    }
+
+    #[test]
+    fn allreduce_into_matches() {
+        let ledger = CommLedger::new(PCIE_GEN4, 4);
+        let mut acc = HostTensor::from_vec(&[2], vec![1., 1.]);
+        let b = HostTensor::from_vec(&[2], vec![2., 3.]);
+        let c = HostTensor::from_vec(&[2], vec![4., 5.]);
+        ledger.all_reduce_into(&mut acc, &[&b, &c]);
+        assert_eq!(acc.data, vec![7., 9.]);
+    }
+
+    #[test]
+    fn world1_costs_nothing() {
+        let ledger = CommLedger::new(PCIE_GEN4, 1);
+        let a = HostTensor::ones(&[1024]);
+        ledger.all_reduce(&[a]);
+        assert_eq!(ledger.stats().modeled_secs, 0.0);
+        assert_eq!(ledger.stats().allreduces, 1);
+    }
+
+    #[test]
+    fn allreduce_commutative_property() {
+        // sum over shards is permutation-invariant (property test).
+        Prop::new(30).check(
+            "allreduce permutation invariant",
+            |r: &mut Rng| {
+                let v = vec_f32(r, 32, 1.0);
+                (v, vec![r.below(100), r.below(100)])
+            },
+            |(v, _)| {
+                let ledger = CommLedger::new(PCIE_GEN4, 2);
+                let a = HostTensor::from_vec(&[v.len()], v.clone());
+                let mut rev = v.clone();
+                rev.reverse();
+                let b = HostTensor::from_vec(&[v.len()], rev);
+                let x = ledger.all_reduce(&[a.clone(), b.clone()]);
+                let y = ledger.all_reduce(&[b, a]);
+                x.max_abs_err(&y) == 0.0
+            },
+        );
+    }
+
+    #[test]
+    fn reset_clears() {
+        let ledger = CommLedger::new(PCIE_GEN4, 2);
+        ledger.all_reduce(&[HostTensor::ones(&[4]), HostTensor::ones(&[4])]);
+        ledger.reset();
+        assert_eq!(ledger.stats(), CommStats::default());
+    }
+}

@@ -1,0 +1,22 @@
+//! The L3 coordinator — the paper's systems contribution, in Rust.
+//!
+//! * [`collectives`] — all-reduce / broadcast / aggregate over host tensors
+//!   with byte-exact volume accounting (the quantity FAL halves).
+//! * [`topology`] — virtual tensor-parallel device groups and shard layout.
+//! * [`tp_trainer`] — real sharded TP forward/backward/AdamW over per-stage
+//!   HLO executables; the Rust side owns every collective, reproducing the
+//!   paper's Fig 2 schedules (Pre-LN: 2 AR/block; FAL: 1 AR/block).
+//! * [`sp_trainer`] — single-process trainer over the fused train-step
+//!   executable (quality experiments: loss curves, PPL, zero-shot).
+//! * [`overlap`] — dual-stream device model for single-GPU MHA∥MLP
+//!   execution (Fig 5 / Fig 8).
+//! * [`dp_pp`] — minimal data- and pipeline-parallel schedules for the
+//!   Apdx B comparison (Fig 10).
+
+pub mod collectives;
+pub mod dp_pp;
+pub mod optim;
+pub mod overlap;
+pub mod sp_trainer;
+pub mod topology;
+pub mod tp_trainer;

@@ -1,0 +1,143 @@
+//! Dual-stream device model: single-GPU MHA ∥ MLP overlap (Fig 5 / Fig 8).
+//!
+//! The paper's single-GPU speedup comes from launching MHA and MLP on
+//! separate CUDA streams once FAL removes the data dependency between them:
+//! when one stream stalls on memory, the other's ready warps keep the SMs
+//! busy. We model a module as a (compute-phase, memory-phase) pair — a GEMM
+//! burns compute, its boundary loads/stores and the elementwise ops burn
+//! bandwidth — and a device as one compute pipe + one memory pipe.
+//!
+//! Serial execution: phases of one module strictly ordered, modules strictly
+//! ordered: T = (ac + am) + (mc + mm).
+//! Overlapped execution: both pipe capacities and both per-module chains
+//! bound the makespan (two-machine flow-shop lower bound, tight here):
+//! T = max(ac + mc, am + mm, ac + am, mc + mm).
+//!
+//! The same model produces the Fig 8(b) utilization counters: pipe busy
+//! fractions before/after overlap.
+
+/// One module's resource demand, in seconds on the target device.
+#[derive(Debug, Clone, Copy)]
+pub struct Phases {
+    pub compute: f64,
+    pub memory: f64,
+}
+
+impl Phases {
+    pub fn serial(&self) -> f64 {
+        self.compute + self.memory
+    }
+}
+
+/// Result of executing one block's MHA+MLP pair.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockTiming {
+    pub serial: f64,
+    pub overlapped: f64,
+}
+
+impl BlockTiming {
+    pub fn speedup(&self) -> f64 {
+        self.serial / self.overlapped
+    }
+}
+
+/// Makespan of MHA and MLP executed on two streams of one device.
+pub fn overlap_block(attn: Phases, mlp: Phases) -> BlockTiming {
+    let serial = attn.serial() + mlp.serial();
+    let overlapped = (attn.compute + mlp.compute)
+        .max(attn.memory + mlp.memory)
+        .max(attn.serial())
+        .max(mlp.serial());
+    BlockTiming { serial, overlapped }
+}
+
+/// Utilization counters over an execution window `t` (Fig 8b analogues).
+#[derive(Debug, Clone, Copy)]
+pub struct Counters {
+    /// Compute-pipe busy fraction ("SM utilization" / "tensor core usage").
+    pub compute_util: f64,
+    /// Memory-pipe busy fraction ("memory bandwidth").
+    pub mem_util: f64,
+    /// Fraction of time at least one stream had work in flight but was
+    /// *not* stalled — the warp-occupancy analogue.
+    pub occupancy: f64,
+}
+
+pub fn counters(attn: Phases, mlp: Phases, window: f64) -> Counters {
+    let c = (attn.compute + mlp.compute) / window;
+    let m = (attn.memory + mlp.memory) / window;
+    Counters {
+        compute_util: c.min(1.0),
+        mem_util: m.min(1.0),
+        occupancy: ((c + m) / 2.0 + 0.5 * c.min(m)).min(1.0),
+    }
+}
+
+/// Fig 8(b): counter deltas when switching serial -> overlapped.
+pub fn counter_gains(attn: Phases, mlp: Phases) -> (Counters, Counters) {
+    let t = overlap_block(attn, mlp);
+    (counters(attn, mlp, t.serial), counters(attn, mlp, t.overlapped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfectly_complementary_modules_overlap_fully() {
+        // attn: all compute; mlp: all memory -> overlap hides one entirely.
+        let a = Phases { compute: 1.0, memory: 0.0 };
+        let m = Phases { compute: 0.0, memory: 1.0 };
+        let t = overlap_block(a, m);
+        assert_eq!(t.serial, 2.0);
+        assert_eq!(t.overlapped, 1.0);
+        assert_eq!(t.speedup(), 2.0);
+    }
+
+    #[test]
+    fn same_resource_modules_cannot_overlap() {
+        let a = Phases { compute: 1.0, memory: 0.0 };
+        let m = Phases { compute: 1.0, memory: 0.0 };
+        let t = overlap_block(a, m);
+        assert_eq!(t.overlapped, 2.0); // compute pipe saturated
+        assert_eq!(t.speedup(), 1.0);
+    }
+
+    #[test]
+    fn overlap_never_worse_never_better_than_2x() {
+        for (ac, am, mc, mm) in [
+            (1.0, 0.3, 2.0, 0.5),
+            (0.1, 0.9, 0.8, 0.2),
+            (1.0, 1.0, 1.0, 1.0),
+            (0.0, 1.0, 0.0, 1.0),
+        ] {
+            let t = overlap_block(
+                Phases { compute: ac, memory: am },
+                Phases { compute: mc, memory: mm },
+            );
+            assert!(t.overlapped <= t.serial + 1e-12);
+            assert!(t.serial <= 2.0 * t.overlapped + 1e-12);
+        }
+    }
+
+    #[test]
+    fn chain_bound_respected() {
+        // One module alone longer than the other's total: its chain bounds.
+        let a = Phases { compute: 3.0, memory: 2.0 };
+        let m = Phases { compute: 0.1, memory: 0.1 };
+        let t = overlap_block(a, m);
+        assert_eq!(t.overlapped, 5.0);
+    }
+
+    #[test]
+    fn counters_rise_with_overlap() {
+        let a = Phases { compute: 0.7, memory: 0.3 };
+        let m = Phases { compute: 0.4, memory: 0.6 };
+        let (before, after) = counter_gains(a, m);
+        assert!(after.compute_util > before.compute_util);
+        assert!(after.mem_util > before.mem_util);
+        assert!(after.occupancy >= before.occupancy);
+        assert!(after.compute_util <= 1.0 && after.mem_util <= 1.0);
+    }
+}

@@ -1,0 +1,246 @@
+//! Single-process trainer over the fused train-step executable.
+//!
+//! Drives the quality experiments (loss curves, perplexity, zero-shot,
+//! instruction tuning): one HLO executes loss + grads + AdamW per step; the
+//! Rust side owns the data pipeline, the LR schedule (fed as a runtime
+//! `lr_scale` scalar), state management and all bookkeeping.
+//!
+//! State crosses the PJRT boundary as literals each step. The vendored xla
+//! crate pins `ExecuteOptions::untuple_result = false`, so multi-output
+//! executables return one tuple buffer that cannot be fed back as inputs —
+//! device-resident state would need a vendor patch (tracked in EXPERIMENTS
+//! §Perf; the conversion cost is benchmarked in benches/runtime_hotpath.rs).
+
+use anyhow::{Context, Result};
+
+use crate::data::{Batch, Loader};
+use crate::runtime::Engine;
+use crate::tensor::HostTensor;
+use crate::util::timer::Stopwatch;
+
+/// Learning-rate schedule, applied as a multiplier on the compiled base LR.
+#[derive(Debug, Clone, Copy)]
+pub enum Schedule {
+    Constant,
+    /// Budget-based one-cycle (Cramming-style, Fig 9): linear warmup to 1.0
+    /// at `peak_frac * total`, then linear decay to 0.
+    OneCycle { total: usize, peak_frac: f64 },
+    /// Constant multiplier (Table 2 LR sweeps reuse one compiled artifact).
+    Scaled(f64),
+}
+
+impl Schedule {
+    pub fn scale(&self, step: usize) -> f64 {
+        match self {
+            Schedule::Constant => 1.0,
+            Schedule::Scaled(s) => *s,
+            Schedule::OneCycle { total, peak_frac } => {
+                let t = step as f64 / *total as f64;
+                let p = *peak_frac;
+                if t < p {
+                    (t / p).max(1e-3)
+                } else {
+                    ((1.0 - t) / (1.0 - p)).max(0.0)
+                }
+            }
+        }
+    }
+}
+
+pub struct StepOutcome {
+    pub loss: f32,
+    pub gnorm: f32,
+    pub secs: f64,
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub artifact: String,
+    pub config: String,
+    pub batch_size: usize,
+    pub schedule: Schedule,
+    n_params: usize,
+    /// [params..., m..., v...] in schema order.
+    state: Vec<HostTensor>,
+    pub step: usize,
+    pub loss_history: Vec<f32>,
+    pub train_secs: f64,
+}
+
+impl<'e> Trainer<'e> {
+    /// Build from a (config, variant-tag) pair, loading the seed-0 initial
+    /// parameter snapshot.
+    pub fn new(
+        engine: &'e Engine,
+        config: &str,
+        tag: &str,
+        schedule: Schedule,
+    ) -> Result<Trainer<'e>> {
+        Self::with_seed(engine, config, tag, schedule, 0)
+    }
+
+    pub fn with_seed(
+        engine: &'e Engine,
+        config: &str,
+        tag: &str,
+        schedule: Schedule,
+        seed: u64,
+    ) -> Result<Trainer<'e>> {
+        let spec = engine.manifest.find("train_step", config, tag)?;
+        let artifact = spec.name.clone();
+        let batch_size = spec
+            .meta
+            .get("batch")
+            .context("train_step missing batch meta")?
+            .as_usize()?;
+        let params = engine.manifest.load_params(config, seed)?;
+        let mut t = Trainer {
+            engine,
+            artifact,
+            config: config.to_string(),
+            batch_size,
+            schedule,
+            n_params: params.len(),
+            state: vec![],
+            step: 0,
+            loss_history: vec![],
+            train_secs: 0.0,
+        };
+        t.install_params(params);
+        Ok(t)
+    }
+
+    fn install_params(&mut self, params: Vec<HostTensor>) {
+        let zeros: Vec<HostTensor> =
+            params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+        let mut state = params;
+        state.extend(zeros.iter().cloned());
+        state.extend(zeros);
+        self.state = state;
+        self.step = 0;
+    }
+
+    /// Replace parameters (e.g. fine-tune from a trained snapshot, Table 2).
+    /// Resets optimizer state and the step counter.
+    pub fn set_params(&mut self, params: &[HostTensor]) -> Result<()> {
+        anyhow::ensure!(params.len() == self.n_params);
+        self.install_params(params.to_vec());
+        Ok(())
+    }
+
+    fn run(&self, step: f32, lr_scale: f32, batch: &Batch) -> Result<Vec<HostTensor>> {
+        let mut inputs = self.state.clone();
+        inputs.push(HostTensor::scalar(step));
+        inputs.push(HostTensor::scalar(lr_scale));
+        inputs.push(batch.tokens.clone());
+        inputs.push(batch.targets.clone());
+        self.engine.execute(&self.artifact, &inputs)
+    }
+
+    /// One optimizer step on `batch`.
+    pub fn train_step(&mut self, batch: &Batch) -> Result<StepOutcome> {
+        self.step += 1;
+        let sw = Stopwatch::start();
+        let lr_scale = self.schedule.scale(self.step) as f32;
+        let outs = self.run(self.step as f32, lr_scale, batch)?;
+        let loss = outs[0].data[0];
+        let gnorm = outs[1].data[0];
+        anyhow::ensure!(
+            outs.len() == 2 + 3 * self.n_params,
+            "unexpected train_step output arity {}",
+            outs.len()
+        );
+        self.state = outs.into_iter().skip(2).collect();
+        let secs = sw.secs();
+        self.train_secs += secs;
+        self.loss_history.push(loss);
+        Ok(StepOutcome { loss, gnorm, secs })
+    }
+
+    /// Evaluation: lr_scale = 0 freezes parameters but still returns the
+    /// batch loss, so every variant with a train_step artifact can be
+    /// evaluated without a dedicated eval executable. Output state is
+    /// discarded — fully side-effect-free.
+    pub fn eval_loss(&mut self, batch: &Batch) -> Result<f32> {
+        let outs = self.run(self.step as f32 + 1.0, 0.0, batch)?;
+        Ok(outs[0].data[0])
+    }
+
+    /// Current parameters (schema order).
+    pub fn params(&self) -> &[HostTensor] {
+        &self.state[..self.n_params]
+    }
+
+    /// Train for `steps` steps from `loader`, logging every `log_every`.
+    pub fn train(
+        &mut self,
+        loader: &mut Loader,
+        steps: usize,
+        log_every: usize,
+        label: &str,
+    ) -> Result<()> {
+        for i in 0..steps {
+            let batch = loader.next_train();
+            let out = self.train_step(&batch)?;
+            if log_every > 0 && (i + 1) % log_every == 0 {
+                println!(
+                    "[{label}] step {:>5}  loss {:.4}  gnorm {:.3}  {:.0} tok/s",
+                    self.step,
+                    out.loss,
+                    out.gnorm,
+                    (self.batch_size * loader.seq_len) as f64 / out.secs
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Validation perplexity over the deterministic val batches.
+    /// `max_batches` bounds eval cost.
+    pub fn val_ppl(&mut self, loader: &Loader, max_batches: usize) -> Result<f64> {
+        let n = loader.val_batches().min(max_batches).max(1);
+        let mut total = 0.0f64;
+        for i in 0..n {
+            let b = loader.val_batch(i);
+            total += self.eval_loss(&b)? as f64;
+        }
+        Ok((total / n as f64).exp())
+    }
+
+    /// Mean training loss over the most recent `k` steps.
+    pub fn recent_loss(&self, k: usize) -> f64 {
+        let n = self.loss_history.len();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let k = k.min(n);
+        self.loss_history[n - k..]
+            .iter()
+            .map(|&x| x as f64)
+            .sum::<f64>()
+            / k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_shapes() {
+        let s = Schedule::OneCycle { total: 100, peak_frac: 0.3 };
+        assert!(s.scale(1) < 0.1);
+        assert!((s.scale(30) - 1.0).abs() < 0.05);
+        assert!(s.scale(90) < 0.2);
+        assert_eq!(Schedule::Constant.scale(7), 1.0);
+        assert_eq!(Schedule::Scaled(0.1).scale(3), 0.1);
+    }
+
+    #[test]
+    fn recent_loss_empty_is_nan() {
+        // Constructed without an engine — only the pure helpers are tested
+        // here; trainer integration lives in rust/tests/.
+        let s = Schedule::Constant;
+        assert_eq!(s.scale(0), 1.0);
+    }
+}

@@ -1,0 +1,266 @@
+//! Tensor-parallel shard layout (Megatron-style), mirrored from
+//! python/compile/stages.py.
+//!
+//! Attention: wq/wk/wv column-sharded by head groups, wo row-sharded.
+//! MLP: w1/b1 column-sharded by hidden units, w2 row-sharded; b2 lives on
+//! shard 0 (others hold zeros). LayerNorm parameters and the embedding /
+//! loss head are replicated (grads summed by the coordinator).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::ModelConfig;
+use crate::runtime::ParamSpec;
+use crate::tensor::HostTensor;
+
+/// Full-model parameters indexed by schema name.
+#[derive(Debug, Clone)]
+pub struct NamedParams {
+    pub by_name: BTreeMap<String, HostTensor>,
+    pub order: Vec<String>,
+}
+
+impl NamedParams {
+    pub fn from_flat(schema: &[ParamSpec], flat: Vec<HostTensor>) -> Self {
+        assert_eq!(schema.len(), flat.len());
+        let mut by_name = BTreeMap::new();
+        let mut order = vec![];
+        for (s, t) in schema.iter().zip(flat) {
+            by_name.insert(s.name.clone(), t);
+            order.push(s.name.clone());
+        }
+        NamedParams { by_name, order }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.by_name
+            .get(name)
+            .with_context(|| format!("missing param {name:?}"))
+    }
+
+    pub fn blk(&self, layer: usize, field: &str) -> Result<&HostTensor> {
+        self.get(&format!("blocks.{layer}.{field}"))
+    }
+
+    /// Back to flat schema order (for feeding full-model artifacts).
+    pub fn to_flat(&self) -> Vec<HostTensor> {
+        self.order
+            .iter()
+            .map(|n| self.by_name[n].clone())
+            .collect()
+    }
+}
+
+/// One block's per-shard parameter set, in stage-input order.
+#[derive(Debug, Clone)]
+pub struct BlockShard {
+    /// [ln1_g, ln1_b, wq, wk, wv, wo]
+    pub attn: Vec<HostTensor>,
+    /// [ln2_g, ln2_b, w1, b1, w2, b2]
+    pub mlp: Vec<HostTensor>,
+    /// [lnf_g, lnf_b]
+    pub lnf: Vec<HostTensor>,
+}
+
+/// Shard geometry for a config at TP degree `tp`.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardDims {
+    pub tp: usize,
+    pub d_attn: usize,
+    pub d_kv: usize,
+    pub d_ff: usize,
+}
+
+pub fn shard_dims(cfg: &ModelConfig, tp: usize) -> Result<ShardDims> {
+    anyhow::ensure!(cfg.n_head % tp == 0, "n_head {} % tp {tp}", cfg.n_head);
+    anyhow::ensure!(cfg.n_kv_head % tp == 0, "kv heads not divisible");
+    anyhow::ensure!(cfg.d_ff % tp == 0, "d_ff not divisible");
+    Ok(ShardDims {
+        tp,
+        d_attn: cfg.n_head / tp * cfg.head_dim(),
+        d_kv: cfg.n_kv_head / tp * cfg.head_dim(),
+        d_ff: cfg.d_ff / tp,
+    })
+}
+
+/// Split one block's full parameters into `tp` shards.
+pub fn shard_block(
+    params: &NamedParams,
+    layer: usize,
+    dims: ShardDims,
+) -> Result<Vec<BlockShard>> {
+    let g = |f: &str| params.blk(layer, f);
+    let mut shards = Vec::with_capacity(dims.tp);
+    for r in 0..dims.tp {
+        let (a0, a1) = (r * dims.d_attn, (r + 1) * dims.d_attn);
+        let (k0, k1) = (r * dims.d_kv, (r + 1) * dims.d_kv);
+        let (f0, f1) = (r * dims.d_ff, (r + 1) * dims.d_ff);
+        let b2_full = g("b2")?;
+        let b2 = if r == 0 {
+            b2_full.clone()
+        } else {
+            HostTensor::zeros(&b2_full.shape)
+        };
+        shards.push(BlockShard {
+            attn: vec![
+                g("ln1_g")?.clone(),
+                g("ln1_b")?.clone(),
+                g("wq")?.slice_cols(a0, a1),
+                g("wk")?.slice_cols(k0, k1),
+                g("wv")?.slice_cols(k0, k1),
+                g("wo")?.slice_rows(a0, a1),
+            ],
+            mlp: vec![
+                g("ln2_g")?.clone(),
+                g("ln2_b")?.clone(),
+                g("w1")?.slice_cols(f0, f1),
+                g("b1")?.slice_1d(f0, f1),
+                g("w2")?.slice_rows(f0, f1),
+                b2,
+            ],
+            lnf: vec![g("lnf_g")?.clone(), g("lnf_b")?.clone()],
+        });
+    }
+    Ok(shards)
+}
+
+/// Write shard-slice gradients back into a full-shape gradient accumulator
+/// (the inverse of `shard_block` for one tensor kind).
+pub fn scatter_cols(full: &mut HostTensor, shard: &HostTensor, c0: usize) {
+    let (r, c) = (full.shape[0], full.shape[1]);
+    let sc = shard.shape[1];
+    assert_eq!(shard.shape[0], r);
+    for i in 0..r {
+        for j in 0..sc {
+            full.data[i * c + c0 + j] += shard.data[i * sc + j];
+        }
+    }
+}
+
+pub fn scatter_rows(full: &mut HostTensor, shard: &HostTensor, r0: usize) {
+    let row: usize = full.shape[1..].iter().product();
+    let n = shard.shape[0];
+    for i in 0..n {
+        for j in 0..row {
+            full.data[(r0 + i) * row + j] += shard.data[i * row + j];
+        }
+    }
+}
+
+pub fn scatter_1d(full: &mut HostTensor, shard: &HostTensor, i0: usize) {
+    for (j, v) in shard.data.iter().enumerate() {
+        full.data[i0 + j] += v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy_params(l: usize, d: usize, f: usize, v: usize, s: usize) -> NamedParams {
+        let mut rng = Rng::new(0);
+        let mut by_name = BTreeMap::new();
+        let mut order = vec![];
+        let mut put = |name: String, shape: &[usize], rng: &mut Rng| {
+            order.push(name.clone());
+            by_name.insert(name, HostTensor::randn(shape, 0.1, rng));
+        };
+        for li in 0..l {
+            for (f_, shape) in [
+                ("b1", vec![f]), ("b2", vec![d]),
+                ("ln1_b", vec![d]), ("ln1_g", vec![d]),
+                ("ln2_b", vec![d]), ("ln2_g", vec![d]),
+                ("lnf_b", vec![d]), ("lnf_g", vec![d]),
+                ("w1", vec![d, f]), ("w2", vec![f, d]),
+                ("wk", vec![d, d]), ("wo", vec![d, d]),
+                ("wq", vec![d, d]), ("wv", vec![d, d]),
+            ] {
+                put(format!("blocks.{li}.{f_}"), &shape, &mut rng);
+            }
+        }
+        put("lnF_b".into(), &[d], &mut rng);
+        put("lnF_g".into(), &[d], &mut rng);
+        put("wpe".into(), &[s, d], &mut rng);
+        put("wte".into(), &[v, d], &mut rng);
+        NamedParams { by_name, order }
+    }
+
+    fn toy_cfg(d: usize, h: usize, f: usize) -> ModelConfig {
+        ModelConfig {
+            name: "toy".into(),
+            vocab_size: 64,
+            d_model: d,
+            n_head: h,
+            n_kv_head: h,
+            n_layer: 2,
+            d_ff: f,
+            seq_len: 8,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn shard_shapes() {
+        let p = toy_params(2, 16, 32, 64, 8);
+        let cfg = toy_cfg(16, 4, 32);
+        let dims = shard_dims(&cfg, 2).unwrap();
+        let shards = shard_block(&p, 0, dims).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].attn[2].shape, vec![16, 8]); // wq shard
+        assert_eq!(shards[0].attn[5].shape, vec![8, 16]); // wo shard
+        assert_eq!(shards[0].mlp[2].shape, vec![16, 16]); // w1 shard
+        assert_eq!(shards[1].mlp[5].data, vec![0.0; 16]); // b2 zeros off-0
+        assert_eq!(shards[0].mlp[5], *p.blk(0, "b2").unwrap());
+    }
+
+    #[test]
+    fn shards_partition_columns() {
+        let p = toy_params(1, 16, 32, 64, 8);
+        let cfg = toy_cfg(16, 4, 32);
+        let dims = shard_dims(&cfg, 4).unwrap();
+        let shards = shard_block(&p, 0, dims).unwrap();
+        // Reassemble wq from shards and compare.
+        let full = p.blk(0, "wq").unwrap();
+        let mut re = HostTensor::zeros(&full.shape);
+        for (r, s) in shards.iter().enumerate() {
+            scatter_cols(&mut re, &s.attn[2], r * dims.d_attn);
+        }
+        assert_eq!(re, *full);
+    }
+
+    #[test]
+    fn shards_partition_rows_and_1d() {
+        let p = toy_params(1, 16, 32, 64, 8);
+        let cfg = toy_cfg(16, 4, 32);
+        let dims = shard_dims(&cfg, 2).unwrap();
+        let shards = shard_block(&p, 0, dims).unwrap();
+        let w2 = p.blk(0, "w2").unwrap();
+        let mut re = HostTensor::zeros(&w2.shape);
+        for (r, s) in shards.iter().enumerate() {
+            scatter_rows(&mut re, &s.mlp[4], r * dims.d_ff);
+        }
+        assert_eq!(re, *w2);
+        let b1 = p.blk(0, "b1").unwrap();
+        let mut rb = HostTensor::zeros(&b1.shape);
+        for (r, s) in shards.iter().enumerate() {
+            scatter_1d(&mut rb, &s.mlp[3], r * dims.d_ff);
+        }
+        assert_eq!(rb, *b1);
+    }
+
+    #[test]
+    fn rejects_indivisible() {
+        let cfg = toy_cfg(16, 4, 32);
+        assert!(shard_dims(&cfg, 3).is_err());
+    }
+
+    #[test]
+    fn named_params_roundtrip() {
+        let p = toy_params(1, 8, 16, 32, 8);
+        let flat = p.to_flat();
+        assert_eq!(flat.len(), p.order.len());
+        assert_eq!(flat[0], p.by_name[&p.order[0]]);
+    }
+}

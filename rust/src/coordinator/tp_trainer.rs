@@ -1,0 +1,580 @@
+//! Tensor-parallel trainer: real sharded forward/backward/AdamW in Rust.
+//!
+//! Every shard executes real HLO stage computations (lowered from
+//! python/compile/stages.py) on its slice of the parameters; this module
+//! owns the schedule *between* stages — exactly the communication structure
+//! of the paper's Fig 2:
+//!
+//! ```text
+//! Pre-LN fwd (per block):  attn_fwd ──AR──> mlp_preln_fwd ──AR──>  (2 AR)
+//! Pre-LN bwd (per block):  mlp bwd  ──AR──> attn bwd      ──AR──>  (2 AR)
+//! FAL fwd  (block i>1):    fal_fused_fwd ────────────────AR──>     (1 AR)
+//! FAL bwd  (block i>1):    fal_fused_bwd ────────────────AR──>     (1 AR)
+//! FAL block 1:             attn_fwd ─AR─ lnf ─ mlp_fal_fwd ─AR─    (2 AR)
+//! ```
+//!
+//! The `CommLedger` counts every collective byte; the AdamW optimizer and
+//! gradient clipping live here (Rust owns state management), matching the
+//! fused train-step HLO up to f32 reassociation — enforced by
+//! rust/tests/tp_equivalence.rs.
+
+use anyhow::{Context, Result};
+
+use crate::config::{LinkSpec, ModelConfig, TrainConfig, Variant};
+use crate::data::Batch;
+use crate::runtime::{Engine, Manifest};
+use crate::tensor::HostTensor;
+use crate::util::timer::Breakdown;
+
+use super::collectives::CommLedger;
+use super::topology::{
+    scatter_1d, scatter_cols, scatter_rows, shard_block, shard_dims,
+    BlockShard, NamedParams, ShardDims,
+};
+
+pub struct TpTrainer<'e> {
+    pub engine: &'e Engine,
+    pub cfg: ModelConfig,
+    pub variant: Variant,
+    pub tp: usize,
+    pub batch: usize,
+    pub ledger: CommLedger,
+    pub params: NamedParams,
+    /// Per-layer, per-shard parameter slices (rebuilt after each update).
+    shards: Vec<Vec<BlockShard>>,
+    dims: ShardDims,
+    m: NamedParams,
+    v: NamedParams,
+    /// FAL: the replicated normalized first-attention signal of the last
+    /// forward pass (needed by every block's backward stage).
+    fa_cache: Option<HostTensor>,
+    pub tc: TrainConfig,
+    pub step: usize,
+    pub breakdown: Breakdown,
+}
+
+/// Forward stash for one block (primal inputs the bwd stages recompute from).
+struct BlockStash {
+    x: HostTensor,
+    /// Pre-LN: h = x + full MHA out. FAL block 1: the assembled MHA out a1.
+    h_or_a: Option<HostTensor>,
+}
+
+/// fal_fused stage input order (python/compile/stages.py):
+/// x, fa, ln1_g, ln1_b, ln2_g, ln2_b, wq, wk, wv, wo, w1, b1, w2, b2.
+fn fused_inputs(x: &HostTensor, fa: &HostTensor, s: &BlockShard) -> Vec<HostTensor> {
+    let mut v = vec![x.clone(), fa.clone()];
+    v.extend(s.attn[..2].iter().cloned()); // ln1_g, ln1_b
+    v.extend(s.mlp[..2].iter().cloned()); // ln2_g, ln2_b
+    v.extend(s.attn[2..].iter().cloned()); // wq, wk, wv, wo
+    v.extend(s.mlp[2..].iter().cloned()); // w1, b1, w2, b2
+    v
+}
+
+use super::optim::zeros_like;
+
+impl<'e> TpTrainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        config: &str,
+        variant: Variant,
+        tp: usize,
+        link: LinkSpec,
+        tc: TrainConfig,
+    ) -> Result<TpTrainer<'e>> {
+        anyhow::ensure!(
+            matches!(variant, Variant::PreLn | Variant::Fal),
+            "TP schedules implemented for preln and fal (the paper's Fig 2)"
+        );
+        let cfg = engine.manifest.config(config)?.clone();
+        let dims = shard_dims(&cfg, tp)?;
+        let schema = engine.manifest.schema(config)?.to_vec();
+        let flat = engine.manifest.load_params(config, 0)?;
+        let params = NamedParams::from_flat(&schema, flat);
+        let m = zeros_like(&params);
+        let v = zeros_like(&params);
+        // Batch size: whichever stage bundle was lowered for this config.
+        let batch = [8usize, 4]
+            .into_iter()
+            .find(|b| {
+                engine
+                    .manifest
+                    .artifacts
+                    .contains_key(&Manifest::tp_stage_name(config, tp, *b, "attn_fwd"))
+            })
+            .with_context(|| format!("no tp{tp} stages for config {config}"))?;
+        let mut t = TpTrainer {
+            engine,
+            cfg,
+            variant,
+            tp,
+            batch,
+            ledger: CommLedger::new(link, tp),
+            params,
+            shards: vec![],
+            dims,
+            m,
+            v,
+            fa_cache: None,
+            tc,
+            step: 0,
+            breakdown: Breakdown::new(),
+        };
+        t.reshard()?;
+        Ok(t)
+    }
+
+    fn reshard(&mut self) -> Result<()> {
+        self.shards.clear();
+        for li in 0..self.cfg.n_layer {
+            self.shards.push(shard_block(&self.params, li, self.dims)?);
+        }
+        Ok(())
+    }
+
+    fn stage(&self, stage: &str) -> String {
+        Manifest::tp_stage_name(&self.cfg.name, self.tp, self.batch, stage)
+    }
+
+    fn exec(&self, stage: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.engine
+            .execute(&self.stage(stage), inputs)
+            .with_context(|| format!("stage {stage}"))
+    }
+
+    /// Run one stage on every shard and all-reduce the first output.
+    /// `build` assembles the per-shard input vector.
+    fn sharded_allreduce(
+        &self,
+        stage: &str,
+        build: impl Fn(&BlockShard) -> Vec<HostTensor>,
+        li: usize,
+    ) -> Result<HostTensor> {
+        let mut parts = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let inputs = build(&self.shards[li][r]);
+            parts.push(self.exec(stage, &inputs)?.into_iter().next().unwrap());
+        }
+        Ok(self.ledger.all_reduce(&parts))
+    }
+
+    // ------------------------------------------------------------------
+    // Forward
+    // ------------------------------------------------------------------
+
+    /// Forward pass; returns (final hidden x, per-block stash).
+    fn forward(&mut self, batch: &Batch) -> Result<(HostTensor, Vec<BlockStash>)> {
+        let embed = self.exec(
+            "embed_fwd",
+            &[
+                batch.tokens.clone(),
+                self.params.get("wte")?.clone(),
+                self.params.get("wpe")?.clone(),
+            ],
+        )?;
+        let mut x = embed.into_iter().next().unwrap();
+        // The paper's Fig 2 "Broadcast": the block input is replicated.
+        self.ledger.broadcast(&x);
+
+        let mut stash = Vec::with_capacity(self.cfg.n_layer);
+        for li in 0..self.cfg.n_layer {
+            match (self.variant, li) {
+                (Variant::PreLn, _) => {
+                    let a = self.sharded_allreduce(
+                        "attn_fwd",
+                        |s| {
+                            let mut v = vec![x.clone()];
+                            v.extend(s.attn.iter().cloned());
+                            v
+                        },
+                        li,
+                    )?;
+                    let mut h = x.clone();
+                    h.add_assign(&a);
+                    let m = self.sharded_allreduce(
+                        "mlp_preln_fwd",
+                        |s| {
+                            let mut v = vec![h.clone()];
+                            v.extend(s.mlp.iter().cloned());
+                            v
+                        },
+                        li,
+                    )?;
+                    stash.push(BlockStash { x: x.clone(), h_or_a: Some(h.clone()) });
+                    x = h;
+                    x.add_assign(&m);
+                }
+                (Variant::Fal, 0) => {
+                    let a = self.sharded_allreduce(
+                        "attn_fwd",
+                        |s| {
+                            let mut v = vec![x.clone()];
+                            v.extend(s.attn.iter().cloned());
+                            v
+                        },
+                        0,
+                    )?;
+                    let lnf = self.shards[0][0].lnf.clone();
+                    let fa = self
+                        .exec("lnf_fwd", &[a.clone(), lnf[0].clone(), lnf[1].clone()])?
+                        .into_iter()
+                        .next()
+                        .unwrap();
+                    let m = self.sharded_allreduce(
+                        "mlp_fal_fwd",
+                        |s| {
+                            let mut v = vec![x.clone(), fa.clone()];
+                            v.extend(s.mlp.iter().cloned());
+                            v
+                        },
+                        0,
+                    )?;
+                    stash.push(BlockStash { x: x.clone(), h_or_a: Some(a.clone()) });
+                    x.add_assign(&a);
+                    x.add_assign(&m);
+                    self.fa_cache = Some(fa);
+                }
+                (Variant::Fal, _) => {
+                    let fa = self.fa_cache.clone().expect("fa set in block 1");
+                    // One fused stage, one all-reduce (Fig 2b).
+                    let out = self.sharded_allreduce(
+                        "fal_fused_fwd",
+                        |s| fused_inputs(&x, &fa, s),
+                        li,
+                    )?;
+                    stash.push(BlockStash { x: x.clone(), h_or_a: None });
+                    x.add_assign(&out);
+                }
+                _ => unreachable!(),
+            }
+        }
+        Ok((x, stash))
+    }
+
+    // ------------------------------------------------------------------
+    // Training step (fwd + bwd + AdamW)
+    // ------------------------------------------------------------------
+
+    /// One full training step. Returns (loss, grad_norm).
+    pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        self.step += 1;
+        let mut bd = std::mem::take(&mut self.breakdown);
+
+        let t0 = std::time::Instant::now();
+        let (x_final, stash) = self.forward(batch)?;
+        let head = self.exec(
+            "head_fwd_bwd",
+            &[
+                x_final,
+                self.params.get("lnF_g")?.clone(),
+                self.params.get("lnF_b")?.clone(),
+                self.params.get("wte")?.clone(),
+                batch.targets.clone(),
+            ],
+        )?;
+        bd.add("fwd", t0.elapsed().as_secs_f64());
+
+        let t1 = std::time::Instant::now();
+        let loss = head[0].data[0];
+        let mut dx = head[2].clone();
+        self.ledger.broadcast(&dx); // loss-head grad replicated to shards
+        let mut grads = zeros_like(&self.params);
+        self.add_grad(&mut grads, "lnF_g", &head[3]);
+        self.add_grad(&mut grads, "lnF_b", &head[4]);
+        self.add_grad(&mut grads, "wte", &head[5]);
+
+        let mut dfa: Option<HostTensor> = None;
+        for li in (0..self.cfg.n_layer).rev() {
+            dx = match (self.variant, li) {
+                (Variant::PreLn, _) => {
+                    self.bwd_block_preln(li, &stash[li], dx, &mut grads)?
+                }
+                (Variant::Fal, 0) => {
+                    self.bwd_fal_block1(&stash[0], dx, &mut dfa, &mut grads)?
+                }
+                (Variant::Fal, _) => {
+                    self.bwd_block_fal(li, &stash[li], dx, &mut dfa, &mut grads)?
+                }
+                _ => unreachable!(),
+            };
+        }
+
+        let out = self.exec(
+            "embed_bwd",
+            &[
+                batch.tokens.clone(),
+                self.params.get("wte")?.clone(),
+                self.params.get("wpe")?.clone(),
+                dx,
+            ],
+        )?;
+        self.add_grad(&mut grads, "wte", &out[0]);
+        self.add_grad(&mut grads, "wpe", &out[1]);
+        bd.add("bwd", t1.elapsed().as_secs_f64());
+
+        let t2 = std::time::Instant::now();
+        let gnorm = self.adamw(&grads);
+        self.reshard()?;
+        bd.add("opt", t2.elapsed().as_secs_f64());
+        self.breakdown = bd;
+        Ok((loss, gnorm as f32))
+    }
+
+    fn add_grad(&self, grads: &mut NamedParams, name: &str, t: &HostTensor) {
+        grads.by_name.get_mut(name).unwrap().add_assign(t);
+    }
+
+    /// Pre-LN block backward: 2 all-reduces, mirroring forward.
+    fn bwd_block_preln(
+        &mut self,
+        li: usize,
+        stash: &BlockStash,
+        dx_out: HostTensor,
+        grads: &mut NamedParams,
+    ) -> Result<HostTensor> {
+        let h = stash.h_or_a.as_ref().unwrap();
+        // x' = h + m(h):  dm = dx_out, backprop per shard.
+        let mut dh_parts = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let s = self.shards[li][r].clone();
+            let mut inputs = vec![h.clone()];
+            inputs.extend(s.mlp.iter().cloned());
+            inputs.push(dx_out.clone());
+            let out = self.exec("mlp_preln_bwd", &inputs)?;
+            // outputs: dh, dln2_g, dln2_b, dw1, db1, dw2, db2
+            self.accum_mlp_grads(li, r, &out[1..], grads);
+            dh_parts.push(out.into_iter().next().unwrap());
+        }
+        let mut dh = self.ledger.all_reduce(&dh_parts);
+        dh.add_assign(&dx_out); // residual h -> x'
+
+        // h = x + a:  da = dh.
+        let mut dx_parts = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let s = self.shards[li][r].clone();
+            let mut inputs = vec![stash.x.clone()];
+            inputs.extend(s.attn.iter().cloned());
+            inputs.push(dh.clone());
+            let out = self.exec("attn_bwd", &inputs)?;
+            // outputs: dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo
+            self.accum_attn_grads(li, r, &out[1..], grads);
+            dx_parts.push(out.into_iter().next().unwrap());
+        }
+        let mut dx = self.ledger.all_reduce(&dx_parts);
+        dx.add_assign(&dh); // residual x -> h
+        Ok(dx)
+    }
+
+    /// FAL block i>1 backward: a single (fused dx ⊕ dfa) all-reduce.
+    fn bwd_block_fal(
+        &mut self,
+        li: usize,
+        stash: &BlockStash,
+        dx_out: HostTensor,
+        dfa: &mut Option<HostTensor>,
+        grads: &mut NamedParams,
+    ) -> Result<HostTensor> {
+        let fa = self.fa_cache.clone().context("fa cache empty")?;
+        let mut dx_acc: Option<HostTensor> = None;
+        let mut dfa_acc: Option<HostTensor> = None;
+        for r in 0..self.tp {
+            let s = self.shards[li][r].clone();
+            let mut inputs = fused_inputs(&stash.x, &fa, &s);
+            inputs.push(dx_out.clone());
+            let mut out = self.exec("fal_fused_bwd", &inputs)?;
+            // outputs: dx, dfa, dln1_g, dln1_b, dln2_g, dln2_b,
+            //          dwq, dwk, dwv, dwo, dw1, db1, dw2, db2
+            let rest = out.split_off(2);
+            self.accum_fused_grads(li, r, &rest, grads);
+            let mut it = out.into_iter();
+            let dx_r = it.next().unwrap();
+            let dfa_r = it.next().unwrap();
+            match &mut dx_acc {
+                Some(a) => a.add_assign(&dx_r),
+                None => dx_acc = Some(dx_r),
+            }
+            match &mut dfa_acc {
+                Some(a) => a.add_assign(&dfa_r),
+                None => dfa_acc = Some(dfa_r),
+            }
+        }
+        let mut dx = dx_acc.unwrap();
+        let dfa_block = dfa_acc.unwrap();
+        // One all-reduce per FAL block backward: dx only. dfa partials stay
+        // *shard-local* and accumulate across blocks; the single dfa
+        // all-reduce happens once, in block 1's backward (bwd_fal_block1) —
+        // this is what keeps FAL's backward at one collective per block.
+        self.ledger.account_allreduce_bytes(dx.size_bytes() as f64);
+        dx.add_assign(&dx_out); // residual
+        match dfa {
+            Some(acc) => acc.add_assign(&dfa_block),
+            None => *dfa = Some(dfa_block),
+        }
+        Ok(dx)
+    }
+
+    /// FAL block 1 backward: LNf + attention assembled like the forward.
+    fn bwd_fal_block1(
+        &mut self,
+        stash: &BlockStash,
+        dx_out: HostTensor,
+        dfa: &mut Option<HostTensor>,
+        grads: &mut NamedParams,
+    ) -> Result<HostTensor> {
+        let a1 = stash.h_or_a.as_ref().unwrap().clone();
+        let fa = self.fa_cache.clone().context("fa cache empty")?;
+        // x2 = x1 + a1 + m(x1, fa):  dm = dx_out.
+        let mut dx_parts = Vec::with_capacity(self.tp);
+        let mut dfa_parts = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let s = self.shards[0][r].clone();
+            let mut inputs = vec![stash.x.clone(), fa.clone()];
+            inputs.extend(s.mlp.iter().cloned());
+            inputs.push(dx_out.clone());
+            let mut out = self.exec("mlp_fal_bwd", &inputs)?;
+            // outputs: dx, dfa, dln2_g, dln2_b, dw1, db1, dw2, db2
+            let rest = out.split_off(2);
+            self.accum_mlp_grads(0, r, &rest, grads);
+            let mut it = out.into_iter();
+            dx_parts.push(it.next().unwrap());
+            dfa_parts.push(it.next().unwrap());
+        }
+        let dx_mlp = self.ledger.all_reduce(&dx_parts);
+        let mut dfa_total = self.ledger.all_reduce(&dfa_parts);
+        if let Some(acc) = dfa.take() {
+            dfa_total.add_assign(&acc);
+        }
+
+        // fa = LNf(a1): backward through the shared LN (shard-0 params).
+        let lnf = self.shards[0][0].lnf.clone();
+        let out = self.exec(
+            "lnf_bwd",
+            &[a1, lnf[0].clone(), lnf[1].clone(), dfa_total],
+        )?;
+        self.add_grad(grads, "blocks.0.lnf_g", &out[1]);
+        self.add_grad(grads, "blocks.0.lnf_b", &out[2]);
+
+        // a1 receives: residual path (dx_out) + LNf path.
+        let mut da = dx_out.clone();
+        da.add_assign(&out[0]);
+
+        let mut dx_attn_parts = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let s = self.shards[0][r].clone();
+            let mut inputs = vec![stash.x.clone()];
+            inputs.extend(s.attn.iter().cloned());
+            inputs.push(da.clone());
+            let out = self.exec("attn_bwd", &inputs)?;
+            self.accum_attn_grads(0, r, &out[1..], grads);
+            dx_attn_parts.push(out.into_iter().next().unwrap());
+        }
+        let mut dx = self.ledger.all_reduce(&dx_attn_parts);
+        dx.add_assign(&dx_mlp);
+        dx.add_assign(&dx_out); // direct residual x1 -> x2
+        Ok(dx)
+    }
+
+    // ------------------------------------------------------------------
+    // Gradient accumulation / optimizer
+    // ------------------------------------------------------------------
+
+    /// MLP stage grads: [dln2_g, dln2_b, dw1, db1, dw2, db2] from shard r.
+    fn accum_mlp_grads(
+        &self,
+        li: usize,
+        r: usize,
+        out: &[HostTensor],
+        grads: &mut NamedParams,
+    ) {
+        let d = self.dims;
+        let key = |f: &str| format!("blocks.{li}.{f}");
+        grads.by_name.get_mut(&key("ln2_g")).unwrap().add_assign(&out[0]);
+        grads.by_name.get_mut(&key("ln2_b")).unwrap().add_assign(&out[1]);
+        scatter_cols(grads.by_name.get_mut(&key("w1")).unwrap(), &out[2], r * d.d_ff);
+        scatter_1d(grads.by_name.get_mut(&key("b1")).unwrap(), &out[3], r * d.d_ff);
+        scatter_rows(grads.by_name.get_mut(&key("w2")).unwrap(), &out[4], r * d.d_ff);
+        if r == 0 {
+            grads.by_name.get_mut(&key("b2")).unwrap().add_assign(&out[5]);
+        }
+    }
+
+    /// Attention stage grads: [dln1_g, dln1_b, dwq, dwk, dwv, dwo].
+    fn accum_attn_grads(
+        &self,
+        li: usize,
+        r: usize,
+        out: &[HostTensor],
+        grads: &mut NamedParams,
+    ) {
+        let d = self.dims;
+        let key = |f: &str| format!("blocks.{li}.{f}");
+        grads.by_name.get_mut(&key("ln1_g")).unwrap().add_assign(&out[0]);
+        grads.by_name.get_mut(&key("ln1_b")).unwrap().add_assign(&out[1]);
+        scatter_cols(grads.by_name.get_mut(&key("wq")).unwrap(), &out[2], r * d.d_attn);
+        scatter_cols(grads.by_name.get_mut(&key("wk")).unwrap(), &out[3], r * d.d_kv);
+        scatter_cols(grads.by_name.get_mut(&key("wv")).unwrap(), &out[4], r * d.d_kv);
+        scatter_rows(grads.by_name.get_mut(&key("wo")).unwrap(), &out[5], r * d.d_attn);
+    }
+
+    /// Fused FAL stage grads: [dln1_g, dln1_b, dln2_g, dln2_b, dwq, dwk,
+    /// dwv, dwo, dw1, db1, dw2, db2].
+    fn accum_fused_grads(
+        &self,
+        li: usize,
+        r: usize,
+        rest: &[HostTensor],
+        grads: &mut NamedParams,
+    ) {
+        self.accum_attn_grads(
+            li,
+            r,
+            &[
+                rest[0].clone(),
+                rest[1].clone(),
+                rest[4].clone(),
+                rest[5].clone(),
+                rest[6].clone(),
+                rest[7].clone(),
+            ],
+            grads,
+        );
+        self.accum_mlp_grads(
+            li,
+            r,
+            &[
+                rest[2].clone(),
+                rest[3].clone(),
+                rest[8].clone(),
+                rest[9].clone(),
+                rest[10].clone(),
+                rest[11].clone(),
+            ],
+            grads,
+        );
+    }
+
+    /// AdamW with global-norm clipping (coordinator::optim).
+    fn adamw(&mut self, grads: &NamedParams) -> f64 {
+        super::optim::adamw_step(
+            &mut self.params, grads, &mut self.m, &mut self.v, self.step,
+            &self.tc, 1.0,
+        )
+    }
+
+    /// Forward-only pass (inference TTFT measurement, Fig 19): returns the
+    /// batch loss; parameters untouched.
+    pub fn forward_loss(&mut self, batch: &Batch) -> Result<f32> {
+        let (x_final, _) = self.forward(batch)?;
+        let head = self.exec(
+            "head_fwd_bwd",
+            &[
+                x_final,
+                self.params.get("lnF_g")?.clone(),
+                self.params.get("lnF_b")?.clone(),
+                self.params.get("wte")?.clone(),
+                batch.targets.clone(),
+            ],
+        )?;
+        Ok(head[0].data[0])
+    }
+}

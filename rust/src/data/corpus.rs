@@ -1,0 +1,254 @@
+//! Synthetic language corpus generator.
+//!
+//! Design goals (stand-in for OpenWebText, DESIGN.md §3):
+//!   * **Zipfian unigram distribution** — like natural text, a small head of
+//!     very frequent tokens and a long tail, so embeddings see realistic
+//!     frequency imbalance.
+//!   * **Local grammatical structure** — sentences are generated from
+//!     templates over word classes (subject/verb/object/adjective/number)
+//!     with *agreement*: the verb class token is deterministically tied to
+//!     the subject class (learnable short-range dependency), and anaphora
+//!     tokens refer back to the sentence subject (mid-range dependency).
+//!   * **Global topical structure** — a slow Markov chain over topics biases
+//!     content-word choice, giving document-level statistics that reward
+//!     models that can carry context across sentences (this is where
+//!     revisiting early context — FAL's mechanism — can matter).
+//!
+//! The generator is fully deterministic given (spec, seed).
+
+use crate::util::rng::Rng;
+
+/// Token-id layout within the model vocabulary:
+///   [0]                 BOS/document separator
+///   [1]                 anaphora marker ("it")
+///   [2, 2+n_topics)     topic introducer tokens
+///   [content_base, V)   content tokens, partitioned into word classes.
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub vocab_size: usize,
+    pub n_topics: usize,
+    /// Probability of staying in the current topic per sentence.
+    pub topic_stickiness: f64,
+    /// Zipf exponent for content-word draws within a class.
+    pub zipf_s: f64,
+    /// Probability a sentence ends with an anaphora clause.
+    pub anaphora_p: f64,
+}
+
+impl CorpusSpec {
+    pub fn for_vocab(vocab_size: usize) -> CorpusSpec {
+        CorpusSpec {
+            vocab_size,
+            n_topics: 4,
+            topic_stickiness: 0.85,
+            zipf_s: 1.2,
+            anaphora_p: 0.3,
+        }
+    }
+}
+
+pub const BOS: i32 = 0;
+pub const ANAPHOR: i32 = 1;
+
+/// Word classes used by the sentence templates.
+const N_CLASSES: usize = 5; // subject, verb, object, adjective, number
+
+#[derive(Debug)]
+pub struct Corpus {
+    pub spec: CorpusSpec,
+    pub tokens: Vec<i32>,
+    class_base: usize,
+    class_size: usize,
+}
+
+impl Corpus {
+    /// Generate `n_tokens` tokens with the given seed.
+    pub fn generate(spec: CorpusSpec, n_tokens: usize, seed: u64) -> Corpus {
+        let content_base = 2 + spec.n_topics;
+        assert!(
+            spec.vocab_size > content_base + 2 * N_CLASSES,
+            "vocab too small for corpus structure"
+        );
+        let class_size = (spec.vocab_size - content_base) / N_CLASSES;
+        let mut c = Corpus {
+            spec,
+            tokens: Vec::with_capacity(n_tokens),
+            class_base: content_base,
+            class_size,
+        };
+        let mut rng = Rng::new(seed);
+        // Zipf weights reused for every class draw.
+        let zipf: Vec<f64> = (0..class_size)
+            .map(|i| 1.0 / ((i + 1) as f64).powf(c.spec.zipf_s))
+            .collect();
+        let mut topic = 0usize;
+        c.tokens.push(BOS);
+        while c.tokens.len() < n_tokens {
+            // Topic transition (slow chain).
+            if !rng.bool(c.spec.topic_stickiness) {
+                topic = rng.below(c.spec.n_topics);
+            }
+            c.emit_sentence(topic, &zipf, &mut rng);
+        }
+        c.tokens.truncate(n_tokens);
+        c
+    }
+
+    /// Class-c token, biased toward the topic's slice of the class.
+    fn draw(&self, class: usize, topic: usize, zipf: &[f64], rng: &mut Rng) -> i32 {
+        let rank = rng.weighted(zipf);
+        // Topic bias: with p=0.6 rotate the rank into the topic's region of
+        // the class, making token statistics topic-dependent.
+        let rank = if rng.bool(0.6) {
+            (rank + topic * self.class_size / self.spec.n_topics)
+                % self.class_size
+        } else {
+            rank
+        };
+        (self.class_base + class * self.class_size + rank) as i32
+    }
+
+    fn emit_sentence(&mut self, topic: usize, zipf: &[f64], rng: &mut Rng) {
+        // Occasionally announce the topic (strong global cue).
+        if rng.bool(0.15) {
+            self.tokens.push((2 + topic) as i32);
+        }
+        let subj_rank;
+        // Template: [ADJ] SUBJ VERB [NUM] OBJ [ANAPHOR VERB']
+        if rng.bool(0.4) {
+            let adj = self.draw(3, topic, zipf, rng);
+            self.tokens.push(adj);
+        }
+        let subj = self.draw(0, topic, zipf, rng);
+        subj_rank = (subj as usize - self.class_base) % self.class_size;
+        self.tokens.push(subj);
+        // Agreement: verb token rank is a deterministic function of the
+        // subject rank (rank -> rank/2) — a learnable hard dependency.
+        let verb = (self.class_base + self.class_size + (subj_rank / 2)) as i32;
+        self.tokens.push(verb);
+        if rng.bool(0.3) {
+            let num = self.draw(4, topic, zipf, rng);
+            self.tokens.push(num);
+        }
+        let obj = self.draw(2, topic, zipf, rng);
+        self.tokens.push(obj);
+        if rng.bool(self.spec.anaphora_p) {
+            // "it VERB'": anaphora repeats the subject's agreement class.
+            self.tokens.push(ANAPHOR);
+            self.tokens.push(verb);
+        }
+        self.tokens.push(BOS);
+    }
+
+    /// Verb token implied by a subject token (for task generation).
+    pub fn agreement_verb(&self, subj: i32) -> i32 {
+        let rank = (subj as usize - self.class_base) % self.class_size;
+        (self.class_base + self.class_size + rank / 2) as i32
+    }
+
+    /// A random subject-class token.
+    pub fn subject_token(&self, rng: &mut Rng) -> i32 {
+        (self.class_base + rng.below(self.class_size)) as i32
+    }
+
+    /// A random verb-class token distinct from `not`.
+    pub fn verb_token_not(&self, not: i32, rng: &mut Rng) -> i32 {
+        loop {
+            let v = (self.class_base + self.class_size
+                + rng.below(self.class_size)) as i32;
+            if v != not {
+                return v;
+            }
+        }
+    }
+
+    pub fn topic_token(&self, topic: usize) -> i32 {
+        (2 + topic) as i32
+    }
+
+    pub fn n_classes() -> usize {
+        N_CLASSES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusSpec::for_vocab(256), 10_000, 42)
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Corpus::generate(CorpusSpec::for_vocab(256), 1000, 1);
+        let b = Corpus::generate(CorpusSpec::for_vocab(256), 1000, 1);
+        assert_eq!(a.tokens, b.tokens);
+        let c = Corpus::generate(CorpusSpec::for_vocab(256), 1000, 2);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let c = corpus();
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+        assert_eq!(c.tokens.len(), 10_000);
+    }
+
+    #[test]
+    fn zipf_head_heavier_than_tail() {
+        let c = corpus();
+        let mut counts = vec![0usize; 256];
+        for &t in &c.tokens {
+            counts[t as usize] += 1;
+        }
+        // First content subject token must be much more common than a deep
+        // tail token of the same class.
+        let base = c.class_base;
+        assert!(counts[base] > 3 * counts[base + c.class_size - 1].max(1));
+    }
+
+    #[test]
+    fn agreement_holds_in_stream() {
+        // Wherever SUBJ VERB appears as generated, the verb must equal
+        // agreement_verb(subj). Scan for subject-class tokens followed by a
+        // verb-class token.
+        let c = corpus();
+        let sub_lo = c.class_base as i32;
+        let sub_hi = (c.class_base + c.class_size) as i32;
+        let verb_lo = sub_hi;
+        let verb_hi = (c.class_base + 2 * c.class_size) as i32;
+        let mut checked = 0;
+        for w in c.tokens.windows(2) {
+            if (sub_lo..sub_hi).contains(&w[0])
+                && (verb_lo..verb_hi).contains(&w[1])
+            {
+                assert_eq!(w[1], c.agreement_verb(w[0]));
+                checked += 1;
+            }
+        }
+        assert!(checked > 100, "agreement pairs not found: {checked}");
+    }
+
+    #[test]
+    fn topics_persist() {
+        // Consecutive topic announcements should repeat the same topic more
+        // often than chance (stickiness 0.85 over 4 topics).
+        let c = corpus();
+        let topics: Vec<i32> = c
+            .tokens
+            .iter()
+            .copied()
+            .filter(|&t| (2..2 + c.spec.n_topics as i32).contains(&t))
+            .collect();
+        let same = topics.windows(2).filter(|w| w[0] == w[1]).count();
+        let frac = same as f64 / (topics.len() - 1) as f64;
+        assert!(frac > 0.4, "topic persistence too low: {frac}");
+    }
+
+    #[test]
+    #[should_panic(expected = "vocab too small")]
+    fn rejects_tiny_vocab() {
+        Corpus::generate(CorpusSpec::for_vocab(12), 100, 0);
+    }
+}

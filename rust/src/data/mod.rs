@@ -1,0 +1,15 @@
+//! Data substrate: synthetic corpus, batching, and evaluation task suites.
+//!
+//! The paper pretrains on OpenWebText and evaluates zero-shot on SuperGLUE;
+//! neither is available offline, so this module implements the documented
+//! substitutions (DESIGN.md §3): a deterministic synthetic language with
+//! both local (grammar-template) and global (topic-state) structure, plus a
+//! SuperGLUE-shaped probe suite scored by option log-likelihood.
+
+pub mod corpus;
+pub mod loader;
+pub mod tasks;
+
+pub use corpus::{Corpus, CorpusSpec};
+pub use loader::{Batch, Loader, Split};
+pub use tasks::{TaskExample, TaskSuite};

@@ -1,0 +1,414 @@
+//! Zero-shot probe suite — the SuperGLUE substitution (DESIGN.md §3).
+//!
+//! Eight tasks mirroring the harness shape of Table 1's benchmark: each
+//! example is (prompt, candidate options, gold index); the model is scored
+//! zero-shot by ranking option log-likelihoods (`score_options` artifact).
+//! CB- and ReCoRD-analogues report macro-F1, the rest accuracy — matching
+//! the paper's metric assignment.
+//!
+//! The tasks are grounded in the synthetic grammar's *learnable rules*
+//! (agreement, topics, anaphora, copying), so a better language model of the
+//! corpus scores higher — the same relationship SuperGLUE has to WebText.
+
+use crate::util::rng::Rng;
+
+use super::corpus::{Corpus, ANAPHOR};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Accuracy,
+    MacroF1,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskExample {
+    pub prompt: Vec<i32>,
+    pub options: Vec<Vec<i32>>,
+    pub gold: usize,
+}
+
+#[derive(Debug)]
+pub struct Task {
+    pub name: &'static str,
+    pub metric: Metric,
+    pub examples: Vec<TaskExample>,
+}
+
+#[derive(Debug)]
+pub struct TaskSuite {
+    pub tasks: Vec<Task>,
+}
+
+impl TaskSuite {
+    /// Generate the 8-task suite with `n` examples per task.
+    pub fn generate(corpus: &Corpus, n: usize, seed: u64) -> TaskSuite {
+        let mut rng = Rng::new(seed);
+        let tasks = vec![
+            agree_q(corpus, n, &mut rng.split(1)),
+            topic_cb(corpus, n, &mut rng.split(2)),
+            copy_copa(corpus, n, &mut rng.split(3)),
+            multi_span(corpus, n, &mut rng.split(4)),
+            recall_record(corpus, n, &mut rng.split(5)),
+            entail_rte(corpus, n, &mut rng.split(6)),
+            wic_topic(corpus, n, &mut rng.split(7)),
+            wino_anaphor(corpus, n, &mut rng.split(8)),
+        ];
+        TaskSuite { tasks }
+    }
+
+    /// Macro-average over tasks of each task's headline metric value,
+    /// given per-task per-example predicted option indices.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.tasks.iter().map(|t| t.name).collect()
+    }
+}
+
+/// Score predictions for one task.
+pub fn score(task: &Task, predictions: &[usize]) -> f64 {
+    assert_eq!(predictions.len(), task.examples.len());
+    match task.metric {
+        Metric::Accuracy => {
+            let hits = predictions
+                .iter()
+                .zip(&task.examples)
+                .filter(|(p, e)| **p == e.gold)
+                .count();
+            100.0 * hits as f64 / predictions.len() as f64
+        }
+        Metric::MacroF1 => {
+            let n_class = task
+                .examples
+                .iter()
+                .map(|e| e.options.len())
+                .max()
+                .unwrap_or(2);
+            let mut f1s = vec![];
+            for c in 0..n_class {
+                let tp = predictions
+                    .iter()
+                    .zip(&task.examples)
+                    .filter(|(p, e)| **p == c && e.gold == c)
+                    .count() as f64;
+                let fp = predictions
+                    .iter()
+                    .zip(&task.examples)
+                    .filter(|(p, e)| **p == c && e.gold != c)
+                    .count() as f64;
+                let fn_ = predictions
+                    .iter()
+                    .zip(&task.examples)
+                    .filter(|(p, e)| **p != c && e.gold == c)
+                    .count() as f64;
+                if tp + fp + fn_ > 0.0 {
+                    f1s.push(100.0 * 2.0 * tp / (2.0 * tp + fp + fn_));
+                }
+            }
+            f1s.iter().sum::<f64>() / f1s.len().max(1) as f64
+        }
+    }
+}
+
+fn sentence_prefix(c: &Corpus, topic: usize, rng: &mut Rng) -> (Vec<i32>, i32) {
+    // BOS [topic] SUBJ — returns prefix and the subject token.
+    let mut p = vec![super::corpus::BOS];
+    if rng.bool(0.5) {
+        p.push(c.topic_token(topic));
+    }
+    let subj = c.subject_token(rng);
+    p.push(subj);
+    (p, subj)
+}
+
+/// BoolQ-analogue: does this verb agree with the subject? (binary)
+fn agree_q(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let (prompt, subj) = sentence_prefix(c, rng.below(4), rng);
+        let good = c.agreement_verb(subj);
+        let bad = c.verb_token_not(good, rng);
+        let gold = rng.below(2);
+        let options = if gold == 0 {
+            vec![vec![good], vec![bad]]
+        } else {
+            vec![vec![bad], vec![good]]
+        };
+        examples.push(TaskExample { prompt, options, gold });
+    }
+    Task { name: "AgreeQ", metric: Metric::Accuracy, examples }
+}
+
+/// CB-analogue (3-class, macro-F1): which topic continues this document?
+fn topic_cb(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let topic = rng.below(3);
+        // Prompt: several topic-consistent sentences.
+        let mut prompt = vec![super::corpus::BOS, c.topic_token(topic)];
+        for _ in 0..3 {
+            let subj = c.subject_token(rng);
+            prompt.push(subj);
+            prompt.push(c.agreement_verb(subj));
+            prompt.push(super::corpus::BOS);
+        }
+        let options: Vec<Vec<i32>> =
+            (0..3).map(|t| vec![c.topic_token(t)]).collect();
+        examples.push(TaskExample { prompt, options, gold: topic });
+    }
+    Task { name: "TopicCB", metric: Metric::MacroF1, examples }
+}
+
+/// COPA-analogue: pick the continuation that copies the premise's number.
+fn copy_copa(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let (mut prompt, subj) = sentence_prefix(c, rng.below(4), rng);
+        prompt.push(c.agreement_verb(subj));
+        let num_a = c.subject_token(rng); // reuse class-0 as markers
+        let num_b = c.verb_token_not(num_a, rng);
+        prompt.push(num_a);
+        let gold = rng.below(2);
+        let options = if gold == 0 {
+            vec![vec![num_a], vec![num_b]]
+        } else {
+            vec![vec![num_b], vec![num_a]]
+        };
+        examples.push(TaskExample { prompt, options, gold });
+    }
+    Task { name: "CopyCOPA", metric: Metric::Accuracy, examples }
+}
+
+/// MultiRC-analogue: multi-sentence context, yes/no per candidate fact.
+fn multi_span(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let mut prompt = vec![super::corpus::BOS];
+        let mut subjects = vec![];
+        for _ in 0..3 {
+            let subj = c.subject_token(rng);
+            subjects.push(subj);
+            prompt.push(subj);
+            prompt.push(c.agreement_verb(subj));
+            prompt.push(super::corpus::BOS);
+        }
+        // Query: a subject from the context vs an unseen one.
+        let seen = subjects[rng.below(3)];
+        let unseen = loop {
+            let s = c.subject_token(rng);
+            if !subjects.contains(&s) {
+                break s;
+            }
+        };
+        let gold = rng.below(2);
+        let options = if gold == 0 {
+            vec![vec![seen, c.agreement_verb(seen)],
+                 vec![unseen, c.agreement_verb(unseen)]]
+        } else {
+            vec![vec![unseen, c.agreement_verb(unseen)],
+                 vec![seen, c.agreement_verb(seen)]]
+        };
+        examples.push(TaskExample { prompt, options, gold });
+    }
+    Task { name: "MultiSpan", metric: Metric::Accuracy, examples }
+}
+
+/// ReCoRD-analogue (cloze, macro-F1): recall the document's first subject.
+fn recall_record(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let first = c.subject_token(rng);
+        let mut prompt = vec![super::corpus::BOS, first,
+                              c.agreement_verb(first)];
+        // Distractor sentences.
+        let mut distractors = vec![];
+        for _ in 0..2 {
+            let s = c.subject_token(rng);
+            distractors.push(s);
+            prompt.push(super::corpus::BOS);
+            prompt.push(s);
+            prompt.push(c.agreement_verb(s));
+        }
+        // Cloze: "it <verb-of-first>" — asks which entity "it" refers to;
+        // the corpus's anaphora rule points at the *sentence* subject, and
+        // the first mention is the most repeated pattern.
+        prompt.push(ANAPHOR);
+        // Options are agreement verbs; the rank/2 mapping can collide, so
+        // keep only distractors with distinct verbs.
+        let gold_verb = c.agreement_verb(first);
+        let mut verbs = vec![gold_verb];
+        for &s in &distractors {
+            let v = c.agreement_verb(s);
+            if !verbs.contains(&v) {
+                verbs.push(v);
+            }
+        }
+        while verbs.len() < 3 {
+            let v = c.verb_token_not(gold_verb, rng);
+            if !verbs.contains(&v) {
+                verbs.push(v);
+            }
+        }
+        let gold = 0usize;
+        let options: Vec<Vec<i32>> = verbs.iter().map(|&v| vec![v]).collect();
+        examples.push(TaskExample { prompt, options, gold });
+    }
+    Task { name: "RecallRecord", metric: Metric::MacroF1, examples }
+}
+
+/// RTE-analogue: does sentence 2 follow sentence 1's agreement rule?
+fn entail_rte(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let (mut prompt, subj) = sentence_prefix(c, rng.below(4), rng);
+        prompt.push(c.agreement_verb(subj));
+        prompt.push(super::corpus::BOS);
+        prompt.push(subj); // repeated mention
+        let good = c.agreement_verb(subj);
+        let bad = c.verb_token_not(good, rng);
+        let gold = rng.below(2);
+        let options = if gold == 0 {
+            vec![vec![good], vec![bad]]
+        } else {
+            vec![vec![bad], vec![good]]
+        };
+        examples.push(TaskExample { prompt, options, gold });
+    }
+    Task { name: "EntailRTE", metric: Metric::Accuracy, examples }
+}
+
+/// WiC-analogue: is the marked token used under the same topic?
+fn wic_topic(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let t1 = rng.below(3);
+        let same = rng.bool(0.5);
+        let t2 = if same { t1 } else { (t1 + 1 + rng.below(2)) % 3 };
+        let prompt = vec![super::corpus::BOS, c.topic_token(t1),
+                          c.subject_token(rng), super::corpus::BOS,
+                          c.topic_token(t2), c.subject_token(rng),
+                          super::corpus::BOS];
+        // Option 0: "same topic continues" (topic t2 token);
+        // option 1: a topic guaranteed distinct from t2 (mod-4 offset).
+        let third = (t2 + 2) % 4;
+        let options = vec![vec![c.topic_token(t2)], vec![c.topic_token(third)]];
+        examples.push(TaskExample { prompt, options, gold: 0 });
+    }
+    Task { name: "WiCTopic", metric: Metric::Accuracy, examples }
+}
+
+/// WSC-analogue: anaphora resolution with two candidate referents.
+fn wino_anaphor(c: &Corpus, n: usize, rng: &mut Rng) -> Task {
+    let mut examples = vec![];
+    for _ in 0..n {
+        let s1 = c.subject_token(rng);
+        let s2 = loop {
+            let s = c.subject_token(rng);
+            if s != s1 {
+                break s;
+            }
+        };
+        // "s1 v1 . s2 v2 . it ___" — corpus rule: anaphor binds to the
+        // *current sentence* subject, i.e. s2.
+        let prompt = vec![
+            super::corpus::BOS, s1, c.agreement_verb(s1),
+            super::corpus::BOS, s2, c.agreement_verb(s2), ANAPHOR,
+        ];
+        let v2 = c.agreement_verb(s2);
+        let mut v1 = c.agreement_verb(s1);
+        if v1 == v2 {
+            v1 = c.verb_token_not(v2, rng);
+        }
+        let gold = rng.below(2);
+        let options = if gold == 0 {
+            vec![vec![v2], vec![v1]]
+        } else {
+            vec![vec![v1], vec![v2]]
+        };
+        examples.push(TaskExample { prompt, options, gold });
+    }
+    Task { name: "WinoAnaphor", metric: Metric::Accuracy, examples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusSpec;
+
+    fn suite() -> TaskSuite {
+        let c = Corpus::generate(CorpusSpec::for_vocab(256), 20_000, 11);
+        TaskSuite::generate(&c, 24, 7)
+    }
+
+    #[test]
+    fn eight_tasks_generated() {
+        let s = suite();
+        assert_eq!(s.tasks.len(), 8);
+        for t in &s.tasks {
+            assert_eq!(t.examples.len(), 24, "{}", t.name);
+            for e in &t.examples {
+                assert!(e.gold < e.options.len());
+                assert!(!e.prompt.is_empty());
+                assert!(e.options.iter().all(|o| !o.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn metrics_assigned_like_paper() {
+        let s = suite();
+        let f1_tasks: Vec<&str> = s
+            .tasks
+            .iter()
+            .filter(|t| t.metric == Metric::MacroF1)
+            .map(|t| t.name)
+            .collect();
+        assert_eq!(f1_tasks, vec!["TopicCB", "RecallRecord"]);
+    }
+
+    #[test]
+    fn perfect_predictions_score_100() {
+        let s = suite();
+        for t in &s.tasks {
+            let gold: Vec<usize> = t.examples.iter().map(|e| e.gold).collect();
+            let sc = score(t, &gold);
+            assert!((sc - 100.0).abs() < 1e-9, "{}: {sc}", t.name);
+        }
+    }
+
+    #[test]
+    fn random_predictions_near_chance() {
+        let s = suite();
+        let t = &s.tasks[0]; // AgreeQ, binary
+        let preds: Vec<usize> =
+            (0..t.examples.len()).map(|i| i % 2).collect();
+        let sc = score(t, &preds);
+        assert!((20.0..80.0).contains(&sc), "score {sc}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = Corpus::generate(CorpusSpec::for_vocab(256), 20_000, 11);
+        let a = TaskSuite::generate(&c, 8, 3);
+        let b = TaskSuite::generate(&c, 8, 3);
+        for (x, y) in a.tasks.iter().zip(&b.tasks) {
+            for (e1, e2) in x.examples.iter().zip(&y.examples) {
+                assert_eq!(e1.prompt, e2.prompt);
+                assert_eq!(e1.gold, e2.gold);
+            }
+        }
+    }
+
+    #[test]
+    fn options_distinct() {
+        let s = suite();
+        for t in &s.tasks {
+            for e in &t.examples {
+                for i in 0..e.options.len() {
+                    for j in i + 1..e.options.len() {
+                        assert_ne!(e.options[i], e.options[j],
+                                   "{} duplicate options", t.name);
+                    }
+                }
+            }
+        }
+    }
+}

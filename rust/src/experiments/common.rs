@@ -1,0 +1,192 @@
+//! Shared experiment context and helpers: corpus construction, variant
+//! training, and the zero-shot scoring harness.
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::sp_trainer::{Schedule, Trainer};
+use crate::data::{tasks, Corpus, CorpusSpec, Loader, TaskSuite};
+use crate::runtime::Engine;
+use crate::tensor::HostTensor;
+
+pub struct ExpCtx {
+    pub engine: Engine,
+    /// Multiplier on default step budgets (0.1 for smoke runs, 1.0 full).
+    pub scale: f64,
+    pub out_dir: PathBuf,
+    pub seed: u64,
+}
+
+impl ExpCtx {
+    pub fn new(artifact_dir: &std::path::Path, scale: f64) -> Result<ExpCtx> {
+        Ok(ExpCtx {
+            engine: Engine::new(artifact_dir)?,
+            scale,
+            out_dir: PathBuf::from("reports"),
+            seed: 42,
+        })
+    }
+
+    pub fn steps(&self, base: usize) -> usize {
+        ((base as f64 * self.scale) as usize).max(5)
+    }
+
+    /// Deterministic corpus + loader sized for a config. `spec_seed` selects
+    /// among "datasets" (Fig 3/4 use four different corpora).
+    pub fn loader(&self, config: &str, spec_seed: u64) -> Result<(Corpus, Loader)> {
+        let cfg = self.engine.manifest.config(config)?;
+        let batch = self.default_batch(config)?;
+        let spec = CorpusSpec::for_vocab(cfg.vocab_size);
+        // ~600k tokens is plenty for these model sizes.
+        let corpus = Corpus::generate(spec, 600_000, 1000 + spec_seed);
+        let loader = Loader::new(&corpus, cfg.seq_len, batch, 0.05,
+                                 self.seed + spec_seed);
+        Ok((corpus, loader))
+    }
+
+    pub fn default_batch(&self, config: &str) -> Result<usize> {
+        // Batch is baked into the lowered artifacts; read it from any
+        // train_step entry for this config.
+        let spec = self
+            .engine
+            .manifest
+            .artifacts
+            .values()
+            .find(|a| {
+                a.meta_str("kind") == Some("train_step")
+                    && a.meta_str("config") == Some(config)
+            })
+            .with_context(|| format!("no train_step artifact for {config}"))?;
+        spec.meta.get("batch").unwrap().as_usize()
+    }
+
+    /// Train one variant for `steps`; returns the trainer (for eval) and
+    /// pure training wall-clock seconds.
+    pub fn train_variant(
+        &self,
+        config: &str,
+        tag: &str,
+        steps: usize,
+        schedule: Schedule,
+        loader: &mut Loader,
+        label: &str,
+    ) -> Result<(Trainer<'_>, f64)> {
+        let mut t = Trainer::new(&self.engine, config, tag, schedule)?;
+        let log = (steps / 4).max(1);
+        t.train(loader, steps, log, label)?;
+        let secs = t.train_secs;
+        Ok((t, secs))
+    }
+
+    /// Zero-shot suite scoring via the score_options artifact: returns
+    /// (task name, score) per task plus the macro average.
+    pub fn zero_shot(
+        &self,
+        config: &str,
+        tag: &str,
+        params: &[HostTensor],
+        suite: &TaskSuite,
+    ) -> Result<Vec<(String, f64)>> {
+        let spec = self.engine.manifest.find("score_options", config, tag)?;
+        let name = spec.name.clone();
+        let batch = spec.meta.get("batch").unwrap().as_usize()?;
+        let cfg = self.engine.manifest.config(config)?.clone();
+        let s = cfg.seq_len;
+
+        // Flatten all (task, example, option) rows.
+        struct Row {
+            task: usize,
+            example: usize,
+            option: usize,
+            tokens: Vec<i32>,
+            targets: Vec<i32>,
+            mask: Vec<f32>,
+        }
+        let mut rows = vec![];
+        for (ti, task) in suite.tasks.iter().enumerate() {
+            for (ei, ex) in task.examples.iter().enumerate() {
+                for (oi, opt) in ex.options.iter().enumerate() {
+                    let mut seq = ex.prompt.clone();
+                    seq.extend(opt);
+                    seq.truncate(s + 1);
+                    let plen = ex.prompt.len().min(s);
+                    let olen = opt.len();
+                    while seq.len() < s + 1 {
+                        seq.push(0);
+                    }
+                    let tokens = seq[..s].to_vec();
+                    let targets = seq[1..s + 1].to_vec();
+                    let mut mask = vec![0.0f32; s];
+                    for i in plen.saturating_sub(1)
+                        ..(plen + olen - 1).min(s)
+                    {
+                        mask[i] = 1.0;
+                    }
+                    rows.push(Row { task: ti, example: ei, option: oi,
+                                    tokens, targets, mask });
+                }
+            }
+        }
+
+        // Score rows in batches.
+        let mut scores = vec![vec![]; suite.tasks.len()];
+        for (ti, task) in suite.tasks.iter().enumerate() {
+            scores[ti] = task
+                .examples
+                .iter()
+                .map(|e| vec![f64::NEG_INFINITY; e.options.len()])
+                .collect::<Vec<_>>();
+        }
+        let mut i = 0usize;
+        while i < rows.len() {
+            let chunk: Vec<&Row> =
+                rows[i..(i + batch).min(rows.len())].iter().collect();
+            let n = chunk.len();
+            let mut toks = Vec::with_capacity(batch * s);
+            let mut tgts = Vec::with_capacity(batch * s);
+            let mut msk = Vec::with_capacity(batch * s);
+            for r in &chunk {
+                toks.extend(&r.tokens);
+                tgts.extend(&r.targets);
+                msk.extend(&r.mask);
+            }
+            // Pad the final partial batch with copies of row 0.
+            for _ in n..batch {
+                toks.extend(&chunk[0].tokens);
+                tgts.extend(&chunk[0].targets);
+                msk.extend(&chunk[0].mask);
+            }
+            let mut inputs: Vec<HostTensor> = params.to_vec();
+            inputs.push(HostTensor::from_i32(&[batch, s], &toks));
+            inputs.push(HostTensor::from_i32(&[batch, s], &tgts));
+            inputs.push(HostTensor::from_vec(&[batch, s], msk));
+            let out = self.engine.execute(&name, &inputs)?;
+            for (j, r) in chunk.iter().enumerate() {
+                scores[r.task][r.example][r.option] = out[0].data[j] as f64;
+            }
+            i += batch;
+        }
+
+        // Argmax per example -> task metric.
+        let mut results = vec![];
+        let mut sum = 0.0;
+        for (ti, task) in suite.tasks.iter().enumerate() {
+            let preds: Vec<usize> = scores[ti]
+                .iter()
+                .map(|opts| {
+                    opts.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0
+                })
+                .collect();
+            let sc = tasks::score(task, &preds);
+            sum += sc;
+            results.push((task.name.to_string(), sc));
+        }
+        results.push(("Avg".to_string(), sum / suite.tasks.len() as f64));
+        Ok(results)
+    }
+}

@@ -1,0 +1,54 @@
+//! Experiment registry: one entry per paper table/figure.
+//!
+//! `fal exp <id>` runs one; `fal exp all` runs the full suite and writes
+//! Markdown + CSV into `reports/`. DESIGN.md §5 maps every id to the paper
+//! artifact it regenerates.
+
+pub mod common;
+pub mod costmodel_figs;
+pub mod fig7_compression;
+pub mod motivation;
+pub mod quality;
+pub mod scaling;
+pub mod table2_instruct;
+pub mod tp_measured;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::Report;
+
+pub use common::ExpCtx;
+
+/// All experiment ids, in suggested execution order (cheap model-based
+/// figures first, training-heavy sweeps later).
+pub const ALL: &[&str] = &[
+    "fig6", "fig8", "fig10", "fig19",  // cost-model figures (fast)
+    "tp-sim",                           // measured TP coordinator
+    "fig3-fig4",                        // motivation analyses
+    "fig7",                             // compression baselines
+    "table1",                           // quality sweep (+T7, Fig18, Fig1d)
+    "fig9", "fig17", "fig20", "table8", // scaling & generalization
+    "table2",                           // instruction tuning
+    "appendix-c",                       // motivation rerun at tiny scale
+];
+
+pub fn run(ctx: &ExpCtx, id: &str) -> Result<Report> {
+    Ok(match id {
+        "fig6" => costmodel_figs::fig6(ctx)?,
+        "fig8" => costmodel_figs::fig8(ctx)?,
+        "fig10" => costmodel_figs::fig10(ctx)?,
+        "fig19" => costmodel_figs::fig19(ctx)?,
+        "tp-sim" => tp_measured::run(ctx, "small", 2)?,
+        "tp-sim4" => tp_measured::run(ctx, "small", 4)?,
+        "fig3-fig4" => motivation::run(ctx, "small")?,
+        "appendix-c" => motivation::run(ctx, "tiny")?,
+        "fig7" => fig7_compression::run(ctx, "small")?,
+        "table1" | "fig1d" | "table7" | "fig18" => quality::run(ctx, "small")?,
+        "fig9" => scaling::fig9(ctx)?,
+        "fig17" => scaling::fig17(ctx)?,
+        "fig20" => scaling::fig20(ctx)?,
+        "table8" => scaling::table8(ctx)?,
+        "table2" => table2_instruct::run(ctx, "small")?,
+        other => bail!("unknown experiment {other:?}; known: {ALL:?}"),
+    })
+}

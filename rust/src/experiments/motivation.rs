@@ -1,0 +1,192 @@
+//! Sec 3 motivation analyses: Fig 3 (CKA + connection ablation) and
+//! Fig 4 (gradient magnitude + per-layer MHA omission), plus the Apdx C
+//! reruns at another scale.
+//!
+//! Procedure mirrors the paper: take a *trained* Pre-LN model, then
+//! (a) measure CKA between consecutive blocks for MHA-out / MLP-in /
+//! MLP-out on several datasets, (b) ablate connections at eval time via the
+//! surgery gates, (c) measure ||dLoss/d(MHA_i out)||, (d) omit each block's
+//! MHA individually and report PPL.
+
+use anyhow::Result;
+
+use crate::analysis::{consecutive_cka, normalize_max};
+use crate::coordinator::sp_trainer::Schedule;
+use crate::metrics::Report;
+use crate::tensor::HostTensor;
+use crate::util::table::Table;
+
+use super::common::ExpCtx;
+
+/// Eval PPL with given gate vectors through the eval_masked artifact.
+fn masked_ppl(
+    ctx: &ExpCtx,
+    config: &str,
+    tag: &str,
+    params: &[HostTensor],
+    loader: &crate::data::Loader,
+    mha: &[f32],
+    conn: &[f32],
+    batches: usize,
+) -> Result<f64> {
+    let spec = ctx.engine.manifest.find("eval_masked", config, tag)?;
+    let name = spec.name.clone();
+    let mut loss_sum = 0.0f64;
+    let mut count = 0.0f64;
+    for i in 0..loader.val_batches().min(batches) {
+        let b = loader.val_batch(i);
+        let mut inputs: Vec<HostTensor> = params.to_vec();
+        inputs.push(b.tokens);
+        inputs.push(b.targets);
+        inputs.push(HostTensor::from_vec(&[mha.len()], mha.to_vec()));
+        inputs.push(HostTensor::from_vec(&[conn.len()], conn.to_vec()));
+        let out = ctx.engine.execute(&name, &inputs)?;
+        loss_sum += out[0].data[0] as f64;
+        count += out[1].data[0] as f64;
+    }
+    Ok((loss_sum / count).exp())
+}
+
+pub fn run(ctx: &ExpCtx, config: &str) -> Result<Report> {
+    let cfg = ctx.engine.manifest.config(config)?.clone();
+    let l = cfg.n_layer;
+    let mut report = Report::new(
+        &format!("fig3_fig4_{config}"),
+        "Motivation: MHA-MLP connections & first-attention primacy",
+    );
+    report.note(format!(
+        "config {config} ({} layers, {} params), trained Pre-LN model",
+        l, cfg.n_params
+    ));
+
+    // Train the base Pre-LN model.
+    let (_, mut loader) = ctx.loader(config, 0)?;
+    let steps = ctx.steps(350);
+    let (mut trainer, secs) = ctx.train_variant(
+        config, "preln", steps, Schedule::Constant, &mut loader, "motiv")?;
+    report.note(format!("pretraining: {steps} steps, {secs:.0}s"));
+    let params: Vec<HostTensor> = trainer.params().to_vec();
+
+    // ---------------- Fig 3(a): CKA across consecutive blocks ------------
+    let cap = ctx.engine.manifest.find("capture", config, "preln")?;
+    let cap_name = cap.name.clone();
+    let mut t3a = Table::new(
+        "Fig 3(a): CKA similarity between consecutive blocks",
+        &["block pair", "MHA out", "MLP in (Resid+MHA)", "MLP out"],
+    );
+    let batch = loader.fixed_batch(7);
+    let mut inputs = params.clone();
+    inputs.push(batch.tokens.clone());
+    let out = ctx.engine.execute(&cap_name, &inputs)?;
+    let cka_mha = consecutive_cka(&out[0]);
+    let cka_in = consecutive_cka(&out[1]);
+    let cka_out = consecutive_cka(&out[2]);
+    for i in 0..l - 1 {
+        t3a.row(vec![
+            format!("{}-{}", i + 1, i + 2),
+            Table::fmt(cka_mha[i], 3),
+            Table::fmt(cka_in[i], 3),
+            Table::fmt(cka_out[i], 3),
+        ]);
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    report.note(format!(
+        "Fig 3(a) means: MHA-out {:.3} / MLP-in {:.3} / MLP-out {:.3} — \
+         paper finds MLP-in >> MHA-out (MLP input barely changes)",
+        mean(&cka_mha), mean(&cka_in), mean(&cka_out)
+    ));
+    report.table(t3a);
+
+    // ---------------- Fig 3(b): connection ablation ----------------------
+    let ones = vec![1.0f32; l];
+    let zeros = vec![0.0f32; l];
+    let nb = 8;
+    let original =
+        masked_ppl(ctx, config, "preln", &params, &loader, &ones, &ones, nb)?;
+    let all_mha =
+        masked_ppl(ctx, config, "preln", &params, &loader, &zeros, &zeros, nb)?;
+    let all_connect =
+        masked_ppl(ctx, config, "preln", &params, &loader, &ones, &zeros, nb)?;
+    let mut t3b = Table::new(
+        "Fig 3(b): connection ablation (validation PPL)",
+        &["setting", "PPL"],
+    );
+    t3b.row(vec!["Original".into(), Table::fmt(original, 2)]);
+    t3b.row(vec!["All MHA removed".into(), Table::fmt(all_mha, 2)]);
+    t3b.row(vec!["All Connect removed".into(), Table::fmt(all_connect, 2)]);
+    report.note(format!(
+        "Fig 3(b) shape check: Original {original:.2} < All-Connect \
+         {all_connect:.2} < All-MHA {all_mha:.2} (connection removal \
+         recovers much of the all-MHA loss)"
+    ));
+    report.table(t3b);
+
+    // ---------------- Fig 4(a): gradient magnitude per block -------------
+    let gm = ctx.engine.manifest.find("gradmag", config, "preln")?;
+    let gm_name = gm.name.clone();
+    let mut t4a = Table::new(
+        "Fig 4(a): normalized ||dLoss/d MHA_i|| per block, 4 datasets",
+        &["block", "ds1", "ds2", "ds3", "ds4"],
+    );
+    let mut per_ds = vec![];
+    for ds in 0..4u64 {
+        let (_, dl) = ctx.loader(config, ds)?;
+        let b = dl.fixed_batch(11 + ds);
+        let mut inputs = params.clone();
+        inputs.push(b.tokens);
+        inputs.push(b.targets);
+        let out = ctx.engine.execute(&gm_name, &inputs)?;
+        let norms: Vec<f64> =
+            out[0].data.iter().map(|&x| x as f64).collect();
+        per_ds.push(normalize_max(&norms));
+    }
+    for li in 0..l {
+        t4a.row(vec![
+            format!("{}", li + 1),
+            Table::fmt(per_ds[0][li], 3),
+            Table::fmt(per_ds[1][li], 3),
+            Table::fmt(per_ds[2][li], 3),
+            Table::fmt(per_ds[3][li], 3),
+        ]);
+    }
+    let first_is_max = per_ds.iter().all(|d| d[0] == 1.0);
+    report.note(format!(
+        "Fig 4(a): first block has the largest gradient magnitude on all 4 \
+         datasets: {first_is_max}"
+    ));
+    report.table(t4a);
+
+    // ---------------- Fig 4(b): per-layer MHA omission -------------------
+    let mut t4b = Table::new(
+        "Fig 4(b): PPL after omitting MHA of a single block",
+        &["omitted block", "PPL"],
+    );
+    let mut omission = vec![];
+    for li in 0..l {
+        let mut mha = ones.clone();
+        let mut conn = ones.clone();
+        mha[li] = 0.0;
+        conn[li] = 0.0;
+        let ppl = masked_ppl(
+            ctx, config, "preln", &params, &loader, &mha, &conn, nb)?;
+        omission.push(ppl);
+        t4b.row(vec![format!("{}", li + 1), Table::fmt(ppl, 2)]);
+    }
+    let first_worst = omission[0]
+        >= omission[1..].iter().cloned().fold(f64::MIN, f64::max);
+    report.note(format!(
+        "Fig 4(b): removing the FIRST attention hurts most: {first_worst} \
+         (block-1 PPL {:.2} vs max-other {:.2})",
+        omission[0],
+        omission[1..].iter().cloned().fold(f64::MIN, f64::max)
+    ));
+    report.table(t4b);
+    report.series(
+        "omission PPL by block",
+        omission.clone(),
+    );
+
+    // Keep trainer alive until here (borrow of engine).
+    let _ = trainer.recent_loss(10);
+    Ok(report)
+}

@@ -1,0 +1,35 @@
+//! # FAL: First Attentions Last — distributed-training framework
+//!
+//! Rust reproduction of *"First Attentions Last: Better Exploiting First
+//! Attentions for Efficient Transformer Training"* (NeurIPS 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: tensor-parallel training
+//!   orchestration, collectives, communication schedules, gradient
+//!   compression baselines, interconnect/GPU cost models, data pipeline,
+//!   analysis and the experiment registry that regenerates every table and
+//!   figure of the paper.
+//! * **L2/L1 (build-time Python)** — the transformer variants and Pallas
+//!   kernels, AOT-lowered to HLO text in `artifacts/` by `make artifacts`
+//!   and executed here through the PJRT C API (`xla` crate). Python never
+//!   runs on the training hot path.
+//!
+//! Entry points: the `fal` binary (`rust/src/main.rs`), `examples/`, and
+//! `benches/`. Start with [`runtime::Engine`] to load artifacts and
+//! [`coordinator::sp_trainer::Trainer`] / [`coordinator::tp_trainer`]
+//! to train.
+
+pub mod analysis;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type (anyhow-based: errors carry context chains).
+pub type Result<T> = anyhow::Result<T>;

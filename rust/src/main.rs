@@ -1,0 +1,162 @@
+//! `fal` — launcher CLI for the FAL framework.
+//!
+//! ```text
+//! fal exp <id|all> [--scale 1.0] [--artifacts DIR] [--out reports]
+//! fal train --config small --variant fal [--steps 300] [--eval]
+//! fal tp --config small --variant fal --tp 2 [--steps 10]
+//! fal list            # artifacts + experiments
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use fal::config::{TrainConfig, Variant, PCIE_GEN4};
+use fal::coordinator::sp_trainer::{Schedule, Trainer};
+use fal::coordinator::tp_trainer::TpTrainer;
+use fal::experiments::{self, ExpCtx};
+use fal::runtime::Engine;
+use fal::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["eval", "help"])?;
+    if args.flag("help") || args.positional.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    match args.expect_subcommand(&["exp", "train", "tp", "list"])? {
+        "exp" => cmd_exp(&args),
+        "train" => cmd_train(&args),
+        "tp" => cmd_tp(&args),
+        "list" => cmd_list(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fal — First Attentions Last (NeurIPS 2025) reproduction framework\n\
+         \n\
+         USAGE:\n  fal exp <id|all> [--scale S] [--artifacts DIR] [--out DIR]\n\
+         \x20 fal train --config small --variant fal [--steps N] [--eval]\n\
+         \x20 fal tp --config small --variant fal --tp 2 [--steps N]\n\
+         \x20 fal list\n\
+         \n\
+         EXPERIMENTS: {}",
+        experiments::ALL.join(", ")
+    );
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let scale = args.f64_or("scale", 1.0)?;
+    let mut ctx = ExpCtx::new(&artifact_dir(args), scale)?;
+    ctx.out_dir = PathBuf::from(args.str_or("out", "reports"));
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("\n>>> experiment {id}");
+        let report = experiments::run(&ctx, id)?;
+        print!("{}", report.render_text());
+        report.save(&ctx.out_dir)?;
+        println!("saved {}/{}.md", ctx.out_dir.display(), report.id);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifact_dir(args))?;
+    let config = args.str_or("config", "small");
+    let variant = args.str_or("variant", "fal");
+    let steps = args.usize_or("steps", 300)?;
+    let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
+    let (_, mut loader) = ctx.loader(&config, 0)?;
+    let mut t = Trainer::new(&engine, &config, &variant, Schedule::Constant)?;
+    t.train(&mut loader, steps, (steps / 10).max(1), &variant)?;
+    println!(
+        "trained {steps} steps in {:.1}s ({:.2} s/step)",
+        t.train_secs,
+        t.train_secs / steps as f64
+    );
+    if args.flag("eval") {
+        let ppl = t.val_ppl(&loader, 8)?;
+        println!("validation PPL: {ppl:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_tp(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifact_dir(args))?;
+    let config = args.str_or("config", "small");
+    let variant = Variant::parse(&args.str_or("variant", "fal"))?;
+    let tp = args.usize_or("tp", 2)?;
+    let steps = args.usize_or("steps", 10)?;
+    let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
+    let (_, mut loader) = ctx.loader(&config, 0)?;
+    let mut t = TpTrainer::new(
+        &engine, &config, variant, tp, PCIE_GEN4, TrainConfig::default())?;
+    for i in 0..steps {
+        let b = loader.next_train();
+        let (loss, gnorm) = t.train_step(&b)?;
+        println!("step {:>3}  loss {loss:.4}  gnorm {gnorm:.3}", i + 1);
+    }
+    let s = t.ledger.stats();
+    println!(
+        "\ncollectives: {} all-reduces ({:.1} MB), {} broadcasts, modeled \
+         comm {:.3}s on {}x{}",
+        s.allreduces,
+        s.allreduce_bytes / 1e6,
+        s.broadcasts,
+        s.modeled_secs,
+        tp,
+        t.ledger.link.name,
+    );
+    for (k, v) in t.breakdown.entries() {
+        println!("  {k:<6} {v:.2}s");
+    }
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let engine = Engine::new(&artifact_dir(args))?;
+    println!("configs:");
+    for (name, c) in &engine.manifest.configs {
+        println!(
+            "  {name:<8} L={} d={} h={} V={} S={} ({} params)",
+            c.n_layer, c.d_model, c.n_head, c.vocab_size, c.seq_len,
+            c.n_params
+        );
+    }
+    println!("\nartifacts: {}", engine.manifest.artifacts.len());
+    let mut kinds = std::collections::BTreeMap::new();
+    for a in engine.manifest.artifacts.values() {
+        *kinds
+            .entry(a.meta_str("kind").unwrap_or("?").to_string())
+            .or_insert(0usize) += 1;
+    }
+    for (k, n) in kinds {
+        println!("  {k:<16} {n}");
+    }
+    println!("\nexperiments: {}", experiments::ALL.join(", "));
+    Ok(())
+}

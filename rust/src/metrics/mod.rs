@@ -1,0 +1,143 @@
+//! Experiment reporting: collect tables/series and emit Markdown + CSV.
+//!
+//! Every experiment module returns a [`Report`]; the CLI appends them to
+//! `reports/` and the EXPERIMENTS.md workflow copies the rendered Markdown.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::table::{series_line, Table};
+
+#[derive(Debug, Default)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    pub notes: Vec<String>,
+    pub tables: Vec<Table>,
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    pub fn table(&mut self, t: Table) -> &mut Self {
+        self.tables.push(t);
+        self
+    }
+
+    pub fn series(&mut self, name: &str, xs: Vec<f64>) -> &mut Self {
+        self.series.push((name.to_string(), xs));
+        self
+    }
+
+    pub fn render_markdown(&self) -> String {
+        let mut out = format!("## {} — {}\n\n", self.id, self.title);
+        for n in &self.notes {
+            let _ = writeln!(out, "- {n}");
+        }
+        if !self.notes.is_empty() {
+            out.push('\n');
+        }
+        for t in &self.tables {
+            out.push_str(&t.render_markdown());
+            out.push('\n');
+        }
+        for (name, xs) in &self.series {
+            let _ = writeln!(out, "```\n{}\n```", series_line(name, xs));
+        }
+        out
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = format!("===== {} — {} =====\n", self.id, self.title);
+        for n in &self.notes {
+            let _ = writeln!(out, "  * {n}");
+        }
+        for t in &self.tables {
+            out.push_str(&t.render_text());
+            out.push('\n');
+        }
+        for (name, xs) in &self.series {
+            let _ = writeln!(out, "{}", series_line(name, xs));
+        }
+        out
+    }
+
+    /// Persist markdown + raw CSV of every table under `dir/<id>.*`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {dir:?}"))?;
+        std::fs::write(dir.join(format!("{}.md", self.id)),
+                       self.render_markdown())?;
+        let mut csv = String::new();
+        for t in &self.tables {
+            let _ = writeln!(csv, "# {}", t.title);
+            let _ = writeln!(csv, "{}", t.headers.join(","));
+            for row in &t.rows {
+                let _ = writeln!(csv, "{}", row.join(","));
+            }
+        }
+        for (name, xs) in &self.series {
+            let _ = writeln!(csv, "# series {name}");
+            let _ = writeln!(
+                csv,
+                "{}",
+                xs.iter()
+                    .map(|x| format!("{x}"))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            );
+        }
+        std::fs::write(dir.join(format!("{}.csv", self.id)), csv)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_sections() {
+        let mut r = Report::new("fig0", "Demo");
+        r.note("a note");
+        let mut t = Table::new("T", &["x"]);
+        t.row(vec!["1".into()]);
+        r.table(t);
+        r.series("loss", vec![3.0, 2.0, 1.0]);
+        let md = r.render_markdown();
+        assert!(md.contains("## fig0 — Demo"));
+        assert!(md.contains("- a note"));
+        assert!(md.contains("| x |"));
+        assert!(md.contains("loss:"));
+        assert!(r.render_text().contains("====="));
+    }
+
+    #[test]
+    fn saves_files() {
+        let dir = std::env::temp_dir().join("fal_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = Report::new("figX", "T");
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        r.table(t);
+        r.save(&dir).unwrap();
+        assert!(dir.join("figX.md").exists());
+        let csv = std::fs::read_to_string(dir.join("figX.csv")).unwrap();
+        assert!(csv.contains("a,b"));
+        assert!(csv.contains("1,2"));
+    }
+}

@@ -1,0 +1,292 @@
+//! Artifact manifest: the contract between aot.py and the Rust runtime.
+//!
+//! `artifacts/manifest.json` enumerates every lowered HLO module with its
+//! input/output tensor specs, the per-config parameter schemas (flattened
+//! pytree order), and model shape metadata. Nothing about shapes is derived
+//! on the Rust side — the manifest is the single source of truth.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::tensor::{DType, HostTensor};
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .opt("name")
+                .map(|n| n.as_str().map(str::to_string))
+                .transpose()?
+                .unwrap_or_default(),
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_str(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).and_then(|v| v.as_str().ok())
+    }
+
+    /// Number of leading inputs that are model parameters (names `p.*`).
+    pub fn n_param_inputs(&self) -> usize {
+        self.inputs
+            .iter()
+            .filter(|t| t.name.starts_with("p."))
+            .count()
+    }
+}
+
+/// Parameter schema entry: one flattened pytree leaf.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub param_schemas: BTreeMap<String, Vec<ParamSpec>>,
+    pub configs: BTreeMap<String, ModelConfig>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "reading {path:?} — run `make artifacts` to build the AOT \
+                 bundle first"
+            )
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: a.get("file")?.as_str()?.to_string(),
+                inputs: a
+                    .get("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                outputs: a
+                    .get("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect::<Result<_>>()?,
+                meta: a.get("meta")?.as_obj()?.clone(),
+            };
+            artifacts.insert(name, spec);
+        }
+        let mut param_schemas = BTreeMap::new();
+        for (cfg, arr) in j.get("param_schemas")?.as_obj()? {
+            let specs = arr
+                .as_arr()?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name")?.as_str()?.to_string(),
+                        shape: p
+                            .get("shape")?
+                            .as_arr()?
+                            .iter()
+                            .map(|v| v.as_usize())
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            param_schemas.insert(cfg.clone(), specs);
+        }
+        let mut configs = BTreeMap::new();
+        for (name, cj) in j.get("configs")?.as_obj()? {
+            configs.insert(name.clone(), ModelConfig::from_manifest(name, cj)?);
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts, param_schemas, configs })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact {name:?} not in manifest ({} available); \
+                 re-run `make artifacts`",
+                self.artifacts.len()
+            )
+        })
+    }
+
+    pub fn schema(&self, config: &str) -> Result<&[ParamSpec]> {
+        self.param_schemas
+            .get(config)
+            .map(|v| v.as_slice())
+            .with_context(|| format!("no param schema for config {config:?}"))
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelConfig> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("no config {name:?} in manifest"))
+    }
+
+    /// Load an initial parameter snapshot written by aot.py
+    /// (`params_<cfg>_s<seed>.bin`, f32 little-endian, schema order).
+    pub fn load_params(&self, config: &str, seed: u64) -> Result<Vec<HostTensor>> {
+        let schema = self.schema(config)?;
+        let path = self.dir.join(format!("params_{config}_s{seed}.bin"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let total: usize = schema.iter().map(|p| p.numel()).sum();
+        if bytes.len() != total * 4 {
+            bail!(
+                "{path:?}: {} bytes, expected {} ({} f32 params)",
+                bytes.len(),
+                total * 4,
+                total
+            );
+        }
+        let mut out = Vec::with_capacity(schema.len());
+        let mut off = 0usize;
+        for p in schema {
+            let n = p.numel();
+            let mut data = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[(off + i) * 4..(off + i) * 4 + 4];
+                data.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n;
+            out.push(HostTensor::from_vec(&p.shape, data));
+        }
+        Ok(out)
+    }
+
+    /// Artifact lookup by role, e.g. `("train_step", "small", "fal")`.
+    pub fn find(&self, kind: &str, config: &str, tag: &str) -> Result<&ArtifactSpec> {
+        let matches: Vec<&ArtifactSpec> = self
+            .artifacts
+            .values()
+            .filter(|a| {
+                a.meta_str("kind") == Some(kind)
+                    && a.meta_str("config") == Some(config)
+                    && (a.meta_str("tag") == Some(tag) || tag.is_empty())
+            })
+            .collect();
+        match matches.len() {
+            0 => bail!(
+                "no artifact kind={kind} config={config} tag={tag}; \
+                 re-run `make artifacts`"
+            ),
+            1 => Ok(matches[0]),
+            _ => Ok(matches[0]), // deterministic: BTreeMap iteration order
+        }
+    }
+
+    /// TP stage artifact name, e.g. tp2_small_b8_attn_fwd.
+    pub fn tp_stage_name(config: &str, tp: usize, batch: usize, stage: &str) -> String {
+        format!("tp{tp}_{config}_b{batch}_{stage}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "configs": {"tiny": {"vocab_size": 256, "d_model": 64, "n_head": 4,
+        "n_kv_head": 4, "n_layer": 4, "d_ff": 256, "seq_len": 64,
+        "n_params": 100}},
+      "param_schemas": {"tiny": [
+        {"name": "blocks.0.wq", "shape": [64, 64], "dtype": "f32"},
+        {"name": "wte", "shape": [256, 64], "dtype": "f32"}]},
+      "artifacts": [{
+        "name": "train_step_tiny_preln_b4",
+        "file": "train_step_tiny_preln_b4.hlo.txt",
+        "inputs": [{"name": "p.wte", "shape": [256, 64], "dtype": "f32"},
+                   {"name": "tokens", "shape": [4, 64], "dtype": "i32"}],
+        "outputs": [{"shape": [], "dtype": "f32"}],
+        "meta": {"kind": "train_step", "config": "tiny", "tag": "preln",
+                 "variant": "preln", "batch": 4}
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.artifact("train_step_tiny_preln_b4").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.n_param_inputs(), 1);
+        assert_eq!(m.schema("tiny").unwrap().len(), 2);
+        assert_eq!(m.config("tiny").unwrap().d_model, 64);
+    }
+
+    #[test]
+    fn find_by_role() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.find("train_step", "tiny", "preln").unwrap();
+        assert_eq!(a.name, "train_step_tiny_preln_b4");
+        assert!(m.find("train_step", "tiny", "fal").is_err());
+        assert!(m.find("eval_masked", "tiny", "preln").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_mentions_make() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let err = m.artifact("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn stage_names() {
+        assert_eq!(
+            Manifest::tp_stage_name("small", 2, 8, "attn_fwd"),
+            "tp2_small_b8_attn_fwd"
+        );
+    }
+}

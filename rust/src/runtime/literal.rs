@@ -1,0 +1,106 @@
+//! HostTensor <-> PJRT Literal conversion.
+//!
+//! Literals are constructed from raw bytes (`create_from_shape_and_untyped_
+//! data`) to avoid per-element FFI calls; this path is on the trainer's hot
+//! loop (parameters cross it every step in literal mode), so the conversion
+//! is benchmarked in benches/runtime_hotpath.rs.
+
+use anyhow::{bail, Context, Result};
+use xla::{ElementType, Literal};
+
+use crate::tensor::{DType, HostTensor};
+
+pub fn to_literal(t: &HostTensor) -> Result<Literal> {
+    match t.dtype {
+        DType::F32 => {
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    t.data.as_ptr() as *const u8,
+                    t.data.len() * 4,
+                )
+            };
+            Literal::create_from_shape_and_untyped_data(
+                ElementType::F32,
+                &t.shape,
+                bytes,
+            )
+            .map_err(into_anyhow)
+        }
+        DType::I32 => {
+            let ints = t.as_i32();
+            let bytes: &[u8] = unsafe {
+                std::slice::from_raw_parts(
+                    ints.as_ptr() as *const u8,
+                    ints.len() * 4,
+                )
+            };
+            Literal::create_from_shape_and_untyped_data(
+                ElementType::S32,
+                &t.shape,
+                bytes,
+            )
+            .map_err(into_anyhow)
+        }
+    }
+}
+
+pub fn from_literal(l: &Literal) -> Result<HostTensor> {
+    let shape = l.array_shape().map_err(into_anyhow)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        ElementType::F32 => {
+            let data: Vec<f32> = l.to_vec().map_err(into_anyhow)?;
+            Ok(HostTensor::from_vec(&dims, data))
+        }
+        ElementType::S32 => {
+            let data: Vec<i32> = l.to_vec().map_err(into_anyhow)?;
+            Ok(HostTensor::from_i32(&dims, &data))
+        }
+        other => bail!("unsupported literal element type {other:?}"),
+    }
+}
+
+/// Unpack a tuple-rooted result literal (aot.py lowers with
+/// return_tuple=True) into HostTensors.
+pub fn untuple(root: Literal) -> Result<Vec<HostTensor>> {
+    let parts = root.to_tuple().map_err(into_anyhow)?;
+    parts
+        .iter()
+        .map(from_literal)
+        .collect::<Result<Vec<_>>>()
+        .context("decomposing result tuple")
+}
+
+pub fn into_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("{e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = HostTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let l = to_literal(&t).unwrap();
+        let back = from_literal(&l).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::from_i32(&[4], &[7, -1, 0, 65535]);
+        let l = to_literal(&t).unwrap();
+        let back = from_literal(&l).unwrap();
+        assert_eq!(back.as_i32(), vec![7, -1, 0, 65535]);
+        assert_eq!(back.dtype, DType::I32);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        let back = from_literal(&to_literal(&t).unwrap()).unwrap();
+        assert_eq!(back.data, vec![3.5]);
+        assert!(back.shape.is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The flow mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. Text is
+//! the interchange format (see python/compile/aot.py docstring).
+//!
+//! [`Engine`] is the facade the coordinator uses: it owns the client, the
+//! manifest, a lazy executable cache and per-artifact timing statistics.
+
+pub mod artifact;
+pub mod engine;
+pub mod literal;
+
+pub use artifact::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};
+pub use engine::Engine;
+pub use literal::{from_literal, to_literal, untuple};

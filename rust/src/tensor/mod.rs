@@ -1,0 +1,253 @@
+//! Host-side tensors: flat f32 (or i32) buffers + shape.
+//!
+//! The coordinator's collectives, optimizer, compression codecs and analysis
+//! all operate on [`HostTensor`]s; the runtime converts them to/from PJRT
+//! literals at executable boundaries.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Element type tag (only what the manifest emits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        4
+    }
+}
+
+/// Dense row-major tensor. I32 tensors store bit-cast values in the same
+/// f32 vec (exact for |v| < 2^24, far beyond any vocab id).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape: shape.to_vec(), dtype: DType::F32, data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape: shape.to_vec(), dtype: DType::F32, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], dtype: DType::F32, data: vec![v] }
+    }
+
+    pub fn from_i32(shape: &[usize], data: &[i32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor {
+            shape: shape.to_vec(),
+            dtype: DType::I32,
+            data: data.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let mut t = Self::zeros(shape);
+        t.data.fill(1.0);
+        t
+    }
+
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Self {
+        let mut t = Self::zeros(shape);
+        rng.fill_normal(&mut t.data, std);
+        t
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.len() * self.dtype.size()
+    }
+
+    pub fn as_i32(&self) -> Vec<i32> {
+        self.data.iter().map(|&v| v as i32).collect()
+    }
+
+    // ---------------- elementwise / BLAS-1 ops ----------------
+
+    pub fn add_assign(&mut self, other: &HostTensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in self.data.iter_mut() {
+            *v *= s;
+        }
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &HostTensor) {
+        assert_eq!(self.len(), other.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn dot(&self, other: &HostTensor) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| *a as f64 * *b as f64)
+            .sum()
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&v| v as f64 * v as f64).sum()
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    pub fn mean_abs(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|v| v.abs() as f64).sum::<f64>()
+            / self.len() as f64
+    }
+
+    pub fn max_abs_err(&self, other: &HostTensor) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+
+    /// Relative L2 error ||a - b|| / (||b|| + eps).
+    pub fn rel_err(&self, other: &HostTensor) -> f64 {
+        assert_eq!(self.len(), other.len());
+        let mut num = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+        }
+        num.sqrt() / (other.norm() + 1e-12)
+    }
+
+    /// Slice along axis 1 of a 2-D tensor: columns [c0, c1).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> HostTensor {
+        assert_eq!(self.shape.len(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        assert!(c1 <= c && c0 < c1);
+        let mut data = Vec::with_capacity(r * (c1 - c0));
+        for i in 0..r {
+            data.extend_from_slice(&self.data[i * c + c0..i * c + c1]);
+        }
+        HostTensor::from_vec(&[r, c1 - c0], data)
+    }
+
+    /// Slice along axis 0 (rows [r0, r1)) of any tensor.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> HostTensor {
+        assert!(!self.shape.is_empty());
+        let row: usize = self.shape[1..].iter().product();
+        assert!(r1 <= self.shape[0] && r0 < r1);
+        let mut shape = self.shape.clone();
+        shape[0] = r1 - r0;
+        HostTensor::from_vec(&shape, self.data[r0 * row..r1 * row].to_vec())
+    }
+
+    /// 1-D slice [i0, i1).
+    pub fn slice_1d(&self, i0: usize, i1: usize) -> HostTensor {
+        assert_eq!(self.shape.len(), 1);
+        HostTensor::from_vec(&[i1 - i0], self.data[i0..i1].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_sizes() {
+        let t = HostTensor::zeros(&[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        let s = HostTensor::scalar(2.5);
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert_eq!(s.data, vec![2.5]);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let t = HostTensor::from_i32(&[3], &[0, 1023, -5]);
+        assert_eq!(t.as_i32(), vec![0, 1023, -5]);
+        assert_eq!(t.dtype, DType::I32);
+    }
+
+    #[test]
+    fn blas1() {
+        let mut a = HostTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::from_vec(&[3], vec![1.0, 1.0, 1.0]);
+        a.axpy(2.0, &b);
+        assert_eq!(a.data, vec![3.0, 4.0, 5.0]);
+        assert!((a.dot(&b) - 12.0).abs() < 1e-9);
+        assert!((b.sq_norm() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn errors_metrics() {
+        let a = HostTensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = HostTensor::from_vec(&[2], vec![1.0, 2.5]);
+        assert!((a.max_abs_err(&b) - 0.5).abs() < 1e-9);
+        assert!(a.rel_err(&a) < 1e-12);
+    }
+
+    #[test]
+    fn col_slicing() {
+        let t = HostTensor::from_vec(&[2, 4],
+            vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let s = t.slice_cols(1, 3);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![1., 2., 5., 6.]);
+    }
+
+    #[test]
+    fn row_slicing() {
+        let t = HostTensor::from_vec(&[3, 2], vec![0., 1., 2., 3., 4., 5.]);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn randn_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = HostTensor::randn(&[16], 1.0, &mut r1);
+        let b = HostTensor::randn(&[16], 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+}

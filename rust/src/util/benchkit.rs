@@ -1,0 +1,169 @@
+//! Bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets declare `harness = false` and drive this runner:
+//! warmup, timed iterations, mean/p50/p95 and optional throughput, with a
+//! `--filter` CLI matching criterion's substring selection.
+
+use std::time::Instant;
+
+use super::timer::Stats;
+
+pub struct Bench {
+    filter: Option<String>,
+    pub results: Vec<(String, Stats, Option<f64>)>,
+    warmup_iters: usize,
+    iters: usize,
+}
+
+impl Bench {
+    pub fn from_env() -> Bench {
+        // `cargo bench -- --filter foo --iters 20`
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut filter = None;
+        let mut iters = 10;
+        let mut warmup = 2;
+        let mut i = 0;
+        while i < argv.len() {
+            match argv[i].as_str() {
+                "--filter" if i + 1 < argv.len() => {
+                    filter = Some(argv[i + 1].clone());
+                    i += 1;
+                }
+                "--iters" if i + 1 < argv.len() => {
+                    iters = argv[i + 1].parse().unwrap_or(10);
+                    i += 1;
+                }
+                "--warmup" if i + 1 < argv.len() => {
+                    warmup = argv[i + 1].parse().unwrap_or(2);
+                    i += 1;
+                }
+                // `cargo bench` passes --bench; ignore unknown args.
+                _ => {}
+            }
+            i += 1;
+        }
+        Bench { filter, results: vec![], warmup_iters: warmup, iters }
+    }
+
+    pub fn with_iters(iters: usize, warmup: usize) -> Bench {
+        Bench { filter: None, results: vec![], warmup_iters: warmup, iters }
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter
+            .as_ref()
+            .map(|f| name.contains(f.as_str()))
+            .unwrap_or(true)
+    }
+
+    /// Time `f` (called once per iteration). `units_per_iter`, if nonzero,
+    /// reports throughput (units/s) — tokens, bytes, elements.
+    pub fn bench<T>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        mut f: impl FnMut() -> T,
+    ) {
+        if !self.enabled(name) {
+            return;
+        }
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let stats = Stats::from_samples(&samples);
+        let thr = if units_per_iter > 0.0 {
+            Some(units_per_iter / stats.mean)
+        } else {
+            None
+        };
+        println!("{}", render_line(name, &stats, thr));
+        self.results.push((name.to_string(), stats, thr));
+    }
+
+    /// Record an externally-measured sample set (e.g. per-step times from a
+    /// training loop) under this bench's reporting format.
+    pub fn record(&mut self, name: &str, samples: &[f64], units: f64) {
+        if !self.enabled(name) || samples.is_empty() {
+            return;
+        }
+        let stats = Stats::from_samples(samples);
+        let thr = if units > 0.0 { Some(units / stats.mean) } else { None };
+        println!("{}", render_line(name, &stats, thr));
+        self.results.push((name.to_string(), stats, thr));
+    }
+
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        for (name, stats, thr) in &self.results {
+            out.push_str(&render_line(name, stats, *thr));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+fn render_line(name: &str, s: &Stats, thr: Option<f64>) -> String {
+    let base = format!(
+        "{name:<52} mean {:>10}  p50 {:>10}  p95 {:>10}",
+        humanize(s.mean),
+        humanize(s.p50),
+        humanize(s.p95)
+    );
+    match thr {
+        Some(t) => format!("{base}  thr {t:>12.1}/s"),
+        None => base,
+    }
+}
+
+/// Human-readable duration.
+pub fn humanize(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn humanize_ranges() {
+        assert!(humanize(5e-9).ends_with("ns"));
+        assert!(humanize(5e-6).ends_with("µs"));
+        assert!(humanize(5e-3).ends_with("ms"));
+        assert!(humanize(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_collects() {
+        let mut b = Bench::with_iters(3, 1);
+        let mut n = 0u64;
+        b.bench("count", 100.0, || {
+            n += 1;
+            n
+        });
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].2.unwrap() > 0.0);
+        // warmup(1) + iters(3)
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn record_external() {
+        let mut b = Bench::with_iters(1, 0);
+        b.record("ext", &[0.1, 0.2, 0.3], 0.0);
+        assert_eq!(b.results[0].1.n, 3);
+    }
+}

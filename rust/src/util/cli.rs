@@ -1,0 +1,162 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments,
+//! with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse an iterator of raw argv entries (without the program name).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        flag_names: &[&str],
+    ) -> Result<Args> {
+        let mut out = Args {
+            positional: vec![],
+            options: BTreeMap::new(),
+            flags: vec![],
+        };
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("--{rest} needs a value"))?;
+                    out.options.insert(rest.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{name} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn expect_subcommand(&self, choices: &[&str]) -> Result<&str> {
+        match self.positional.first() {
+            Some(c) if choices.contains(&c.as_str()) => Ok(c),
+            Some(c) => bail!("unknown subcommand {c:?}; one of {choices:?}"),
+            None => bail!("missing subcommand; one of {choices:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(
+            argv("train --steps 100 --lr=0.001 --verbose extra"),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("lr", 0.0).unwrap(), 0.001);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(argv(""), &[]).unwrap();
+        assert_eq!(a.usize_or("steps", 42).unwrap(), 42);
+        assert_eq!(a.str_or("name", "x"), "x");
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(argv("--steps"), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = Args::parse(argv("--steps abc"), &[]).unwrap();
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(
+            vec!["--variants".to_string(), "preln,fal, falplus".to_string()],
+            &[],
+        )
+        .unwrap();
+        assert_eq!(a.list_or("variants", &[]), vec!["preln", "fal", "falplus"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+
+    #[test]
+    fn subcommands() {
+        let a = Args::parse(argv("exp fig6"), &[]).unwrap();
+        assert_eq!(a.expect_subcommand(&["exp", "train"]).unwrap(), "exp");
+        assert!(a.expect_subcommand(&["other"]).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Zero-dependency substrate utilities.
+//!
+//! The offline crate cache ships only the `xla` closure, so the framework
+//! carries its own JSON parser, PRNG, CLI parser, table formatter, bench
+//! harness and mini property-testing engine. Each is unit-tested in place.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod timer;

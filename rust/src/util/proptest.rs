@@ -1,0 +1,199 @@
+//! Mini property-testing engine (proptest is unavailable offline).
+//!
+//! Seeded case generation with greedy shrinking: on failure, the engine
+//! retries with each input vector element halved/zeroed/truncated until the
+//! failure no longer reproduces, and reports the minimal failing case. Used
+//! by the coordinator invariants (routing, batching, collectives, state) and
+//! the compression codecs.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 64, seed: 0xFA1_5EED, max_shrink: 200 }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop { cases, ..Default::default() }
+    }
+
+    /// Check `prop` over `cases` random inputs drawn by `gen`.
+    /// Panics with the (shrunk) counterexample on failure.
+    pub fn check<T, G, P>(&self, name: &str, mut gen: G, mut prop: P)
+    where
+        T: Clone + std::fmt::Debug + Shrink,
+        G: FnMut(&mut Rng) -> T,
+        P: FnMut(&T) -> bool,
+    {
+        let mut rng = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let input = gen(&mut rng.split(case as u64));
+            if !prop(&input) {
+                let minimal = self.shrink(input, &mut prop);
+                panic!(
+                    "property {name:?} falsified (case {case}):\n{minimal:#?}"
+                );
+            }
+        }
+    }
+
+    fn shrink<T, P>(&self, failing: T, prop: &mut P) -> T
+    where
+        T: Clone + std::fmt::Debug + Shrink,
+        P: FnMut(&T) -> bool,
+    {
+        let mut current = failing;
+        let mut budget = self.max_shrink;
+        loop {
+            let mut advanced = false;
+            for cand in current.shrink_candidates() {
+                if budget == 0 {
+                    return current;
+                }
+                budget -= 1;
+                if !prop(&cand) {
+                    current = cand;
+                    advanced = true;
+                    break;
+                }
+            }
+            if !advanced {
+                return current;
+            }
+        }
+    }
+}
+
+/// Types that know how to propose smaller versions of themselves.
+pub trait Shrink: Sized {
+    fn shrink_candidates(&self) -> Vec<Self>;
+}
+
+impl Shrink for Vec<f32> {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+        }
+        // Zero elements one at a time (first nonzero).
+        if let Some(i) = self.iter().position(|&x| x != 0.0) {
+            let mut z = self.clone();
+            z[i] = 0.0;
+            out.push(z);
+            let mut h = self.clone();
+            h[i] /= 2.0;
+            if h[i].abs() > 1e-30 {
+                out.push(h);
+            }
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<usize> {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out = vec![];
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[self.len() / 2..].to_vec());
+        }
+        if let Some(i) = self.iter().position(|&x| x > 0) {
+            let mut h = self.clone();
+            h[i] /= 2;
+            out.push(h);
+        }
+        out
+    }
+}
+
+impl Shrink for usize {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        match self {
+            0 => vec![],
+            n => vec![n / 2, n - 1],
+        }
+    }
+}
+
+impl<A: Shrink + Clone, B: Shrink + Clone> Shrink for (A, B) {
+    fn shrink_candidates(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink_candidates()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrink_candidates()
+                .into_iter()
+                .map(|b| (self.0.clone(), b)),
+        );
+        out
+    }
+}
+
+/// Generator helpers.
+pub fn vec_f32(rng: &mut Rng, max_len: usize, scale: f32) -> Vec<f32> {
+    let len = 1 + rng.below(max_len.max(1));
+    (0..len).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+pub fn vec_usize(rng: &mut Rng, max_len: usize, max_val: usize) -> Vec<usize> {
+    let len = 1 + rng.below(max_len.max(1));
+    (0..len).map(|_| rng.below(max_val.max(1))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        Prop::new(50).check(
+            "sum-of-squares nonneg",
+            |r| vec_f32(r, 20, 2.0),
+            |v| v.iter().map(|x| x * x).sum::<f32>() >= 0.0,
+        );
+    }
+
+    #[test]
+    fn shrinks_to_small_case() {
+        let caught = std::panic::catch_unwind(|| {
+            Prop::new(100).check(
+                "no element above 1",
+                |r| vec_f32(r, 50, 1.0),
+                |v| v.iter().all(|&x| x < 1.0),
+            );
+        });
+        let err = caught.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        // Shrinker should reduce to a very short vector.
+        let elements = msg.matches(',').count();
+        assert!(elements <= 3, "shrunk case still large: {msg}");
+    }
+
+    #[test]
+    fn tuple_shrinks_both_sides() {
+        let cands = (vec![1.0f32, 2.0], vec![3usize, 4]).shrink_candidates();
+        assert!(cands.iter().any(|(a, _)| a.len() == 1));
+        assert!(cands.iter().any(|(_, b)| b.len() == 1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        assert_eq!(vec_f32(&mut r1, 10, 1.0), vec_f32(&mut r2, 10, 1.0));
+    }
+}

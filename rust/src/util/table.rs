@@ -1,0 +1,150 @@
+//! Aligned-text and Markdown table rendering for experiment reports.
+//!
+//! Every experiment module emits its paper table/figure through this type so
+//! EXPERIMENTS.md sections and terminal output share one formatter.
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width mismatch in table {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    /// Format an f64 with `prec` decimals (handles NaN gracefully).
+    pub fn fmt(v: f64, prec: usize) -> String {
+        if v.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{v:.prec$}")
+        }
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Monospace rendering for terminals.
+    pub fn render_text(&self) -> String {
+        let w = self.widths();
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&line(&self.headers));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (w.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavored Markdown rendering for EXPERIMENTS.md.
+    pub fn render_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |\n", self.headers.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.headers.len())
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Render an ASCII sparkline-esque series (for loss curves in reports).
+pub fn series_line(label: &str, xs: &[f64]) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if xs.is_empty() {
+        return format!("{label}: (empty)");
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    let line: String = xs
+        .iter()
+        .map(|x| GLYPHS[(((x - lo) / span) * 7.0).round() as usize])
+        .collect();
+    format!("{label}: {line}  [min {lo:.4}, max {hi:.4}]")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Table {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.row(vec!["333".into(), "4".into()]);
+        t
+    }
+
+    #[test]
+    fn text_alignment() {
+        let out = sample().render_text();
+        assert!(out.contains("a    bb"));
+        assert!(out.contains("333  4"));
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = sample().render_markdown();
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("|---|---|"));
+        assert!(md.contains("| 333 | 4 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        Table::new("T", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_nan() {
+        assert_eq!(Table::fmt(f64::NAN, 2), "-");
+        assert_eq!(Table::fmt(1.23456, 2), "1.23");
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = series_line("x", &[0.0, 1.0, 2.0, 3.0]);
+        assert!(s.contains('▁') && s.contains('█'));
+    }
+}

@@ -1,0 +1,154 @@
+//! Lightweight timing utilities: scoped stopwatches and named accumulators.
+//!
+//! The TP trainer uses [`Breakdown`] to attribute wall-clock to the paper's
+//! Fig 7 categories (FWD / BWD / Comm / (De)Comp / Opt).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Named duration accumulators for phase breakdowns.
+#[derive(Debug, Default, Clone)]
+pub struct Breakdown {
+    acc: BTreeMap<String, f64>,
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, name: &str, secs: f64) {
+        *self.acc.entry(name.to_string()).or_default() += secs;
+    }
+
+    /// Time a closure into the named bucket.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn get(&self, name: &str) -> f64 {
+        self.acc.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.acc.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Percentage share per bucket.
+    pub fn shares(&self) -> Vec<(String, f64)> {
+        let total = self.total().max(1e-12);
+        self.acc
+            .iter()
+            .map(|(k, v)| (k.clone(), 100.0 * v / total))
+            .collect()
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        for (k, v) in &other.acc {
+            *self.acc.entry(k.clone()).or_default() += v;
+        }
+    }
+}
+
+/// Summary statistics over repeated measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let mut s = samples.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| s[((s.len() - 1) as f64 * p).round() as usize];
+        Stats {
+            n: s.len(),
+            mean: s.iter().sum::<f64>() / s.len() as f64,
+            p50: pct(0.50),
+            p95: pct(0.95),
+            min: s[0],
+            max: s[s.len() - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = Breakdown::new();
+        b.add("fwd", 1.0);
+        b.add("fwd", 0.5);
+        b.add("comm", 0.5);
+        assert_eq!(b.get("fwd"), 1.5);
+        assert_eq!(b.total(), 2.0);
+        let shares = b.shares();
+        assert_eq!(shares[1].0, "fwd");
+        assert!((shares[1].1 - 75.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_times_closures() {
+        let mut b = Breakdown::new();
+        let v = b.time("work", || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(b.get("work") >= 0.004);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Breakdown::new();
+        a.add("x", 1.0);
+        let mut b = Breakdown::new();
+        b.add("x", 2.0);
+        b.add("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x"), 3.0);
+        assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.max, 100.0);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 22.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,70 @@
+//! Fast experiment-registry integration: the cost-model figures must
+//! regenerate with paper-consistent shapes without any training.
+
+use std::path::Path;
+
+use fal::experiments::{self, ExpCtx};
+
+fn ctx() -> ExpCtx {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ExpCtx::new(&dir, 0.1).expect("run `make artifacts` first")
+}
+
+#[test]
+fn fig6_fal_always_at_most_baseline() {
+    let report = experiments::run(&ctx(), "fig6").unwrap();
+    // Every normalized-time cell must be < 1 (FAL never slower).
+    let t = &report.tables[0];
+    for row in &t.rows {
+        for cell in &row[2..] {
+            let v: f64 = cell.parse().unwrap();
+            assert!(v < 1.0, "cell {cell} not a speedup in {row:?}");
+            assert!(v > 0.4, "cell {cell} implausibly fast");
+        }
+    }
+}
+
+#[test]
+fn fig8_ratios_in_paper_band() {
+    let report = experiments::run(&ctx(), "fig8").unwrap();
+    let t = &report.tables[0];
+    for row in &t.rows {
+        let flash: f64 = row[2].parse().unwrap();
+        assert!((1.0..1.25).contains(&flash), "{row:?}");
+    }
+    // Fig 8(b): every counter must not decrease under overlap.
+    let t8b = &report.tables[1];
+    for row in &t8b.rows {
+        assert!(row[3].starts_with('+'), "{row:?}");
+    }
+}
+
+#[test]
+fn fig19_savings_grow_with_gpus() {
+    let report = experiments::run(&ctx(), "fig19").unwrap();
+    let t = &report.tables[0];
+    // For each (model, seq) group of 4 rows (1,2,4,8 GPUs), saving at 8
+    // GPUs must exceed saving at 1 GPU.
+    for grp in t.rows.chunks(4) {
+        let pct = |s: &str| s.trim_end_matches('%').parse::<f64>().unwrap();
+        assert!(
+            pct(&grp[3][5]) >= pct(&grp[0][5]),
+            "saving should grow with GPUs: {grp:?}"
+        );
+    }
+}
+
+#[test]
+fn fig10_tp_fastest() {
+    let report = experiments::run(&ctx(), "fig10").unwrap();
+    let t = &report.tables[0];
+    let time = |i: usize| t.rows[i][1].parse::<f64>().unwrap();
+    let (dp, pp, tp, fal) = (time(0), time(1), time(2), time(3));
+    assert!(tp < dp && tp < pp, "TP must be fastest: {dp} {pp} {tp}");
+    assert!(fal < tp, "FAL must beat plain TP");
+}
+
+#[test]
+fn unknown_experiment_rejected() {
+    assert!(experiments::run(&ctx(), "fig99").is_err());
+}

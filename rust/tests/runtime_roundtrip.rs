@@ -1,0 +1,202 @@
+//! Integration: load real AOT artifacts, execute them, check numerics.
+//!
+//! Requires `make artifacts` (tiny group). These tests are the Rust half of
+//! the AOT contract: if the manifest, HLO text, parameter snapshot or the
+//! engine's conversion layer drift, they fail here first.
+
+use std::path::Path;
+
+use fal::runtime::Engine;
+use fal::tensor::HostTensor;
+use fal::util::rng::Rng;
+
+fn engine() -> Engine {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Engine::new(&dir).expect("run `make artifacts` before cargo test")
+}
+
+fn tokens(cfg: &fal::config::ModelConfig, batch: usize, seed: u64) -> HostTensor {
+    let mut rng = Rng::new(seed);
+    let data: Vec<i32> = (0..batch * cfg.seq_len)
+        .map(|_| rng.below(cfg.vocab_size) as i32)
+        .collect();
+    HostTensor::from_i32(&[batch, cfg.seq_len], &data)
+}
+
+#[test]
+fn manifest_lists_tiny_artifacts() {
+    let eng = engine();
+    assert!(eng.manifest.artifacts.len() >= 10);
+    let spec = eng.manifest.find("train_step", "tiny", "preln").unwrap();
+    assert_eq!(spec.meta_str("variant"), Some("preln"));
+    let schema = eng.manifest.schema("tiny").unwrap();
+    let total: usize = schema.iter().map(|p| p.numel()).sum();
+    let cfg = eng.manifest.config("tiny").unwrap();
+    assert_eq!(total, cfg.n_params);
+}
+
+#[test]
+fn params_snapshot_loads_and_has_ln_ones() {
+    let eng = engine();
+    let params = eng.manifest.load_params("tiny", 0).unwrap();
+    let schema = eng.manifest.schema("tiny").unwrap();
+    // Any LN gamma leaf must be exactly 1.0 at init.
+    let idx = schema
+        .iter()
+        .position(|p| p.name.ends_with("ln1_g"))
+        .unwrap();
+    assert!(params[idx].data.iter().all(|&v| v == 1.0));
+    // Embeddings must be small random values.
+    let wte = schema.iter().position(|p| p.name == "wte").unwrap();
+    assert!(params[wte].norm() > 0.0);
+    assert!(params[wte].mean_abs() < 0.1);
+}
+
+#[test]
+fn train_step_executes_and_reduces_loss() {
+    let eng = engine();
+    let cfg = eng.manifest.config("tiny").unwrap().clone();
+    let spec = eng.manifest.find("train_step", "tiny", "fal").unwrap();
+    let name = spec.name.clone();
+    let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+    let np = eng.manifest.schema("tiny").unwrap().len();
+
+    let mut params = eng.manifest.load_params("tiny", 0).unwrap();
+    let mut m: Vec<HostTensor> =
+        params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+    let mut v = m.clone();
+    let tok = tokens(&cfg, batch, 1);
+    // Next-token targets: shift by one (wrapping) — same batch every step so
+    // the loss must fall fast.
+    let mut tdata = tok.as_i32();
+    tdata.rotate_left(1);
+    let tgt = HostTensor::from_i32(&[batch, cfg.seq_len], &tdata);
+
+    let mut first = None;
+    let mut last = 0.0f32;
+    for step in 1..=8 {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * np + 4);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(HostTensor::scalar(step as f32));
+        inputs.push(HostTensor::scalar(1.0));
+        inputs.push(tok.clone());
+        inputs.push(tgt.clone());
+        let out = eng.execute(&name, &inputs).unwrap();
+        // outputs: loss, gnorm, params x np, m x np, v x np
+        let loss = out[0].data[0];
+        let gnorm = out[1].data[0];
+        assert!(loss.is_finite() && gnorm.is_finite());
+        params = out[2..2 + np].to_vec();
+        m = out[2 + np..2 + 2 * np].to_vec();
+        v = out[2 + 2 * np..2 + 3 * np].to_vec();
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.05,
+        "loss did not fall: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn eval_masked_gates_change_loss() {
+    let eng = engine();
+    let cfg = eng.manifest.config("tiny").unwrap().clone();
+    let spec = eng.manifest.find("eval_masked", "tiny", "preln").unwrap();
+    let name = spec.name.clone();
+    let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+    let l = cfg.n_layer;
+
+    let params = eng.manifest.load_params("tiny", 0).unwrap();
+    let tok = tokens(&cfg, batch, 2);
+    let mut tdata = tok.as_i32();
+    tdata.rotate_left(1);
+    let tgt = HostTensor::from_i32(&[batch, cfg.seq_len], &tdata);
+
+    let run = |mha: f32, conn: f32| -> (f32, f32) {
+        let mut inputs = params.clone();
+        inputs.push(tok.clone());
+        inputs.push(tgt.clone());
+        inputs.push(HostTensor::from_vec(&[l], vec![mha; l]));
+        inputs.push(HostTensor::from_vec(&[l], vec![conn; l]));
+        let out = eng.execute(&name, &inputs).unwrap();
+        (out[0].data[0], out[1].data[0])
+    };
+
+    let (full, count) = run(1.0, 1.0);
+    let (gated, _) = run(0.0, 0.0);
+    assert_eq!(count, (batch * cfg.seq_len) as f32);
+    assert!(full.is_finite() && gated.is_finite());
+    assert!((full - gated).abs() > 1e-3, "gates had no effect");
+}
+
+#[test]
+fn tp_stage_attn_fwd_shards_sum_is_consistent() {
+    let eng = engine();
+    let cfg = eng.manifest.config("tiny").unwrap().clone();
+    let name = fal::runtime::Manifest::tp_stage_name("tiny", 2, 4, "attn_fwd");
+    let spec = eng.manifest.artifact(&name).unwrap().clone();
+    let mut rng = Rng::new(3);
+    // Random inputs matching the stage spec.
+    let inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| {
+            let mut t = HostTensor::zeros(&s.shape);
+            rng.fill_normal(&mut t.data, 0.05);
+            // LN gammas should be ~1 for realism.
+            if s.shape.len() == 1 && s.shape[0] == cfg.d_model {
+                t.data.fill(1.0);
+            }
+            t
+        })
+        .collect();
+    let out = eng.execute(&name, &inputs).unwrap();
+    assert_eq!(out[0].shape, vec![4, cfg.seq_len, cfg.d_model]);
+    assert!(out[0].data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn engine_reports_stats() {
+    let eng = engine();
+    let spec = eng.manifest.find("eval_masked", "tiny", "preln").unwrap();
+    let name = spec.name.clone();
+    let params = eng.manifest.load_params("tiny", 0).unwrap();
+    let cfg = eng.manifest.config("tiny").unwrap().clone();
+    let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+    let mut inputs = params;
+    let tok = tokens(&cfg, batch, 4);
+    inputs.push(tok.clone());
+    inputs.push(tok.clone());
+    inputs.push(HostTensor::ones(&[cfg.n_layer]));
+    inputs.push(HostTensor::ones(&[cfg.n_layer]));
+    eng.execute(&name, &inputs).unwrap();
+    let stats = eng.stats();
+    let s = stats.get(&name).unwrap();
+    assert_eq!(s.calls, 1);
+    assert!(s.exec_secs > 0.0);
+    assert!(eng.stats_report().contains(&name));
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let eng = engine();
+    let spec = eng.manifest.find("eval_masked", "tiny", "preln").unwrap();
+    let bad = vec![HostTensor::zeros(&[1])];
+    let err = eng.execute(&spec.name.clone(), &bad).unwrap_err().to_string();
+    assert!(err.contains("inputs"), "{err}");
+}
+
+#[test]
+fn buffer_roundtrip() {
+    let eng = engine();
+    let t = HostTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+    let buf = eng.upload(&t).unwrap();
+    let back = eng.download(&buf).unwrap();
+    assert_eq!(back, t);
+}

@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     // (a) Measured forward-only TP pass.
     for variant in [Variant::PreLn, Variant::Fal] {
         let mut t = TpTrainer::new(
-            &ctx.engine, "small", variant, tp, PCIE_GEN4,
+            ctx.engine.as_ref(), "small", variant, tp, PCIE_GEN4,
             TrainConfig::default())?;
         let (_, loader) = ctx.loader("small", 0)?;
         let b = loader.fixed_batch(1);

@@ -13,6 +13,7 @@ use std::path::Path;
 
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::experiments::ExpCtx;
+use fal::runtime::Backend;
 
 fn main() -> anyhow::Result<()> {
     let ctx = ExpCtx::new(Path::new("artifacts"), 1.0)?;
@@ -26,7 +27,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let mut trainer =
-        Trainer::new(&ctx.engine, "tiny", "fal", Schedule::Constant)?;
+        Trainer::new(ctx.engine.as_ref(), "tiny", "fal", Schedule::Constant)?;
     let ppl0 = trainer.val_ppl(&loader, 4)?;
     println!("initial val PPL: {ppl0:.2}");
 

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     for variant in [Variant::PreLn, Variant::Fal] {
         for link in [PCIE_GEN4, NVLINK] {
             let mut t = TpTrainer::new(
-                &ctx.engine, "small", variant, tp, link,
+                ctx.engine.as_ref(), "small", variant, tp, link,
                 TrainConfig::default())?;
             let (_, mut loader) = ctx.loader("small", 0)?;
             let mut last = 0.0;

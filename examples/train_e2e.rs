@@ -15,6 +15,7 @@ use std::path::Path;
 
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::experiments::ExpCtx;
+use fal::runtime::Backend;
 use fal::util::cli::Args;
 use fal::util::table::series_line;
 
@@ -23,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let steps = args.usize_or("steps", 150)?;
     let variant = args.str_or("variant", "fal");
     let ctx = ExpCtx::new(Path::new("artifacts"), 1.0)?;
-    let cfg = ctx.engine.manifest.config("e2e")?.clone();
+    let cfg = ctx.engine.manifest().config("e2e")?.clone();
     println!(
         "e2e model: {} params, {} layers, d={}, vocab={}, seq={}, \
          variant={variant}",
@@ -32,7 +33,7 @@ fn main() -> anyhow::Result<()> {
 
     let (_, mut loader) = ctx.loader("e2e", 0)?;
     let mut trainer = Trainer::new(
-        &ctx.engine,
+        ctx.engine.as_ref(),
         "e2e",
         &variant,
         Schedule::OneCycle { total: steps, peak_frac: 0.25 },

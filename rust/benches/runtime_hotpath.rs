@@ -1,10 +1,9 @@
-//! L3 hot-path microbenches (the §Perf profile): literal conversion,
-//! executable dispatch, collectives, compression codecs, corpus/loader.
+//! L3 hot-path microbenches (the §Perf profile): native stage dispatch,
+//! collectives, compression codecs, corpus/loader — plus literal
+//! conversion and engine dispatch when built with `--features pjrt` and
+//! `make artifacts`.
 //!
-//! `cargo bench --bench runtime_hotpath [-- --filter literal]`
-//! Requires `make artifacts` (tiny group) for the engine benches.
-
-use std::path::Path;
+//! `cargo bench --bench runtime_hotpath [-- --filter allreduce]`
 
 use fal::comm::error_feedback::ErrorFeedback;
 use fal::comm::powersgd::PowerSgd;
@@ -12,7 +11,7 @@ use fal::comm::qsgd::Qsgd;
 use fal::config::PCIE_GEN4;
 use fal::coordinator::collectives::CommLedger;
 use fal::data::{Corpus, CorpusSpec, Loader};
-use fal::runtime::Engine;
+use fal::runtime::{Backend, Manifest, NativeBackend};
 use fal::tensor::HostTensor;
 use fal::util::benchkit::Bench;
 use fal::util::rng::Rng;
@@ -21,12 +20,15 @@ fn main() {
     let mut b = Bench::from_env();
     let mut rng = Rng::new(0);
 
-    // HostTensor <-> Literal conversion (1M f32).
-    let t1m = HostTensor::randn(&[1024, 1024], 1.0, &mut rng);
-    b.bench("literal_convert_roundtrip_4MB", 4e6, || {
-        let l = fal::runtime::to_literal(&t1m).unwrap();
-        fal::runtime::from_literal(&l).unwrap().len()
-    });
+    #[cfg(feature = "pjrt")]
+    {
+        // HostTensor <-> Literal conversion (1M f32).
+        let t1m = HostTensor::randn(&[1024, 1024], 1.0, &mut rng);
+        b.bench("literal_convert_roundtrip_4MB", 4e6, || {
+            let l = fal::runtime::to_literal(&t1m).unwrap();
+            fal::runtime::from_literal(&l).unwrap().len()
+        });
+    }
 
     // Collectives: all-reduce of 4 x 1 MB shards.
     let ledger = CommLedger::new(PCIE_GEN4, 4);
@@ -60,32 +62,62 @@ fn main() {
         loader.next_train().tokens.len()
     });
 
-    // Engine: tiny eval executable end-to-end (compile amortized).
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if let Ok(engine) = Engine::new(&dir) {
-        if let Ok(spec) = engine.manifest.find("eval_masked", "tiny", "preln")
-        {
-            let name = spec.name.clone();
-            let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
-            let cfg = engine.manifest.config("tiny").unwrap().clone();
-            let params = engine.manifest.load_params("tiny", 0).unwrap();
-            let mut inputs = params;
-            let toks: Vec<i32> = (0..batch * cfg.seq_len)
-                .map(|i| (i % cfg.vocab_size) as i32)
-                .collect();
-            inputs.push(HostTensor::from_i32(&[batch, cfg.seq_len], &toks));
-            inputs.push(HostTensor::from_i32(&[batch, cfg.seq_len], &toks));
-            inputs.push(HostTensor::ones(&[cfg.n_layer]));
-            inputs.push(HostTensor::ones(&[cfg.n_layer]));
-            engine.execute(&name, &inputs).unwrap(); // compile
-            b.bench(
-                "engine_execute_tiny_eval",
-                (batch * cfg.seq_len) as f64,
-                || engine.execute(&name, &inputs).unwrap()[0].data[0],
-            );
+    // Native backend: per-stage dispatch cost on the tiny attention stage
+    // (validation + kernel; the collectives above isolate the reduction).
+    let native = NativeBackend::synthetic();
+    let stage = Manifest::tp_stage_name("tiny", 2, 4, "attn_fwd");
+    let spec = native.manifest().artifact(&stage).unwrap().clone();
+    let stage_inputs: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|s| {
+            if s.name.ends_with("_g") {
+                HostTensor::ones(&s.shape)
+            } else {
+                HostTensor::randn(&s.shape, 0.05, &mut rng)
+            }
+        })
+        .collect();
+    let stage_tokens = spec.inputs[0].shape.iter().product::<usize>() as f64;
+    b.bench("native_attn_fwd_tiny_tp2", stage_tokens, || {
+        native.execute(&stage, &stage_inputs).unwrap()[0].data[0]
+    });
+
+    #[cfg(feature = "pjrt")]
+    {
+        // Engine: tiny eval executable end-to-end (compile amortized).
+        use fal::runtime::Engine;
+        let dir =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if let Ok(engine) = Engine::new(&dir) {
+            if let Ok(spec) =
+                engine.manifest.find("eval_masked", "tiny", "preln")
+            {
+                let name = spec.name.clone();
+                let batch =
+                    spec.meta.get("batch").unwrap().as_usize().unwrap();
+                let cfg = engine.manifest.config("tiny").unwrap().clone();
+                let params = engine.manifest.load_params("tiny", 0).unwrap();
+                let mut inputs = params;
+                let toks: Vec<i32> = (0..batch * cfg.seq_len)
+                    .map(|i| (i % cfg.vocab_size) as i32)
+                    .collect();
+                inputs
+                    .push(HostTensor::from_i32(&[batch, cfg.seq_len], &toks));
+                inputs
+                    .push(HostTensor::from_i32(&[batch, cfg.seq_len], &toks));
+                inputs.push(HostTensor::ones(&[cfg.n_layer]));
+                inputs.push(HostTensor::ones(&[cfg.n_layer]));
+                engine.execute(&name, &inputs).unwrap(); // compile
+                b.bench(
+                    "engine_execute_tiny_eval",
+                    (batch * cfg.seq_len) as f64,
+                    || engine.execute(&name, &inputs).unwrap()[0].data[0],
+                );
+            }
+        } else {
+            eprintln!("(skip engine benches: run `make artifacts` first)");
         }
-    } else {
-        eprintln!("(skip engine benches: run `make artifacts` first)");
     }
 
     println!("\n== summary ==\n{}", b.summary());

@@ -1,27 +1,20 @@
 //! End-to-end TP coordinator step bench (tiny config): the paper's central
 //! comparison run live — Pre-LN (2 AR/block) vs FAL (1 AR/block) — with the
-//! real sharded executables. Also times forward-only (TTFT path).
+//! real sharded stage kernels on the native backend. Also times
+//! forward-only (TTFT path). Runs with default features: no artifacts
+//! needed.
 //!
 //! `cargo bench --bench tp_step`
-
-use std::path::Path;
 
 use fal::config::{TrainConfig, Variant, PCIE_GEN4};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::data::{Corpus, CorpusSpec, Loader};
-use fal::runtime::Engine;
+use fal::runtime::{Backend, NativeBackend};
 use fal::util::benchkit::Bench;
 
 fn main() {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    let engine = match Engine::new(&dir) {
-        Ok(e) => e,
-        Err(_) => {
-            eprintln!("skip: run `make artifacts` first");
-            return;
-        }
-    };
-    let cfg = engine.manifest.config("tiny").unwrap().clone();
+    let engine = NativeBackend::synthetic();
+    let cfg = engine.manifest().config("tiny").unwrap().clone();
     let corpus =
         Corpus::generate(CorpusSpec::for_vocab(cfg.vocab_size), 50_000, 1);
     let loader = Loader::new(&corpus, cfg.seq_len, 4, 0.1, 2);

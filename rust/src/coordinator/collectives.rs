@@ -162,4 +162,77 @@ mod tests {
         ledger.reset();
         assert_eq!(ledger.stats(), CommStats::default());
     }
+
+    /// Relative closeness for hand-computed timing expectations.
+    fn assert_close(got: f64, want: f64, what: &str) {
+        assert!(
+            (got - want).abs() <= 1e-12 + 1e-9 * want.abs(),
+            "{what}: got {got}, want {want}"
+        );
+    }
+
+    #[test]
+    fn ring_allreduce_accounting_hand_computed() {
+        // One all-reduce of a 256-element f32 tensor (1024 payload bytes)
+        // per world size. Ring model: 2(t-1) latency hops, and 2(t-1)/t of
+        // the payload crosses each link. PCIE_GEN4: alpha 10us, beta 5 GB/s.
+        for (tp, want_secs) in [
+            (2usize, 2.0 * 10.0e-6 + 1024.0 * (2.0 * 1.0 / 2.0) / 5.0e9),
+            (4, 6.0 * 10.0e-6 + 1024.0 * (2.0 * 3.0 / 4.0) / 5.0e9),
+            (8, 14.0 * 10.0e-6 + 1024.0 * (2.0 * 7.0 / 8.0) / 5.0e9),
+        ] {
+            let ledger = CommLedger::new(PCIE_GEN4, tp);
+            let parts: Vec<HostTensor> =
+                (0..tp).map(|_| HostTensor::ones(&[256])).collect();
+            let out = ledger.all_reduce(&parts);
+            assert_eq!(out.data[0], tp as f32);
+            let s = ledger.stats();
+            assert_eq!(s.allreduces, 1, "tp={tp}");
+            assert_eq!(s.allreduce_bytes, 1024.0, "tp={tp}");
+            assert_close(s.modeled_secs, want_secs, &format!("AR tp={tp}"));
+
+            // The zero-copy accounting path must charge identically.
+            ledger.reset();
+            ledger.account_allreduce_bytes(1024.0);
+            let s2 = ledger.stats();
+            assert_eq!(s2.allreduces, 1);
+            assert_eq!(s2.allreduce_bytes, 1024.0);
+            assert_close(
+                s2.modeled_secs,
+                want_secs,
+                &format!("account-only tp={tp}"),
+            );
+        }
+    }
+
+    #[test]
+    fn broadcast_accounting_hand_computed() {
+        // Broadcast charges (alpha + bytes/beta) per receiving peer.
+        for tp in [2usize, 4, 8] {
+            let ledger = CommLedger::new(PCIE_GEN4, tp);
+            ledger.broadcast(&HostTensor::ones(&[512])); // 2048 bytes
+            let s = ledger.stats();
+            assert_eq!(s.broadcasts, 1);
+            assert_eq!(s.broadcast_bytes, 2048.0);
+            let want =
+                (10.0e-6 + 2048.0 / 5.0e9) * (tp as f64 - 1.0);
+            assert_close(s.modeled_secs, want, &format!("bcast tp={tp}"));
+        }
+    }
+
+    #[test]
+    fn reset_then_reuse_accumulates_from_zero() {
+        let ledger = CommLedger::new(PCIE_GEN4, 4);
+        let parts: Vec<HostTensor> =
+            (0..4).map(|_| HostTensor::ones(&[16])).collect();
+        ledger.all_reduce(&parts);
+        ledger.broadcast(&HostTensor::ones(&[16]));
+        ledger.reset();
+        ledger.all_reduce(&parts);
+        let s = ledger.stats();
+        assert_eq!(s.allreduces, 1);
+        assert_eq!(s.broadcasts, 0);
+        assert_eq!(s.allreduce_bytes, 64.0);
+        assert_eq!(s.broadcast_bytes, 0.0);
+    }
 }

@@ -14,7 +14,7 @@
 use anyhow::{Context, Result};
 
 use crate::data::{Batch, Loader};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 use crate::tensor::HostTensor;
 use crate::util::timer::Stopwatch;
 
@@ -53,8 +53,8 @@ pub struct StepOutcome {
     pub secs: f64,
 }
 
-pub struct Trainer<'e> {
-    pub engine: &'e Engine,
+pub struct Trainer<'e, B: Backend + ?Sized> {
+    pub engine: &'e B,
     pub artifact: String,
     pub config: String,
     pub batch_size: usize,
@@ -67,33 +67,33 @@ pub struct Trainer<'e> {
     pub train_secs: f64,
 }
 
-impl<'e> Trainer<'e> {
+impl<'e, B: Backend + ?Sized> Trainer<'e, B> {
     /// Build from a (config, variant-tag) pair, loading the seed-0 initial
     /// parameter snapshot.
     pub fn new(
-        engine: &'e Engine,
+        engine: &'e B,
         config: &str,
         tag: &str,
         schedule: Schedule,
-    ) -> Result<Trainer<'e>> {
+    ) -> Result<Trainer<'e, B>> {
         Self::with_seed(engine, config, tag, schedule, 0)
     }
 
     pub fn with_seed(
-        engine: &'e Engine,
+        engine: &'e B,
         config: &str,
         tag: &str,
         schedule: Schedule,
         seed: u64,
-    ) -> Result<Trainer<'e>> {
-        let spec = engine.manifest.find("train_step", config, tag)?;
+    ) -> Result<Trainer<'e, B>> {
+        let spec = engine.manifest().find("train_step", config, tag)?;
         let artifact = spec.name.clone();
         let batch_size = spec
             .meta
             .get("batch")
             .context("train_step missing batch meta")?
             .as_usize()?;
-        let params = engine.manifest.load_params(config, seed)?;
+        let params = engine.load_params(config, seed)?;
         let mut t = Trainer {
             engine,
             artifact,

@@ -22,7 +22,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{LinkSpec, ModelConfig, TrainConfig, Variant};
 use crate::data::Batch;
-use crate::runtime::{Engine, Manifest};
+use crate::runtime::{Backend, Manifest};
 use crate::tensor::HostTensor;
 use crate::util::timer::Breakdown;
 
@@ -32,8 +32,8 @@ use super::topology::{
     BlockShard, NamedParams, ShardDims,
 };
 
-pub struct TpTrainer<'e> {
-    pub engine: &'e Engine,
+pub struct TpTrainer<'e, B: Backend + ?Sized> {
+    pub engine: &'e B,
     pub cfg: ModelConfig,
     pub variant: Variant,
     pub tp: usize,
@@ -73,32 +73,32 @@ fn fused_inputs(x: &HostTensor, fa: &HostTensor, s: &BlockShard) -> Vec<HostTens
 
 use super::optim::zeros_like;
 
-impl<'e> TpTrainer<'e> {
+impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
     pub fn new(
-        engine: &'e Engine,
+        engine: &'e B,
         config: &str,
         variant: Variant,
         tp: usize,
         link: LinkSpec,
         tc: TrainConfig,
-    ) -> Result<TpTrainer<'e>> {
+    ) -> Result<TpTrainer<'e, B>> {
         anyhow::ensure!(
             matches!(variant, Variant::PreLn | Variant::Fal),
             "TP schedules implemented for preln and fal (the paper's Fig 2)"
         );
-        let cfg = engine.manifest.config(config)?.clone();
+        let cfg = engine.manifest().config(config)?.clone();
         let dims = shard_dims(&cfg, tp)?;
-        let schema = engine.manifest.schema(config)?.to_vec();
-        let flat = engine.manifest.load_params(config, 0)?;
+        let schema = engine.manifest().schema(config)?.to_vec();
+        let flat = engine.load_params(config, 0)?;
         let params = NamedParams::from_flat(&schema, flat);
         let m = zeros_like(&params);
         let v = zeros_like(&params);
         // Batch size: whichever stage bundle was lowered for this config.
-        let batch = [8usize, 4]
+        let batch = [8usize, 4, 2]
             .into_iter()
             .find(|b| {
                 engine
-                    .manifest
+                    .manifest()
                     .artifacts
                     .contains_key(&Manifest::tp_stage_name(config, tp, *b, "attn_fwd"))
             })

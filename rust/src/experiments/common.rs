@@ -7,11 +7,11 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::sp_trainer::{Schedule, Trainer};
 use crate::data::{tasks, Corpus, CorpusSpec, Loader, TaskSuite};
-use crate::runtime::Engine;
+use crate::runtime::{default_backend, Backend};
 use crate::tensor::HostTensor;
 
 pub struct ExpCtx {
-    pub engine: Engine,
+    pub engine: Box<dyn Backend>,
     /// Multiplier on default step budgets (0.1 for smoke runs, 1.0 full).
     pub scale: f64,
     pub out_dir: PathBuf,
@@ -21,7 +21,7 @@ pub struct ExpCtx {
 impl ExpCtx {
     pub fn new(artifact_dir: &std::path::Path, scale: f64) -> Result<ExpCtx> {
         Ok(ExpCtx {
-            engine: Engine::new(artifact_dir)?,
+            engine: default_backend(artifact_dir)?,
             scale,
             out_dir: PathBuf::from("reports"),
             seed: 42,
@@ -35,7 +35,7 @@ impl ExpCtx {
     /// Deterministic corpus + loader sized for a config. `spec_seed` selects
     /// among "datasets" (Fig 3/4 use four different corpora).
     pub fn loader(&self, config: &str, spec_seed: u64) -> Result<(Corpus, Loader)> {
-        let cfg = self.engine.manifest.config(config)?;
+        let cfg = self.engine.manifest().config(config)?;
         let batch = self.default_batch(config)?;
         let spec = CorpusSpec::for_vocab(cfg.vocab_size);
         // ~600k tokens is plenty for these model sizes.
@@ -50,7 +50,7 @@ impl ExpCtx {
         // train_step entry for this config.
         let spec = self
             .engine
-            .manifest
+            .manifest()
             .artifacts
             .values()
             .find(|a| {
@@ -71,8 +71,8 @@ impl ExpCtx {
         schedule: Schedule,
         loader: &mut Loader,
         label: &str,
-    ) -> Result<(Trainer<'_>, f64)> {
-        let mut t = Trainer::new(&self.engine, config, tag, schedule)?;
+    ) -> Result<(Trainer<'_, dyn Backend>, f64)> {
+        let mut t = Trainer::new(self.engine.as_ref(), config, tag, schedule)?;
         let log = (steps / 4).max(1);
         t.train(loader, steps, log, label)?;
         let secs = t.train_secs;
@@ -88,10 +88,10 @@ impl ExpCtx {
         params: &[HostTensor],
         suite: &TaskSuite,
     ) -> Result<Vec<(String, f64)>> {
-        let spec = self.engine.manifest.find("score_options", config, tag)?;
+        let spec = self.engine.manifest().find("score_options", config, tag)?;
         let name = spec.name.clone();
         let batch = spec.meta.get("batch").unwrap().as_usize()?;
-        let cfg = self.engine.manifest.config(config)?.clone();
+        let cfg = self.engine.manifest().config(config)?.clone();
         let s = cfg.seq_len;
 
         // Flatten all (task, example, option) rows.

@@ -22,6 +22,7 @@ use crate::coordinator::optim::{adamw_step, zeros_like};
 use crate::coordinator::topology::NamedParams;
 use crate::costmodel::ring_allreduce_time;
 use crate::metrics::Report;
+use crate::runtime::Backend;
 use crate::tensor::HostTensor;
 use crate::util::table::Table;
 use crate::util::timer::Breakdown;
@@ -59,10 +60,10 @@ fn train_compressed(
     mut codec: Codec,
     steps: usize,
 ) -> Result<RunOut> {
-    let spec = ctx.engine.manifest.find("grad_step", config, tag)?;
+    let spec = ctx.engine.manifest().find("grad_step", config, tag)?;
     let name = spec.name.clone();
-    let schema = ctx.engine.manifest.schema(config)?.to_vec();
-    let flat = ctx.engine.manifest.load_params(config, 0)?;
+    let schema = ctx.engine.manifest().schema(config)?.to_vec();
+    let flat = ctx.engine.load_params(config, 0)?;
     let mut params = NamedParams::from_flat(&schema, flat);
     let mut m = zeros_like(&params);
     let mut v = zeros_like(&params);
@@ -94,9 +95,9 @@ fn train_compressed(
     }
 
     // Validation PPL through the eval_masked artifact (gates = 1).
-    let espec = ctx.engine.manifest.find("eval_masked", config, tag)?;
+    let espec = ctx.engine.manifest().find("eval_masked", config, tag)?;
     let ename = espec.name.clone();
-    let cfg = ctx.engine.manifest.config(config)?.clone();
+    let cfg = ctx.engine.manifest().config(config)?.clone();
     let ones = HostTensor::ones(&[cfg.n_layer]);
     let mut loss_sum = 0.0;
     let mut count = 0.0;

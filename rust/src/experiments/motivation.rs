@@ -13,6 +13,7 @@ use anyhow::Result;
 use crate::analysis::{consecutive_cka, normalize_max};
 use crate::coordinator::sp_trainer::Schedule;
 use crate::metrics::Report;
+use crate::runtime::Backend;
 use crate::tensor::HostTensor;
 use crate::util::table::Table;
 
@@ -29,7 +30,7 @@ fn masked_ppl(
     conn: &[f32],
     batches: usize,
 ) -> Result<f64> {
-    let spec = ctx.engine.manifest.find("eval_masked", config, tag)?;
+    let spec = ctx.engine.manifest().find("eval_masked", config, tag)?;
     let name = spec.name.clone();
     let mut loss_sum = 0.0f64;
     let mut count = 0.0f64;
@@ -48,7 +49,7 @@ fn masked_ppl(
 }
 
 pub fn run(ctx: &ExpCtx, config: &str) -> Result<Report> {
-    let cfg = ctx.engine.manifest.config(config)?.clone();
+    let cfg = ctx.engine.manifest().config(config)?.clone();
     let l = cfg.n_layer;
     let mut report = Report::new(
         &format!("fig3_fig4_{config}"),
@@ -68,7 +69,7 @@ pub fn run(ctx: &ExpCtx, config: &str) -> Result<Report> {
     let params: Vec<HostTensor> = trainer.params().to_vec();
 
     // ---------------- Fig 3(a): CKA across consecutive blocks ------------
-    let cap = ctx.engine.manifest.find("capture", config, "preln")?;
+    let cap = ctx.engine.manifest().find("capture", config, "preln")?;
     let cap_name = cap.name.clone();
     let mut t3a = Table::new(
         "Fig 3(a): CKA similarity between consecutive blocks",
@@ -122,7 +123,7 @@ pub fn run(ctx: &ExpCtx, config: &str) -> Result<Report> {
     report.table(t3b);
 
     // ---------------- Fig 4(a): gradient magnitude per block -------------
-    let gm = ctx.engine.manifest.find("gradmag", config, "preln")?;
+    let gm = ctx.engine.manifest().find("gradmag", config, "preln")?;
     let gm_name = gm.name.clone();
     let mut t4a = Table::new(
         "Fig 4(a): normalized ||dLoss/d MHA_i|| per block, 4 datasets",

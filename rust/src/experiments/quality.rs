@@ -16,6 +16,7 @@ use crate::coordinator::topology::NamedParams;
 use crate::costmodel::timemodel::train_step_time;
 use crate::data::TaskSuite;
 use crate::metrics::Report;
+use crate::runtime::Backend;
 use crate::util::table::Table;
 
 use super::common::ExpCtx;
@@ -29,7 +30,7 @@ pub fn run(ctx: &ExpCtx, config: &str) -> Result<Report> {
         "Fig 1(d) / Table 1 / Table 7 / Fig 18: quality sweep",
     );
     let steps = ctx.steps(500);
-    let cfg = ctx.engine.manifest.config(config)?.clone();
+    let cfg = ctx.engine.manifest().config(config)?.clone();
     let (corpus, _) = ctx.loader(config, 0)?;
     let suite = TaskSuite::generate(&corpus, 48, 2024);
     report.note(format!(
@@ -95,7 +96,7 @@ pub fn run(ctx: &ExpCtx, config: &str) -> Result<Report> {
 
         // Fig 18: learned LN gamma ratios from the trained fal / falplus.
         if matches!(tag, "fal" | "falplus") {
-            let schema = ctx.engine.manifest.schema(config)?.to_vec();
+            let schema = ctx.engine.manifest().schema(config)?.to_vec();
             let named =
                 NamedParams::from_flat(&schema, trainer.params().to_vec());
             let ratios = lnf_relative_scale(&named, cfg.n_layer);

@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::coordinator::sp_trainer::Schedule;
 use crate::metrics::Report;
+use crate::runtime::Backend;
 use crate::util::table::Table;
 
 use super::common::ExpCtx;
@@ -26,7 +27,7 @@ pub fn fig9(ctx: &ExpCtx) -> Result<Report> {
          scale to 6/8/12 on this testbed"
     ));
     for config in ["small", "deep8", "deep12"] {
-        let cfg = ctx.engine.manifest.config(config)?.clone();
+        let cfg = ctx.engine.manifest().config(config)?.clone();
         let mut row = vec![format!("{} ({config})", cfg.n_layer)];
         for tag in ["preln", "fal", "falplus"] {
             let (_, mut loader) = ctx.loader(config, 0)?;

@@ -12,6 +12,7 @@ use anyhow::Result;
 use crate::coordinator::sp_trainer::Schedule;
 use crate::data::{Corpus, CorpusSpec, Loader};
 use crate::metrics::Report;
+use crate::runtime::Backend;
 use crate::util::table::Table;
 
 use super::common::ExpCtx;
@@ -21,7 +22,7 @@ pub fn run(ctx: &ExpCtx, config: &str) -> Result<Report> {
         &format!("table2_{config}"),
         "Table 2: instruction-tuning robustness (GPT-2 vs FAL+)",
     );
-    let cfg = ctx.engine.manifest.config(config)?.clone();
+    let cfg = ctx.engine.manifest().config(config)?.clone();
     let pre_steps = ctx.steps(350);
     let ft_steps = ctx.steps(60);
     report.note(format!(

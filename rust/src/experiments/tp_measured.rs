@@ -10,6 +10,7 @@ use crate::config::{TrainConfig, Variant, PCIE_GEN4};
 use crate::coordinator::tp_trainer::TpTrainer;
 use crate::costmodel;
 use crate::metrics::Report;
+use crate::runtime::Backend;
 use crate::util::table::Table;
 
 use super::common::ExpCtx;
@@ -19,7 +20,7 @@ pub fn run(ctx: &ExpCtx, config: &str, tp: usize) -> Result<Report> {
         &format!("tp_sim_{config}_tp{tp}"),
         "Measured tensor-parallel simulation (real sharded fwd/bwd)",
     );
-    let cfg = ctx.engine.manifest.config(config)?.clone();
+    let cfg = ctx.engine.manifest().config(config)?.clone();
     let steps = ctx.steps(12).min(25);
     let mut table = Table::new(
         "TP coordinator: measured collectives per training step",
@@ -30,7 +31,7 @@ pub fn run(ctx: &ExpCtx, config: &str, tp: usize) -> Result<Report> {
     let mut volumes = vec![];
     for variant in [Variant::PreLn, Variant::Fal] {
         let mut t = TpTrainer::new(
-            &ctx.engine, config, variant, tp, PCIE_GEN4,
+            ctx.engine.as_ref(), config, variant, tp, PCIE_GEN4,
             TrainConfig::default())?;
         let (_, mut loader) = ctx.loader(config, 0)?;
         let mut first = None;

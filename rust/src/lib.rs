@@ -1,23 +1,39 @@
 //! # FAL: First Attentions Last — distributed-training framework
 //!
 //! Rust reproduction of *"First Attentions Last: Better Exploiting First
-//! Attentions for Efficient Transformer Training"* (NeurIPS 2025) as a
-//! three-layer Rust + JAX + Pallas system:
+//! Attentions for Efficient Transformer Training"* (NeurIPS 2025). The
+//! coordinator owns the paper's systems contribution — the tensor-parallel
+//! communication schedule (Pre-LN: 2 all-reduces per block; FAL: 1) with
+//! byte-exact collective accounting — and dispatches the per-shard stage
+//! *compute* through a pluggable [`runtime::Backend`]:
 //!
-//! * **L3 (this crate)** — the coordinator: tensor-parallel training
-//!   orchestration, collectives, communication schedules, gradient
-//!   compression baselines, interconnect/GPU cost models, data pipeline,
-//!   analysis and the experiment registry that regenerates every table and
-//!   figure of the paper.
-//! * **L2/L1 (build-time Python)** — the transformer variants and Pallas
-//!   kernels, AOT-lowered to HLO text in `artifacts/` by `make artifacts`
-//!   and executed here through the PJRT C API (`xla` crate). Python never
-//!   runs on the training hot path.
+//! * **Native backend (default)** — [`runtime::NativeBackend`]: pure-Rust
+//!   f32 reference kernels (matmul/LayerNorm/softmax/GeLU, causal attention
+//!   with hand-derived VJPs) plus an in-memory synthetic manifest. Builds
+//!   and tests with zero external state: no `xla` crate, no Python, no
+//!   `artifacts/` directory.
+//! * **PJRT backend (feature `pjrt`)** — `runtime::Engine`: executes the
+//!   AOT-lowered HLO artifacts produced by `python/compile/aot.py` (JAX +
+//!   Pallas kernels) through the PJRT C API. Python never runs on the
+//!   training hot path.
+//!
+//! Around the runtime: collectives with ring-all-reduce cost accounting
+//! ([`coordinator::collectives`]), the sharded TP trainer
+//! ([`coordinator::tp_trainer`]) and fused-step trainer
+//! ([`coordinator::sp_trainer`]), gradient-compression baselines ([`comm`]),
+//! interconnect/GPU cost models ([`costmodel`]), the synthetic data
+//! pipeline ([`data`]) and the experiment registry ([`experiments`]) that
+//! regenerates the paper's tables and figures.
 //!
 //! Entry points: the `fal` binary (`rust/src/main.rs`), `examples/`, and
-//! `benches/`. Start with [`runtime::Engine`] to load artifacts and
-//! [`coordinator::sp_trainer::Trainer`] / [`coordinator::tp_trainer`]
-//! to train.
+//! `benches/`. Start with [`runtime::default_backend`] (or
+//! [`runtime::NativeBackend::synthetic`]) and hand it to
+//! [`coordinator::tp_trainer::TpTrainer`] — see rust/README.md for the
+//! tour.
+
+// Indexed loops over flat f32 buffers are the house style for the native
+// kernels (tensor/, runtime/native/): explicit indices mirror the math.
+#![allow(clippy::needless_range_loop)]
 
 pub mod analysis;
 pub mod comm;

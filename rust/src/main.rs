@@ -14,7 +14,7 @@ use fal::config::{TrainConfig, Variant, PCIE_GEN4};
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::experiments::{self, ExpCtx};
-use fal::runtime::Engine;
+use fal::runtime::Backend;
 use fal::util::cli::Args;
 
 fn main() {
@@ -85,13 +85,13 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifact_dir(args))?;
     let config = args.str_or("config", "small");
     let variant = args.str_or("variant", "fal");
     let steps = args.usize_or("steps", 300)?;
     let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
     let (_, mut loader) = ctx.loader(&config, 0)?;
-    let mut t = Trainer::new(&engine, &config, &variant, Schedule::Constant)?;
+    let mut t =
+        Trainer::new(ctx.engine.as_ref(), &config, &variant, Schedule::Constant)?;
     t.train(&mut loader, steps, (steps / 10).max(1), &variant)?;
     println!(
         "trained {steps} steps in {:.1}s ({:.2} s/step)",
@@ -106,7 +106,6 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_tp(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifact_dir(args))?;
     let config = args.str_or("config", "small");
     let variant = Variant::parse(&args.str_or("variant", "fal"))?;
     let tp = args.usize_or("tp", 2)?;
@@ -114,7 +113,8 @@ fn cmd_tp(args: &Args) -> Result<()> {
     let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
     let (_, mut loader) = ctx.loader(&config, 0)?;
     let mut t = TpTrainer::new(
-        &engine, &config, variant, tp, PCIE_GEN4, TrainConfig::default())?;
+        ctx.engine.as_ref(), &config, variant, tp, PCIE_GEN4,
+        TrainConfig::default())?;
     for i in 0..steps {
         let b = loader.next_train();
         let (loss, gnorm) = t.train_step(&b)?;
@@ -138,18 +138,20 @@ fn cmd_tp(args: &Args) -> Result<()> {
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    let engine = Engine::new(&artifact_dir(args))?;
+    let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
+    let manifest = ctx.engine.manifest();
+    println!("backend: {}", ctx.engine.platform());
     println!("configs:");
-    for (name, c) in &engine.manifest.configs {
+    for (name, c) in &manifest.configs {
         println!(
             "  {name:<8} L={} d={} h={} V={} S={} ({} params)",
             c.n_layer, c.d_model, c.n_head, c.vocab_size, c.seq_len,
             c.n_params
         );
     }
-    println!("\nartifacts: {}", engine.manifest.artifacts.len());
+    println!("\nartifacts: {}", manifest.artifacts.len());
     let mut kinds = std::collections::BTreeMap::new();
-    for a in engine.manifest.artifacts.values() {
+    for a in manifest.artifacts.values() {
         *kinds
             .entry(a.meta_str("kind").unwrap_or("?").to_string())
             .or_insert(0usize) += 1;

@@ -154,8 +154,10 @@ impl Manifest {
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts.get(name).with_context(|| {
             format!(
-                "artifact {name:?} not in manifest ({} available); \
-                 re-run `make artifacts`",
+                "artifact {name:?} not in manifest ({} available); the \
+                 native backend registers only TP stages and preln/fal \
+                 train steps — other artifacts need `--features pjrt` plus \
+                 `make artifacts`",
                 self.artifacts.len()
             )
         })
@@ -218,8 +220,10 @@ impl Manifest {
             .collect();
         match matches.len() {
             0 => bail!(
-                "no artifact kind={kind} config={config} tag={tag}; \
-                 re-run `make artifacts`"
+                "no artifact kind={kind} config={config} tag={tag}; the \
+                 native backend serves only tp_stage and preln/fal \
+                 train_step kinds — others need `--features pjrt` plus \
+                 `make artifacts`"
             ),
             1 => Ok(matches[0]),
             _ => Ok(matches[0]), // deterministic: BTreeMap iteration order

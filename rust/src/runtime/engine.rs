@@ -1,4 +1,5 @@
-//! The execution engine: compile-once, execute-many over AOT artifacts.
+//! The PJRT execution engine: compile-once, execute-many over AOT artifacts
+//! (feature `pjrt`).
 //!
 //! One `Engine` wraps one PJRT CPU client plus the manifest. Executables are
 //! compiled lazily on first use and cached; per-artifact call counts and
@@ -11,20 +12,13 @@ use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-use super::artifact::{ArtifactSpec, Manifest};
+use super::artifact::Manifest;
 use super::literal::{from_literal, into_anyhow, to_literal, untuple};
+use super::{validate_inputs, Backend, ExecStats};
 use crate::tensor::HostTensor;
-
-#[derive(Debug, Default, Clone, Copy)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub exec_secs: f64,
-    pub convert_secs: f64,
-    pub compile_secs: f64,
-}
 
 pub struct Engine {
     client: PjRtClient,
@@ -45,12 +39,9 @@ impl Engine {
         })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
     /// Compile (or fetch from cache) the named artifact.
     pub fn prepare(&self, name: &str) -> Result<()> {
+        use anyhow::Context;
         if self.cache.borrow().contains_key(name) {
             return Ok(());
         }
@@ -70,78 +61,6 @@ impl Engine {
         self.stats.borrow_mut().entry(name.to_string()).or_default().compile_secs +=
             t0.elapsed().as_secs_f64();
         Ok(())
-    }
-
-    fn validate_inputs(&self, spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
-        if inputs.len() != spec.inputs.len() {
-            bail!(
-                "artifact {}: got {} inputs, expected {}",
-                spec.name,
-                inputs.len(),
-                spec.inputs.len()
-            );
-        }
-        for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
-            if t.shape != s.shape {
-                bail!(
-                    "artifact {} input #{i} ({}): shape {:?}, expected {:?}",
-                    spec.name,
-                    s.name,
-                    t.shape,
-                    s.shape
-                );
-            }
-        }
-        Ok(())
-    }
-
-    /// Execute by name with host tensors; returns flattened outputs.
-    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.prepare(name)?;
-        let spec = self.manifest.artifact(name)?;
-        self.validate_inputs(spec, inputs)?;
-
-        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` (the
-        // literal-input entry point): the vendored C wrapper `release()`s
-        // the device buffers it creates from the input literals and never
-        // frees them — a ~(inputs bytes) leak per call that OOMs a training
-        // run. Uploading through Rust-owned PjRtBuffers + `execute_b` keeps
-        // ownership on this side; Drop releases everything.
-        let t0 = Instant::now();
-        // `BufferFromHostLiteral` transfers asynchronously: the literals
-        // must stay alive until execution has consumed the buffers, so they
-        // are collected here and dropped only after `to_literal_sync`.
-        let mut literals = Vec::with_capacity(inputs.len());
-        let mut bufs = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let lit = to_literal(t)?;
-            bufs.push(
-                self.client
-                    .buffer_from_host_literal(None, &lit)
-                    .map_err(into_anyhow)?,
-            );
-            literals.push(lit);
-        }
-        let convert_in = t0.elapsed().as_secs_f64();
-
-        let t1 = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("prepared above");
-        let result = exe.execute_b::<PjRtBuffer>(&bufs).map_err(into_anyhow)?;
-        let root = result[0][0].to_literal_sync().map_err(into_anyhow)?;
-        drop(literals);
-        let exec = t1.elapsed().as_secs_f64();
-
-        let t2 = Instant::now();
-        let outs = untuple(root)?;
-        let convert_out = t2.elapsed().as_secs_f64();
-
-        let mut stats = self.stats.borrow_mut();
-        let e = stats.entry(name.to_string()).or_default();
-        e.calls += 1;
-        e.exec_secs += exec;
-        e.convert_secs += convert_in + convert_out;
-        Ok(outs)
     }
 
     /// Device-resident execution: inputs and outputs stay as PJRT buffers.
@@ -200,22 +119,72 @@ impl Engine {
         let lit = b.to_literal_sync().map_err(into_anyhow)?;
         from_literal(&lit)
     }
+}
 
-    pub fn stats(&self) -> BTreeMap<String, ExecStats> {
-        self.stats.borrow().clone()
+impl Backend for Engine {
+    fn platform(&self) -> String {
+        self.client.platform_name()
     }
 
-    pub fn stats_report(&self) -> String {
-        let mut out = String::from(
-            "artifact                                              calls   exec(s)  conv(s)  compile(s)\n",
-        );
-        for (name, s) in self.stats.borrow().iter() {
-            out.push_str(&format!(
-                "{name:<52} {:>6} {:>9.3} {:>8.3} {:>10.3}\n",
-                s.calls, s.exec_secs, s.convert_secs, s.compile_secs
-            ));
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute by name with host tensors; returns flattened outputs.
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.prepare(name)?;
+        let spec = self.manifest.artifact(name)?;
+        validate_inputs(spec, inputs)?;
+
+        // NOTE: we deliberately avoid `PjRtLoadedExecutable::execute` (the
+        // literal-input entry point): the vendored C wrapper `release()`s
+        // the device buffers it creates from the input literals and never
+        // frees them — a ~(inputs bytes) leak per call that OOMs a training
+        // run. Uploading through Rust-owned PjRtBuffers + `execute_b` keeps
+        // ownership on this side; Drop releases everything.
+        let t0 = Instant::now();
+        // `BufferFromHostLiteral` transfers asynchronously: the literals
+        // must stay alive until execution has consumed the buffers, so they
+        // are collected here and dropped only after `to_literal_sync`.
+        let mut literals = Vec::with_capacity(inputs.len());
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = to_literal(t)?;
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, &lit)
+                    .map_err(into_anyhow)?,
+            );
+            literals.push(lit);
         }
-        out
+        let convert_in = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("prepared above");
+        let result = exe.execute_b::<PjRtBuffer>(&bufs).map_err(into_anyhow)?;
+        let root = result[0][0].to_literal_sync().map_err(into_anyhow)?;
+        drop(literals);
+        let exec = t1.elapsed().as_secs_f64();
+
+        let t2 = Instant::now();
+        let outs = untuple(root)?;
+        let convert_out = t2.elapsed().as_secs_f64();
+
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.exec_secs += exec;
+        e.convert_secs += convert_in + convert_out;
+        Ok(outs)
+    }
+
+    fn load_params(&self, config: &str, seed: u64) -> Result<Vec<HostTensor>> {
+        self.manifest.load_params(config, seed)
+    }
+
+    fn stats(&self) -> BTreeMap<String, ExecStats> {
+        self.stats.borrow().clone()
     }
 }
 
@@ -223,7 +192,7 @@ impl Engine {
 mod tests {
     // Engine integration tests live in rust/tests/runtime_roundtrip.rs —
     // they need real artifacts on disk; here we only check stats plumbing.
-    use super::ExecStats;
+    use crate::runtime::ExecStats;
 
     #[test]
     fn stats_default() {

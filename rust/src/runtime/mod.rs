@@ -1,16 +1,174 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Execution runtime: the [`Backend`] abstraction and its implementations.
 //!
-//! The flow mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. Text is
-//! the interchange format (see python/compile/aot.py docstring).
+//! The coordinator dispatches *stage computations by name* (the per-shard
+//! pieces of the paper's Fig 2 schedule, plus the fused train step) and is
+//! agnostic to what executes them:
 //!
-//! [`Engine`] is the facade the coordinator uses: it owns the client, the
-//! manifest, a lazy executable cache and per-artifact timing statistics.
+//! * [`NativeBackend`] — pure-Rust f32 reference kernels over
+//!   [`HostTensor`], driven by an in-memory [`synthetic_manifest`]. The
+//!   default: no `xla` crate, no Python, no `artifacts/` directory.
+//! * `Engine` (feature `pjrt`) — the PJRT path: loads AOT-lowered HLO text
+//!   artifacts produced by `python/compile/aot.py` and executes them through
+//!   the XLA C API. Requires the vendored `xla` crate and `make artifacts`.
+//!
+//! Both speak the same [`Manifest`] contract (artifact names, tensor specs,
+//! parameter schemas, model configs), so the trainers and benches run
+//! unchanged on either. The native manifest registers the 13 TP stages and
+//! the `preln`/`fal` train steps; experiments that need other artifact
+//! kinds (`eval_masked`, `grad_step`, `score_options`, …) or the other four
+//! variants still require the PJRT backend and real artifacts.
 
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod engine;
+#[cfg(feature = "pjrt")]
 pub mod literal;
+pub mod native;
+pub mod synthetic;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::HostTensor;
 
 pub use artifact::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};
+#[cfg(feature = "pjrt")]
 pub use engine::Engine;
+#[cfg(feature = "pjrt")]
 pub use literal::{from_literal, to_literal, untuple};
+pub use native::NativeBackend;
+pub use synthetic::{default_specs, synthetic_manifest, SyntheticSpec};
+
+/// Per-artifact execution counters (shared by every backend).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub exec_secs: f64,
+    pub convert_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// An execution backend: everything the trainers need from the runtime.
+///
+/// Object-safe on purpose — `ExpCtx` and the CLI hold a `Box<dyn Backend>`
+/// selected at startup, while the trainers stay generic (`B: Backend +
+/// ?Sized`) so they monomorphize when the concrete type is known.
+pub trait Backend {
+    /// Short platform tag, e.g. "native-cpu" or the PJRT platform name.
+    fn platform(&self) -> String;
+
+    /// The artifact/schema/config contract this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute the named artifact; returns the flattened output tuple.
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Initial parameter snapshot for `config` at `seed`, in schema order.
+    /// PJRT loads the aot.py-written binary; the native backend generates a
+    /// deterministic GPT-2-style initialization in memory.
+    fn load_params(&self, config: &str, seed: u64) -> Result<Vec<HostTensor>>;
+
+    /// Per-artifact call/latency counters.
+    fn stats(&self) -> BTreeMap<String, ExecStats>;
+
+    /// Human-readable stats table (the §Perf profile).
+    fn stats_report(&self) -> String {
+        let mut out = String::from(
+            "artifact                                              calls   exec(s)  conv(s)  compile(s)\n",
+        );
+        for (name, s) in self.stats() {
+            out.push_str(&format!(
+                "{name:<52} {:>6} {:>9.3} {:>8.3} {:>10.3}\n",
+                s.calls, s.exec_secs, s.convert_secs, s.compile_secs
+            ));
+        }
+        out
+    }
+}
+
+/// Shared input validation: arity and shapes against the artifact spec.
+pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+    if inputs.len() != spec.inputs.len() {
+        bail!(
+            "artifact {}: got {} inputs, expected {}",
+            spec.name,
+            inputs.len(),
+            spec.inputs.len()
+        );
+    }
+    for (i, (t, s)) in inputs.iter().zip(&spec.inputs).enumerate() {
+        if t.shape != s.shape {
+            bail!(
+                "artifact {} input #{i} ({}): shape {:?}, expected {:?}",
+                spec.name,
+                s.name,
+                t.shape,
+                s.shape
+            );
+        }
+        if t.dtype != s.dtype {
+            bail!(
+                "artifact {} input #{i} ({}): dtype {:?}, expected {:?} \
+                 (token inputs must be built with HostTensor::from_i32)",
+                spec.name,
+                s.name,
+                t.dtype,
+                s.dtype
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Pick the default backend for `artifact_dir`: the PJRT engine when the
+/// `pjrt` feature is on and a manifest exists on disk, the native CPU
+/// backend (with the built-in synthetic manifest) otherwise.
+pub fn default_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    {
+        if artifact_dir.join("manifest.json").exists() {
+            return Ok(Box::new(Engine::new(artifact_dir)?));
+        }
+        // A pjrt build asking for a missing artifact dir is usually a typo;
+        // say so instead of silently switching model families.
+        eprintln!(
+            "warning: no manifest.json under {} — falling back to the \
+             native backend's synthetic configs",
+            artifact_dir.display()
+        );
+    }
+    let _ = artifact_dir;
+    Ok(Box::new(NativeBackend::synthetic()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_backend_without_artifacts_is_native() {
+        let b = default_backend(Path::new("/nonexistent/artifacts")).unwrap();
+        assert_eq!(b.platform(), "native-cpu");
+        assert!(b.manifest().configs.contains_key("tiny"));
+    }
+
+    #[test]
+    fn validate_inputs_rejects_arity_and_shape() {
+        let m = synthetic_manifest(&default_specs());
+        let spec = m
+            .artifact(&Manifest::tp_stage_name("tiny", 2, 4, "attn_fwd"))
+            .unwrap();
+        let err = validate_inputs(spec, &[]).unwrap_err().to_string();
+        assert!(err.contains("inputs"), "{err}");
+        let mut bad: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|s| HostTensor::zeros(&s.shape))
+            .collect();
+        bad[0] = HostTensor::zeros(&[1, 2, 3]);
+        let err = validate_inputs(spec, &bad).unwrap_err().to_string();
+        assert!(err.contains("shape"), "{err}");
+    }
+}

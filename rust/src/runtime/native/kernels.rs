@@ -1,0 +1,453 @@
+//! f32 reference kernels for the native backend: the forward math mirrors
+//! python/compile/kernels/ref.py, the backward formulas are the hand-derived
+//! VJPs that jax.vjp produces for those forwards.
+//!
+//! Everything operates on [`HostTensor`]s viewed as row-major matrices; the
+//! BLAS-3 building blocks (`matmul`, `layernorm`, `softmax_rows`) live on
+//! `HostTensor` itself, this module adds the transposed-product variants and
+//! the attention/GeLU/LayerNorm backward passes.
+
+use crate::tensor::{HostTensor, LN_EPS};
+
+/// tanh-GeLU constant sqrt(2/pi) (matches GPT-2 and ref.py).
+const GELU_C: f32 = 0.797_884_6;
+const GELU_A: f32 = 0.044_715;
+
+/// `a @ b^T` with `a` [..., k] and `b` [n, k] -> [..., n]. Avoids
+/// materializing the transpose (rows of both operands are contiguous).
+pub fn matmul_nt(a: &HostTensor, b: &HostTensor) -> HostTensor {
+    assert_eq!(b.shape.len(), 2, "matmul_nt rhs must be 2-D");
+    let (m, k) = a.rows_cols();
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_nt: inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += arow[t] * brow[t];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    let mut shape = a.shape.clone();
+    *shape.last_mut().unwrap() = n;
+    HostTensor::from_vec(&shape, out)
+}
+
+/// `a^T @ b` with `a` [..., ka] and `b` [..., kb] sharing leading axes
+/// -> [ka, kb]. This is the weight-gradient product (sum over tokens).
+pub fn matmul_tn(a: &HostTensor, b: &HostTensor) -> HostTensor {
+    let (m, ka) = a.rows_cols();
+    let (m2, kb) = b.rows_cols();
+    assert_eq!(m, m2, "matmul_tn: leading dims {m} vs {m2}");
+    let mut out = vec![0.0f32; ka * kb];
+    for r in 0..m {
+        let arow = &a.data[r * ka..(r + 1) * ka];
+        let brow = &b.data[r * kb..(r + 1) * kb];
+        for (i, &av) in arow.iter().enumerate() {
+            let orow = &mut out[i * kb..(i + 1) * kb];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    HostTensor::from_vec(&[ka, kb], out)
+}
+
+/// Elementwise sum of two tensors.
+pub fn add(a: &HostTensor, b: &HostTensor) -> HostTensor {
+    let mut out = a.clone();
+    out.add_assign(b);
+    out
+}
+
+/// Add a [n]-shaped bias to every row of a [..., n] tensor, in place.
+pub fn add_bias(t: &mut HostTensor, bias: &HostTensor) {
+    let (_, n) = t.rows_cols();
+    assert_eq!(bias.len(), n, "add_bias: bias length");
+    for row in t.data.chunks_mut(n) {
+        for (v, b) in row.iter_mut().zip(&bias.data) {
+            *v += b;
+        }
+    }
+}
+
+/// Sum a [..., n] tensor over all leading axes -> [n] (bias gradient).
+pub fn sum_rows(t: &HostTensor) -> HostTensor {
+    let (_, n) = t.rows_cols();
+    let mut out = vec![0.0f32; n];
+    for row in t.data.chunks(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    HostTensor::from_vec(&[n], out)
+}
+
+/// tanh-approximated GeLU, elementwise.
+pub fn gelu(x: &HostTensor) -> HostTensor {
+    let mut out = x.clone();
+    for v in out.data.iter_mut() {
+        let u = GELU_C * (*v + GELU_A * *v * *v * *v);
+        *v = 0.5 * *v * (1.0 + u.tanh());
+    }
+    out
+}
+
+/// GeLU VJP: dx = dout * gelu'(x).
+pub fn gelu_bwd(x: &HostTensor, dout: &HostTensor) -> HostTensor {
+    assert_eq!(x.len(), dout.len());
+    let mut out = dout.clone();
+    for (d, &v) in out.data.iter_mut().zip(&x.data) {
+        let u = GELU_C * (v + GELU_A * v * v * v);
+        let t = u.tanh();
+        let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+        *d *= 0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du;
+    }
+    out
+}
+
+/// LayerNorm VJP over the last axis: given the primal input `x`, gamma and
+/// the output cotangent, returns (dx, dgamma, dbeta). dgamma/dbeta are
+/// summed over every leading axis.
+pub fn layernorm_bwd(
+    x: &HostTensor,
+    gamma: &HostTensor,
+    dout: &HostTensor,
+) -> (HostTensor, HostTensor, HostTensor) {
+    let (m, n) = x.rows_cols();
+    assert_eq!(dout.shape, x.shape, "layernorm_bwd: dout shape");
+    let nf = n as f32;
+    let mut dx = vec![0.0f32; m * n];
+    let mut dg = vec![0.0f32; n];
+    let mut db = vec![0.0f32; n];
+    let mut xhat = vec![0.0f32; n];
+    let mut dxhat = vec![0.0f32; n];
+    for i in 0..m {
+        let row = &x.data[i * n..(i + 1) * n];
+        let drow = &dout.data[i * n..(i + 1) * n];
+        let mu = row.iter().sum::<f32>() / nf;
+        let var =
+            row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / nf;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..n {
+            xhat[j] = (row[j] - mu) * inv;
+            dg[j] += drow[j] * xhat[j];
+            db[j] += drow[j];
+            dxhat[j] = drow[j] * gamma.data[j];
+        }
+        let m1 = dxhat.iter().sum::<f32>() / nf;
+        let m2 =
+            dxhat.iter().zip(&xhat).map(|(a, b)| a * b).sum::<f32>() / nf;
+        let orow = &mut dx[i * n..(i + 1) * n];
+        for j in 0..n {
+            orow[j] = (dxhat[j] - m1 - xhat[j] * m2) * inv;
+        }
+    }
+    (
+        HostTensor { shape: x.shape.clone(), dtype: x.dtype, data: dx },
+        HostTensor::from_vec(&[n], dg),
+        HostTensor::from_vec(&[n], db),
+    )
+}
+
+/// Head-group geometry of one attention call (per shard or full model).
+#[derive(Debug, Clone, Copy)]
+pub struct AttnGeom {
+    pub batch: usize,
+    pub seq: usize,
+    pub heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl AttnGeom {
+    fn scale(&self) -> f32 {
+        1.0 / (self.head_dim as f32).sqrt()
+    }
+}
+
+/// Causal multi-head attention core: q [b,s,h*dh], k/v [b,s,hkv*dh] with
+/// h % hkv == 0 (GQA) -> o [b,s,h*dh]. Heads live interleaved in the last
+/// axis exactly like the reshape in stages.py::make_attn_fwd.
+pub fn causal_attention(
+    g: &AttnGeom,
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+) -> HostTensor {
+    let (b, s, h, dh) = (g.batch, g.seq, g.heads, g.head_dim);
+    let rep = h / g.kv_heads;
+    let (dq, dkv) = (h * dh, g.kv_heads * dh);
+    let scale = g.scale();
+    let mut out = vec![0.0f32; b * s * dq];
+    let mut probs = vec![0.0f32; s];
+    for bi in 0..b {
+        for hi in 0..h {
+            let kh = hi / rep;
+            for i in 0..s {
+                let qrow =
+                    &q.data[(bi * s + i) * dq + hi * dh..][..dh];
+                // Scores over keys j <= i, stable softmax.
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let krow =
+                        &k.data[(bi * s + j) * dkv + kh * dh..][..dh];
+                    let mut dot = 0.0f32;
+                    for t in 0..dh {
+                        dot += qrow[t] * krow[t];
+                    }
+                    probs[j] = dot * scale;
+                    mx = mx.max(probs[j]);
+                }
+                let mut sum = 0.0f32;
+                for p in probs[..=i].iter_mut() {
+                    *p = (*p - mx).exp();
+                    sum += *p;
+                }
+                let orow =
+                    &mut out[(bi * s + i) * dq + hi * dh..][..dh];
+                for j in 0..=i {
+                    let w = probs[j] / sum;
+                    let vrow =
+                        &v.data[(bi * s + j) * dkv + kh * dh..][..dh];
+                    for t in 0..dh {
+                        orow[t] += w * vrow[t];
+                    }
+                }
+            }
+        }
+    }
+    HostTensor::from_vec(&[b, s, dq], out)
+}
+
+/// VJP of [`causal_attention`]: recomputes the probabilities and returns
+/// (dq, dk, dv). dk/dv accumulate over the query heads a KV head serves.
+pub fn causal_attention_bwd(
+    g: &AttnGeom,
+    q: &HostTensor,
+    k: &HostTensor,
+    v: &HostTensor,
+    dout: &HostTensor,
+) -> (HostTensor, HostTensor, HostTensor) {
+    let (b, s, h, dh) = (g.batch, g.seq, g.heads, g.head_dim);
+    let rep = h / g.kv_heads;
+    let (dq_w, dkv_w) = (h * dh, g.kv_heads * dh);
+    let scale = g.scale();
+    let mut dq = vec![0.0f32; b * s * dq_w];
+    let mut dk = vec![0.0f32; b * s * dkv_w];
+    let mut dv = vec![0.0f32; b * s * dkv_w];
+    let mut probs = vec![0.0f32; s];
+    let mut dprobs = vec![0.0f32; s];
+    for bi in 0..b {
+        for hi in 0..h {
+            let kh = hi / rep;
+            for i in 0..s {
+                let qrow =
+                    &q.data[(bi * s + i) * dq_w + hi * dh..][..dh];
+                let drow =
+                    &dout.data[(bi * s + i) * dq_w + hi * dh..][..dh];
+                // Recompute the softmax row (j <= i).
+                let mut mx = f32::NEG_INFINITY;
+                for j in 0..=i {
+                    let krow =
+                        &k.data[(bi * s + j) * dkv_w + kh * dh..][..dh];
+                    let mut dot = 0.0f32;
+                    for t in 0..dh {
+                        dot += qrow[t] * krow[t];
+                    }
+                    probs[j] = dot * scale;
+                    mx = mx.max(probs[j]);
+                }
+                let mut sum = 0.0f32;
+                for p in probs[..=i].iter_mut() {
+                    *p = (*p - mx).exp();
+                    sum += *p;
+                }
+                let mut row_dot = 0.0f32;
+                for j in 0..=i {
+                    probs[j] /= sum;
+                    let vrow =
+                        &v.data[(bi * s + j) * dkv_w + kh * dh..][..dh];
+                    let mut dp = 0.0f32;
+                    for t in 0..dh {
+                        dp += drow[t] * vrow[t];
+                    }
+                    dprobs[j] = dp;
+                    row_dot += probs[j] * dp;
+                }
+                let dqrow =
+                    &mut dq[(bi * s + i) * dq_w + hi * dh..][..dh];
+                for j in 0..=i {
+                    let dlogit = probs[j] * (dprobs[j] - row_dot) * scale;
+                    let krow =
+                        &k.data[(bi * s + j) * dkv_w + kh * dh..][..dh];
+                    let dkrow =
+                        &mut dk[(bi * s + j) * dkv_w + kh * dh..][..dh];
+                    let dvrow =
+                        &mut dv[(bi * s + j) * dkv_w + kh * dh..][..dh];
+                    for t in 0..dh {
+                        dqrow[t] += dlogit * krow[t];
+                        dkrow[t] += dlogit * qrow[t];
+                        dvrow[t] += probs[j] * drow[t];
+                    }
+                }
+            }
+        }
+    }
+    (
+        HostTensor::from_vec(&[b, s, dq_w], dq),
+        HostTensor::from_vec(&[b, s, dkv_w], dk),
+        HostTensor::from_vec(&[b, s, dkv_w], dv),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::new(1);
+        let a = HostTensor::randn(&[3, 5], 1.0, &mut rng);
+        let b = HostTensor::randn(&[5, 4], 1.0, &mut rng);
+        let nt = matmul_nt(&a, &b.transpose());
+        assert!(nt.max_abs_err(&a.matmul(&b)) < 1e-5);
+        let tn = matmul_tn(&a, &a);
+        assert!(tn.max_abs_err(&a.transpose().matmul(&a)) < 1e-5);
+    }
+
+    #[test]
+    fn bias_and_row_sums() {
+        let mut t = HostTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        add_bias(&mut t, &HostTensor::from_vec(&[2], vec![10., 20.]));
+        assert_eq!(t.data, vec![11., 22., 13., 24.]);
+        assert_eq!(sum_rows(&t).data, vec![24., 46.]);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        let x = HostTensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
+        let y = gelu(&x);
+        // Reference values from the JAX oracle (tanh approximation).
+        assert!((y.data[0] - (-0.158_808)).abs() < 1e-4, "{}", y.data[0]);
+        assert_eq!(y.data[1], 0.0);
+        assert!((y.data[2] - 1.954_597_7).abs() < 1e-4, "{}", y.data[2]);
+    }
+
+    #[test]
+    fn gelu_bwd_finite_difference() {
+        let mut rng = Rng::new(2);
+        let x = HostTensor::randn(&[16], 1.0, &mut rng);
+        let dout = HostTensor::ones(&[16]);
+        let dx = gelu_bwd(&x, &dout);
+        let h = 1e-3f32;
+        for i in 0..16 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp.data[i] += h;
+            xm.data[i] -= h;
+            let num =
+                (gelu(&xp).data[i] - gelu(&xm).data[i]) / (2.0 * h);
+            assert!(
+                (num - dx.data[i]).abs() < 1e-2,
+                "i={i}: numeric {num} vs analytic {}",
+                dx.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_finite_difference() {
+        let mut rng = Rng::new(3);
+        let x = HostTensor::randn(&[2, 8], 1.0, &mut rng);
+        let g = HostTensor::randn(&[8], 0.5, &mut rng);
+        let b = HostTensor::zeros(&[8]);
+        let w = HostTensor::randn(&[2, 8], 1.0, &mut rng);
+        let loss = |x_: &HostTensor| x_.layernorm(&g, &b).dot(&w);
+        let (dx, dg, db) = layernorm_bwd(&x, &g, &w);
+        let h = 1e-3f32;
+        for i in [0usize, 5, 9, 15] {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp.data[i] += h;
+            xm.data[i] -= h;
+            let num = ((loss(&xp) - loss(&xm)) / (2.0 * h as f64)) as f32;
+            assert!(
+                (num - dx.data[i]).abs() < 2e-2,
+                "dx[{i}]: numeric {num} vs analytic {}",
+                dx.data[i]
+            );
+        }
+        // dbeta is just the summed cotangent; dgamma matches xhat-weighting.
+        assert!(db.max_abs_err(&sum_rows(&w)) < 1e-5);
+        assert_eq!(dg.shape, vec![8]);
+    }
+
+    #[test]
+    fn attention_is_causal_and_normalized() {
+        let g = AttnGeom { batch: 1, seq: 4, heads: 2, kv_heads: 2, head_dim: 3 };
+        let mut rng = Rng::new(4);
+        let q = HostTensor::randn(&[1, 4, 6], 1.0, &mut rng);
+        let k = HostTensor::randn(&[1, 4, 6], 1.0, &mut rng);
+        let mut v = HostTensor::zeros(&[1, 4, 6]);
+        // v rows constant per position: output at position 0 must equal v0.
+        for j in 0..4 {
+            for t in 0..6 {
+                v.data[j * 6 + t] = j as f32;
+            }
+        }
+        let o = causal_attention(&g, &q, &k, &v);
+        for t in 0..6 {
+            assert!((o.data[t] - 0.0).abs() < 1e-6); // pos 0 sees only v0
+        }
+        // Later positions: convex combination of past values, so in [0, j].
+        for j in 1..4 {
+            for t in 0..6 {
+                let val = o.data[j * 6 + t];
+                assert!((0.0..=j as f32).contains(&val), "pos {j}: {val}");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_bwd_finite_difference() {
+        let g = AttnGeom { batch: 1, seq: 3, heads: 2, kv_heads: 1, head_dim: 2 };
+        let mut rng = Rng::new(5);
+        let q = HostTensor::randn(&[1, 3, 4], 0.7, &mut rng);
+        let k = HostTensor::randn(&[1, 3, 2], 0.7, &mut rng);
+        let v = HostTensor::randn(&[1, 3, 2], 0.7, &mut rng);
+        let w = HostTensor::randn(&[1, 3, 4], 1.0, &mut rng);
+        let loss = |q_: &HostTensor, k_: &HostTensor, v_: &HostTensor| {
+            causal_attention(&g, q_, k_, v_).dot(&w)
+        };
+        let (dq, dk, dv) = causal_attention_bwd(&g, &q, &k, &v, &w);
+        let h = 1e-3f32;
+        let check = |t: &HostTensor, dt: &HostTensor, which: usize| {
+            for i in 0..t.len() {
+                let mut tp = t.clone();
+                let mut tm = t.clone();
+                tp.data[i] += h;
+                tm.data[i] -= h;
+                let (lp, lm) = match which {
+                    0 => (loss(&tp, &k, &v), loss(&tm, &k, &v)),
+                    1 => (loss(&q, &tp, &v), loss(&q, &tm, &v)),
+                    _ => (loss(&q, &k, &tp), loss(&q, &k, &tm)),
+                };
+                let num = ((lp - lm) / (2.0 * h as f64)) as f32;
+                assert!(
+                    (num - dt.data[i]).abs() < 2e-2,
+                    "grad[{which}][{i}]: numeric {num} vs {}",
+                    dt.data[i]
+                );
+            }
+        };
+        check(&q, &dq, 0);
+        check(&k, &dk, 1);
+        check(&v, &dv, 2);
+    }
+}

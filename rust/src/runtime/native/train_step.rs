@@ -1,0 +1,281 @@
+//! Native fused train step: full-model forward + backward + AdamW in one
+//! call, matching the contract of the lowered `train_step` artifacts
+//! (inputs [params, m, v, step, lr_scale, tokens, targets], outputs
+//! [loss, gnorm, params', m', v']).
+//!
+//! The model math is the TP stage kernels run at tp = 1 (full weights), and
+//! the optimizer is coordinator::optim::adamw_step — the same pieces the TP
+//! trainer composes, which is what makes the TP-vs-fused equivalence test
+//! (rust/tests/tp_equivalence.rs) tight: the two paths differ only in f32
+//! summation order.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::{TrainConfig, Variant};
+use crate::coordinator::optim::{adamw_step, zeros_like};
+use crate::coordinator::topology::NamedParams;
+use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::Manifest;
+use crate::tensor::HostTensor;
+
+use super::kernels::{add, layernorm_bwd, AttnGeom};
+use super::stages::{
+    attn_bwd, attn_fwd, embed_bwd, embed_fwd, fal_fused_bwd, fal_fused_fwd,
+    head_fwd_bwd, mlp_bwd, mlp_fwd,
+};
+
+/// Forward stash for one block (mirrors tp_trainer::BlockStash).
+struct Stash {
+    x: HostTensor,
+    /// Pre-LN: h = x + MHA out. FAL block 1: the MHA output a1.
+    h_or_a: Option<HostTensor>,
+}
+
+fn attn_params(p: &NamedParams, li: usize) -> Result<Vec<HostTensor>> {
+    Ok(vec![
+        p.blk(li, "ln1_g")?.clone(),
+        p.blk(li, "ln1_b")?.clone(),
+        p.blk(li, "wq")?.clone(),
+        p.blk(li, "wk")?.clone(),
+        p.blk(li, "wv")?.clone(),
+        p.blk(li, "wo")?.clone(),
+    ])
+}
+
+fn mlp_params(p: &NamedParams, li: usize) -> Result<Vec<HostTensor>> {
+    Ok(vec![
+        p.blk(li, "ln2_g")?.clone(),
+        p.blk(li, "ln2_b")?.clone(),
+        p.blk(li, "w1")?.clone(),
+        p.blk(li, "b1")?.clone(),
+        p.blk(li, "w2")?.clone(),
+        p.blk(li, "b2")?.clone(),
+    ])
+}
+
+/// fal_fused stage input order: x, fa, ln1_g, ln1_b, ln2_g, ln2_b,
+/// wq, wk, wv, wo, w1, b1, w2, b2 (see stages.py).
+fn fused_inputs(
+    x: &HostTensor,
+    fa: &HostTensor,
+    ap: &[HostTensor],
+    mp: &[HostTensor],
+) -> Vec<HostTensor> {
+    let mut v = vec![x.clone(), fa.clone()];
+    v.extend(ap[..2].iter().cloned());
+    v.extend(mp[..2].iter().cloned());
+    v.extend(ap[2..].iter().cloned());
+    v.extend(mp[2..].iter().cloned());
+    v
+}
+
+fn acc(grads: &mut NamedParams, name: &str, t: &HostTensor) {
+    grads.by_name.get_mut(name).unwrap().add_assign(t);
+}
+
+fn acc_blk(grads: &mut NamedParams, li: usize, field: &str, t: &HostTensor) {
+    acc(grads, &format!("blocks.{li}.{field}"), t);
+}
+
+fn acc_attn(grads: &mut NamedParams, li: usize, out: &[HostTensor]) {
+    for (field, t) in
+        ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo"].into_iter().zip(out)
+    {
+        acc_blk(grads, li, field, t);
+    }
+}
+
+fn acc_mlp(grads: &mut NamedParams, li: usize, out: &[HostTensor]) {
+    for (field, t) in
+        ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"].into_iter().zip(out)
+    {
+        acc_blk(grads, li, field, t);
+    }
+}
+
+pub fn run(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let config = spec
+        .meta_str("config")
+        .context("train_step artifact missing config meta")?;
+    let cfg = manifest.config(config)?.clone();
+    let variant = Variant::parse(
+        spec.meta_str("variant")
+            .context("train_step artifact missing variant meta")?,
+    )?;
+    let batch = spec.meta.get("batch").context("missing batch meta")?.as_usize()?;
+    let schema = manifest.schema(config)?.to_vec();
+    let np = schema.len();
+    ensure!(
+        inputs.len() == 3 * np + 4,
+        "train_step: {} inputs, expected {}",
+        inputs.len(),
+        3 * np + 4
+    );
+    let mut params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let mut m = NamedParams::from_flat(&schema, inputs[np..2 * np].to_vec());
+    let mut v =
+        NamedParams::from_flat(&schema, inputs[2 * np..3 * np].to_vec());
+    let step = (inputs[3 * np].data[0].max(1.0)) as usize;
+    let lr_scale = inputs[3 * np + 1].data[0] as f64;
+    let tokens = &inputs[3 * np + 2];
+    let targets = &inputs[3 * np + 3];
+    let g = AttnGeom {
+        batch,
+        seq: cfg.seq_len,
+        heads: cfg.n_head,
+        kv_heads: cfg.n_kv_head,
+        head_dim: cfg.head_dim(),
+    };
+
+    // ------------------------------ forward ------------------------------
+    let mut x = embed_fwd(tokens, params.get("wte")?, params.get("wpe")?);
+    let mut stash: Vec<Stash> = Vec::with_capacity(cfg.n_layer);
+    let mut fa: Option<HostTensor> = None;
+    for li in 0..cfg.n_layer {
+        let ap = attn_params(&params, li)?;
+        let mp = mlp_params(&params, li)?;
+        match (variant, li) {
+            (Variant::PreLn, _) => {
+                let a = attn_fwd(&g, &x, &ap).out;
+                let h = add(&x, &a);
+                let mo = mlp_fwd(&h, None, &mp).out;
+                stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
+                x = add(&h, &mo);
+            }
+            (Variant::Fal, 0) => {
+                let a = attn_fwd(&g, &x, &ap).out;
+                let f = a.layernorm(
+                    params.blk(0, "lnf_g")?,
+                    params.blk(0, "lnf_b")?,
+                );
+                let mo = mlp_fwd(&x, Some(&f), &mp).out;
+                stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
+                x = add(&add(&x, &a), &mo);
+                fa = Some(f);
+            }
+            (Variant::Fal, _) => {
+                let fa_t = fa.as_ref().expect("fa set in block 1");
+                let fin = fused_inputs(&x, fa_t, &ap, &mp);
+                let out = fal_fused_fwd(&g, &fin);
+                stash.push(Stash { x: x.clone(), h_or_a: None });
+                x = add(&x, &out);
+            }
+            _ => bail!(
+                "native train_step implements preln and fal, got {}",
+                variant.name()
+            ),
+        }
+    }
+    let head = head_fwd_bwd(
+        &x,
+        params.get("lnF_g")?,
+        params.get("lnF_b")?,
+        params.get("wte")?,
+        targets,
+    );
+    let loss = head[0].data[0];
+
+    // ------------------------------ backward -----------------------------
+    let mut grads = zeros_like(&params);
+    let mut dx = head[2].clone();
+    acc(&mut grads, "lnF_g", &head[3]);
+    acc(&mut grads, "lnF_b", &head[4]);
+    acc(&mut grads, "wte", &head[5]);
+
+    let mut dfa: Option<HostTensor> = None;
+    for li in (0..cfg.n_layer).rev() {
+        let ap = attn_params(&params, li)?;
+        let mp = mlp_params(&params, li)?;
+        dx = match (variant, li) {
+            (Variant::PreLn, _) => {
+                let h = stash[li].h_or_a.as_ref().unwrap();
+                let out = mlp_bwd(h, None, &mp, &dx);
+                acc_mlp(&mut grads, li, &out[1..]);
+                let mut dh = out[0].clone();
+                dh.add_assign(&dx); // residual h -> x'
+                let out2 = attn_bwd(&g, &stash[li].x, &ap, &dh);
+                acc_attn(&mut grads, li, &out2[1..]);
+                add(&out2[0], &dh) // residual x -> h
+            }
+            (Variant::Fal, 0) => {
+                let a1 = stash[0].h_or_a.as_ref().unwrap();
+                let fa_t = fa.as_ref().unwrap();
+                let out = mlp_bwd(&stash[0].x, Some(fa_t), &mp, &dx);
+                acc_mlp(&mut grads, 0, &out[2..]);
+                let dx_mlp = out[0].clone();
+                let mut dfa_total = out[1].clone();
+                if let Some(a) = dfa.take() {
+                    dfa_total.add_assign(&a);
+                }
+                let (da_ln, dg_, db_) =
+                    layernorm_bwd(a1, params.blk(0, "lnf_g")?, &dfa_total);
+                acc_blk(&mut grads, 0, "lnf_g", &dg_);
+                acc_blk(&mut grads, 0, "lnf_b", &db_);
+                // a1 receives the residual path and the LNf path.
+                let mut da = dx.clone();
+                da.add_assign(&da_ln);
+                let out2 = attn_bwd(&g, &stash[0].x, &ap, &da);
+                acc_attn(&mut grads, 0, &out2[1..]);
+                let mut d = add(&out2[0], &dx_mlp);
+                d.add_assign(&dx); // direct residual x1 -> x2
+                d
+            }
+            (Variant::Fal, _) => {
+                let fa_t = fa.as_ref().unwrap();
+                let fin = fused_inputs(&stash[li].x, fa_t, &ap, &mp);
+                let out = fal_fused_bwd(&g, &fin, &dx);
+                // [dx, dfa, dln1_g, dln1_b, dln2_g, dln2_b, dwq, dwk,
+                //  dwv, dwo, dw1, db1, dw2, db2]
+                acc_attn(
+                    &mut grads,
+                    li,
+                    &[
+                        out[2].clone(), out[3].clone(), out[6].clone(),
+                        out[7].clone(), out[8].clone(), out[9].clone(),
+                    ],
+                );
+                acc_mlp(
+                    &mut grads,
+                    li,
+                    &[
+                        out[4].clone(), out[5].clone(), out[10].clone(),
+                        out[11].clone(), out[12].clone(), out[13].clone(),
+                    ],
+                );
+                match &mut dfa {
+                    Some(a) => a.add_assign(&out[1]),
+                    None => dfa = Some(out[1].clone()),
+                }
+                add(&out[0], &dx) // residual
+            }
+            _ => unreachable!(),
+        };
+    }
+    let (dwte, dwpe) =
+        embed_bwd(tokens, params.get("wte")?, params.get("wpe")?, &dx);
+    acc(&mut grads, "wte", &dwte);
+    acc(&mut grads, "wpe", &dwpe);
+
+    // ------------------------------ optimizer ----------------------------
+    let gnorm = adamw_step(
+        &mut params,
+        &grads,
+        &mut m,
+        &mut v,
+        step,
+        &TrainConfig::default(),
+        lr_scale,
+    );
+
+    let mut outs = Vec::with_capacity(2 + 3 * np);
+    outs.push(HostTensor::scalar(loss));
+    outs.push(HostTensor::scalar(gnorm as f32));
+    outs.extend(params.to_flat());
+    outs.extend(m.to_flat());
+    outs.extend(v.to_flat());
+    Ok(outs)
+}

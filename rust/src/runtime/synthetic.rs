@@ -1,0 +1,398 @@
+//! Synthetic manifests: the artifact contract generated in memory.
+//!
+//! The PJRT path reads `artifacts/manifest.json` written by aot.py; the
+//! native backend needs the *same* contract (configs, parameter schemas,
+//! per-stage tensor specs) without any files on disk. This module generates
+//! it from a [`ModelConfig`], registering for each (config, tp, batch):
+//!
+//! * the 13 TP stage artifacts of python/compile/stages.py (named with
+//!   [`Manifest::tp_stage_name`], so trainers cannot tell the difference),
+//! * fused `train_step` artifacts for the `preln` and `fal` variants.
+//!
+//! Parameter schemas use the same flattened-pytree naming and (sorted)
+//! order as aot.py: per block `b1, b2, ln1_b, ln1_g, ln2_b, ln2_g, lnf_b,
+//! lnf_g, w1, w2, wk, wo, wq, wv`, then `lnF_b, lnF_g, wpe, wte`.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::config::ModelConfig;
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+use super::artifact::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};
+
+/// One synthetic entry: a model shape, the batch size its stages are
+/// "lowered" for, and the TP degrees to register.
+#[derive(Debug, Clone)]
+pub struct SyntheticSpec {
+    pub cfg: ModelConfig,
+    pub batch: usize,
+    pub tps: Vec<usize>,
+}
+
+/// The built-in config set, mirroring the aot.py groups: `micro` (gradient
+/// checks), `tiny` (fast tests), `small` (experiments), `e2e` (the ~25M
+/// end-to-end demo).
+pub fn default_specs() -> Vec<SyntheticSpec> {
+    // (vocab, d_model, n_head, n_kv_head, n_layer, d_ff, seq_len)
+    vec![
+        SyntheticSpec {
+            cfg: model_config("micro", (31, 8, 2, 2, 2, 16, 5)),
+            batch: 2,
+            tps: vec![1, 2],
+        },
+        SyntheticSpec {
+            cfg: model_config("tiny", (256, 64, 4, 4, 4, 256, 64)),
+            batch: 4,
+            tps: vec![1, 2, 4],
+        },
+        SyntheticSpec {
+            cfg: model_config("small", (512, 192, 8, 8, 6, 768, 128)),
+            batch: 8,
+            tps: vec![1, 2, 4, 8],
+        },
+        SyntheticSpec {
+            cfg: model_config("e2e", (4096, 512, 8, 8, 8, 2048, 256)),
+            batch: 8,
+            tps: vec![1],
+        },
+    ]
+}
+
+/// `dims` = (vocab, d_model, n_head, n_kv_head, n_layer, d_ff, seq_len).
+fn model_config(
+    name: &str,
+    dims: (usize, usize, usize, usize, usize, usize, usize),
+) -> ModelConfig {
+    let (vocab, d, h, kv, l, f, s) = dims;
+    let mut cfg = ModelConfig {
+        name: name.to_string(),
+        vocab_size: vocab,
+        d_model: d,
+        n_head: h,
+        n_kv_head: kv,
+        n_layer: l,
+        d_ff: f,
+        seq_len: s,
+        n_params: 0,
+    };
+    cfg.n_params = param_schema(&cfg).iter().map(|p| p.numel()).sum();
+    cfg
+}
+
+/// Flattened parameter schema for a config (sorted-name pytree order).
+pub fn param_schema(cfg: &ModelConfig) -> Vec<ParamSpec> {
+    let (d, f) = (cfg.d_model, cfg.d_ff);
+    let dkv = cfg.n_kv_head * cfg.head_dim();
+    let mut out = Vec::new();
+    let mut push = |name: String, shape: Vec<usize>| {
+        out.push(ParamSpec { name, shape });
+    };
+    for li in 0..cfg.n_layer {
+        let fields: [(&str, Vec<usize>); 14] = [
+            ("b1", vec![f]),
+            ("b2", vec![d]),
+            ("ln1_b", vec![d]),
+            ("ln1_g", vec![d]),
+            ("ln2_b", vec![d]),
+            ("ln2_g", vec![d]),
+            ("lnf_b", vec![d]),
+            ("lnf_g", vec![d]),
+            ("w1", vec![d, f]),
+            ("w2", vec![f, d]),
+            ("wk", vec![d, dkv]),
+            ("wo", vec![d, d]),
+            ("wq", vec![d, d]),
+            ("wv", vec![d, dkv]),
+        ];
+        for (field, shape) in fields {
+            push(format!("blocks.{li}.{field}"), shape);
+        }
+    }
+    push("lnF_b".into(), vec![d]);
+    push("lnF_g".into(), vec![d]);
+    push("wpe".into(), vec![cfg.seq_len, d]);
+    push("wte".into(), vec![cfg.vocab_size, d]);
+    out
+}
+
+fn f32_spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::F32 }
+}
+
+fn i32_spec(name: &str, shape: &[usize]) -> TensorSpec {
+    TensorSpec { name: name.to_string(), shape: shape.to_vec(), dtype: DType::I32 }
+}
+
+fn meta(pairs: &[(&str, Json)]) -> BTreeMap<String, Json> {
+    pairs
+        .iter()
+        .map(|(k, v)| (k.to_string(), v.clone()))
+        .collect()
+}
+
+/// Input/output tensor specs for every TP stage of one (cfg, tp, batch).
+/// Mirrors python/compile/stages.py::stage_specs exactly.
+fn stage_specs(
+    cfg: &ModelConfig,
+    tp: usize,
+    batch: usize,
+) -> Vec<(&'static str, Vec<TensorSpec>, Vec<TensorSpec>)> {
+    let (b, s, d, v) = (batch, cfg.seq_len, cfg.d_model, cfg.vocab_size);
+    let hd = cfg.head_dim();
+    let d_attn = cfg.n_head / tp * hd;
+    let d_kv = cfg.n_kv_head / tp * hd;
+    let d_ff = cfg.d_ff / tp;
+
+    let x = |n: &str| f32_spec(n, &[b, s, d]);
+    let vec_ = |n: &str| f32_spec(n, &[d]);
+    let tok = |n: &str| i32_spec(n, &[b, s]);
+    let scalar = |n: &str| f32_spec(n, &[]);
+
+    let attn_w = vec![
+        f32_spec("wq", &[d, d_attn]),
+        f32_spec("wk", &[d, d_kv]),
+        f32_spec("wv", &[d, d_kv]),
+        f32_spec("wo", &[d_attn, d]),
+    ];
+    let mlp_w = vec![
+        f32_spec("w1", &[d, d_ff]),
+        f32_spec("b1", &[d_ff]),
+        f32_spec("w2", &[d_ff, d]),
+        f32_spec("b2", &[d]),
+    ];
+
+    let mut attn_in = vec![x("x"), vec_("ln1_g"), vec_("ln1_b")];
+    attn_in.extend(attn_w.iter().cloned());
+    let mut mlp_preln_in = vec![x("h"), vec_("ln2_g"), vec_("ln2_b")];
+    mlp_preln_in.extend(mlp_w.iter().cloned());
+    let mut mlp_fal_in = vec![x("x"), x("fa"), vec_("ln2_g"), vec_("ln2_b")];
+    mlp_fal_in.extend(mlp_w.iter().cloned());
+    let mut fused_in = vec![
+        x("x"),
+        x("fa"),
+        vec_("ln1_g"),
+        vec_("ln1_b"),
+        vec_("ln2_g"),
+        vec_("ln2_b"),
+    ];
+    fused_in.extend(attn_w.iter().cloned());
+    fused_in.extend(mlp_w.iter().cloned());
+
+    let with_dout = |mut ins: Vec<TensorSpec>| {
+        ins.push(x("dout"));
+        ins
+    };
+    // Backward stages return one gradient per primal, in primal order and
+    // with the primal's shape; build those spec lists from the fwd inputs.
+    let grads_of = |ins: &[TensorSpec]| -> Vec<TensorSpec> {
+        ins.iter()
+            .map(|t| f32_spec(&format!("d{}", t.name), &t.shape))
+            .collect()
+    };
+
+    vec![
+        (
+            "embed_fwd",
+            vec![tok("tokens"), f32_spec("wte", &[v, d]), f32_spec("wpe", &[s, d])],
+            vec![x("x")],
+        ),
+        (
+            "embed_bwd",
+            vec![
+                tok("tokens"),
+                f32_spec("wte", &[v, d]),
+                f32_spec("wpe", &[s, d]),
+                x("dx"),
+            ],
+            vec![f32_spec("dwte", &[v, d]), f32_spec("dwpe", &[s, d])],
+        ),
+        ("attn_fwd", attn_in.clone(), vec![x("out")]),
+        (
+            "attn_bwd",
+            with_dout(attn_in.clone()),
+            grads_of(&attn_in),
+        ),
+        ("mlp_preln_fwd", mlp_preln_in.clone(), vec![x("out")]),
+        (
+            "mlp_preln_bwd",
+            with_dout(mlp_preln_in.clone()),
+            grads_of(&mlp_preln_in),
+        ),
+        ("mlp_fal_fwd", mlp_fal_in.clone(), vec![x("out")]),
+        (
+            "mlp_fal_bwd",
+            with_dout(mlp_fal_in.clone()),
+            grads_of(&mlp_fal_in),
+        ),
+        (
+            "lnf_fwd",
+            vec![x("a"), vec_("g"), vec_("b")],
+            vec![x("fa")],
+        ),
+        (
+            "lnf_bwd",
+            vec![x("a"), vec_("g"), vec_("b"), x("dout")],
+            vec![x("da"), vec_("dg"), vec_("db")],
+        ),
+        ("fal_fused_fwd", fused_in.clone(), vec![x("out")]),
+        (
+            "fal_fused_bwd",
+            with_dout(fused_in.clone()),
+            grads_of(&fused_in),
+        ),
+        (
+            "head_fwd_bwd",
+            vec![
+                x("x"),
+                vec_("lnF_g"),
+                vec_("lnF_b"),
+                f32_spec("wte", &[v, d]),
+                tok("targets"),
+            ],
+            vec![
+                scalar("loss"),
+                scalar("count"),
+                x("dx"),
+                vec_("dlnF_g"),
+                vec_("dlnF_b"),
+                f32_spec("dwte", &[v, d]),
+            ],
+        ),
+    ]
+}
+
+/// Build an in-memory [`Manifest`] for the given synthetic specs.
+pub fn synthetic_manifest(specs: &[SyntheticSpec]) -> Manifest {
+    let mut artifacts = BTreeMap::new();
+    let mut param_schemas = BTreeMap::new();
+    let mut configs = BTreeMap::new();
+
+    for spec in specs {
+        let cfg = &spec.cfg;
+        let schema = param_schema(cfg);
+        configs.insert(cfg.name.clone(), cfg.clone());
+
+        for &tp in &spec.tps {
+            if cfg.n_head % tp != 0 || cfg.n_kv_head % tp != 0 || cfg.d_ff % tp != 0 {
+                continue;
+            }
+            for (stage, inputs, outputs) in stage_specs(cfg, tp, spec.batch) {
+                let name = Manifest::tp_stage_name(&cfg.name, tp, spec.batch, stage);
+                artifacts.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name,
+                        file: String::from("(native)"),
+                        inputs,
+                        outputs,
+                        meta: meta(&[
+                            ("kind", Json::Str("tp_stage".into())),
+                            ("config", Json::Str(cfg.name.clone())),
+                            ("stage", Json::Str(stage.into())),
+                            ("tp", Json::Num(tp as f64)),
+                            ("batch", Json::Num(spec.batch as f64)),
+                        ]),
+                    },
+                );
+            }
+        }
+
+        // Fused train-step artifacts (single-process trainer).
+        for tag in ["preln", "fal"] {
+            let name = format!("train_step_{}_{}_b{}", cfg.name, tag, spec.batch);
+            let mut inputs = Vec::with_capacity(3 * schema.len() + 4);
+            for prefix in ["p", "m", "v"] {
+                for p in &schema {
+                    inputs.push(f32_spec(&format!("{prefix}.{}", p.name), &p.shape));
+                }
+            }
+            inputs.push(f32_spec("step", &[]));
+            inputs.push(f32_spec("lr_scale", &[]));
+            inputs.push(i32_spec("tokens", &[spec.batch, cfg.seq_len]));
+            inputs.push(i32_spec("targets", &[spec.batch, cfg.seq_len]));
+            let mut outputs = vec![f32_spec("loss", &[]), f32_spec("gnorm", &[])];
+            for prefix in ["p", "m", "v"] {
+                for p in &schema {
+                    outputs.push(f32_spec(&format!("{prefix}.{}", p.name), &p.shape));
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    file: String::from("(native)"),
+                    inputs,
+                    outputs,
+                    meta: meta(&[
+                        ("kind", Json::Str("train_step".into())),
+                        ("config", Json::Str(cfg.name.clone())),
+                        ("tag", Json::Str(tag.into())),
+                        ("variant", Json::Str(tag.into())),
+                        ("batch", Json::Num(spec.batch as f64)),
+                    ]),
+                },
+            );
+        }
+
+        param_schemas.insert(cfg.name.clone(), schema);
+    }
+
+    Manifest {
+        dir: PathBuf::from("(synthetic)"),
+        artifacts,
+        param_schemas,
+        configs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schema_matches_config_param_count() {
+        for spec in default_specs() {
+            let total: usize =
+                param_schema(&spec.cfg).iter().map(|p| p.numel()).sum();
+            assert_eq!(total, spec.cfg.n_params, "{}", spec.cfg.name);
+            // And agrees with the analytic formula when kv == h.
+            assert_eq!(total, spec.cfg.count_params(), "{}", spec.cfg.name);
+        }
+    }
+
+    #[test]
+    fn registers_stages_and_train_steps() {
+        let m = synthetic_manifest(&default_specs());
+        let a = m
+            .artifact(&Manifest::tp_stage_name("tiny", 2, 4, "attn_fwd"))
+            .unwrap();
+        assert_eq!(a.inputs.len(), 7);
+        assert_eq!(a.inputs[0].shape, vec![4, 64, 64]);
+        assert_eq!(a.inputs[3].shape, vec![64, 32]); // wq shard at tp=2
+        let ts = m.find("train_step", "tiny", "fal").unwrap();
+        let np = m.schema("tiny").unwrap().len();
+        assert_eq!(ts.inputs.len(), 3 * np + 4);
+        assert_eq!(ts.outputs.len(), 3 * np + 2);
+        // Indivisible TP degrees are skipped, valid ones registered.
+        assert!(m
+            .artifacts
+            .contains_key(&Manifest::tp_stage_name("small", 8, 8, "mlp_preln_fwd")));
+    }
+
+    #[test]
+    fn fused_stage_input_order_matches_stages_py() {
+        let m = synthetic_manifest(&default_specs());
+        let a = m
+            .artifact(&Manifest::tp_stage_name("tiny", 2, 4, "fal_fused_fwd"))
+            .unwrap();
+        let names: Vec<&str> =
+            a.inputs.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(
+            names,
+            ["x", "fa", "ln1_g", "ln1_b", "ln2_g", "ln2_b", "wq", "wk",
+             "wv", "wo", "w1", "b1", "w2", "b2"]
+        );
+    }
+}

@@ -8,6 +8,9 @@ use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;
 
+/// Largest integer magnitude that survives an f32 round-trip exactly.
+pub const I32_EXACT_MAX: u32 = 1 << 24;
+
 /// Element type tag (only what the manifest emits).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
@@ -53,8 +56,15 @@ impl HostTensor {
         HostTensor { shape: vec![], dtype: DType::F32, data: vec![v] }
     }
 
+    /// Integer tensor stored in the shared f32 buffer. The store is exact
+    /// only for |v| <= 2^24; larger magnitudes would silently round, so they
+    /// are rejected (debug builds panic; see `as_i32` for the read side).
     pub fn from_i32(shape: &[usize], data: &[i32]) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
+        debug_assert!(
+            data.iter().all(|&v| v.unsigned_abs() <= I32_EXACT_MAX),
+            "from_i32: |value| > 2^24 cannot round-trip through the f32 store"
+        );
         HostTensor {
             shape: shape.to_vec(),
             dtype: DType::I32,
@@ -87,6 +97,10 @@ impl HostTensor {
     }
 
     pub fn as_i32(&self) -> Vec<i32> {
+        debug_assert!(
+            self.data.iter().all(|&v| v.abs() <= I32_EXACT_MAX as f32),
+            "as_i32: |value| > 2^24 lost precision in the f32 store"
+        );
         self.data.iter().map(|&v| v as i32).collect()
     }
 
@@ -157,11 +171,15 @@ impl HostTensor {
         num.sqrt() / (other.norm() + 1e-12)
     }
 
-    /// Slice along axis 1 of a 2-D tensor: columns [c0, c1).
+    /// Slice along axis 1 of a 2-D tensor: columns [c0, c1). An empty range
+    /// (c0 == c1) yields a valid [r, 0]-shaped tensor.
     pub fn slice_cols(&self, c0: usize, c1: usize) -> HostTensor {
-        assert_eq!(self.shape.len(), 2);
+        assert_eq!(self.shape.len(), 2, "slice_cols needs a 2-D tensor");
         let (r, c) = (self.shape[0], self.shape[1]);
-        assert!(c1 <= c && c0 < c1);
+        assert!(
+            c0 <= c1 && c1 <= c,
+            "slice_cols: column range [{c0}, {c1}) invalid for {c} columns"
+        );
         let mut data = Vec::with_capacity(r * (c1 - c0));
         for i in 0..r {
             data.extend_from_slice(&self.data[i * c + c0..i * c + c1]);
@@ -169,22 +187,126 @@ impl HostTensor {
         HostTensor::from_vec(&[r, c1 - c0], data)
     }
 
-    /// Slice along axis 0 (rows [r0, r1)) of any tensor.
+    /// Slice along axis 0 (rows [r0, r1)) of any tensor. An empty range
+    /// (r0 == r1) yields a valid zero-row tensor.
     pub fn slice_rows(&self, r0: usize, r1: usize) -> HostTensor {
-        assert!(!self.shape.is_empty());
+        assert!(!self.shape.is_empty(), "slice_rows needs a >=1-D tensor");
         let row: usize = self.shape[1..].iter().product();
-        assert!(r1 <= self.shape[0] && r0 < r1);
+        assert!(
+            r0 <= r1 && r1 <= self.shape[0],
+            "slice_rows: row range [{r0}, {r1}) invalid for {} rows",
+            self.shape[0]
+        );
         let mut shape = self.shape.clone();
         shape[0] = r1 - r0;
         HostTensor::from_vec(&shape, self.data[r0 * row..r1 * row].to_vec())
     }
 
-    /// 1-D slice [i0, i1).
+    /// 1-D slice [i0, i1). An empty range yields a valid [0]-shaped tensor.
     pub fn slice_1d(&self, i0: usize, i1: usize) -> HostTensor {
-        assert_eq!(self.shape.len(), 1);
+        assert_eq!(self.shape.len(), 1, "slice_1d needs a 1-D tensor");
+        assert!(
+            i0 <= i1 && i1 <= self.data.len(),
+            "slice_1d: range [{i0}, {i1}) invalid for length {}",
+            self.data.len()
+        );
         HostTensor::from_vec(&[i1 - i0], self.data[i0..i1].to_vec())
     }
+
+    // ---------------- dense ops (native backend building blocks) ----------
+
+    /// Rows (product of every axis but the last) and columns (last axis) of
+    /// a tensor viewed as a 2-D row-major matrix.
+    pub fn rows_cols(&self) -> (usize, usize) {
+        assert!(
+            !self.shape.is_empty(),
+            "rows_cols: scalar has no matrix view"
+        );
+        let cols = *self.shape.last().unwrap();
+        let rows = if cols == 0 { 0 } else { self.len() / cols };
+        (rows, cols)
+    }
+
+    /// Matrix product `self @ other`, treating `self` as [..., k] (leading
+    /// axes flattened) and `other` as a 2-D [k, n] matrix. The result keeps
+    /// the leading axes of `self` with the last axis replaced by n.
+    pub fn matmul(&self, other: &HostTensor) -> HostTensor {
+        assert_eq!(other.shape.len(), 2, "matmul rhs must be 2-D");
+        let (m, k) = self.rows_cols();
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (t, &a) in arow.iter().enumerate() {
+                let brow = &other.data[t * n..(t + 1) * n];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = n;
+        HostTensor::from_vec(&shape, out)
+    }
+
+    /// Transpose of a 2-D tensor.
+    pub fn transpose(&self) -> HostTensor {
+        assert_eq!(self.shape.len(), 2, "transpose needs a 2-D tensor");
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        HostTensor::from_vec(&[c, r], out)
+    }
+
+    /// Numerically-stable softmax over the last axis.
+    pub fn softmax_rows(&self) -> HostTensor {
+        let (m, n) = self.rows_cols();
+        let mut out = self.data.clone();
+        for i in 0..m {
+            let row = &mut out[i * n..(i + 1) * n];
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        HostTensor { shape: self.shape.clone(), dtype: DType::F32, data: out }
+    }
+
+    /// LayerNorm over the last axis with affine parameters, eps = 1e-5
+    /// (matches python/compile/kernels/ref.py::layernorm exactly).
+    pub fn layernorm(&self, gamma: &HostTensor, beta: &HostTensor) -> HostTensor {
+        let (m, n) = self.rows_cols();
+        assert_eq!(gamma.len(), n, "layernorm: gamma length");
+        assert_eq!(beta.len(), n, "layernorm: beta length");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let row = &self.data[i * n..(i + 1) * n];
+            let mu = row.iter().sum::<f32>() / n as f32;
+            let var =
+                row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+            let inv = 1.0 / (var + LN_EPS).sqrt();
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] = (row[j] - mu) * inv * gamma.data[j] + beta.data[j];
+            }
+        }
+        HostTensor { shape: self.shape.clone(), dtype: DType::F32, data: out }
+    }
 }
+
+/// LayerNorm epsilon shared by forward and backward (and the JAX oracle).
+pub const LN_EPS: f32 = 1e-5;
 
 #[cfg(test)]
 mod tests {
@@ -240,6 +362,106 @@ mod tests {
         let s = t.slice_rows(1, 3);
         assert_eq!(s.shape, vec![2, 2]);
         assert_eq!(s.data, vec![2., 3., 4., 5.]);
+    }
+
+    #[test]
+    fn empty_slices_are_valid() {
+        let t = HostTensor::from_vec(&[2, 4],
+            vec![0., 1., 2., 3., 4., 5., 6., 7.]);
+        let sc = t.slice_cols(2, 2);
+        assert_eq!(sc.shape, vec![2, 0]);
+        assert!(sc.is_empty());
+        let sr = t.slice_rows(1, 1);
+        assert_eq!(sr.shape, vec![0, 4]);
+        assert!(sr.is_empty());
+        let v = HostTensor::from_vec(&[3], vec![1., 2., 3.]);
+        let s1 = v.slice_1d(3, 3);
+        assert_eq!(s1.shape, vec![0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "slice_cols")]
+    fn slice_cols_out_of_range_message() {
+        HostTensor::zeros(&[2, 4]).slice_cols(1, 5);
+    }
+
+    #[test]
+    fn i32_roundtrip_at_exact_boundary() {
+        let max = I32_EXACT_MAX as i32;
+        let t = HostTensor::from_i32(&[2], &[max, -max]);
+        assert_eq!(t.as_i32(), vec![max, -max]);
+    }
+
+    // 2^24 + 1 is the first integer that does not survive the f32
+    // round-trip; constructing it must trip the precision guard.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "from_i32")]
+    fn i32_beyond_2_pow_24_rejected() {
+        let _ = HostTensor::from_i32(&[1], &[(1 << 24) + 1]);
+    }
+
+    // Release builds skip the guard; the loss is real but silent.
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn i32_beyond_2_pow_24_loses_precision() {
+        let v = (1 << 24) + 1;
+        let t = HostTensor::from_i32(&[1], &[v]);
+        assert_ne!(t.data[0] as i32, v);
+    }
+
+    #[test]
+    fn matmul_2d_and_3d() {
+        let a = HostTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = HostTensor::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.shape, vec![2, 2]);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+        // Batched: [2, 1, 3] @ [3, 2] -> [2, 1, 2].
+        let a3 = HostTensor::from_vec(&[2, 1, 3], a.data.clone());
+        let c3 = a3.matmul(&b);
+        assert_eq!(c3.shape, vec![2, 1, 2]);
+        assert_eq!(c3.data, c.data);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = HostTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = a.transpose();
+        assert_eq!(t.shape, vec![3, 2]);
+        assert_eq!(t.data, vec![1., 4., 2., 5., 3., 6.]);
+        assert_eq!(t.transpose(), a);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let a = HostTensor::from_vec(&[2, 3],
+            vec![0., 0., 0., 1000., 1000., 999.]);
+        let s = a.softmax_rows();
+        for row in s.data.chunks(3) {
+            let sum: f32 = row.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+        // Uniform logits -> uniform probabilities.
+        assert!((s.data[0] - 1.0 / 3.0).abs() < 1e-6);
+        // Huge logits stay finite (stability shift).
+        assert!(s.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(11);
+        let x = HostTensor::randn(&[4, 16], 2.0, &mut rng);
+        let g = HostTensor::ones(&[16]);
+        let b = HostTensor::zeros(&[16]);
+        let y = x.layernorm(&g, &b);
+        for row in y.data.chunks(16) {
+            let mu: f32 = row.iter().sum::<f32>() / 16.0;
+            let var: f32 =
+                row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 16.0;
+            assert!(mu.abs() < 1e-5, "mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
     }
 
     #[test]

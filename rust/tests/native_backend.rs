@@ -1,0 +1,263 @@
+//! Native-backend integration: the default-features counterpart of
+//! runtime_roundtrip.rs. Exercises the synthetic manifest, the stage
+//! dispatcher, shard-sum consistency (the TP invariant), finite-difference
+//! gradient checks on the `micro` config, and the fused train step.
+
+use fal::runtime::{Backend, Manifest, NativeBackend};
+use fal::tensor::HostTensor;
+use fal::util::rng::Rng;
+
+fn backend() -> NativeBackend {
+    NativeBackend::synthetic()
+}
+
+/// Random stage inputs matching the artifact spec (LN gains set to 1).
+fn stage_inputs(b: &NativeBackend, name: &str, seed: u64) -> Vec<HostTensor> {
+    let spec = b.manifest().artifact(name).unwrap().clone();
+    let mut rng = Rng::new(seed);
+    spec.inputs
+        .iter()
+        .map(|s| {
+            if s.name.ends_with("_g") || s.name == "g" {
+                HostTensor::ones(&s.shape)
+            } else {
+                let mut t = HostTensor::zeros(&s.shape);
+                rng.fill_normal(&mut t.data, 0.1);
+                t
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_lists_synthetic_artifacts() {
+    let eng = backend();
+    assert!(eng.manifest().artifacts.len() >= 40);
+    let spec = eng.manifest().find("train_step", "tiny", "preln").unwrap();
+    assert_eq!(spec.meta_str("variant"), Some("preln"));
+    let schema = eng.manifest().schema("tiny").unwrap();
+    let total: usize = schema.iter().map(|p| p.numel()).sum();
+    let cfg = eng.manifest().config("tiny").unwrap();
+    assert_eq!(total, cfg.n_params);
+}
+
+#[test]
+fn tp_stage_attn_fwd_shards_sum_to_full_output() {
+    // The Megatron invariant the whole schedule rests on: summing per-shard
+    // attention outputs (column-sharded wq/wk/wv, row-sharded wo) equals
+    // the full (tp = 1) output.
+    let eng = backend();
+    let cfg = eng.manifest().config("tiny").unwrap().clone();
+    let full_name = Manifest::tp_stage_name("tiny", 1, 4, "attn_fwd");
+    let full_in = stage_inputs(&eng, &full_name, 7);
+    let full = eng.execute(&full_name, &full_in).unwrap();
+
+    let d_attn = cfg.d_model / 2; // tp = 2, kv == h
+    let shard_name = Manifest::tp_stage_name("tiny", 2, 4, "attn_fwd");
+    let mut sum: Option<HostTensor> = None;
+    for r in 0..2usize {
+        let inputs = vec![
+            full_in[0].clone(),                                   // x
+            full_in[1].clone(),                                   // ln1_g
+            full_in[2].clone(),                                   // ln1_b
+            full_in[3].slice_cols(r * d_attn, (r + 1) * d_attn),  // wq
+            full_in[4].slice_cols(r * d_attn, (r + 1) * d_attn),  // wk
+            full_in[5].slice_cols(r * d_attn, (r + 1) * d_attn),  // wv
+            full_in[6].slice_rows(r * d_attn, (r + 1) * d_attn),  // wo
+        ];
+        let out = eng.execute(&shard_name, &inputs).unwrap();
+        match &mut sum {
+            Some(s) => s.add_assign(&out[0]),
+            None => sum = Some(out[0].clone()),
+        }
+    }
+    let rel = sum.unwrap().rel_err(&full[0]);
+    assert!(rel < 1e-4, "shard sum vs full attention: rel err {rel}");
+}
+
+#[test]
+fn tp_stage_outputs_match_specs_and_are_finite() {
+    let eng = backend();
+    for stage in [
+        "embed_fwd", "attn_fwd", "mlp_preln_fwd", "mlp_fal_fwd", "lnf_fwd",
+        "fal_fused_fwd", "head_fwd_bwd",
+    ] {
+        let name = Manifest::tp_stage_name("tiny", 2, 4, stage);
+        let spec = eng.manifest().artifact(&name).unwrap().clone();
+        let mut inputs = stage_inputs(&eng, &name, 11);
+        // Token inputs need valid ids, not normal noise.
+        let cfg = eng.manifest().config("tiny").unwrap().clone();
+        let mut rng = Rng::new(13);
+        for (t, s) in inputs.iter_mut().zip(&spec.inputs) {
+            if s.dtype == fal::tensor::DType::I32 {
+                let ids: Vec<i32> = (0..t.len())
+                    .map(|_| rng.below(cfg.vocab_size) as i32)
+                    .collect();
+                *t = HostTensor::from_i32(&s.shape, &ids);
+            }
+        }
+        let out = eng.execute(&name, &inputs).unwrap();
+        assert_eq!(out.len(), spec.outputs.len(), "{stage}");
+        for (o, s) in out.iter().zip(&spec.outputs) {
+            assert_eq!(o.shape, s.shape, "{stage} output {}", s.name);
+            assert!(
+                o.data.iter().all(|v| v.is_finite()),
+                "{stage}: non-finite output {}",
+                s.name
+            );
+        }
+    }
+}
+
+/// Central-difference check of a backward stage on the `micro` config: the
+/// scalar functional is sum(out ⊙ w) with dout = w, and the gradient wrt
+/// input 0 (x) must match (f(x+h) - f(x-h)) / 2h at sampled indices.
+fn grad_check(fwd: &str, bwd: &str, dx_index: usize) {
+    let eng = backend();
+    let fwd_name = Manifest::tp_stage_name("micro", 1, 2, fwd);
+    let bwd_name = Manifest::tp_stage_name("micro", 1, 2, bwd);
+    let inputs = stage_inputs(&eng, &fwd_name, 21);
+    let w = {
+        let probe = eng.execute(&fwd_name, &inputs).unwrap();
+        let mut rng = Rng::new(22);
+        let mut t = HostTensor::zeros(&probe[0].shape);
+        rng.fill_normal(&mut t.data, 1.0);
+        t
+    };
+    let functional = |ins: &[HostTensor]| -> f64 {
+        eng.execute(&fwd_name, ins).unwrap()[0].dot(&w)
+    };
+    let mut bwd_in = inputs.clone();
+    bwd_in.push(w.clone());
+    let dx = &eng.execute(&bwd_name, &bwd_in).unwrap()[dx_index];
+
+    let h = 1e-3f32;
+    let n = inputs[0].len();
+    for i in [0usize, n / 3, n / 2, n - 1] {
+        let mut ip = inputs.clone();
+        let mut im = inputs.clone();
+        ip[0].data[i] += h;
+        im[0].data[i] -= h;
+        let num = ((functional(&ip) - functional(&im)) / (2.0 * h as f64)) as f32;
+        let ana = dx.data[i];
+        assert!(
+            (num - ana).abs() < 2e-2 * ana.abs().max(1.0),
+            "{bwd} dx[{i}]: numeric {num} vs analytic {ana}"
+        );
+    }
+}
+
+#[test]
+fn attn_bwd_gradient_check() {
+    grad_check("attn_fwd", "attn_bwd", 0);
+}
+
+#[test]
+fn mlp_preln_bwd_gradient_check() {
+    grad_check("mlp_preln_fwd", "mlp_preln_bwd", 0);
+}
+
+#[test]
+fn mlp_fal_bwd_gradient_check() {
+    grad_check("mlp_fal_fwd", "mlp_fal_bwd", 0);
+}
+
+#[test]
+fn fal_fused_bwd_gradient_check() {
+    grad_check("fal_fused_fwd", "fal_fused_bwd", 0);
+}
+
+#[test]
+fn lnf_bwd_gradient_check() {
+    grad_check("lnf_fwd", "lnf_bwd", 0);
+}
+
+#[test]
+fn train_step_executes_and_reduces_loss() {
+    let eng = backend();
+    let cfg = eng.manifest().config("tiny").unwrap().clone();
+    let spec = eng.manifest().find("train_step", "tiny", "fal").unwrap();
+    let name = spec.name.clone();
+    let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+    let np = eng.manifest().schema("tiny").unwrap().len();
+
+    let mut params = eng.load_params("tiny", 0).unwrap();
+    let mut m: Vec<HostTensor> =
+        params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+    let mut v = m.clone();
+    let mut rng = Rng::new(1);
+    let tdata: Vec<i32> = (0..batch * cfg.seq_len)
+        .map(|_| rng.below(cfg.vocab_size) as i32)
+        .collect();
+    let tok = HostTensor::from_i32(&[batch, cfg.seq_len], &tdata);
+    let mut shifted = tdata.clone();
+    shifted.rotate_left(1);
+    let tgt = HostTensor::from_i32(&[batch, cfg.seq_len], &shifted);
+
+    let mut first = None;
+    let mut last = 0.0f32;
+    for step in 1..=8 {
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * np + 4);
+        inputs.extend(params.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(HostTensor::scalar(step as f32));
+        inputs.push(HostTensor::scalar(1.0));
+        inputs.push(tok.clone());
+        inputs.push(tgt.clone());
+        let out = eng.execute(&name, &inputs).unwrap();
+        let loss = out[0].data[0];
+        let gnorm = out[1].data[0];
+        assert!(loss.is_finite() && gnorm.is_finite());
+        params = out[2..2 + np].to_vec();
+        m = out[2 + np..2 + 2 * np].to_vec();
+        v = out[2 + 2 * np..2 + 3 * np].to_vec();
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    let first = first.unwrap();
+    assert!(
+        last < first - 0.05,
+        "loss did not fall: first {first}, last {last}"
+    );
+}
+
+#[test]
+fn train_step_lr_zero_freezes_params() {
+    let eng = backend();
+    let spec = eng.manifest().find("train_step", "tiny", "preln").unwrap();
+    let name = spec.name.clone();
+    let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+    let cfg = eng.manifest().config("tiny").unwrap().clone();
+    let np = eng.manifest().schema("tiny").unwrap().len();
+    let params = eng.load_params("tiny", 0).unwrap();
+    let zeros: Vec<HostTensor> =
+        params.iter().map(|p| HostTensor::zeros(&p.shape)).collect();
+    let tok = HostTensor::from_i32(
+        &[batch, cfg.seq_len],
+        &vec![1i32; batch * cfg.seq_len],
+    );
+    let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * np + 4);
+    inputs.extend(params.iter().cloned());
+    inputs.extend(zeros.iter().cloned());
+    inputs.extend(zeros.iter().cloned());
+    inputs.push(HostTensor::scalar(1.0));
+    inputs.push(HostTensor::scalar(0.0)); // lr_scale = 0: eval mode
+    inputs.push(tok.clone());
+    inputs.push(tok.clone());
+    let out = eng.execute(&name, &inputs).unwrap();
+    for (i, p) in params.iter().enumerate() {
+        assert_eq!(&out[2 + i], p, "param {i} moved under lr_scale = 0");
+    }
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let eng = backend();
+    let name = Manifest::tp_stage_name("tiny", 2, 4, "attn_fwd");
+    let bad = vec![HostTensor::zeros(&[1])];
+    let err = eng.execute(&name, &bad).unwrap_err().to_string();
+    assert!(err.contains("inputs"), "{err}");
+}

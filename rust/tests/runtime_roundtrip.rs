@@ -1,12 +1,15 @@
 //! Integration: load real AOT artifacts, execute them, check numerics.
 //!
-//! Requires `make artifacts` (tiny group). These tests are the Rust half of
-//! the AOT contract: if the manifest, HLO text, parameter snapshot or the
-//! engine's conversion layer drift, they fail here first.
+//! Requires the `pjrt` feature plus `make artifacts` (tiny group). These
+//! tests are the Rust half of the AOT contract: if the manifest, HLO text,
+//! parameter snapshot or the engine's conversion layer drift, they fail
+//! here first. The native-backend equivalents live in
+//! rust/tests/native_backend.rs and run on default features.
+#![cfg(feature = "pjrt")]
 
 use std::path::Path;
 
-use fal::runtime::Engine;
+use fal::runtime::{Backend, Engine};
 use fal::tensor::HostTensor;
 use fal::util::rng::Rng;
 

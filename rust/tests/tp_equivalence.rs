@@ -2,22 +2,25 @@
 //! with Rust-owned collectives reproduces the monolithic model exactly
 //! (up to f32 reassociation), for both Pre-LN and FAL — and FAL's schedule
 //! moves ~half the bytes.
-
-use std::path::Path;
+//!
+//! Runs on the native CPU backend (default features): the stage kernels and
+//! the fused train step are independent implementations of the same math
+//! only in the sense of composition — sharded stages + host collectives vs
+//! one full-model pass — so agreement here validates the whole schedule.
 
 use fal::config::{TrainConfig, Variant, PCIE_GEN4};
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
+use fal::costmodel;
 use fal::data::{Batch, Corpus, CorpusSpec, Loader};
-use fal::runtime::Engine;
+use fal::runtime::{Backend, NativeBackend};
 
-fn engine() -> Engine {
-    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Engine::new(&dir).expect("run `make artifacts` before cargo test")
+fn engine() -> NativeBackend {
+    NativeBackend::synthetic()
 }
 
-fn batch(engine: &Engine, seed: u64) -> Batch {
-    let cfg = engine.manifest.config("tiny").unwrap();
+fn batch(engine: &NativeBackend, seed: u64) -> Batch {
+    let cfg = engine.manifest().config("tiny").unwrap();
     let corpus = Corpus::generate(
         CorpusSpec::for_vocab(cfg.vocab_size), 20_000, 3);
     let loader = Loader::new(&corpus, cfg.seq_len, 4, 0.1, seed);
@@ -55,7 +58,7 @@ fn tp_forward_matches_single_process_fal() {
 #[test]
 fn tp_training_trajectory_matches_fused_step() {
     // Five full steps on a fixed batch: the Rust TP trainer (sharded bwd +
-    // host AdamW) must track the fused single-HLO train step closely.
+    // host AdamW) must track the fused train step closely.
     let eng = engine();
     let b = batch(&eng, 3);
     let tc = TrainConfig::default();
@@ -78,10 +81,7 @@ fn tp_training_trajectory_matches_fused_step() {
         }
         // Training must actually learn (fixed batch -> loss falls).
         let (last, _) = tp.train_step(&b).unwrap();
-        assert!(
-            last < tp.breakdown.total() as f32 + 10.0,
-            "sanity: loss finite"
-        );
+        assert!(last.is_finite(), "{tag}: loss not finite after 6 steps");
         println!("{tag}: max relative loss deviation {max_rel:.2e}");
     }
 }
@@ -109,6 +109,56 @@ fn fal_tp_halves_communication_volume() {
         fal.allreduce_bytes
     );
     assert!(fal.modeled_secs < preln.modeled_secs);
+}
+
+#[test]
+fn ledger_matches_cost_model_volumes() {
+    // Acceptance: the CommLedger byte counts from real sharded execution
+    // must equal the analytic cost model's predicted volumes. The ledger
+    // counts host f32 bytes, the model counts ELEM(=2)-byte mixed-precision
+    // activations, so volumes are compared after scaling by 4/ELEM. FAL
+    // carries one extra documented all-reduce (the dfa aggregate in block
+    // 1's backward) on top of the model's 2*(L+1) activation all-reduces.
+    let eng = engine();
+    let b = batch(&eng, 5);
+    let cfg = eng.manifest().config("tiny").unwrap().clone();
+    let act4 = (4 * cfg.seq_len * cfg.d_model * 4) as f64; // [B,S,D] f32
+    for tp in [2usize, 4] {
+        for variant in [Variant::PreLn, Variant::Fal] {
+            let mut t = TpTrainer::new(
+                &eng, "tiny", variant, tp, PCIE_GEN4, TrainConfig::default(),
+            )
+            .unwrap();
+            t.train_step(&b).unwrap();
+            let s = t.ledger.stats();
+            let fwd = costmodel::fwd_allreduces(variant, cfg.n_layer) as u64;
+            let extra = match variant {
+                Variant::Fal => 1, // dfa all-reduce, bwd block 1
+                _ => 0,
+            };
+            let want_ars = 2 * fwd + extra;
+            assert_eq!(
+                s.allreduces, want_ars,
+                "{} tp{tp}: {} ARs, want {want_ars}",
+                variant.name(), s.allreduces
+            );
+            let want_bytes = want_ars as f64 * act4;
+            assert!(
+                (s.allreduce_bytes - want_bytes).abs() < 1e-6,
+                "{} tp{tp}: {} AR bytes, want {want_bytes}",
+                variant.name(), s.allreduce_bytes
+            );
+            // Cross-check against the cost model's step volume.
+            let model =
+                costmodel::step_comm_bytes(&cfg, variant, 4) * 4.0
+                    / costmodel::ELEM;
+            assert!(
+                (s.allreduce_bytes - extra as f64 * act4 - model).abs() < 1e-6,
+                "{} tp{tp}: ledger {} vs cost model {model}",
+                variant.name(), s.allreduce_bytes
+            );
+        }
+    }
 }
 
 #[test]

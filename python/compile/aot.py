@@ -80,7 +80,8 @@ class Builder:
                 "vocab_size": cfg.vocab_size, "d_model": cfg.d_model,
                 "n_head": cfg.n_head, "n_kv_head": cfg.kv_heads,
                 "n_layer": cfg.n_layer, "d_ff": cfg.d_ff,
-                "seq_len": cfg.seq_len, "n_params": cfg.n_params,
+                "seq_len": cfg.seq_len, "n_expert": cfg.n_expert,
+                "n_params": cfg.n_params,
             }
 
     def lower(self, name: str, fn, example_args, in_names, meta):
@@ -248,13 +249,14 @@ class Builder:
 
 
 def variant_tag(cfg: ModelConfig) -> str:
+    """Artifact tag: the variant plus the reuse-layer suffix (Fig 17).
+
+    GQA / MoE hosts are dedicated *configs* (small_gqa / small_moe), not
+    tag suffixes — the config name already distinguishes them, and the Rust
+    side looks artifacts up by (config, plain variant tag)."""
     tag = cfg.variant
     if cfg.reuse_layer != 1:
         tag += f"_k{cfg.reuse_layer}"
-    if cfg.n_kv_head and cfg.n_kv_head != cfg.n_head:
-        tag += "_gqa"
-    if cfg.n_expert > 1:
-        tag += "_moe"
     return tag
 
 
@@ -299,12 +301,14 @@ def build_group(b: Builder, group: str):
             b.model_artifact(
                 "train_step", cfg.with_variant("falplus", reuse_layer=k),
                 batch=8)
-        # Fig 20: GQA and MoE-attention hosts.
-        for v in ("preln", "fal", "falplus"):
-            b.model_artifact(
-                "train_step", cfg.with_variant(v, n_kv_head=2), batch=8)
-            b.model_artifact(
-                "train_step", cfg.with_variant(v, n_expert=2), batch=8)
+        # Fig 20: GQA and MoE-attention hosts — dedicated configs with
+        # their own parameter schemas (rust fig20 requests
+        # (small_gqa|small_moe, preln|fal|falplus)).
+        for cname in ("small_gqa", "small_moe"):
+            gcfg = g(cname)
+            b.params_bin(gcfg)
+            for v in ("preln", "fal", "falplus"):
+                b.model_artifact("train_step", gcfg.with_variant(v), batch=8)
     elif group == "tp":
         cfg = g("small")
         b.params_bin(cfg)

@@ -62,7 +62,8 @@ class ModelConfig:
         kv = self.kv_heads * self.head_dim
         attn = d * d + 2 * d * kv + d * d  # wq, wk, wv, wo
         if self.n_expert > 1:
-            attn += (self.n_expert - 1) * d * d + d * self.n_expert
+            # init_params allocates wq_experts [E, d, d] and router [d, E].
+            attn += self.n_expert * d * d + d * self.n_expert
         mlp = d * f + f + f * d + d
         lns = 4 * d  # ln1, ln2 (gamma+beta)
         extra = 2 * d  # lnf (fal block1 / falplus+ablation1 per-block)
@@ -106,6 +107,18 @@ PRESETS = {
     # path end-to-end so the kernels are exercised from Rust as well.
     "small": ModelConfig("small", vocab_size=1024, d_model=192, n_head=8,
                          n_layer=6, d_ff=768, seq_len=96, use_pallas=False),
+    # Fig 20 generalization hosts: dedicated configs (not `small` + tag
+    # suffixes) so their parameter schemas are honest — GQA shrinks wk/wv,
+    # MoE adds router/wq_experts. Mirrors the config-naming scheme of
+    # rust/src/runtime/synthetic.rs (shapes follow this file's `small`
+    # preset; the two backends' synthetic shapes differ as they always
+    # have).
+    "small_gqa": ModelConfig("small_gqa", vocab_size=1024, d_model=192,
+                             n_head=8, n_kv_head=2, n_layer=6, d_ff=768,
+                             seq_len=96, use_pallas=False),
+    "small_moe": ModelConfig("small_moe", vocab_size=1024, d_model=192,
+                             n_head=8, n_expert=2, n_layer=6, d_ff=768,
+                             seq_len=96, use_pallas=False),
     "deep8": ModelConfig("deep8", vocab_size=1024, d_model=192, n_head=8,
                          n_layer=8, d_ff=768, seq_len=96, use_pallas=False),
     "deep12": ModelConfig("deep12", vocab_size=1024, d_model=192, n_head=8,

@@ -85,10 +85,15 @@ pub struct ModelConfig {
     pub vocab_size: usize,
     pub d_model: usize,
     pub n_head: usize,
+    /// Grouped-query attention: number of KV heads (== `n_head` for MHA).
     pub n_kv_head: usize,
     pub n_layer: usize,
     pub d_ff: usize,
     pub seq_len: usize,
+    /// MoE-attention (Switch-style query-projection mixture, paper Apdx
+    /// E.1): number of experts. `<= 1` means the dense query projection;
+    /// `> 1` adds per-block `router` and `wq_experts` parameters.
+    pub n_expert: usize,
     pub n_params: usize,
 }
 
@@ -103,6 +108,11 @@ impl ModelConfig {
             n_layer: j.get("n_layer")?.as_usize()?,
             d_ff: j.get("d_ff")?.as_usize()?,
             seq_len: j.get("seq_len")?.as_usize()?,
+            n_expert: j
+                .opt("n_expert")
+                .map(|v| v.as_usize())
+                .transpose()?
+                .unwrap_or(1),
             n_params: j.get("n_params")?.as_usize()?,
         })
     }
@@ -131,15 +141,25 @@ impl ModelConfig {
             n_layer: l,
             d_ff: 4 * d,
             seq_len: s,
+            n_expert: 1,
             n_params: 0,
         };
         cfg.n_params = cfg.count_params();
         Ok(cfg)
     }
 
+    /// Analytic parameter count matching the flattened schema exactly:
+    /// wq/wo are `[d, d]`, wk/wv honor GQA (`[d, n_kv_head * head_dim]`),
+    /// MoE adds `router` + `wq_experts`, and each block carries three LN
+    /// pairs (ln1, ln2, lnf).
     pub fn count_params(&self) -> usize {
         let d = self.d_model;
-        let per_layer = 4 * d * d + 2 * d * self.d_ff + self.d_ff + d + 6 * d;
+        let dkv = self.n_kv_head * self.head_dim();
+        let mut attn = 2 * d * d + 2 * d * dkv; // wq, wo, wk, wv
+        if self.n_expert > 1 {
+            attn += self.n_expert * d * d + d * self.n_expert;
+        }
+        let per_layer = attn + 2 * d * self.d_ff + self.d_ff + d + 6 * d;
         self.vocab_size * d + self.seq_len * d + self.n_layer * per_layer
             + 2 * d
     }

@@ -12,6 +12,30 @@
 //!   execution (Fig 5 / Fig 8).
 //! * [`dp_pp`] — minimal data- and pipeline-parallel schedules for the
 //!   Apdx B comparison (Fig 10).
+//!
+//! # The invariants the coordinator rests on
+//!
+//! **Shard-sum invariant.** Every TP stage is Megatron-sharded so that the
+//! per-shard outputs *sum* to the tp = 1 output: wq/wk/wv and w1 are
+//! column-sharded, wo and w2 row-sharded, LN parameters replicated, and
+//! the mlp `b2` bias lives on shard 0 (other shards see zeros). The
+//! all-reduce in [`collectives`] is exactly that sum, and
+//! rust/tests/native_backend.rs checks the invariant against the native
+//! kernels directly.
+//!
+//! **VJP convention.** Backward stages return one cotangent per primal
+//! input, in primal order with the primal's shape, recomputing forward
+//! intermediates from the stashed primal inputs. Consequences the trainers
+//! rely on: replicated parameters (LN gains/biases) get their per-shard
+//! gradients *summed* by the coordinator, sharded weights get their
+//! gradient slices scattered back ([`topology::scatter_cols`] /
+//! [`topology::scatter_rows`]), and residual-stream cotangents add — every
+//! `dx.add_assign` in [`tp_trainer`] mirrors a `+` in the forward.
+//!
+//! **Named-slot ordering.** Composite stages assemble their inputs through
+//! [`crate::runtime::slots`], never by hand — all LN slots share shape
+//! `[d]`, so a hand-maintained ordering could drift without failing shape
+//! validation.
 
 pub mod collectives;
 pub mod dp_pp;

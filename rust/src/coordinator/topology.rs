@@ -197,6 +197,7 @@ mod tests {
             n_layer: 2,
             d_ff: f,
             seq_len: 8,
+            n_expert: 1,
             n_params: 0,
         }
     }

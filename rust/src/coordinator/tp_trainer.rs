@@ -60,15 +60,13 @@ struct BlockStash {
     h_or_a: Option<HostTensor>,
 }
 
-/// fal_fused stage input order (python/compile/stages.py):
-/// x, fa, ln1_g, ln1_b, ln2_g, ln2_b, wq, wk, wv, wo, w1, b1, w2, b2.
+/// fal_fused stage inputs via the shared named-slot builder
+/// ([`crate::runtime::slots::FAL_FUSED_SLOTS`]) — the same source the
+/// native train step and the synthetic manifest use, so the orderings
+/// cannot drift. The slot set is statically correct here, hence `expect`.
 fn fused_inputs(x: &HostTensor, fa: &HostTensor, s: &BlockShard) -> Vec<HostTensor> {
-    let mut v = vec![x.clone(), fa.clone()];
-    v.extend(s.attn[..2].iter().cloned()); // ln1_g, ln1_b
-    v.extend(s.mlp[..2].iter().cloned()); // ln2_g, ln2_b
-    v.extend(s.attn[2..].iter().cloned()); // wq, wk, wv, wo
-    v.extend(s.mlp[2..].iter().cloned()); // w1, b1, w2, b2
-    v
+    crate::runtime::slots::fused_inputs_from_parts(x, fa, &s.attn, &s.mlp)
+        .expect("fal_fused slot bundles")
 }
 
 use super::optim::zeros_like;

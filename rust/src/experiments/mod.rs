@@ -1,8 +1,10 @@
 //! Experiment registry: one entry per paper table/figure.
 //!
 //! `fal exp <id>` runs one; `fal exp all` runs the full suite and writes
-//! Markdown + CSV into `reports/`. DESIGN.md §5 maps every id to the paper
-//! artifact it regenerates.
+//! Markdown + CSV into `reports/`. Every id runs on the default (native)
+//! build; docs/ARCHITECTURE.md §4 maps each id to the paper artifact it
+//! regenerates, the modules doing the work, and the artifact kinds it
+//! executes.
 
 pub mod common;
 pub mod costmodel_figs;

@@ -90,14 +90,19 @@ pub fn fig20(ctx: &ExpCtx) -> Result<Report> {
         "Fig 20: final train loss per attention mechanism",
         &["mechanism", "preln", "fal", "falplus"],
     );
-    for (mech, suffix) in [("GQA (2 kv heads)", "_gqa"), ("MoE-attention", "_moe")] {
+    // The generalization hosts are dedicated configs (small_gqa: 2 kv
+    // heads; small_moe: 2-expert Switch-style query projection) with their
+    // own parameter schemas, so each (config, variant) pair is a real
+    // train_step artifact on both backends.
+    for (mech, config) in
+        [("GQA (2 kv heads)", "small_gqa"), ("MoE-attention", "small_moe")]
+    {
         let mut row = vec![mech.to_string()];
         for base in ["preln", "fal", "falplus"] {
-            let tag = format!("{base}{suffix}");
-            let (_, mut loader) = ctx.loader("small", 0)?;
+            let (_, mut loader) = ctx.loader(config, 0)?;
             let (trainer, _) = ctx.train_variant(
-                "small", &tag, steps, Schedule::Constant, &mut loader,
-                &format!("fig20-{tag}"))?;
+                config, base, steps, Schedule::Constant, &mut loader,
+                &format!("fig20-{config}-{base}"))?;
             row.push(Table::fmt(trainer.recent_loss(20), 4));
             report.series(
                 &format!("{mech} {base}"),

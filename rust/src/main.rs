@@ -55,6 +55,11 @@ fn print_help() {
          \x20 fal tp --config small --variant fal --tp 2 [--steps N]\n\
          \x20 fal list\n\
          \n\
+         Every experiment id runs on the default (native CPU) build — no\n\
+         Python, artifacts/ directory, or `--features pjrt` required.\n\
+         `fal exp all --scale 0.1` is the recommended native smoke sweep;\n\
+         --scale 1.0 reproduces the full step budgets (hours on CPU).\n\
+         \n\
          EXPERIMENTS: {}",
         experiments::ALL.join(", ")
     );

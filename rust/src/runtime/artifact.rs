@@ -154,10 +154,9 @@ impl Manifest {
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts.get(name).with_context(|| {
             format!(
-                "artifact {name:?} not in manifest ({} available); the \
-                 native backend registers only TP stages and preln/fal \
-                 train steps — other artifacts need `--features pjrt` plus \
-                 `make artifacts`",
+                "artifact {name:?} not in manifest ({} available); \
+                 `fal list` shows what is registered — PJRT artifacts \
+                 additionally need `--features pjrt` plus `make artifacts`",
                 self.artifacts.len()
             )
         })
@@ -220,10 +219,10 @@ impl Manifest {
             .collect();
         match matches.len() {
             0 => bail!(
-                "no artifact kind={kind} config={config} tag={tag}; the \
-                 native backend serves only tp_stage and preln/fal \
-                 train_step kinds — others need `--features pjrt` plus \
-                 `make artifacts`"
+                "no artifact kind={kind} config={config} tag={tag} in the \
+                 manifest; `fal list` shows registered configs and kinds \
+                 (PJRT artifacts additionally need `--features pjrt` plus \
+                 `make artifacts`)"
             ),
             1 => Ok(matches[0]),
             _ => Ok(matches[0]), // deterministic: BTreeMap iteration order

@@ -13,10 +13,17 @@
 //!
 //! Both speak the same [`Manifest`] contract (artifact names, tensor specs,
 //! parameter schemas, model configs), so the trainers and benches run
-//! unchanged on either. The native manifest registers the 13 TP stages and
-//! the `preln`/`fal` train steps; experiments that need other artifact
-//! kinds (`eval_masked`, `grad_step`, `score_options`, …) or the other four
-//! variants still require the PJRT backend and real artifacts.
+//! unchanged on either. The native manifest registers the 13 TP stages,
+//! `train_step` executables for **every** architecture variant (incl. the
+//! reuse-layer, GQA, and MoE-attention generalizations), and the analysis
+//! kinds `grad_step`, `eval_masked`, `score_options`, `gradmag`, and
+//! `capture` — the complete artifact surface of `fal exp all`, with no
+//! `pjrt` feature needed. See docs/ARCHITECTURE.md for the paper-to-code
+//! map.
+//!
+//! The [`slots`] module owns the named-slot input ordering of the fused
+//! FAL stage, shared by the TP trainer, the native train step, and the
+//! synthetic manifest so the three can never drift.
 
 pub mod artifact;
 #[cfg(feature = "pjrt")]
@@ -24,6 +31,7 @@ pub mod engine;
 #[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod native;
+pub mod slots;
 pub mod synthetic;
 
 use std::collections::BTreeMap;

@@ -64,7 +64,7 @@ pub fn add(a: &HostTensor, b: &HostTensor) -> HostTensor {
     out
 }
 
-/// Add a [n]-shaped bias to every row of a [..., n] tensor, in place.
+/// Add a `[n]`-shaped bias to every row of a `[..., n]` tensor, in place.
 pub fn add_bias(t: &mut HostTensor, bias: &HostTensor) {
     let (_, n) = t.rows_cols();
     assert_eq!(bias.len(), n, "add_bias: bias length");
@@ -75,7 +75,7 @@ pub fn add_bias(t: &mut HostTensor, bias: &HostTensor) {
     }
 }
 
-/// Sum a [..., n] tensor over all leading axes -> [n] (bias gradient).
+/// Sum a `[..., n]` tensor over all leading axes -> `[n]` (bias gradient).
 pub fn sum_rows(t: &HostTensor) -> HostTensor {
     let (_, n) = t.rows_cols();
     let mut out = vec![0.0f32; n];

@@ -1,14 +1,42 @@
-//! The native CPU backend: pure-Rust f32 reference execution of every stage
-//! computation the trainers dispatch, plus the fused train step.
+//! The native CPU backend: pure-Rust f32 reference execution of **every**
+//! artifact kind the trainers and experiments dispatch.
 //!
 //! This is the default [`Backend`](crate::runtime::Backend): it makes the
-//! paper's communication schedules (and the whole test suite) executable on
-//! a machine with no `xla` crate, no Python and no `artifacts/` directory.
-//! The kernels are straightforward matmul/layernorm/softmax/GeLU loops —
-//! slow next to XLA, but numerically honest, which is all the FAL-vs-PreLN
-//! all-reduce accounting needs.
+//! paper's communication schedules (and the whole test suite plus the full
+//! `fal exp all` experiment sweep) executable on a machine with no `xla`
+//! crate, no Python and no `artifacts/` directory. The kernels are
+//! straightforward matmul/layernorm/softmax/GeLU loops — slow next to XLA,
+//! but numerically honest, which is all the FAL-vs-PreLN accounting needs.
+//!
+//! Artifact kinds and where they execute:
+//!
+//! | kind | module | role |
+//! |---|---|---|
+//! | `tp_stage` | [`stages`] | the 13 per-shard TP stage computations |
+//! | `train_step` | [`train_step`] | fused loss + grads + AdamW, all variants |
+//! | `grad_step` | [`train_step`] | loss + raw grads (Fig 7 compression) |
+//! | `gradmag` | [`train_step`] | per-block ‖dLoss/d MHA out‖ (Fig 4a) |
+//! | `eval_masked` | [`model`] | gated eval loss (Fig 3b / 4b surgery) |
+//! | `score_options` | [`model`] | masked log-likelihood ranking (Table 1) |
+//! | `capture` | [`model`] | stacked activations for CKA (Fig 3a) |
+//!
+//! # VJP convention
+//!
+//! Backward kernels return one cotangent per primal input, in primal order
+//! and with the primal's shape, and recompute forward intermediates from
+//! the stashed primal inputs — no activation tape crosses a stage
+//! boundary. See [`stages`] for the per-stage contracts.
+//!
+//! # Shard-sum invariant
+//!
+//! For every TP stage, summing the per-shard outputs over all shards
+//! equals the tp = 1 output (Megatron column/row sharding; LN parameters
+//! replicated, mlp `b2` on shard 0). rust/tests/native_backend.rs enforces
+//! it; the TP trainer's all-reduce schedule is built on it.
 
 pub mod kernels;
+pub mod model;
+pub mod moe;
 pub mod stages;
 pub mod train_step;
 
@@ -33,14 +61,15 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
-    /// Wrap an arbitrary manifest (artifacts must carry the `kind` meta the
-    /// native dispatcher understands: `tp_stage` or `train_step`).
+    /// Wrap an arbitrary manifest (artifacts must carry a `kind` meta the
+    /// native dispatcher understands — see the module-level table).
     pub fn new(manifest: Manifest) -> NativeBackend {
         NativeBackend { manifest, stats: RefCell::new(BTreeMap::new()) }
     }
 
-    /// The default backend: built-in synthetic configs (micro/tiny/small/
-    /// e2e) with stages for every registered TP degree.
+    /// The default backend: the built-in synthetic configs (micro, tiny,
+    /// small + its deep/GQA/MoE companions, e2e) with every artifact kind
+    /// registered — the full `fal exp all` surface.
     pub fn synthetic() -> NativeBackend {
         Self::new(synthetic_manifest(&default_specs()))
     }
@@ -62,9 +91,24 @@ impl Backend for NativeBackend {
         let out = match spec.meta_str("kind") {
             Some("tp_stage") => stages::run_stage(&self.manifest, spec, inputs)?,
             Some("train_step") => train_step::run(&self.manifest, spec, inputs)?,
+            Some("grad_step") => {
+                train_step::run_grad_step(&self.manifest, spec, inputs)?
+            }
+            Some("gradmag") => {
+                train_step::run_gradmag(&self.manifest, spec, inputs)?
+            }
+            Some("eval_masked") => {
+                model::run_eval_masked(&self.manifest, spec, inputs)?
+            }
+            Some("score_options") => {
+                model::run_score_options(&self.manifest, spec, inputs)?
+            }
+            Some("capture") => {
+                model::run_capture(&self.manifest, spec, inputs)?
+            }
             other => bail!(
                 "native backend cannot execute artifact {name:?} \
-                 (kind {other:?}); only tp_stage and train_step are native"
+                 (unknown kind {other:?})"
             ),
         };
         let mut stats = self.stats.borrow_mut();

@@ -1,0 +1,260 @@
+//! Native full-model *evaluation* kinds: the forward-only artifact family
+//! of python/compile/model.py, with the eval-time connection-surgery gates.
+//!
+//! * `eval_masked` ([`run_eval_masked`]): summed cross-entropy + token
+//!   count under two per-layer gate vectors — `mha_scale[i]` scales block
+//!   i's attention contribution to the residual stream, `conn_scale[i]`
+//!   scales its contribution to the MLP-input path. One executable covers
+//!   "All MHA removed", "All Connect removed" and every per-layer omission
+//!   of Fig 3(b) / Fig 4(b) without recompilation.
+//! * `score_options` ([`run_score_options`]): per-sequence sum of masked
+//!   next-token log-likelihoods — the SuperGLUE-style likelihood-ranking
+//!   primitive behind Table 1 (right) and Table 2.
+//! * `capture` ([`run_capture`]): stacked per-block activations
+//!   (MHA out / MLP in / MLP out, each `[L,B,S,D]`) for the Fig 3(a) CKA
+//!   analysis.
+//!
+//! All three share one gated forward that mirrors model.py::block_fwd for
+//! every variant; the training-side backward lives in
+//! [`super::train_step`].
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::topology::NamedParams;
+use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::Manifest;
+use crate::tensor::HostTensor;
+
+use super::kernels::{add, matmul_nt};
+use super::moe::moe_attn_fwd;
+use super::stages::{attn_fwd, embed_fwd, mlp_fwd};
+use super::train_step::{
+    attn_params, block_kind, mlp_params, model_meta, BlockKind, ModelMeta,
+};
+
+/// Per-block activation captures (Fig 3a streams).
+struct Caps {
+    mha_out: Vec<HostTensor>,
+    mlp_in: Vec<HostTensor>,
+    mlp_out: Vec<HostTensor>,
+}
+
+fn scaled(t: &HostTensor, s: f32) -> HostTensor {
+    let mut out = t.clone();
+    out.scale(s);
+    out
+}
+
+/// Gated forward for any variant; returns the final hidden state and,
+/// when `capture` is set, the per-block activation streams.
+fn forward_gated(
+    mm: &ModelMeta,
+    params: &NamedParams,
+    tokens: &HostTensor,
+    mha_scale: &[f32],
+    conn_scale: &[f32],
+    capture: bool,
+) -> Result<(HostTensor, Option<Caps>)> {
+    let l = mm.cfg.n_layer;
+    ensure!(
+        mha_scale.len() == l && conn_scale.len() == l,
+        "gate vectors must have one entry per layer ({l})"
+    );
+    let mut caps = capture.then(|| Caps {
+        mha_out: Vec::with_capacity(l),
+        mlp_in: Vec::with_capacity(l),
+        mlp_out: Vec::with_capacity(l),
+    });
+
+    let mut x = embed_fwd(tokens, params.get("wte")?, params.get("wpe")?);
+    let mut fa: Option<HostTensor> = None;
+    for li in 0..l {
+        let ap = attn_params(params, li)?;
+        let mp = mlp_params(params, li)?;
+        let lnf = |t: &HostTensor| -> Result<HostTensor> {
+            Ok(t.layernorm(
+                params.blk(li, "lnf_g")?,
+                params.blk(li, "lnf_b")?,
+            ))
+        };
+        let a = if mm.cfg.n_expert > 1 {
+            moe_attn_fwd(
+                &mm.geom,
+                &x,
+                &ap,
+                params.blk(li, "router")?,
+                params.blk(li, "wq_experts")?,
+            )
+        } else {
+            attn_fwd(&mm.geom, &x, &ap).out
+        };
+        // The residual stream sees a * mha_scale, the MLP-input path sees
+        // a * conn_scale (model.py's surgery gates; both 1.0 in training).
+        let a_out = scaled(&a, mha_scale[li]);
+        let a_conn = scaled(&a, conn_scale[li]);
+
+        let mlpf = match block_kind(mm.variant, li, mm.reuse_layer) {
+            BlockKind::PreLn => mlp_fwd(&add(&x, &a_conn), None, &mp),
+            BlockKind::Parallel => mlp_fwd(&x, None, &mp),
+            BlockKind::FalPrep => {
+                let f = lnf(&a_conn)?;
+                let m = mlp_fwd(&x, Some(&f), &mp);
+                fa = Some(f);
+                m
+            }
+            BlockKind::FalMain => {
+                mlp_fwd(&x, Some(fa.as_ref().expect("fa set")), &mp)
+            }
+            BlockKind::FalPlusPrep => {
+                let m = mlp_fwd(&x, Some(&a_conn), &mp);
+                fa = Some(a_conn.clone());
+                m
+            }
+            BlockKind::FalPlusMain => {
+                let fan = lnf(fa.as_ref().expect("fa set"))?;
+                mlp_fwd(&add(&x, &a_conn), Some(&fan), &mp)
+            }
+            BlockKind::Ablation1 => {
+                let an = lnf(&a_conn)?;
+                mlp_fwd(&x, Some(&an), &mp)
+            }
+        };
+        if let Some(c) = caps.as_mut() {
+            c.mha_out.push(a.clone());
+            c.mlp_in.push(mlpf.hn.clone());
+            c.mlp_out.push(mlpf.out.clone());
+        }
+        x = add(&add(&x, &a_out), &mlpf.out);
+    }
+    Ok((x, caps))
+}
+
+/// Per-token (lse, gold-logit) pairs of the weight-tied head.
+fn head_row_stats(
+    mm: &ModelMeta,
+    params: &NamedParams,
+    x: &HostTensor,
+    targets: &HostTensor,
+) -> Result<Vec<(f32, f32)>> {
+    let xn = x.layernorm(params.get("lnF_g")?, params.get("lnF_b")?);
+    let logits = matmul_nt(&xn, params.get("wte")?);
+    let vocab = mm.cfg.vocab_size;
+    let (rows, _) = xn.rows_cols();
+    let ids = targets.as_i32();
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &logits.data[r * vocab..(r + 1) * vocab];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse =
+            mx + row.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln();
+        out.push((lse, row[ids[r] as usize]));
+    }
+    Ok(out)
+}
+
+/// `eval_masked`: inputs [params, tokens, targets, mha_scale, conn_scale],
+/// outputs [loss_sum, count]. Rust accumulates exact PPL across batches.
+pub fn run_eval_masked(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mm = model_meta(manifest, spec)?;
+    let schema = manifest.schema(&mm.cfg.name)?.to_vec();
+    let np = schema.len();
+    ensure!(
+        inputs.len() == np + 4,
+        "eval_masked: {} inputs, expected {}",
+        inputs.len(),
+        np + 4
+    );
+    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let (tokens, targets) = (&inputs[np], &inputs[np + 1]);
+    let (x, _) = forward_gated(
+        &mm,
+        &params,
+        tokens,
+        &inputs[np + 2].data,
+        &inputs[np + 3].data,
+        false,
+    )?;
+    let rows = head_row_stats(&mm, &params, &x, targets)?;
+    let loss_sum: f64 =
+        rows.iter().map(|(lse, gold)| (lse - gold) as f64).sum();
+    Ok(vec![
+        HostTensor::scalar(loss_sum as f32),
+        HostTensor::scalar(rows.len() as f32),
+    ])
+}
+
+/// `score_options`: inputs [params, tokens, targets, mask], output one
+/// `[B]` tensor of sum over masked positions of log p(target | prefix).
+pub fn run_score_options(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mm = model_meta(manifest, spec)?;
+    let schema = manifest.schema(&mm.cfg.name)?.to_vec();
+    let np = schema.len();
+    ensure!(
+        inputs.len() == np + 3,
+        "score_options: {} inputs, expected {}",
+        inputs.len(),
+        np + 3
+    );
+    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let (tokens, targets, mask) =
+        (&inputs[np], &inputs[np + 1], &inputs[np + 2]);
+    let ones = vec![1.0f32; mm.cfg.n_layer];
+    let (x, _) = forward_gated(&mm, &params, tokens, &ones, &ones, false)?;
+    let rows = head_row_stats(&mm, &params, &x, targets)?;
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let mut ll = vec![0.0f32; b];
+    for bi in 0..b {
+        let mut acc = 0.0f64;
+        for si in 0..s {
+            let (lse, gold) = rows[bi * s + si];
+            acc += mask.data[bi * s + si] as f64 * (gold - lse) as f64;
+        }
+        ll[bi] = acc as f32;
+    }
+    Ok(vec![HostTensor::from_vec(&[b], ll)])
+}
+
+/// `capture`: inputs [params, tokens], outputs stacked [L,B,S,D] tensors
+/// [mha_out, mlp_in, mlp_out] — the Fig 3(a) CKA streams.
+pub fn run_capture(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mm = model_meta(manifest, spec)?;
+    let schema = manifest.schema(&mm.cfg.name)?.to_vec();
+    let np = schema.len();
+    ensure!(
+        inputs.len() == np + 1,
+        "capture: {} inputs, expected {}",
+        inputs.len(),
+        np + 1
+    );
+    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let tokens = &inputs[np];
+    let ones = vec![1.0f32; mm.cfg.n_layer];
+    let (_, caps) =
+        forward_gated(&mm, &params, tokens, &ones, &ones, true)?;
+    let caps = caps.expect("capture requested");
+    let (b, s) = (tokens.shape[0], tokens.shape[1]);
+    let stack = |ts: &[HostTensor]| {
+        let mut data = Vec::with_capacity(ts.len() * b * s * mm.cfg.d_model);
+        for t in ts {
+            data.extend_from_slice(&t.data);
+        }
+        HostTensor::from_vec(&[ts.len(), b, s, mm.cfg.d_model], data)
+    };
+    Ok(vec![
+        stack(&caps.mha_out),
+        stack(&caps.mlp_in),
+        stack(&caps.mlp_out),
+    ])
+}

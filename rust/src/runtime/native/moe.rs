@@ -1,0 +1,233 @@
+//! MoE-attention: Switch-style query-projection mixture (paper Apdx E.1,
+//! Fig 20), mirroring python/compile/model.py::mha's `n_expert > 1` path.
+//!
+//! The query is a per-token softmax mixture over expert projections added
+//! to the dense projection:
+//!
+//! ```text
+//! gate = softmax(xn @ router)                  # [B,S,E]
+//! q    = xn @ wq + sum_e gate[..,e] * (xn @ wq_experts[e])
+//! ```
+//!
+//! K/V and the attention core are unchanged, so GQA composes freely. The
+//! backward pass is hand-derived like the rest of the native kernels and
+//! follows the same VJP convention (cotangent per primal, primal shapes).
+
+use crate::tensor::HostTensor;
+
+use super::kernels::{
+    causal_attention, causal_attention_bwd, layernorm_bwd, matmul_nt,
+    matmul_tn, AttnGeom,
+};
+
+/// Gradients of one MoE-attention call.
+pub struct MoeAttnGrads {
+    pub dx: HostTensor,
+    /// [dln1_g, dln1_b, dwq, dwk, dwv, dwo] — the dense attention bundle in
+    /// [`crate::runtime::slots::ATTN_PARAM_SLOTS`] order.
+    pub attn: Vec<HostTensor>,
+    pub drouter: HostTensor,
+    pub dwq_experts: HostTensor,
+}
+
+/// View expert `e` of a `[E, d, d]` stack as a `[d, d]` matrix.
+fn expert_mat(wqe: &HostTensor, e: usize) -> HostTensor {
+    let (d0, d1) = (wqe.shape[1], wqe.shape[2]);
+    let n = d0 * d1;
+    HostTensor::from_vec(&[d0, d1], wqe.data[e * n..(e + 1) * n].to_vec())
+}
+
+struct MoeFwd {
+    out: HostTensor,
+    xn: HostTensor,
+    gate: HostTensor,
+    /// Per-expert query projections (pre-gating).
+    qs: Vec<HostTensor>,
+    q: HostTensor,
+    k: HostTensor,
+    v: HostTensor,
+    o: HostTensor,
+}
+
+/// Shared forward: `p` = [ln1_g, ln1_b, wq, wk, wv, wo].
+fn moe_fwd(
+    g: &AttnGeom,
+    x: &HostTensor,
+    p: &[&HostTensor],
+    router: &HostTensor,
+    wqe: &HostTensor,
+) -> MoeFwd {
+    let xn = x.layernorm(p[0], p[1]);
+    let gate = xn.matmul(router).softmax_rows(); // [B,S,E]
+    let n_expert = router.shape[1];
+    let mut q = xn.matmul(p[2]);
+    let (rows, dq_w) = q.rows_cols();
+    let mut qs = Vec::with_capacity(n_expert);
+    for e in 0..n_expert {
+        let we = expert_mat(wqe, e);
+        let qe = xn.matmul(&we);
+        for r in 0..rows {
+            let gv = gate.data[r * n_expert + e];
+            let qrow = &mut q.data[r * dq_w..(r + 1) * dq_w];
+            let erow = &qe.data[r * dq_w..(r + 1) * dq_w];
+            for t in 0..dq_w {
+                qrow[t] += gv * erow[t];
+            }
+        }
+        qs.push(qe);
+    }
+    let k = xn.matmul(p[3]);
+    let v = xn.matmul(p[4]);
+    let o = causal_attention(g, &q, &k, &v);
+    let out = o.matmul(p[5]);
+    MoeFwd { out, xn, gate, qs, q, k, v, o }
+}
+
+/// MoE attention forward -> the block's (full, unsharded) MHA output.
+pub fn moe_attn_fwd(
+    g: &AttnGeom,
+    x: &HostTensor,
+    p: &[&HostTensor],
+    router: &HostTensor,
+    wqe: &HostTensor,
+) -> HostTensor {
+    moe_fwd(g, x, p, router, wqe).out
+}
+
+/// VJP of [`moe_attn_fwd`].
+pub fn moe_attn_bwd(
+    g: &AttnGeom,
+    x: &HostTensor,
+    p: &[&HostTensor],
+    router: &HostTensor,
+    wqe: &HostTensor,
+    dout: &HostTensor,
+) -> MoeAttnGrads {
+    let f = moe_fwd(g, x, p, router, wqe);
+    let do_ = matmul_nt(dout, p[5]); // dout @ wo^T
+    let dwo = matmul_tn(&f.o, dout);
+    let (dq, dk, dv) = causal_attention_bwd(g, &f.q, &f.k, &f.v, &do_);
+    let mut dxn = matmul_nt(&dq, p[2]);
+    dxn.add_assign(&matmul_nt(&dk, p[3]));
+    dxn.add_assign(&matmul_nt(&dv, p[4]));
+    let dwq = matmul_tn(&f.xn, &dq);
+    let dwk = matmul_tn(&f.xn, &dk);
+    let dwv = matmul_tn(&f.xn, &dv);
+
+    let n_expert = router.shape[1];
+    let (rows, dq_w) = dq.rows_cols();
+    let mut dgate = HostTensor::zeros(&f.gate.shape);
+    let mut dwqe = HostTensor::zeros(&wqe.shape);
+    for e in 0..n_expert {
+        // dqs_e = gate[.., e] * dq;  dgate[.., e] = <dq, qs_e> per token.
+        let mut dqs = dq.clone();
+        for r in 0..rows {
+            let gv = f.gate.data[r * n_expert + e];
+            let qrow = &f.qs[e].data[r * dq_w..(r + 1) * dq_w];
+            let drow = &mut dqs.data[r * dq_w..(r + 1) * dq_w];
+            let mut acc = 0.0f32;
+            for t in 0..dq_w {
+                acc += drow[t] * qrow[t];
+                drow[t] *= gv;
+            }
+            dgate.data[r * n_expert + e] = acc;
+        }
+        let we = expert_mat(wqe, e);
+        dxn.add_assign(&matmul_nt(&dqs, &we));
+        let dwe = matmul_tn(&f.xn, &dqs);
+        let n = dwe.len();
+        dwqe.data[e * n..(e + 1) * n].copy_from_slice(&dwe.data);
+    }
+    // Softmax VJP per token row: dlogits = gate * (dgate - <gate, dgate>).
+    let mut dlogits = HostTensor::zeros(&f.gate.shape);
+    for r in 0..rows {
+        let grow = &f.gate.data[r * n_expert..(r + 1) * n_expert];
+        let dgrow = &dgate.data[r * n_expert..(r + 1) * n_expert];
+        let rd: f32 = grow.iter().zip(dgrow).map(|(a, b)| a * b).sum();
+        let orow = &mut dlogits.data[r * n_expert..(r + 1) * n_expert];
+        for t in 0..n_expert {
+            orow[t] = grow[t] * (dgrow[t] - rd);
+        }
+    }
+    let drouter = matmul_tn(&f.xn, &dlogits);
+    dxn.add_assign(&matmul_nt(&dlogits, router));
+
+    let (dx, dg, db) = layernorm_bwd(x, p[0], &dxn);
+    MoeAttnGrads {
+        dx,
+        attn: vec![dg, db, dwq, dwk, dwv, dwo],
+        drouter,
+        dwq_experts: dwqe,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (AttnGeom, HostTensor, Vec<HostTensor>, HostTensor, HostTensor) {
+        let g = AttnGeom { batch: 1, seq: 3, heads: 2, kv_heads: 2, head_dim: 2 };
+        let d = 4usize;
+        let mut rng = Rng::new(17);
+        let x = HostTensor::randn(&[1, 3, d], 0.6, &mut rng);
+        let p = vec![
+            HostTensor::ones(&[d]),
+            HostTensor::zeros(&[d]),
+            HostTensor::randn(&[d, d], 0.3, &mut rng),
+            HostTensor::randn(&[d, d], 0.3, &mut rng),
+            HostTensor::randn(&[d, d], 0.3, &mut rng),
+            HostTensor::randn(&[d, d], 0.3, &mut rng),
+        ];
+        let router = HostTensor::randn(&[d, 2], 0.4, &mut rng);
+        let wqe = HostTensor::randn(&[2, d, d], 0.3, &mut rng);
+        (g, x, p, router, wqe)
+    }
+
+    #[test]
+    fn experts_change_the_output() {
+        let (g, x, p, router, wqe) = setup();
+        let views: Vec<&HostTensor> = p.iter().collect();
+        let with = moe_attn_fwd(&g, &x, &views, &router, &wqe);
+        let zero_e = HostTensor::zeros(&wqe.shape);
+        let without = moe_attn_fwd(&g, &x, &views, &router, &zero_e);
+        assert!(with.max_abs_err(&without) > 1e-6);
+        assert_eq!(with.shape, x.shape);
+    }
+
+    #[test]
+    fn moe_bwd_finite_difference() {
+        let (g, x, p, router, wqe) = setup();
+        let views: Vec<&HostTensor> = p.iter().collect();
+        let mut rng = Rng::new(18);
+        let w = HostTensor::randn(&[1, 3, 4], 1.0, &mut rng);
+        let grads = moe_attn_bwd(&g, &x, &views, &router, &wqe, &w);
+        let h = 1e-3f32;
+        let loss = |x_: &HostTensor, r_: &HostTensor, e_: &HostTensor| {
+            let v: Vec<&HostTensor> = p.iter().collect();
+            moe_attn_fwd(&g, x_, &v, r_, e_).dot(&w)
+        };
+        let check = |t: &HostTensor, dt: &HostTensor, which: usize| {
+            for i in 0..t.len() {
+                let mut tp = t.clone();
+                let mut tm = t.clone();
+                tp.data[i] += h;
+                tm.data[i] -= h;
+                let (lp, lm) = match which {
+                    0 => (loss(&tp, &router, &wqe), loss(&tm, &router, &wqe)),
+                    1 => (loss(&x, &tp, &wqe), loss(&x, &tm, &wqe)),
+                    _ => (loss(&x, &router, &tp), loss(&x, &router, &tm)),
+                };
+                let num = ((lp - lm) / (2.0 * h as f64)) as f32;
+                assert!(
+                    (num - dt.data[i]).abs() < 2e-2,
+                    "grad[{which}][{i}]: numeric {num} vs {}",
+                    dt.data[i]
+                );
+            }
+        };
+        check(&x, &grads.dx, 0);
+        check(&router, &grads.drouter, 1);
+        check(&wqe, &grads.dwq_experts, 2);
+    }
+}

@@ -2,6 +2,21 @@
 //! compute of python/compile/stages.py, with hand-derived backward passes
 //! in place of jax.vjp. Input/output orders match the lowered artifacts
 //! exactly (the TP trainer indexes outputs positionally).
+//!
+//! # VJP convention
+//!
+//! Every `*_bwd` returns one cotangent per primal input, in primal order
+//! and with the primal's shape. Backward stages recompute the forward
+//! intermediates from the primal inputs (no activation tape crosses the
+//! stage boundary) — the same rematerialization contract jax.vjp gives the
+//! lowered artifacts.
+//!
+//! # Borrowed views
+//!
+//! Stage entry points take parameter bundles as `&[&HostTensor]` so the
+//! train-step hot path can pass views straight out of `NamedParams`
+//! without deep-cloning block weights every call (ROADMAP perf item,
+//! benchmarked by benches/tp_step.rs).
 
 use anyhow::{bail, Context, Result};
 
@@ -43,27 +58,27 @@ pub fn run_stage(
         .meta_str("stage")
         .context("tp_stage artifact missing stage meta")?;
     let g = geom(cfg, tp, batch);
-    let i = inputs;
+    let i: Vec<&HostTensor> = inputs.iter().collect();
     Ok(match stage {
-        "embed_fwd" => vec![embed_fwd(&i[0], &i[1], &i[2])],
+        "embed_fwd" => vec![embed_fwd(i[0], i[1], i[2])],
         "embed_bwd" => {
-            let (dwte, dwpe) = embed_bwd(&i[0], &i[1], &i[2], &i[3]);
+            let (dwte, dwpe) = embed_bwd(i[0], i[1], i[2], i[3]);
             vec![dwte, dwpe]
         }
-        "attn_fwd" => vec![attn_fwd(&g, &i[0], &i[1..]).out],
-        "attn_bwd" => attn_bwd(&g, &i[0], &i[1..7], &i[7]),
-        "mlp_preln_fwd" => vec![mlp_fwd(&i[0], None, &i[1..]).out],
-        "mlp_preln_bwd" => mlp_bwd(&i[0], None, &i[1..7], &i[7]),
-        "mlp_fal_fwd" => vec![mlp_fwd(&i[0], Some(&i[1]), &i[2..]).out],
-        "mlp_fal_bwd" => mlp_bwd(&i[0], Some(&i[1]), &i[2..8], &i[8]),
-        "lnf_fwd" => vec![i[0].layernorm(&i[1], &i[2])],
+        "attn_fwd" => vec![attn_fwd(&g, i[0], &i[1..]).out],
+        "attn_bwd" => attn_bwd(&g, i[0], &i[1..7], i[7]),
+        "mlp_preln_fwd" => vec![mlp_fwd(i[0], None, &i[1..]).out],
+        "mlp_preln_bwd" => mlp_bwd(i[0], None, &i[1..7], i[7]),
+        "mlp_fal_fwd" => vec![mlp_fwd(i[0], Some(i[1]), &i[2..]).out],
+        "mlp_fal_bwd" => mlp_bwd(i[0], Some(i[1]), &i[2..8], i[8]),
+        "lnf_fwd" => vec![i[0].layernorm(i[1], i[2])],
         "lnf_bwd" => {
-            let (da, dg, db) = layernorm_bwd(&i[0], &i[1], &i[3]);
+            let (da, dg, db) = layernorm_bwd(i[0], i[1], i[3]);
             vec![da, dg, db]
         }
-        "fal_fused_fwd" => vec![fal_fused_fwd(&g, i)],
-        "fal_fused_bwd" => fal_fused_bwd(&g, &i[..14], &i[14]),
-        "head_fwd_bwd" => head_fwd_bwd(&i[0], &i[1], &i[2], &i[3], &i[4]),
+        "fal_fused_fwd" => vec![fal_fused_fwd(&g, &i)],
+        "fal_fused_bwd" => fal_fused_bwd(&g, &i[..14], i[14]),
+        "head_fwd_bwd" => head_fwd_bwd(i[0], i[1], i[2], i[3], i[4]),
         other => bail!("native backend: unknown stage {other:?}"),
     })
 }
@@ -135,13 +150,13 @@ pub struct AttnFwd {
 }
 
 /// Per-shard attention: params = [ln1_g, ln1_b, wq, wk, wv, wo].
-pub fn attn_fwd(g: &AttnGeom, x: &HostTensor, p: &[HostTensor]) -> AttnFwd {
-    let xn = x.layernorm(&p[0], &p[1]);
-    let q = xn.matmul(&p[2]);
-    let k = xn.matmul(&p[3]);
-    let v = xn.matmul(&p[4]);
+pub fn attn_fwd(g: &AttnGeom, x: &HostTensor, p: &[&HostTensor]) -> AttnFwd {
+    let xn = x.layernorm(p[0], p[1]);
+    let q = xn.matmul(p[2]);
+    let k = xn.matmul(p[3]);
+    let v = xn.matmul(p[4]);
     let o = causal_attention(g, &q, &k, &v);
-    let out = o.matmul(&p[5]);
+    let out = o.matmul(p[5]);
     AttnFwd { out, xn, q, k, v, o }
 }
 
@@ -149,20 +164,20 @@ pub fn attn_fwd(g: &AttnGeom, x: &HostTensor, p: &[HostTensor]) -> AttnFwd {
 pub fn attn_bwd(
     g: &AttnGeom,
     x: &HostTensor,
-    p: &[HostTensor],
+    p: &[&HostTensor],
     dout: &HostTensor,
 ) -> Vec<HostTensor> {
     let f = attn_fwd(g, x, p);
-    let do_ = matmul_nt(dout, &p[5]); // dO = dout @ wo^T
+    let do_ = matmul_nt(dout, p[5]); // dO = dout @ wo^T
     let dwo = matmul_tn(&f.o, dout);
     let (dq, dk, dv) = causal_attention_bwd(g, &f.q, &f.k, &f.v, &do_);
-    let mut dxn = matmul_nt(&dq, &p[2]); // dq @ wq^T
-    dxn.add_assign(&matmul_nt(&dk, &p[3]));
-    dxn.add_assign(&matmul_nt(&dv, &p[4]));
+    let mut dxn = matmul_nt(&dq, p[2]); // dq @ wq^T
+    dxn.add_assign(&matmul_nt(&dk, p[3]));
+    dxn.add_assign(&matmul_nt(&dv, p[4]));
     let dwq = matmul_tn(&f.xn, &dq);
     let dwk = matmul_tn(&f.xn, &dk);
     let dwv = matmul_tn(&f.xn, &dv);
-    let (dx, dg, db) = layernorm_bwd(x, &p[0], &dxn);
+    let (dx, dg, db) = layernorm_bwd(x, p[0], &dxn);
     vec![dx, dg, db, dwq, dwk, dwv, dwo]
 }
 
@@ -172,23 +187,25 @@ pub fn attn_bwd(
 
 pub struct MlpFwd {
     pub out: HostTensor,
-    hn: HostTensor,
+    /// Post-LN MLP input (after the optional `fa` add) — the `mlp_in`
+    /// stream of the Fig 3(a) capture analysis.
+    pub(crate) hn: HostTensor,
     u: HostTensor,
     a: HostTensor,
 }
 
 /// Per-shard MLP: params = [ln2_g, ln2_b, w1, b1, w2, b2]. With `fa` set
 /// this is the FAL variant: hidden input = LN2(x) + fa.
-pub fn mlp_fwd(x: &HostTensor, fa: Option<&HostTensor>, p: &[HostTensor]) -> MlpFwd {
-    let mut hn = x.layernorm(&p[0], &p[1]);
+pub fn mlp_fwd(x: &HostTensor, fa: Option<&HostTensor>, p: &[&HostTensor]) -> MlpFwd {
+    let mut hn = x.layernorm(p[0], p[1]);
     if let Some(fa) = fa {
         hn.add_assign(fa);
     }
-    let mut u = hn.matmul(&p[2]);
-    add_bias(&mut u, &p[3]);
+    let mut u = hn.matmul(p[2]);
+    add_bias(&mut u, p[3]);
     let a = gelu(&u);
-    let mut out = a.matmul(&p[4]);
-    add_bias(&mut out, &p[5]);
+    let mut out = a.matmul(p[4]);
+    add_bias(&mut out, p[5]);
     MlpFwd { out, hn, u, a }
 }
 
@@ -197,18 +214,18 @@ pub fn mlp_fwd(x: &HostTensor, fa: Option<&HostTensor>, p: &[HostTensor]) -> Mlp
 pub fn mlp_bwd(
     x: &HostTensor,
     fa: Option<&HostTensor>,
-    p: &[HostTensor],
+    p: &[&HostTensor],
     dout: &HostTensor,
 ) -> Vec<HostTensor> {
     let f = mlp_fwd(x, fa, p);
-    let da = matmul_nt(dout, &p[4]); // dout @ w2^T
+    let da = matmul_nt(dout, p[4]); // dout @ w2^T
     let dw2 = matmul_tn(&f.a, dout);
     let db2 = sum_rows(dout);
     let du = gelu_bwd(&f.u, &da);
     let dw1 = matmul_tn(&f.hn, &du);
     let db1 = sum_rows(&du);
-    let dhn = matmul_nt(&du, &p[2]); // du @ w1^T
-    let (dx, dg, db) = layernorm_bwd(x, &p[0], &dhn);
+    let dhn = matmul_nt(&du, p[2]); // du @ w1^T
+    let (dx, dg, db) = layernorm_bwd(x, p[0], &dhn);
     match fa {
         // d(fa) is the raw dhn: fa enters by plain addition after the LN.
         Some(_) => vec![dx, dhn, dg, db, dw1, db1, dw2, db2],
@@ -220,19 +237,14 @@ pub fn mlp_bwd(
 // Fused FAL stage
 // ---------------------------------------------------------------------------
 
-/// FAL block i>1: attention partial + MLP partial in one stage. Inputs
+/// FAL block i>1: attention partial + MLP partial in one stage. Inputs in
+/// [`crate::runtime::slots::FAL_FUSED_SLOTS`] order:
 /// [x, fa, ln1_g, ln1_b, ln2_g, ln2_b, wq, wk, wv, wo, w1, b1, w2, b2].
-pub fn fal_fused_fwd(g: &AttnGeom, i: &[HostTensor]) -> HostTensor {
-    let attn_p = [
-        i[2].clone(), i[3].clone(), i[6].clone(), i[7].clone(),
-        i[8].clone(), i[9].clone(),
-    ];
-    let mlp_p = [
-        i[4].clone(), i[5].clone(), i[10].clone(), i[11].clone(),
-        i[12].clone(), i[13].clone(),
-    ];
-    let a_p = attn_fwd(g, &i[0], &attn_p).out;
-    let m_p = mlp_fwd(&i[0], Some(&i[1]), &mlp_p).out;
+pub fn fal_fused_fwd(g: &AttnGeom, i: &[&HostTensor]) -> HostTensor {
+    let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
+    let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
+    let a_p = attn_fwd(g, i[0], &attn_p).out;
+    let m_p = mlp_fwd(i[0], Some(i[1]), &mlp_p).out;
     add(&a_p, &m_p)
 }
 
@@ -240,19 +252,13 @@ pub fn fal_fused_fwd(g: &AttnGeom, i: &[HostTensor]) -> HostTensor {
 /// dln2_b, dwq, dwk, dwv, dwo, dw1, db1, dw2, db2].
 pub fn fal_fused_bwd(
     g: &AttnGeom,
-    i: &[HostTensor],
+    i: &[&HostTensor],
     dout: &HostTensor,
 ) -> Vec<HostTensor> {
-    let attn_p = [
-        i[2].clone(), i[3].clone(), i[6].clone(), i[7].clone(),
-        i[8].clone(), i[9].clone(),
-    ];
-    let mlp_p = [
-        i[4].clone(), i[5].clone(), i[10].clone(), i[11].clone(),
-        i[12].clone(), i[13].clone(),
-    ];
-    let a = attn_bwd(g, &i[0], &attn_p, dout);
-    let m = mlp_bwd(&i[0], Some(&i[1]), &mlp_p, dout);
+    let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
+    let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
+    let a = attn_bwd(g, i[0], &attn_p, dout);
+    let m = mlp_bwd(i[0], Some(i[1]), &mlp_p, dout);
     // a: [dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo]
     // m: [dx, dfa, dln2_g, dln2_b, dw1, db1, dw2, db2]
     let dx = add(&a[0], &m[0]);
@@ -389,5 +395,26 @@ mod tests {
                 dx.data[i]
             );
         }
+    }
+
+    #[test]
+    fn borrowed_views_share_storage_with_params() {
+        // The perf contract: building stage inputs from NamedParams-style
+        // storage must not copy weight matrices.
+        let g = AttnGeom { batch: 1, seq: 3, heads: 2, kv_heads: 2, head_dim: 2 };
+        let mut rng = Rng::new(33);
+        let x = HostTensor::randn(&[1, 3, 4], 0.5, &mut rng);
+        let owned: Vec<HostTensor> = vec![
+            HostTensor::ones(&[4]),
+            HostTensor::zeros(&[4]),
+            HostTensor::randn(&[4, 4], 0.2, &mut rng),
+            HostTensor::randn(&[4, 4], 0.2, &mut rng),
+            HostTensor::randn(&[4, 4], 0.2, &mut rng),
+            HostTensor::randn(&[4, 4], 0.2, &mut rng),
+        ];
+        let views: Vec<&HostTensor> = owned.iter().collect();
+        let out = attn_fwd(&g, &x, &views).out;
+        assert_eq!(out.shape, vec![1, 3, 4]);
+        assert!(std::ptr::eq(views[2], &owned[2]));
     }
 }

@@ -1,72 +1,170 @@
-//! Native fused train step: full-model forward + backward + AdamW in one
-//! call, matching the contract of the lowered `train_step` artifacts
-//! (inputs [params, m, v, step, lr_scale, tokens, targets], outputs
-//! [loss, gnorm, params', m', v']).
+//! Native full-model training-step family: forward + backward (+ AdamW)
+//! for **every** architecture variant of python/compile/model.py — preln,
+//! parallel, fal, falplus (incl. `reuse_layer > 1`, Fig 17), ablation1,
+//! ablation2 — plus the gradient-only artifact kinds built on the same
+//! pass:
 //!
-//! The model math is the TP stage kernels run at tp = 1 (full weights), and
-//! the optimizer is coordinator::optim::adamw_step — the same pieces the TP
-//! trainer composes, which is what makes the TP-vs-fused equivalence test
-//! (rust/tests/tp_equivalence.rs) tight: the two paths differ only in f32
-//! summation order.
+//! * `train_step` ([`run`]): loss + grads + AdamW in one call, matching the
+//!   lowered artifact contract (inputs [params, m, v, step, lr_scale,
+//!   tokens, targets], outputs [loss, gnorm, params', m', v']).
+//! * `grad_step` ([`run_grad_step`]): loss + raw gradients in schema order
+//!   — the Fig 7 compression baselines own the optimizer in Rust.
+//! * `gradmag` ([`run_gradmag`]): per-block L2 norm of dLoss/d(MHA_i out)
+//!   — the Fig 4(a) first-attention-primacy measurement.
+//!
+//! The model math composes the TP stage kernels at tp = 1 (full weights),
+//! and the optimizer is coordinator::optim::adamw_step — the same pieces
+//! the TP trainer composes, which is what makes the TP-vs-fused
+//! equivalence test (rust/tests/tp_equivalence.rs) tight: the two paths
+//! differ only in f32 summation order. MoE-attention configs
+//! (`n_expert > 1`) route the query projection through
+//! [`super::moe`] instead of the fused stage.
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{ensure, Context, Result};
 
-use crate::config::{TrainConfig, Variant};
+use crate::config::{ModelConfig, TrainConfig, Variant};
 use crate::coordinator::optim::{adamw_step, zeros_like};
 use crate::coordinator::topology::NamedParams;
 use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::slots;
 use crate::runtime::Manifest;
 use crate::tensor::HostTensor;
 
 use super::kernels::{add, layernorm_bwd, AttnGeom};
+use super::moe::{moe_attn_bwd, moe_attn_fwd};
 use super::stages::{
     attn_bwd, attn_fwd, embed_bwd, embed_fwd, fal_fused_bwd, fal_fused_fwd,
     head_fwd_bwd, mlp_bwd, mlp_fwd,
 };
 
-/// Forward stash for one block (mirrors tp_trainer::BlockStash).
+/// Parsed model-level artifact metadata shared by every full-model kind.
+pub(crate) struct ModelMeta {
+    pub cfg: ModelConfig,
+    pub variant: Variant,
+    /// 1-based reuse source layer (Fig 17); 1 = the paper's FAL/FAL+.
+    pub reuse_layer: usize,
+    pub geom: AttnGeom,
+}
+
+pub(crate) fn model_meta(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+) -> Result<ModelMeta> {
+    let config = spec
+        .meta_str("config")
+        .context("model artifact missing config meta")?;
+    let cfg = manifest.config(config)?.clone();
+    let variant = Variant::parse(
+        spec.meta_str("variant")
+            .context("model artifact missing variant meta")?,
+    )?;
+    let batch = spec.meta.get("batch").context("missing batch meta")?.as_usize()?;
+    let reuse_layer = match spec.meta.get("reuse_layer") {
+        Some(v) => v.as_usize()?,
+        None => 1,
+    };
+    ensure!(
+        (1..=cfg.n_layer).contains(&reuse_layer),
+        "reuse_layer {reuse_layer} out of range for {} layers",
+        cfg.n_layer
+    );
+    let geom = AttnGeom {
+        batch,
+        seq: cfg.seq_len,
+        heads: cfg.n_head,
+        kv_heads: cfg.n_kv_head,
+        head_dim: cfg.head_dim(),
+    };
+    Ok(ModelMeta { cfg, variant, reuse_layer, geom })
+}
+
+/// How one block behaves, after resolving variant + reuse layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum BlockKind {
+    /// Standard Pre-LN block (also fal/falplus before the reuse layer and
+    /// ablation2's block 1).
+    PreLn,
+    /// GPT-J-style: MHA and MLP both read the block input (also ablation2
+    /// blocks > 1, whose MLP input is LN2(x) with no attention term).
+    Parallel,
+    /// FAL preparation block: fa = LNf(a) stored for later blocks.
+    FalPrep,
+    /// FAL block after preparation: one fused MHA ∥ MLP stage.
+    FalMain,
+    /// FAL+ preparation block: fa = a stored raw.
+    FalPlusPrep,
+    /// FAL+ block after preparation: MLP input LN2(x + a) + LNf_i(fa).
+    FalPlusMain,
+    /// Ablation 1: the *latest* attention through LNf_i, not the first.
+    Ablation1,
+}
+
+pub(crate) fn block_kind(variant: Variant, li: usize, reuse: usize) -> BlockKind {
+    use std::cmp::Ordering;
+    match variant {
+        Variant::PreLn => BlockKind::PreLn,
+        Variant::Parallel => BlockKind::Parallel,
+        Variant::Ablation1 => BlockKind::Ablation1,
+        Variant::Ablation2 => {
+            if li == 0 {
+                BlockKind::PreLn
+            } else {
+                BlockKind::Parallel
+            }
+        }
+        Variant::Fal => match (li + 1).cmp(&reuse) {
+            Ordering::Less => BlockKind::PreLn,
+            Ordering::Equal => BlockKind::FalPrep,
+            Ordering::Greater => BlockKind::FalMain,
+        },
+        Variant::FalPlus => match (li + 1).cmp(&reuse) {
+            Ordering::Less => BlockKind::PreLn,
+            Ordering::Equal => BlockKind::FalPlusPrep,
+            Ordering::Greater => BlockKind::FalPlusMain,
+        },
+    }
+}
+
+/// Forward stash for one block: the primal inputs the backward stages
+/// recompute from.
 struct Stash {
     x: HostTensor,
-    /// Pre-LN: h = x + MHA out. FAL block 1: the MHA output a1.
+    /// Pre-LN / FAL+ main: h = MLP's residual input. FAL/FAL+ prep and
+    /// ablation1: the raw MHA output a.
     h_or_a: Option<HostTensor>,
 }
 
-fn attn_params(p: &NamedParams, li: usize) -> Result<Vec<HostTensor>> {
-    Ok(vec![
-        p.blk(li, "ln1_g")?.clone(),
-        p.blk(li, "ln1_b")?.clone(),
-        p.blk(li, "wq")?.clone(),
-        p.blk(li, "wk")?.clone(),
-        p.blk(li, "wv")?.clone(),
-        p.blk(li, "wo")?.clone(),
-    ])
+/// Borrowed attention parameter bundle, in
+/// [`slots::ATTN_PARAM_SLOTS`] order — views into `NamedParams`, no clones.
+pub(crate) fn attn_params<'p>(
+    p: &'p NamedParams,
+    li: usize,
+) -> Result<Vec<&'p HostTensor>> {
+    slots::ATTN_PARAM_SLOTS
+        .iter()
+        .map(|f| p.blk(li, f))
+        .collect()
 }
 
-fn mlp_params(p: &NamedParams, li: usize) -> Result<Vec<HostTensor>> {
-    Ok(vec![
-        p.blk(li, "ln2_g")?.clone(),
-        p.blk(li, "ln2_b")?.clone(),
-        p.blk(li, "w1")?.clone(),
-        p.blk(li, "b1")?.clone(),
-        p.blk(li, "w2")?.clone(),
-        p.blk(li, "b2")?.clone(),
-    ])
+/// Borrowed MLP parameter bundle, in [`slots::MLP_PARAM_SLOTS`] order.
+pub(crate) fn mlp_params<'p>(
+    p: &'p NamedParams,
+    li: usize,
+) -> Result<Vec<&'p HostTensor>> {
+    slots::MLP_PARAM_SLOTS
+        .iter()
+        .map(|f| p.blk(li, f))
+        .collect()
 }
 
-/// fal_fused stage input order: x, fa, ln1_g, ln1_b, ln2_g, ln2_b,
-/// wq, wk, wv, wo, w1, b1, w2, b2 (see stages.py).
-fn fused_inputs(
-    x: &HostTensor,
-    fa: &HostTensor,
-    ap: &[HostTensor],
-    mp: &[HostTensor],
-) -> Vec<HostTensor> {
-    let mut v = vec![x.clone(), fa.clone()];
-    v.extend(ap[..2].iter().cloned());
-    v.extend(mp[..2].iter().cloned());
-    v.extend(ap[2..].iter().cloned());
-    v.extend(mp[2..].iter().cloned());
-    v
+/// fal_fused stage inputs via the shared named-slot builder (borrowed).
+fn fused_inputs<'a>(
+    x: &'a HostTensor,
+    fa: &'a HostTensor,
+    ap: &[&'a HostTensor],
+    mp: &[&'a HostTensor],
+) -> Result<Vec<&'a HostTensor>> {
+    slots::fused_inputs_from_parts(&x, &fa, ap, mp)
 }
 
 fn acc(grads: &mut NamedParams, name: &str, t: &HostTensor) {
@@ -78,96 +176,181 @@ fn acc_blk(grads: &mut NamedParams, li: usize, field: &str, t: &HostTensor) {
 }
 
 fn acc_attn(grads: &mut NamedParams, li: usize, out: &[HostTensor]) {
-    for (field, t) in
-        ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo"].into_iter().zip(out)
-    {
+    for (field, t) in slots::ATTN_PARAM_SLOTS.into_iter().zip(out) {
         acc_blk(grads, li, field, t);
     }
 }
 
 fn acc_mlp(grads: &mut NamedParams, li: usize, out: &[HostTensor]) {
-    for (field, t) in
-        ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"].into_iter().zip(out)
-    {
+    for (field, t) in slots::MLP_PARAM_SLOTS.into_iter().zip(out) {
         acc_blk(grads, li, field, t);
     }
 }
 
-pub fn run(
-    manifest: &Manifest,
-    spec: &ArtifactSpec,
-    inputs: &[HostTensor],
-) -> Result<Vec<HostTensor>> {
-    let config = spec
-        .meta_str("config")
-        .context("train_step artifact missing config meta")?;
-    let cfg = manifest.config(config)?.clone();
-    let variant = Variant::parse(
-        spec.meta_str("variant")
-            .context("train_step artifact missing variant meta")?,
-    )?;
-    let batch = spec.meta.get("batch").context("missing batch meta")?.as_usize()?;
-    let schema = manifest.schema(config)?.to_vec();
-    let np = schema.len();
-    ensure!(
-        inputs.len() == 3 * np + 4,
-        "train_step: {} inputs, expected {}",
-        inputs.len(),
-        3 * np + 4
-    );
-    let mut params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
-    let mut m = NamedParams::from_flat(&schema, inputs[np..2 * np].to_vec());
-    let mut v =
-        NamedParams::from_flat(&schema, inputs[2 * np..3 * np].to_vec());
-    let step = (inputs[3 * np].data[0].max(1.0)) as usize;
-    let lr_scale = inputs[3 * np + 1].data[0] as f64;
-    let tokens = &inputs[3 * np + 2];
-    let targets = &inputs[3 * np + 3];
-    let g = AttnGeom {
-        batch,
-        seq: cfg.seq_len,
-        heads: cfg.n_head,
-        kv_heads: cfg.n_kv_head,
-        head_dim: cfg.head_dim(),
+/// Block attention forward with the optional Fig 4(a) probe added to the
+/// output; dispatches to MoE-attention when the config has experts.
+fn block_attn_fwd(
+    mm: &ModelMeta,
+    params: &NamedParams,
+    li: usize,
+    x: &HostTensor,
+    probe: Option<&HostTensor>,
+) -> Result<HostTensor> {
+    let ap = attn_params(params, li)?;
+    let mut a = if mm.cfg.n_expert > 1 {
+        moe_attn_fwd(
+            &mm.geom,
+            x,
+            &ap,
+            params.blk(li, "router")?,
+            params.blk(li, "wq_experts")?,
+        )
+    } else {
+        attn_fwd(&mm.geom, x, &ap).out
     };
+    if let Some(p) = probe {
+        a.add_assign(p);
+    }
+    Ok(a)
+}
+
+/// Block attention backward: accumulates the attention parameter grads
+/// (incl. router/experts for MoE) and returns the dx contribution.
+fn block_attn_bwd(
+    mm: &ModelMeta,
+    params: &NamedParams,
+    li: usize,
+    x: &HostTensor,
+    da: &HostTensor,
+    grads: &mut NamedParams,
+) -> Result<HostTensor> {
+    let ap = attn_params(params, li)?;
+    if mm.cfg.n_expert > 1 {
+        let out = moe_attn_bwd(
+            &mm.geom,
+            x,
+            &ap,
+            params.blk(li, "router")?,
+            params.blk(li, "wq_experts")?,
+            da,
+        );
+        acc_attn(grads, li, &out.attn);
+        acc_blk(grads, li, "router", &out.drouter);
+        acc_blk(grads, li, "wq_experts", &out.dwq_experts);
+        Ok(out.dx)
+    } else {
+        let mut out = attn_bwd(&mm.geom, x, &ap, da);
+        let rest = out.split_off(1);
+        acc_attn(grads, li, &rest);
+        Ok(out.pop().unwrap())
+    }
+}
+
+/// Result of one full forward + backward pass.
+pub(crate) struct LossAndGrads {
+    pub loss: f32,
+    pub grads: NamedParams,
+    /// dLoss/d(MHA_i output) per block — the cotangent of model.py's
+    /// `probes` input; `gradmag` reports its norms.
+    pub d_attn_out: Vec<HostTensor>,
+}
+
+/// Full-model loss + gradients for any variant. `probes`, when given, is
+/// one [B,S,D] tensor per block added to that block's MHA output (the
+/// Fig 4(a) measurement surface; pass `None` for training).
+pub(crate) fn loss_and_grads(
+    mm: &ModelMeta,
+    params: &NamedParams,
+    tokens: &HostTensor,
+    targets: &HostTensor,
+    probes: Option<&[HostTensor]>,
+) -> Result<LossAndGrads> {
+    let l = mm.cfg.n_layer;
+    if let Some(p) = probes {
+        ensure!(p.len() == l, "probes: {} tensors for {} layers", p.len(), l);
+    }
+    let probe = |li: usize| probes.map(|p| &p[li]);
+    let moe = mm.cfg.n_expert > 1;
 
     // ------------------------------ forward ------------------------------
     let mut x = embed_fwd(tokens, params.get("wte")?, params.get("wpe")?);
-    let mut stash: Vec<Stash> = Vec::with_capacity(cfg.n_layer);
+    let mut stash: Vec<Stash> = Vec::with_capacity(l);
     let mut fa: Option<HostTensor> = None;
-    for li in 0..cfg.n_layer {
-        let ap = attn_params(&params, li)?;
-        let mp = mlp_params(&params, li)?;
-        match (variant, li) {
-            (Variant::PreLn, _) => {
-                let a = attn_fwd(&g, &x, &ap).out;
+    for li in 0..l {
+        match block_kind(mm.variant, li, mm.reuse_layer) {
+            BlockKind::PreLn => {
+                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
                 let h = add(&x, &a);
-                let mo = mlp_fwd(&h, None, &mp).out;
+                let mo = mlp_fwd(&h, None, &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
                 x = add(&h, &mo);
             }
-            (Variant::Fal, 0) => {
-                let a = attn_fwd(&g, &x, &ap).out;
+            BlockKind::Parallel => {
+                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
+                let mo = mlp_fwd(&x, None, &mlp_params(params, li)?).out;
+                stash.push(Stash { x: x.clone(), h_or_a: None });
+                x = add(&add(&x, &a), &mo);
+            }
+            BlockKind::FalPrep => {
+                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
                 let f = a.layernorm(
-                    params.blk(0, "lnf_g")?,
-                    params.blk(0, "lnf_b")?,
+                    params.blk(li, "lnf_g")?,
+                    params.blk(li, "lnf_b")?,
                 );
-                let mo = mlp_fwd(&x, Some(&f), &mp).out;
+                let mo = mlp_fwd(&x, Some(&f), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
                 x = add(&add(&x, &a), &mo);
                 fa = Some(f);
             }
-            (Variant::Fal, _) => {
-                let fa_t = fa.as_ref().expect("fa set in block 1");
-                let fin = fused_inputs(&x, fa_t, &ap, &mp);
-                let out = fal_fused_fwd(&g, &fin);
+            BlockKind::FalMain if !moe => {
+                let fa_t = fa.as_ref().expect("fa set in the preparation block");
+                let ap = attn_params(params, li)?;
+                let mp = mlp_params(params, li)?;
+                let fin = fused_inputs(&x, fa_t, &ap, &mp)?;
+                let mut out = fal_fused_fwd(&mm.geom, &fin);
+                // The probe shifts the (linear) block output directly.
+                if let Some(p) = probe(li) {
+                    out.add_assign(p);
+                }
                 stash.push(Stash { x: x.clone(), h_or_a: None });
                 x = add(&x, &out);
             }
-            _ => bail!(
-                "native train_step implements preln and fal, got {}",
-                variant.name()
-            ),
+            BlockKind::FalMain => {
+                // MoE attention has no fused stage; compose explicitly.
+                let fa_t = fa.as_ref().expect("fa set in the preparation block");
+                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
+                let mo = mlp_fwd(&x, Some(fa_t), &mlp_params(params, li)?).out;
+                stash.push(Stash { x: x.clone(), h_or_a: None });
+                x = add(&add(&x, &a), &mo);
+            }
+            BlockKind::FalPlusPrep => {
+                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
+                let mo = mlp_fwd(&x, Some(&a), &mlp_params(params, li)?).out;
+                stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
+                x = add(&add(&x, &a), &mo);
+                fa = Some(a);
+            }
+            BlockKind::FalPlusMain => {
+                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
+                let h = add(&x, &a);
+                let fan = fa.as_ref().unwrap().layernorm(
+                    params.blk(li, "lnf_g")?,
+                    params.blk(li, "lnf_b")?,
+                );
+                let mo = mlp_fwd(&h, Some(&fan), &mlp_params(params, li)?).out;
+                stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
+                x = add(&h, &mo);
+            }
+            BlockKind::Ablation1 => {
+                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
+                let an = a.layernorm(
+                    params.blk(li, "lnf_g")?,
+                    params.blk(li, "lnf_b")?,
+                );
+                let mo = mlp_fwd(&x, Some(&an), &mlp_params(params, li)?).out;
+                stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
+                x = add(&add(&x, &a), &mo);
+            }
         }
     }
     let head = head_fwd_bwd(
@@ -180,54 +363,73 @@ pub fn run(
     let loss = head[0].data[0];
 
     // ------------------------------ backward -----------------------------
-    let mut grads = zeros_like(&params);
+    let mut grads = zeros_like(params);
     let mut dx = head[2].clone();
     acc(&mut grads, "lnF_g", &head[3]);
     acc(&mut grads, "lnF_b", &head[4]);
     acc(&mut grads, "wte", &head[5]);
 
+    let mut d_attn: Vec<Option<HostTensor>> = (0..l).map(|_| None).collect();
     let mut dfa: Option<HostTensor> = None;
-    for li in (0..cfg.n_layer).rev() {
-        let ap = attn_params(&params, li)?;
-        let mp = mlp_params(&params, li)?;
-        dx = match (variant, li) {
-            (Variant::PreLn, _) => {
+    for li in (0..l).rev() {
+        dx = match block_kind(mm.variant, li, mm.reuse_layer) {
+            BlockKind::PreLn => {
                 let h = stash[li].h_or_a.as_ref().unwrap();
-                let out = mlp_bwd(h, None, &mp, &dx);
+                let out = mlp_bwd(h, None, &mlp_params(params, li)?, &dx);
                 acc_mlp(&mut grads, li, &out[1..]);
                 let mut dh = out[0].clone();
                 dh.add_assign(&dx); // residual h -> x'
-                let out2 = attn_bwd(&g, &stash[li].x, &ap, &dh);
-                acc_attn(&mut grads, li, &out2[1..]);
-                add(&out2[0], &dh) // residual x -> h
+                d_attn[li] = Some(dh.clone()); // h = x + a: da = dh
+                let dx_a =
+                    block_attn_bwd(mm, params, li, &stash[li].x, &dh, &mut grads)?;
+                add(&dx_a, &dh) // residual x -> h
             }
-            (Variant::Fal, 0) => {
-                let a1 = stash[0].h_or_a.as_ref().unwrap();
+            BlockKind::Parallel => {
+                let out =
+                    mlp_bwd(&stash[li].x, None, &mlp_params(params, li)?, &dx);
+                acc_mlp(&mut grads, li, &out[1..]);
+                d_attn[li] = Some(dx.clone()); // a enters only the residual
+                let dx_a =
+                    block_attn_bwd(mm, params, li, &stash[li].x, &dx, &mut grads)?;
+                let mut d = add(&out[0], &dx_a);
+                d.add_assign(&dx); // direct residual
+                d
+            }
+            BlockKind::FalPrep => {
+                let a1 = stash[li].h_or_a.as_ref().unwrap();
                 let fa_t = fa.as_ref().unwrap();
-                let out = mlp_bwd(&stash[0].x, Some(fa_t), &mp, &dx);
-                acc_mlp(&mut grads, 0, &out[2..]);
+                let out = mlp_bwd(
+                    &stash[li].x,
+                    Some(fa_t),
+                    &mlp_params(params, li)?,
+                    &dx,
+                );
+                acc_mlp(&mut grads, li, &out[2..]);
                 let dx_mlp = out[0].clone();
                 let mut dfa_total = out[1].clone();
-                if let Some(a) = dfa.take() {
-                    dfa_total.add_assign(&a);
+                if let Some(acc_) = dfa.take() {
+                    dfa_total.add_assign(&acc_);
                 }
                 let (da_ln, dg_, db_) =
-                    layernorm_bwd(a1, params.blk(0, "lnf_g")?, &dfa_total);
-                acc_blk(&mut grads, 0, "lnf_g", &dg_);
-                acc_blk(&mut grads, 0, "lnf_b", &db_);
+                    layernorm_bwd(a1, params.blk(li, "lnf_g")?, &dfa_total);
+                acc_blk(&mut grads, li, "lnf_g", &dg_);
+                acc_blk(&mut grads, li, "lnf_b", &db_);
                 // a1 receives the residual path and the LNf path.
                 let mut da = dx.clone();
                 da.add_assign(&da_ln);
-                let out2 = attn_bwd(&g, &stash[0].x, &ap, &da);
-                acc_attn(&mut grads, 0, &out2[1..]);
-                let mut d = add(&out2[0], &dx_mlp);
-                d.add_assign(&dx); // direct residual x1 -> x2
+                d_attn[li] = Some(da.clone());
+                let dx_a =
+                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let mut d = add(&dx_a, &dx_mlp);
+                d.add_assign(&dx); // direct residual x -> x'
                 d
             }
-            (Variant::Fal, _) => {
+            BlockKind::FalMain if !moe => {
                 let fa_t = fa.as_ref().unwrap();
-                let fin = fused_inputs(&stash[li].x, fa_t, &ap, &mp);
-                let out = fal_fused_bwd(&g, &fin, &dx);
+                let ap = attn_params(params, li)?;
+                let mp = mlp_params(params, li)?;
+                let fin = fused_inputs(&stash[li].x, fa_t, &ap, &mp)?;
+                let out = fal_fused_bwd(&mm.geom, &fin, &dx);
                 // [dx, dfa, dln1_g, dln1_b, dln2_g, dln2_b, dwq, dwk,
                 //  dwv, dwo, dw1, db1, dw2, db2]
                 acc_attn(
@@ -250,9 +452,107 @@ pub fn run(
                     Some(a) => a.add_assign(&out[1]),
                     None => dfa = Some(out[1].clone()),
                 }
+                // out_fused = a + m is linear in a: da = dx (pre-residual).
+                d_attn[li] = Some(dx.clone());
                 add(&out[0], &dx) // residual
             }
-            _ => unreachable!(),
+            BlockKind::FalMain => {
+                let fa_t = fa.as_ref().unwrap();
+                let out = mlp_bwd(
+                    &stash[li].x,
+                    Some(fa_t),
+                    &mlp_params(params, li)?,
+                    &dx,
+                );
+                acc_mlp(&mut grads, li, &out[2..]);
+                match &mut dfa {
+                    Some(a) => a.add_assign(&out[1]),
+                    None => dfa = Some(out[1].clone()),
+                }
+                d_attn[li] = Some(dx.clone());
+                let dx_a =
+                    block_attn_bwd(mm, params, li, &stash[li].x, &dx, &mut grads)?;
+                let mut d = add(&out[0], &dx_a);
+                d.add_assign(&dx);
+                d
+            }
+            BlockKind::FalPlusPrep => {
+                let a1 = stash[li].h_or_a.as_ref().unwrap();
+                let out = mlp_bwd(
+                    &stash[li].x,
+                    Some(a1), // fa == a1, stored raw
+                    &mlp_params(params, li)?,
+                    &dx,
+                );
+                acc_mlp(&mut grads, li, &out[2..]);
+                // a1 receives: residual, the direct MLP-input add, and the
+                // accumulated LNf paths of every later block.
+                let mut da = dx.clone();
+                da.add_assign(&out[1]);
+                if let Some(acc_) = dfa.take() {
+                    da.add_assign(&acc_);
+                }
+                d_attn[li] = Some(da.clone());
+                let dx_a =
+                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let mut d = add(&dx_a, &out[0]);
+                d.add_assign(&dx);
+                d
+            }
+            BlockKind::FalPlusMain => {
+                let h = stash[li].h_or_a.as_ref().unwrap();
+                let fa_t = fa.as_ref().unwrap();
+                let fan = fa_t.layernorm(
+                    params.blk(li, "lnf_g")?,
+                    params.blk(li, "lnf_b")?,
+                );
+                let out =
+                    mlp_bwd(h, Some(&fan), &mlp_params(params, li)?, &dx);
+                acc_mlp(&mut grads, li, &out[2..]);
+                let (dfa_i, dg_, db_) =
+                    layernorm_bwd(fa_t, params.blk(li, "lnf_g")?, &out[1]);
+                acc_blk(&mut grads, li, "lnf_g", &dg_);
+                acc_blk(&mut grads, li, "lnf_b", &db_);
+                match &mut dfa {
+                    Some(a) => a.add_assign(&dfa_i),
+                    None => dfa = Some(dfa_i),
+                }
+                // h = x + a feeds both the MLP and the residual to x'.
+                let mut da = dx.clone();
+                da.add_assign(&out[0]);
+                d_attn[li] = Some(da.clone());
+                let dx_a =
+                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let mut d = add(&dx_a, &out[0]);
+                d.add_assign(&dx);
+                d
+            }
+            BlockKind::Ablation1 => {
+                let a1 = stash[li].h_or_a.as_ref().unwrap();
+                let an = a1.layernorm(
+                    params.blk(li, "lnf_g")?,
+                    params.blk(li, "lnf_b")?,
+                );
+                let out = mlp_bwd(
+                    &stash[li].x,
+                    Some(&an),
+                    &mlp_params(params, li)?,
+                    &dx,
+                );
+                acc_mlp(&mut grads, li, &out[2..]);
+                let (da_ln, dg_, db_) =
+                    layernorm_bwd(a1, params.blk(li, "lnf_g")?, &out[1]);
+                acc_blk(&mut grads, li, "lnf_g", &dg_);
+                acc_blk(&mut grads, li, "lnf_b", &db_);
+                let mut da = dx.clone();
+                da.add_assign(&da_ln);
+                d_attn[li] = Some(da.clone());
+                let dx_a =
+                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let mut d = add(&dx_a, &out[0]);
+                d.add_assign(&dx);
+                d
+            }
         };
     }
     let (dwte, dwpe) =
@@ -260,10 +560,41 @@ pub fn run(
     acc(&mut grads, "wte", &dwte);
     acc(&mut grads, "wpe", &dwpe);
 
-    // ------------------------------ optimizer ----------------------------
+    Ok(LossAndGrads {
+        loss,
+        grads,
+        d_attn_out: d_attn.into_iter().map(|t| t.unwrap()).collect(),
+    })
+}
+
+/// `train_step`: loss + grads + AdamW, one call.
+pub fn run(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mm = model_meta(manifest, spec)?;
+    let schema = manifest.schema(&mm.cfg.name)?.to_vec();
+    let np = schema.len();
+    ensure!(
+        inputs.len() == 3 * np + 4,
+        "train_step: {} inputs, expected {}",
+        inputs.len(),
+        3 * np + 4
+    );
+    let mut params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let mut m = NamedParams::from_flat(&schema, inputs[np..2 * np].to_vec());
+    let mut v =
+        NamedParams::from_flat(&schema, inputs[2 * np..3 * np].to_vec());
+    let step = (inputs[3 * np].data[0].max(1.0)) as usize;
+    let lr_scale = inputs[3 * np + 1].data[0] as f64;
+    let tokens = &inputs[3 * np + 2];
+    let targets = &inputs[3 * np + 3];
+
+    let out = loss_and_grads(&mm, &params, tokens, targets, None)?;
     let gnorm = adamw_step(
         &mut params,
-        &grads,
+        &out.grads,
         &mut m,
         &mut v,
         step,
@@ -272,10 +603,179 @@ pub fn run(
     );
 
     let mut outs = Vec::with_capacity(2 + 3 * np);
-    outs.push(HostTensor::scalar(loss));
+    outs.push(HostTensor::scalar(out.loss));
     outs.push(HostTensor::scalar(gnorm as f32));
     outs.extend(params.to_flat());
     outs.extend(m.to_flat());
     outs.extend(v.to_flat());
     Ok(outs)
+}
+
+/// `grad_step`: inputs [params, tokens, targets], outputs [loss, grads...]
+/// with the gradients in parameter-schema order.
+pub fn run_grad_step(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mm = model_meta(manifest, spec)?;
+    let schema = manifest.schema(&mm.cfg.name)?.to_vec();
+    let np = schema.len();
+    ensure!(
+        inputs.len() == np + 2,
+        "grad_step: {} inputs, expected {}",
+        inputs.len(),
+        np + 2
+    );
+    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let out =
+        loss_and_grads(&mm, &params, &inputs[np], &inputs[np + 1], None)?;
+    let mut outs = Vec::with_capacity(1 + np);
+    outs.push(HostTensor::scalar(out.loss));
+    outs.extend(out.grads.to_flat());
+    Ok(outs)
+}
+
+/// `gradmag`: inputs [params, tokens, targets], output one `[L]` tensor
+/// of ||dLoss/d(MHA_i output)|| — Fig 4(a).
+pub fn run_gradmag(
+    manifest: &Manifest,
+    spec: &ArtifactSpec,
+    inputs: &[HostTensor],
+) -> Result<Vec<HostTensor>> {
+    let mm = model_meta(manifest, spec)?;
+    let schema = manifest.schema(&mm.cfg.name)?.to_vec();
+    let np = schema.len();
+    ensure!(
+        inputs.len() == np + 2,
+        "gradmag: {} inputs, expected {}",
+        inputs.len(),
+        np + 2
+    );
+    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let out =
+        loss_and_grads(&mm, &params, &inputs[np], &inputs[np + 1], None)?;
+    let norms: Vec<f32> =
+        out.d_attn_out.iter().map(|t| t.norm() as f32).collect();
+    Ok(vec![HostTensor::from_vec(&[mm.cfg.n_layer], norms)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::util::rng::Rng;
+
+    fn setup(
+        config: &str,
+        variant: Variant,
+        reuse: usize,
+    ) -> (ModelMeta, NamedParams, HostTensor, HostTensor) {
+        let eng = NativeBackend::synthetic();
+        let cfg = eng.manifest().config(config).unwrap().clone();
+        let schema = eng.manifest().schema(config).unwrap().to_vec();
+        let params =
+            NamedParams::from_flat(&schema, eng.load_params(config, 0).unwrap());
+        let batch = 2usize;
+        let geom = AttnGeom {
+            batch,
+            seq: cfg.seq_len,
+            heads: cfg.n_head,
+            kv_heads: cfg.n_kv_head,
+            head_dim: cfg.head_dim(),
+        };
+        let mut rng = Rng::new(5);
+        let toks: Vec<i32> = (0..batch * cfg.seq_len)
+            .map(|_| rng.below(cfg.vocab_size) as i32)
+            .collect();
+        let mut shifted = toks.clone();
+        shifted.rotate_left(1);
+        let tokens = HostTensor::from_i32(&[batch, cfg.seq_len], &toks);
+        let targets = HostTensor::from_i32(&[batch, cfg.seq_len], &shifted);
+        let mm = ModelMeta { cfg, variant, reuse_layer: reuse, geom };
+        (mm, params, tokens, targets)
+    }
+
+    /// dLoss/d(MHA_i out) must match a central difference through the probe
+    /// input — for the decomposed paths *and* the fused FAL path.
+    #[test]
+    fn probe_gradient_finite_difference() {
+        for variant in
+            [Variant::PreLn, Variant::Fal, Variant::FalPlus, Variant::Parallel]
+        {
+            let (mm, params, tokens, targets) = setup("micro", variant, 1);
+            let l = mm.cfg.n_layer;
+            let shape =
+                [mm.geom.batch, mm.geom.seq, mm.cfg.d_model];
+            let zeros: Vec<HostTensor> =
+                (0..l).map(|_| HostTensor::zeros(&shape)).collect();
+            let base = loss_and_grads(
+                &mm, &params, &tokens, &targets, Some(&zeros))
+            .unwrap();
+            let h = 1e-2f32;
+            for li in 0..l {
+                for idx in [0usize, 7, zeros[0].len() - 1] {
+                    let mut pp = zeros.clone();
+                    let mut pm = zeros.clone();
+                    pp[li].data[idx] += h;
+                    pm[li].data[idx] -= h;
+                    let lp = loss_and_grads(
+                        &mm, &params, &tokens, &targets, Some(&pp))
+                    .unwrap()
+                    .loss;
+                    let lm = loss_and_grads(
+                        &mm, &params, &tokens, &targets, Some(&pm))
+                    .unwrap()
+                    .loss;
+                    let num = (lp - lm) / (2.0 * h);
+                    let ana = base.d_attn_out[li].data[idx];
+                    assert!(
+                        (num - ana).abs() < 2e-2 * ana.abs().max(1.0),
+                        "{:?} block {li} idx {idx}: numeric {num} vs {ana}",
+                        variant
+                    );
+                }
+            }
+        }
+    }
+
+    /// Probes are additive on the attention output, so zero probes must not
+    /// change the loss relative to the no-probe path.
+    #[test]
+    fn zero_probes_are_identity() {
+        for variant in [Variant::PreLn, Variant::Fal, Variant::Ablation1] {
+            let (mm, params, tokens, targets) = setup("micro", variant, 1);
+            let shape = [mm.geom.batch, mm.geom.seq, mm.cfg.d_model];
+            let zeros: Vec<HostTensor> = (0..mm.cfg.n_layer)
+                .map(|_| HostTensor::zeros(&shape))
+                .collect();
+            let a = loss_and_grads(&mm, &params, &tokens, &targets, None)
+                .unwrap()
+                .loss;
+            let b =
+                loss_and_grads(&mm, &params, &tokens, &targets, Some(&zeros))
+                    .unwrap()
+                    .loss;
+            assert_eq!(a, b, "{variant:?}");
+        }
+    }
+
+    /// reuse_layer shifts the preparation block: with reuse = L the whole
+    /// model up to the last block behaves like preln.
+    #[test]
+    fn reuse_layer_shifts_preparation_block() {
+        let (mm, params, tokens, targets) =
+            setup("micro", Variant::FalPlus, 2);
+        assert_eq!(block_kind(Variant::FalPlus, 0, 2), BlockKind::PreLn);
+        assert_eq!(block_kind(Variant::FalPlus, 1, 2), BlockKind::FalPlusPrep);
+        let out =
+            loss_and_grads(&mm, &params, &tokens, &targets, None).unwrap();
+        assert!(out.loss.is_finite());
+        // Block 0 ran as preln: its lnf parameters receive no gradient.
+        assert_eq!(
+            out.grads.blk(0, "lnf_g").unwrap().norm(),
+            0.0,
+            "preln-run block must not touch lnf"
+        );
+    }
 }

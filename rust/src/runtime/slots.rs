@@ -1,0 +1,174 @@
+//! Named-slot input ordering for composite stages — the single source of
+//! truth for the `fal_fused` stage contract.
+//!
+//! The fused FAL stage takes 14 inputs and every LayerNorm slot shares the
+//! shape `[d]`, so a divergence between the builders that assemble those
+//! inputs (the TP trainer, the native fused train step, and the synthetic
+//! manifest's stage specs) would pass shape validation and silently corrupt
+//! gradients. Historically the ordering was hand-maintained in all three
+//! places; this module owns it once:
+//!
+//! * [`FAL_FUSED_SLOTS`] — the canonical 14-slot order, mirroring
+//!   python/compile/stages.py::make_fal_fused_fwd,
+//! * [`build_fused_inputs`] — assembles an input vector from named slots,
+//!   rejecting missing, duplicate, or unknown names and emitting the
+//!   canonical order regardless of how the caller listed them,
+//! * [`ATTN_PARAM_SLOTS`] / [`MLP_PARAM_SLOTS`] — the per-stage parameter
+//!   bundles (also the order of `BlockShard::attn` / `BlockShard::mlp` in
+//!   the coordinator).
+//!
+//! The builder is generic over the tensor handle so the TP trainer can
+//! build owned `HostTensor` vectors while the native train step builds
+//! borrowed `&HostTensor` views without cloning block weights.
+
+use anyhow::{bail, ensure, Result};
+
+/// Attention-stage parameter slots, in stage-input order (after `x`).
+pub const ATTN_PARAM_SLOTS: [&str; 6] = ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo"];
+
+/// MLP-stage parameter slots, in stage-input order (after `h`[, `fa`]).
+pub const MLP_PARAM_SLOTS: [&str; 6] = ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"];
+
+/// Canonical `fal_fused` stage input order (python/compile/stages.py):
+/// activations first, then the four LN vectors, then attention weights,
+/// then MLP weights.
+pub const FAL_FUSED_SLOTS: [&str; 14] = [
+    "x", "fa", "ln1_g", "ln1_b", "ln2_g", "ln2_b", "wq", "wk", "wv", "wo",
+    "w1", "b1", "w2", "b2",
+];
+
+/// Assemble the 14 `fal_fused` stage inputs from named slots.
+///
+/// The output is always in [`FAL_FUSED_SLOTS`] order, whatever order the
+/// caller supplied; a missing, duplicated, or unknown slot name is an
+/// error. `T` is any cloneable tensor handle (`HostTensor`, `&HostTensor`,
+/// `TensorSpec`, ...).
+pub fn build_fused_inputs<T: Clone>(slots: &[(&str, T)]) -> Result<Vec<T>> {
+    ensure!(
+        slots.len() == FAL_FUSED_SLOTS.len(),
+        "fal_fused inputs: got {} slots, expected {}",
+        slots.len(),
+        FAL_FUSED_SLOTS.len()
+    );
+    for (name, _) in slots {
+        if !FAL_FUSED_SLOTS.contains(name) {
+            bail!("fal_fused inputs: unknown slot {name:?}");
+        }
+    }
+    let mut out = Vec::with_capacity(FAL_FUSED_SLOTS.len());
+    for name in FAL_FUSED_SLOTS {
+        let mut found: Option<&T> = None;
+        for (n, v) in slots {
+            if *n == name {
+                if found.is_some() {
+                    bail!("fal_fused inputs: duplicate slot {name:?}");
+                }
+                found = Some(v);
+            }
+        }
+        match found {
+            Some(v) => out.push(v.clone()),
+            None => bail!("fal_fused inputs: missing slot {name:?}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Convenience wrapper for the common case: `x`, `fa`, the attention
+/// parameter bundle (in [`ATTN_PARAM_SLOTS`] order) and the MLP bundle
+/// (in [`MLP_PARAM_SLOTS`] order).
+pub fn fused_inputs_from_parts<T: Clone>(
+    x: &T,
+    fa: &T,
+    attn: &[T],
+    mlp: &[T],
+) -> Result<Vec<T>> {
+    ensure!(
+        attn.len() == ATTN_PARAM_SLOTS.len(),
+        "fal_fused inputs: attention bundle has {} tensors, expected {}",
+        attn.len(),
+        ATTN_PARAM_SLOTS.len()
+    );
+    ensure!(
+        mlp.len() == MLP_PARAM_SLOTS.len(),
+        "fal_fused inputs: MLP bundle has {} tensors, expected {}",
+        mlp.len(),
+        MLP_PARAM_SLOTS.len()
+    );
+    // Assemble by reference and clone exactly once at emission, so owned
+    // tensor handles (the TP trainer's case) are not copied twice.
+    let mut slots: Vec<(&str, &T)> = Vec::with_capacity(FAL_FUSED_SLOTS.len());
+    slots.push(("x", x));
+    slots.push(("fa", fa));
+    for (n, v) in ATTN_PARAM_SLOTS.iter().zip(attn) {
+        slots.push((n, v));
+    }
+    for (n, v) in MLP_PARAM_SLOTS.iter().zip(mlp) {
+        slots.push((n, v));
+    }
+    Ok(build_fused_inputs(&slots)?.into_iter().cloned().collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_list_is_parts_concatenation() {
+        let mut want = vec!["x", "fa"];
+        want.extend(ATTN_PARAM_SLOTS);
+        want.extend(MLP_PARAM_SLOTS);
+        assert_eq!(FAL_FUSED_SLOTS.to_vec(), want);
+    }
+
+    #[test]
+    fn canonical_order_regardless_of_insertion_order() {
+        // Feed the slots reversed; the output must come back canonical.
+        let slots: Vec<(&str, usize)> = FAL_FUSED_SLOTS
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (*n, i))
+            .rev()
+            .collect();
+        let out = build_fused_inputs(&slots).unwrap();
+        assert_eq!(out, (0..FAL_FUSED_SLOTS.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rejects_missing_duplicate_unknown_and_arity() {
+        let ok: Vec<(&str, usize)> = FAL_FUSED_SLOTS
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (*n, i))
+            .collect();
+        assert!(build_fused_inputs(&ok).is_ok());
+
+        // A "permuted" builder bug — e.g. writing ln2_g where ln1_g
+        // belongs — shows up as a duplicate + missing name and is rejected
+        // instead of silently reordering same-shape LN tensors.
+        let mut dup = ok.clone();
+        dup[2].0 = "ln2_g"; // was ln1_g
+        let err = build_fused_inputs(&dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate"), "{err}");
+
+        let mut unknown = ok.clone();
+        unknown[0].0 = "xx";
+        let err = build_fused_inputs(&unknown).unwrap_err().to_string();
+        assert!(err.contains("unknown"), "{err}");
+
+        let err = build_fused_inputs(&ok[..13]).unwrap_err().to_string();
+        assert!(err.contains("14"), "{err}");
+    }
+
+    #[test]
+    fn parts_wrapper_validates_bundle_lengths() {
+        let t = 0usize;
+        let attn = [1usize; 6];
+        let mlp = [2usize; 6];
+        let out = fused_inputs_from_parts(&t, &t, &attn, &mlp).unwrap();
+        // The historical bug class: the LN slots of the two bundles must
+        // interleave as ln1(attn), ln2(mlp), then weights attn-then-mlp.
+        assert_eq!(out, vec![0, 0, 1, 1, 2, 2, 1, 1, 1, 1, 2, 2, 2, 2]);
+        assert!(fused_inputs_from_parts(&t, &t, &attn[..5], &mlp).is_err());
+    }
+}

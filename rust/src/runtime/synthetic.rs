@@ -3,15 +3,30 @@
 //! The PJRT path reads `artifacts/manifest.json` written by aot.py; the
 //! native backend needs the *same* contract (configs, parameter schemas,
 //! per-stage tensor specs) without any files on disk. This module generates
-//! it from a [`ModelConfig`], registering for each (config, tp, batch):
+//! it from a [`ModelConfig`], registering:
 //!
-//! * the 13 TP stage artifacts of python/compile/stages.py (named with
-//!   [`Manifest::tp_stage_name`], so trainers cannot tell the difference),
-//! * fused `train_step` artifacts for the `preln` and `fal` variants.
+//! * the 13 TP stage artifacts of python/compile/stages.py per registered
+//!   (config, tp, batch), named with [`Manifest::tp_stage_name`] so the
+//!   trainers cannot tell the difference from lowered artifacts,
+//! * fused `train_step` artifacts for every architecture variant (preln,
+//!   parallel, fal, falplus incl. `falplus_k2`/`falplus_k3` reuse-layer
+//!   ablations, ablation1, ablation2 — per config as listed in
+//!   [`default_specs`]),
+//! * the model-level analysis kinds `grad_step`, `eval_masked`,
+//!   `score_options`, `gradmag` and `capture`, so every `fal exp` id runs
+//!   on the default build.
+//!
+//! The `fal_fused` stage input ordering is derived from
+//! [`slots::FAL_FUSED_SLOTS`] — the same named-slot source the TP trainer
+//! and the native train step assemble their inputs from, so the three can
+//! never drift (all LN slots share shape `[d]`, so a drift would pass
+//! shape validation and silently corrupt gradients).
 //!
 //! Parameter schemas use the same flattened-pytree naming and (sorted)
 //! order as aot.py: per block `b1, b2, ln1_b, ln1_g, ln2_b, ln2_g, lnf_b,
-//! lnf_g, w1, w2, wk, wo, wq, wv`, then `lnF_b, lnF_g, wpe, wte`.
+//! lnf_g, [router,] w1, w2, wk, wo, wq, [wq_experts,] wv`, then `lnF_b,
+//! lnF_g, wpe, wte` (`router`/`wq_experts` only for MoE-attention
+//! configs).
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -21,41 +36,155 @@ use crate::tensor::DType;
 use crate::util::json::Json;
 
 use super::artifact::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};
+use super::slots;
 
-/// One synthetic entry: a model shape, the batch size its stages are
-/// "lowered" for, and the TP degrees to register.
+/// One synthetic entry: a model shape, the batch size its artifacts are
+/// "lowered" for, the TP degrees to register stages at, and which model-
+/// level artifact kinds/variants to register.
 #[derive(Debug, Clone)]
 pub struct SyntheticSpec {
     pub cfg: ModelConfig,
     pub batch: usize,
     pub tps: Vec<usize>,
+    /// `train_step` registrations: (tag, variant, reuse_layer).
+    pub train: Vec<(&'static str, &'static str, usize)>,
+    /// Variant tags to register `eval_masked` + `score_options` for.
+    pub eval_tags: Vec<&'static str>,
+    /// Variant tags to register `grad_step` + `gradmag` for.
+    pub grad_tags: Vec<&'static str>,
+    /// Register the `capture` (Fig 3a activation) artifact (preln).
+    pub capture: bool,
+}
+
+/// All six architecture variants (python/compile/configs.py::VARIANTS).
+pub const ALL_VARIANTS: [&str; 6] =
+    ["preln", "parallel", "fal", "falplus", "ablation1", "ablation2"];
+
+/// The paper's headline trio (depth scaling, GQA/MoE generalization).
+const HEADLINE: [&str; 3] = ["preln", "fal", "falplus"];
+
+/// Tags scored in Table 1 (eval + zero-shot).
+const EVAL_TAGS: [&str; 4] = ["preln", "parallel", "fal", "falplus"];
+
+/// Tags with gradient-only artifacts (Fig 7 compression, Fig 4a).
+const GRAD_TAGS: [&str; 2] = ["preln", "fal"];
+
+/// Tags the ~25M `e2e` demo registers (train + eval; mirrors the aot.py
+/// `e2e` group). Coincidentally equal to [`GRAD_TAGS`] today, but the two
+/// lists evolve independently.
+const E2E_TAGS: [&str; 2] = ["preln", "fal"];
+
+fn base_variants(tags: &[&'static str]) -> Vec<(&'static str, &'static str, usize)> {
+    tags.iter().map(|t| (*t, *t, 1)).collect()
 }
 
 /// The built-in config set, mirroring the aot.py groups: `micro` (gradient
-/// checks), `tiny` (fast tests), `small` (experiments), `e2e` (the ~25M
-/// end-to-end demo).
+/// checks), `tiny` (fast tests), `small` (experiments) with its `deep8` /
+/// `deep12` depth-scaling and `small_gqa` / `small_moe` generalization
+/// companions, and `e2e` (the ~25M end-to-end demo).
 pub fn default_specs() -> Vec<SyntheticSpec> {
     // (vocab, d_model, n_head, n_kv_head, n_layer, d_ff, seq_len)
+    let mut reuse_ablation: Vec<(&'static str, &'static str, usize)> =
+        base_variants(&ALL_VARIANTS);
+    reuse_ablation.push(("falplus_k2", "falplus", 2));
+
+    let mut small_train = reuse_ablation.clone();
+    small_train.push(("falplus_k3", "falplus", 3));
+
     vec![
         SyntheticSpec {
-            cfg: model_config("micro", (31, 8, 2, 2, 2, 16, 5)),
+            cfg: model_config("micro", (31, 8, 2, 2, 2, 16, 5), 1),
             batch: 2,
             tps: vec![1, 2],
+            train: reuse_ablation.clone(),
+            eval_tags: EVAL_TAGS.to_vec(),
+            grad_tags: GRAD_TAGS.to_vec(),
+            capture: true,
+        },
+        // Micro-scale GQA / MoE companions: same artifact surface as the
+        // Fig 20 hosts at gradient-check cost (CI-speed integration tests).
+        SyntheticSpec {
+            cfg: model_config("micro_gqa", (31, 8, 2, 1, 2, 16, 5), 1),
+            batch: 2,
+            tps: vec![],
+            train: base_variants(&HEADLINE),
+            eval_tags: vec![],
+            grad_tags: vec![],
+            capture: false,
         },
         SyntheticSpec {
-            cfg: model_config("tiny", (256, 64, 4, 4, 4, 256, 64)),
+            cfg: model_config("micro_moe", (31, 8, 2, 2, 2, 16, 5), 2),
+            batch: 2,
+            tps: vec![],
+            train: base_variants(&HEADLINE),
+            eval_tags: vec![],
+            grad_tags: vec![],
+            capture: false,
+        },
+        SyntheticSpec {
+            cfg: model_config("tiny", (256, 64, 4, 4, 4, 256, 64), 1),
             batch: 4,
             tps: vec![1, 2, 4],
+            train: reuse_ablation,
+            eval_tags: EVAL_TAGS.to_vec(),
+            grad_tags: GRAD_TAGS.to_vec(),
+            capture: true,
         },
         SyntheticSpec {
-            cfg: model_config("small", (512, 192, 8, 8, 6, 768, 128)),
+            cfg: model_config("small", (512, 192, 8, 8, 6, 768, 128), 1),
             batch: 8,
             tps: vec![1, 2, 4, 8],
+            train: small_train,
+            eval_tags: EVAL_TAGS.to_vec(),
+            grad_tags: GRAD_TAGS.to_vec(),
+            capture: true,
+        },
+        // Fig 9 depth scaling: same shape as `small`, more layers.
+        SyntheticSpec {
+            cfg: model_config("deep8", (512, 192, 8, 8, 8, 768, 128), 1),
+            batch: 8,
+            tps: vec![],
+            train: base_variants(&HEADLINE),
+            eval_tags: vec![],
+            grad_tags: vec![],
+            capture: false,
         },
         SyntheticSpec {
-            cfg: model_config("e2e", (4096, 512, 8, 8, 8, 2048, 256)),
+            cfg: model_config("deep12", (512, 192, 8, 8, 12, 768, 128), 1),
+            batch: 8,
+            tps: vec![],
+            train: base_variants(&HEADLINE),
+            eval_tags: vec![],
+            grad_tags: vec![],
+            capture: false,
+        },
+        // Fig 20 generalization hosts: GQA (2 kv heads) and MoE-attention.
+        SyntheticSpec {
+            cfg: model_config("small_gqa", (512, 192, 8, 2, 6, 768, 128), 1),
+            batch: 8,
+            tps: vec![],
+            train: base_variants(&HEADLINE),
+            eval_tags: vec![],
+            grad_tags: vec![],
+            capture: false,
+        },
+        SyntheticSpec {
+            cfg: model_config("small_moe", (512, 192, 8, 8, 6, 768, 128), 2),
+            batch: 8,
+            tps: vec![],
+            train: base_variants(&HEADLINE),
+            eval_tags: vec![],
+            grad_tags: vec![],
+            capture: false,
+        },
+        SyntheticSpec {
+            cfg: model_config("e2e", (4096, 512, 8, 8, 8, 2048, 256), 1),
             batch: 8,
             tps: vec![1],
+            train: base_variants(&E2E_TAGS),
+            eval_tags: E2E_TAGS.to_vec(),
+            grad_tags: vec![],
+            capture: false,
         },
     ]
 }
@@ -64,6 +193,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
 fn model_config(
     name: &str,
     dims: (usize, usize, usize, usize, usize, usize, usize),
+    n_expert: usize,
 ) -> ModelConfig {
     let (vocab, d, h, kv, l, f, s) = dims;
     let mut cfg = ModelConfig {
@@ -75,13 +205,16 @@ fn model_config(
         n_layer: l,
         d_ff: f,
         seq_len: s,
+        n_expert,
         n_params: 0,
     };
     cfg.n_params = param_schema(&cfg).iter().map(|p| p.numel()).sum();
     cfg
 }
 
-/// Flattened parameter schema for a config (sorted-name pytree order).
+/// Flattened parameter schema for a config (sorted-name pytree order,
+/// matching aot.py's jax tree flattening). MoE configs interleave `router`
+/// and `wq_experts` at their sorted positions.
 pub fn param_schema(cfg: &ModelConfig) -> Vec<ParamSpec> {
     let (d, f) = (cfg.d_model, cfg.d_ff);
     let dkv = cfg.n_kv_head * cfg.head_dim();
@@ -90,7 +223,7 @@ pub fn param_schema(cfg: &ModelConfig) -> Vec<ParamSpec> {
         out.push(ParamSpec { name, shape });
     };
     for li in 0..cfg.n_layer {
-        let fields: [(&str, Vec<usize>); 14] = [
+        let mut fields: Vec<(&str, Vec<usize>)> = vec![
             ("b1", vec![f]),
             ("b2", vec![d]),
             ("ln1_b", vec![d]),
@@ -99,13 +232,21 @@ pub fn param_schema(cfg: &ModelConfig) -> Vec<ParamSpec> {
             ("ln2_g", vec![d]),
             ("lnf_b", vec![d]),
             ("lnf_g", vec![d]),
+        ];
+        if cfg.n_expert > 1 {
+            fields.push(("router", vec![d, cfg.n_expert]));
+        }
+        fields.extend([
             ("w1", vec![d, f]),
             ("w2", vec![f, d]),
             ("wk", vec![d, dkv]),
             ("wo", vec![d, d]),
             ("wq", vec![d, d]),
-            ("wv", vec![d, dkv]),
-        ];
+        ]);
+        if cfg.n_expert > 1 {
+            fields.push(("wq_experts", vec![cfg.n_expert, d, d]));
+        }
+        fields.push(("wv", vec![d, dkv]));
         for (field, shape) in fields {
             push(format!("blocks.{li}.{field}"), shape);
         }
@@ -133,7 +274,8 @@ fn meta(pairs: &[(&str, Json)]) -> BTreeMap<String, Json> {
 }
 
 /// Input/output tensor specs for every TP stage of one (cfg, tp, batch).
-/// Mirrors python/compile/stages.py::stage_specs exactly.
+/// Mirrors python/compile/stages.py::stage_specs; the composite-stage
+/// orderings derive from the shared slot constants in [`slots`].
 fn stage_specs(
     cfg: &ModelConfig,
     tp: usize,
@@ -150,18 +292,24 @@ fn stage_specs(
     let tok = |n: &str| i32_spec(n, &[b, s]);
     let scalar = |n: &str| f32_spec(n, &[]);
 
-    let attn_w = vec![
-        f32_spec("wq", &[d, d_attn]),
-        f32_spec("wk", &[d, d_kv]),
-        f32_spec("wv", &[d, d_kv]),
-        f32_spec("wo", &[d_attn, d]),
-    ];
-    let mlp_w = vec![
-        f32_spec("w1", &[d, d_ff]),
-        f32_spec("b1", &[d_ff]),
-        f32_spec("w2", &[d_ff, d]),
-        f32_spec("b2", &[d]),
-    ];
+    // Per-shard shapes of every named slot (the single source of slot
+    // ordering is slots::*; only the shapes live here).
+    let slot_spec = |n: &str| -> TensorSpec {
+        match n {
+            "x" | "fa" => x(n),
+            "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" | "b2" => vec_(n),
+            "wq" => f32_spec(n, &[d, d_attn]),
+            "wk" | "wv" => f32_spec(n, &[d, d_kv]),
+            "wo" => f32_spec(n, &[d_attn, d]),
+            "w1" => f32_spec(n, &[d, d_ff]),
+            "b1" => f32_spec(n, &[d_ff]),
+            other => unreachable!("unknown slot {other}"),
+        }
+    };
+    let attn_w: Vec<TensorSpec> =
+        slots::ATTN_PARAM_SLOTS[2..].iter().map(|n| slot_spec(n)).collect();
+    let mlp_w: Vec<TensorSpec> =
+        slots::MLP_PARAM_SLOTS[2..].iter().map(|n| slot_spec(n)).collect();
 
     let mut attn_in = vec![x("x"), vec_("ln1_g"), vec_("ln1_b")];
     attn_in.extend(attn_w.iter().cloned());
@@ -169,16 +317,8 @@ fn stage_specs(
     mlp_preln_in.extend(mlp_w.iter().cloned());
     let mut mlp_fal_in = vec![x("x"), x("fa"), vec_("ln2_g"), vec_("ln2_b")];
     mlp_fal_in.extend(mlp_w.iter().cloned());
-    let mut fused_in = vec![
-        x("x"),
-        x("fa"),
-        vec_("ln1_g"),
-        vec_("ln1_b"),
-        vec_("ln2_g"),
-        vec_("ln2_b"),
-    ];
-    fused_in.extend(attn_w.iter().cloned());
-    fused_in.extend(mlp_w.iter().cloned());
+    let fused_in: Vec<TensorSpec> =
+        slots::FAL_FUSED_SLOTS.iter().map(|n| slot_spec(n)).collect();
 
     let with_dout = |mut ins: Vec<TensorSpec>| {
         ins.push(x("dout"));
@@ -263,16 +403,48 @@ fn stage_specs(
     ]
 }
 
+/// Parameter inputs (`p.<name>`) for a model-level artifact.
+fn param_inputs(schema: &[ParamSpec]) -> Vec<TensorSpec> {
+    schema
+        .iter()
+        .map(|p| f32_spec(&format!("p.{}", p.name), &p.shape))
+        .collect()
+}
+
+/// Registration meta shared by every model-level kind.
+fn model_meta_pairs(
+    kind: &str,
+    cfg: &ModelConfig,
+    tag: &str,
+    variant: &str,
+    reuse_layer: usize,
+    batch: usize,
+) -> BTreeMap<String, Json> {
+    meta(&[
+        ("kind", Json::Str(kind.into())),
+        ("config", Json::Str(cfg.name.clone())),
+        ("variant", Json::Str(variant.into())),
+        ("tag", Json::Str(tag.into())),
+        ("batch", Json::Num(batch as f64)),
+        ("reuse_layer", Json::Num(reuse_layer as f64)),
+    ])
+}
+
 /// Build an in-memory [`Manifest`] for the given synthetic specs.
 pub fn synthetic_manifest(specs: &[SyntheticSpec]) -> Manifest {
     let mut artifacts = BTreeMap::new();
     let mut param_schemas = BTreeMap::new();
     let mut configs = BTreeMap::new();
 
+    let mut register = |spec: ArtifactSpec| {
+        artifacts.insert(spec.name.clone(), spec);
+    };
+
     for spec in specs {
         let cfg = &spec.cfg;
         let schema = param_schema(cfg);
         configs.insert(cfg.name.clone(), cfg.clone());
+        let (b, s, l, d) = (spec.batch, cfg.seq_len, cfg.n_layer, cfg.d_model);
 
         for &tp in &spec.tps {
             if cfg.n_head % tp != 0 || cfg.n_kv_head % tp != 0 || cfg.d_ff % tp != 0 {
@@ -280,28 +452,26 @@ pub fn synthetic_manifest(specs: &[SyntheticSpec]) -> Manifest {
             }
             for (stage, inputs, outputs) in stage_specs(cfg, tp, spec.batch) {
                 let name = Manifest::tp_stage_name(&cfg.name, tp, spec.batch, stage);
-                artifacts.insert(
-                    name.clone(),
-                    ArtifactSpec {
-                        name,
-                        file: String::from("(native)"),
-                        inputs,
-                        outputs,
-                        meta: meta(&[
-                            ("kind", Json::Str("tp_stage".into())),
-                            ("config", Json::Str(cfg.name.clone())),
-                            ("stage", Json::Str(stage.into())),
-                            ("tp", Json::Num(tp as f64)),
-                            ("batch", Json::Num(spec.batch as f64)),
-                        ]),
-                    },
-                );
+                register(ArtifactSpec {
+                    name: name.clone(),
+                    file: String::from("(native)"),
+                    inputs,
+                    outputs,
+                    meta: meta(&[
+                        ("kind", Json::Str("tp_stage".into())),
+                        ("config", Json::Str(cfg.name.clone())),
+                        ("stage", Json::Str(stage.into())),
+                        ("tp", Json::Num(tp as f64)),
+                        ("batch", Json::Num(spec.batch as f64)),
+                    ]),
+                });
             }
         }
 
-        // Fused train-step artifacts (single-process trainer).
-        for tag in ["preln", "fal"] {
-            let name = format!("train_step_{}_{}_b{}", cfg.name, tag, spec.batch);
+        // Fused train-step artifacts (single-process trainer), one per
+        // registered variant tag.
+        for &(tag, variant, reuse) in &spec.train {
+            let name = format!("train_step_{}_{}_b{}", cfg.name, tag, b);
             let mut inputs = Vec::with_capacity(3 * schema.len() + 4);
             for prefix in ["p", "m", "v"] {
                 for p in &schema {
@@ -310,30 +480,92 @@ pub fn synthetic_manifest(specs: &[SyntheticSpec]) -> Manifest {
             }
             inputs.push(f32_spec("step", &[]));
             inputs.push(f32_spec("lr_scale", &[]));
-            inputs.push(i32_spec("tokens", &[spec.batch, cfg.seq_len]));
-            inputs.push(i32_spec("targets", &[spec.batch, cfg.seq_len]));
+            inputs.push(i32_spec("tokens", &[b, s]));
+            inputs.push(i32_spec("targets", &[b, s]));
             let mut outputs = vec![f32_spec("loss", &[]), f32_spec("gnorm", &[])];
             for prefix in ["p", "m", "v"] {
                 for p in &schema {
                     outputs.push(f32_spec(&format!("{prefix}.{}", p.name), &p.shape));
                 }
             }
-            artifacts.insert(
-                name.clone(),
-                ArtifactSpec {
-                    name,
-                    file: String::from("(native)"),
-                    inputs,
-                    outputs,
-                    meta: meta(&[
-                        ("kind", Json::Str("train_step".into())),
-                        ("config", Json::Str(cfg.name.clone())),
-                        ("tag", Json::Str(tag.into())),
-                        ("variant", Json::Str(tag.into())),
-                        ("batch", Json::Num(spec.batch as f64)),
-                    ]),
-                },
+            register(ArtifactSpec {
+                name: name.clone(),
+                file: String::from("(native)"),
+                inputs,
+                outputs,
+                meta: model_meta_pairs("train_step", cfg, tag, variant, reuse, b),
+            });
+        }
+
+        // grad_step + gradmag (gradient-only kinds).
+        for &tag in &spec.grad_tags {
+            let mut inputs = param_inputs(&schema);
+            inputs.push(i32_spec("tokens", &[b, s]));
+            inputs.push(i32_spec("targets", &[b, s]));
+            let mut grad_out = vec![f32_spec("loss", &[])];
+            grad_out.extend(
+                schema
+                    .iter()
+                    .map(|p| f32_spec(&format!("g.{}", p.name), &p.shape)),
             );
+            register(ArtifactSpec {
+                name: format!("grad_step_{}_{}_b{}", cfg.name, tag, b),
+                file: String::from("(native)"),
+                inputs: inputs.clone(),
+                outputs: grad_out,
+                meta: model_meta_pairs("grad_step", cfg, tag, tag, 1, b),
+            });
+            register(ArtifactSpec {
+                name: format!("gradmag_{}_{}_b{}", cfg.name, tag, b),
+                file: String::from("(native)"),
+                inputs,
+                outputs: vec![f32_spec("grad_norms", &[l])],
+                meta: model_meta_pairs("gradmag", cfg, tag, tag, 1, b),
+            });
+        }
+
+        // eval_masked + score_options (forward-only kinds).
+        for &tag in &spec.eval_tags {
+            let mut eval_in = param_inputs(&schema);
+            eval_in.push(i32_spec("tokens", &[b, s]));
+            eval_in.push(i32_spec("targets", &[b, s]));
+            eval_in.push(f32_spec("mha_scale", &[l]));
+            eval_in.push(f32_spec("conn_scale", &[l]));
+            register(ArtifactSpec {
+                name: format!("eval_masked_{}_{}_b{}", cfg.name, tag, b),
+                file: String::from("(native)"),
+                inputs: eval_in,
+                outputs: vec![f32_spec("loss_sum", &[]), f32_spec("count", &[])],
+                meta: model_meta_pairs("eval_masked", cfg, tag, tag, 1, b),
+            });
+            let mut score_in = param_inputs(&schema);
+            score_in.push(i32_spec("tokens", &[b, s]));
+            score_in.push(i32_spec("targets", &[b, s]));
+            score_in.push(f32_spec("mask", &[b, s]));
+            register(ArtifactSpec {
+                name: format!("score_options_{}_{}_b{}", cfg.name, tag, b),
+                file: String::from("(native)"),
+                inputs: score_in,
+                outputs: vec![f32_spec("loglik", &[b])],
+                meta: model_meta_pairs("score_options", cfg, tag, tag, 1, b),
+            });
+        }
+
+        // capture (Fig 3a activation streams; preln analysis model).
+        if spec.capture {
+            let mut inputs = param_inputs(&schema);
+            inputs.push(i32_spec("tokens", &[b, s]));
+            register(ArtifactSpec {
+                name: format!("capture_{}_preln_b{}", cfg.name, b),
+                file: String::from("(native)"),
+                inputs,
+                outputs: vec![
+                    f32_spec("mha_out", &[l, b, s, d]),
+                    f32_spec("mlp_in", &[l, b, s, d]),
+                    f32_spec("mlp_out", &[l, b, s, d]),
+                ],
+                meta: model_meta_pairs("capture", cfg, "preln", "preln", 1, b),
+            });
         }
 
         param_schemas.insert(cfg.name.clone(), schema);
@@ -357,7 +589,7 @@ mod tests {
             let total: usize =
                 param_schema(&spec.cfg).iter().map(|p| p.numel()).sum();
             assert_eq!(total, spec.cfg.n_params, "{}", spec.cfg.name);
-            // And agrees with the analytic formula when kv == h.
+            // And agrees with the analytic formula (GQA/MoE aware).
             assert_eq!(total, spec.cfg.count_params(), "{}", spec.cfg.name);
         }
     }
@@ -394,5 +626,62 @@ mod tests {
             ["x", "fa", "ln1_g", "ln1_b", "ln2_g", "ln2_b", "wq", "wk",
              "wv", "wo", "w1", "b1", "w2", "b2"]
         );
+        assert_eq!(names, slots::FAL_FUSED_SLOTS);
+    }
+
+    #[test]
+    fn registers_model_level_kinds() {
+        let m = synthetic_manifest(&default_specs());
+        let np = m.schema("small").unwrap().len();
+        let l = m.config("small").unwrap().n_layer;
+
+        let e = m.find("eval_masked", "small", "preln").unwrap();
+        assert_eq!(e.inputs.len(), np + 4);
+        assert_eq!(e.inputs[np + 2].shape, vec![l]);
+        assert_eq!(e.outputs.len(), 2);
+
+        let s = m.find("score_options", "small", "falplus").unwrap();
+        assert_eq!(s.inputs.len(), np + 3);
+        assert_eq!(s.outputs[0].shape, vec![8]);
+
+        let g = m.find("grad_step", "small", "fal").unwrap();
+        assert_eq!(g.inputs.len(), np + 2);
+        assert_eq!(g.outputs.len(), 1 + np);
+
+        let gm = m.find("gradmag", "small", "preln").unwrap();
+        assert_eq!(gm.outputs[0].shape, vec![l]);
+
+        let c = m.find("capture", "small", "preln").unwrap();
+        assert_eq!(c.outputs.len(), 3);
+        assert_eq!(c.outputs[0].shape, vec![l, 8, 128, 192]);
+    }
+
+    #[test]
+    fn registers_variant_and_generalization_train_steps() {
+        let m = synthetic_manifest(&default_specs());
+        for tag in ALL_VARIANTS {
+            assert!(m.find("train_step", "small", tag).is_ok(), "{tag}");
+        }
+        // Fig 17 reuse-layer ablations carry their own tag but the base
+        // falplus variant + a reuse_layer meta.
+        let k2 = m.find("train_step", "small", "falplus_k2").unwrap();
+        assert_eq!(k2.meta_str("variant"), Some("falplus"));
+        assert_eq!(k2.meta.get("reuse_layer").unwrap().as_usize().unwrap(), 2);
+        // Fig 9 / Fig 20 companion configs.
+        for config in ["deep8", "deep12", "small_gqa", "small_moe"] {
+            for tag in HEADLINE {
+                assert!(m.find("train_step", config, tag).is_ok(), "{config}/{tag}");
+            }
+        }
+        // GQA shrinks wk/wv; MoE adds router + experts to the schema.
+        let gqa = m.schema("small_gqa").unwrap();
+        let wk = gqa.iter().find(|p| p.name == "blocks.0.wk").unwrap();
+        assert_eq!(wk.shape, vec![192, 2 * 24]);
+        let moe = m.schema("small_moe").unwrap();
+        assert!(moe.iter().any(|p| p.name == "blocks.0.router"));
+        assert!(moe.iter().any(|p| p.name == "blocks.0.wq_experts"));
+        let moe_total: usize =
+            moe.iter().map(|p| p.numel()).sum();
+        assert_eq!(m.config("small_moe").unwrap().n_params, moe_total);
     }
 }

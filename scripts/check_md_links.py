@@ -1,0 +1,56 @@
+#!/usr/bin/env python3
+"""Check that relative markdown links point at files that exist.
+
+Usage: check_md_links.py FILE.md [FILE.md ...]
+
+Only repo-relative targets are checked; http(s)/mailto URLs and pure
+anchors are skipped (no network access in CI). Exits nonzero listing every
+broken link. Stdlib only.
+"""
+
+import os
+import re
+import sys
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check(path: str) -> int:
+    broken = 0
+    base = os.path.dirname(path)
+    in_code_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if line.lstrip().startswith("```"):
+                in_code_fence = not in_code_fence
+                continue
+            if in_code_fence:
+                continue
+            for target in LINK.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                cand = os.path.normpath(os.path.join(base, rel))
+                if not os.path.exists(cand):
+                    print(f"{path}:{lineno}: broken link -> {target}")
+                    broken += 1
+    return broken
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    total = sum(check(p) for p in argv[1:])
+    if total:
+        print(f"{total} broken link(s)")
+        return 1
+    print(f"checked {len(argv) - 1} file(s), all links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -303,12 +303,17 @@ def build_group(b: Builder, group: str):
                 batch=8)
         # Fig 20: GQA and MoE-attention hosts — dedicated configs with
         # their own parameter schemas (rust fig20 requests
-        # (small_gqa|small_moe, preln|fal|falplus)).
+        # (small_gqa|small_moe, preln|fal|falplus)). Eval kinds registered
+        # too so the gating analysis and the zero-shot suite run on the
+        # generalization hosts (mirrors runtime/synthetic.rs).
         for cname in ("small_gqa", "small_moe"):
             gcfg = g(cname)
             b.params_bin(gcfg)
             for v in ("preln", "fal", "falplus"):
                 b.model_artifact("train_step", gcfg.with_variant(v), batch=8)
+                b.model_artifact("eval_masked", gcfg.with_variant(v), batch=8)
+                b.model_artifact(
+                    "score_options", gcfg.with_variant(v), batch=8)
     elif group == "tp":
         cfg = g("small")
         b.params_bin(cfg)

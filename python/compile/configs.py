@@ -92,9 +92,14 @@ class TrainConfig:
 
 # ----------------------------------------------------------------------------
 # Presets. `tiny` drives unit tests, `small` drives the quality experiments,
-# `smalldeep`/`deep*` drive the Fig 9 depth scaling, `e2e` is the ~100M-param
-# end-to-end training demo. Paper-scale shapes (774M..8.3B) are *not* lowered;
-# they exist only inside the Rust cost model.
+# `deep8`/`deep12` drive the Fig 9 depth scaling, `small_gqa`/`small_moe`
+# are the Fig 20 generalization hosts (dedicated configs — artifacts carry
+# plain de-suffixed variant tags like `preln`/`fal` under their own config
+# name, never `preln_gqa`-style tags under `small`), and `e2e` is the
+# ~100M-param end-to-end training demo. Paper-scale shapes (774M..8.3B) are
+# *not* lowered; they exist only inside the Rust cost model. After editing
+# presets or tags, regenerate the artifact bundle with `make artifacts` —
+# stale bundles keep the old naming and the Rust manifest lookups miss.
 # ----------------------------------------------------------------------------
 
 PRESETS = {

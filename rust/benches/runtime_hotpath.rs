@@ -1,20 +1,31 @@
-//! L3 hot-path microbenches (the §Perf profile): native stage dispatch,
-//! collectives, compression codecs, corpus/loader — plus literal
-//! conversion and engine dispatch when built with `--features pjrt` and
-//! `make artifacts`.
+//! L3 hot-path microbenches (the §Perf profile): ExecCtx kernel scoreboard
+//! (matmul / attention / layernorm at 1, 2 and 4 threads), the fused
+//! native train step, native stage dispatch, collectives, compression
+//! codecs, corpus/loader — plus literal conversion and engine dispatch
+//! when built with `--features pjrt` and `make artifacts`.
 //!
-//! `cargo bench --bench runtime_hotpath [-- --filter allreduce]`
+//! Scoreboard cases (threads in the name) are persisted to
+//! `BENCH_native.json` (override with `FAL_BENCH_JSON`) so the perf
+//! trajectory is tracked across PRs: the ExecCtx acceptance bar is the
+//! `*_t4` rows showing a multi-x speedup over their `*_t1` baselines.
+//!
+//! `cargo bench --bench runtime_hotpath [-- --filter matmul]`
 
 use fal::comm::error_feedback::ErrorFeedback;
 use fal::comm::powersgd::PowerSgd;
 use fal::comm::qsgd::Qsgd;
 use fal::config::PCIE_GEN4;
 use fal::coordinator::collectives::CommLedger;
+use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::data::{Corpus, CorpusSpec, Loader};
-use fal::runtime::{Backend, Manifest, NativeBackend};
+use fal::runtime::native::kernels;
+use fal::runtime::{Backend, ExecCtx, Manifest, NativeBackend};
 use fal::tensor::HostTensor;
-use fal::util::benchkit::Bench;
+use fal::util::benchkit::{Bench, CaseMeta};
 use fal::util::rng::Rng;
+
+/// Thread counts the scoreboard tracks (t1 is the scalar baseline).
+const THREADS: [usize; 3] = [1, 2, 4];
 
 fn main() {
     let mut b = Bench::from_env();
@@ -28,6 +39,91 @@ fn main() {
             let l = fal::runtime::to_literal(&t1m).unwrap();
             fal::runtime::from_literal(&l).unwrap().len()
         });
+    }
+
+    // ------------------------------------------------------------------
+    // ExecCtx kernel scoreboard: the small config's token panel
+    // ([b*s, d] = [1024, 192]) against its MLP up-projection [192, 768].
+    // ------------------------------------------------------------------
+    let a = HostTensor::randn(&[1024, 192], 0.5, &mut rng);
+    let w = HostTensor::randn(&[192, 768], 0.02, &mut rng);
+    let up = HostTensor::randn(&[1024, 768], 0.5, &mut rng);
+    let flops_mm = (2 * 1024 * 192 * 768) as f64;
+    for threads in THREADS {
+        let ctx = ExecCtx::new(threads);
+        b.bench_case(
+            &format!("matmul_1024x192x768_t{threads}"),
+            CaseMeta::new("matmul", "1024x192x768", threads),
+            flops_mm,
+            || kernels::matmul(&ctx, &a, &w).data[0],
+        );
+        b.bench_case(
+            &format!("matmul_tn_1024x192x768_t{threads}"),
+            CaseMeta::new("matmul_tn", "1024x192x768", threads),
+            flops_mm,
+            || kernels::matmul_tn(&ctx, &a, &up).data[0],
+        );
+    }
+
+    // Attention fwd/bwd + LayerNorm bwd at the small-config block shape.
+    let geom = kernels::AttnGeom {
+        batch: 8,
+        seq: 128,
+        heads: 8,
+        kv_heads: 8,
+        head_dim: 24,
+    };
+    let q = HostTensor::randn(&[8, 128, 192], 0.3, &mut rng);
+    let k = HostTensor::randn(&[8, 128, 192], 0.3, &mut rng);
+    let v = HostTensor::randn(&[8, 128, 192], 0.3, &mut rng);
+    let dout = HostTensor::randn(&[8, 128, 192], 1.0, &mut rng);
+    let gamma = HostTensor::ones(&[192]);
+    let attn_units = (8 * 8 * 128 * 128) as f64; // (b*h) score cells
+    for threads in THREADS {
+        let ctx = ExecCtx::new(threads);
+        b.bench_case(
+            &format!("attn_fwd_b8s128h8_t{threads}"),
+            CaseMeta::new("causal_attention", "b8s128h8d24", threads),
+            attn_units,
+            || kernels::causal_attention(&ctx, &geom, &q, &k, &v).data[0],
+        );
+        b.bench_case(
+            &format!("attn_bwd_b8s128h8_t{threads}"),
+            CaseMeta::new("causal_attention_bwd", "b8s128h8d24", threads),
+            attn_units,
+            || kernels::causal_attention_bwd(&ctx, &geom, &q, &k, &v, &dout).0.data[0],
+        );
+        b.bench_case(
+            &format!("layernorm_bwd_1024x192_t{threads}"),
+            CaseMeta::new("layernorm_bwd", "1024x192", threads),
+            (1024 * 192) as f64,
+            || kernels::layernorm_bwd(&ctx, &a, &gamma, &a).0.data[0],
+        );
+    }
+
+    // ------------------------------------------------------------------
+    // Fused native train step (loss + grads + AdamW) on the small config
+    // — the end-to-end number the ISSUE's >=3x acceptance bar reads.
+    // ------------------------------------------------------------------
+    {
+        let cfg_tokens = (8 * 128) as f64;
+        let corpus = Corpus::generate(CorpusSpec::for_vocab(512), 50_000, 1);
+        for threads in [1usize, 4] {
+            let engine = NativeBackend::synthetic_with_threads(threads);
+            let cfg = engine.manifest().config("small").unwrap().clone();
+            let loader = Loader::new(&corpus, cfg.seq_len, 8, 0.1, 2);
+            let batch = loader.fixed_batch(3);
+            let mut t =
+                Trainer::new(&engine, "small", "fal", Schedule::Constant)
+                    .unwrap();
+            t.train_step(&batch).unwrap(); // warm
+            b.bench_case(
+                &format!("fused_train_step_small_fal_t{threads}"),
+                CaseMeta::new("train_step", "small/fal", threads),
+                cfg_tokens,
+                || t.train_step(&batch).unwrap().loss,
+            );
+        }
     }
 
     // Collectives: all-reduce of 4 x 1 MB shards.
@@ -121,4 +217,8 @@ fn main() {
     }
 
     println!("\n== summary ==\n{}", b.summary());
+    match b.write_json_default() {
+        Ok(path) => println!("scoreboard: {}", path.display()),
+        Err(e) => eprintln!("warning: could not write scoreboard: {e}"),
+    }
 }

@@ -4,16 +4,21 @@
 //! forward-only (TTFT path). Runs with default features: no artifacts
 //! needed.
 //!
+//! Cases are persisted to `BENCH_native.json` (override with
+//! `FAL_BENCH_JSON`) alongside the runtime_hotpath scoreboard; the thread
+//! count is whatever the backend's ExecCtx resolved to (`FAL_THREADS`).
+//!
 //! `cargo bench --bench tp_step`
 
 use fal::config::{TrainConfig, Variant, PCIE_GEN4};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::data::{Corpus, CorpusSpec, Loader};
 use fal::runtime::{Backend, NativeBackend};
-use fal::util::benchkit::Bench;
+use fal::util::benchkit::{Bench, CaseMeta};
 
 fn main() {
     let engine = NativeBackend::synthetic();
+    let threads = engine.exec_ctx().threads();
     let cfg = engine.manifest().config("tiny").unwrap().clone();
     let corpus =
         Corpus::generate(CorpusSpec::for_vocab(cfg.vocab_size), 50_000, 1);
@@ -30,8 +35,12 @@ fn main() {
         .unwrap();
         // Warm the stage executables.
         t.train_step(&batch).unwrap();
-        b.bench(
-            &format!("tp2_tiny_train_step_{name}"),
+        // The thread count is part of the case name: write_json merges by
+        // name, so runs at different FAL_THREADS must not clobber each
+        // other's scoreboard rows.
+        b.bench_case(
+            &format!("tp2_tiny_train_step_{name}_t{threads}"),
+            CaseMeta::new("tp_train_step", &format!("tiny/{name}"), threads),
             tokens_per_step,
             || t.train_step(&batch).unwrap().0,
         );
@@ -39,8 +48,9 @@ fn main() {
             &engine, "tiny", variant, 2, PCIE_GEN4, TrainConfig::default())
         .unwrap();
         f.forward_loss(&batch).unwrap();
-        b.bench(
-            &format!("tp2_tiny_forward_{name}"),
+        b.bench_case(
+            &format!("tp2_tiny_forward_{name}_t{threads}"),
+            CaseMeta::new("tp_forward", &format!("tiny/{name}"), threads),
             tokens_per_step,
             || f.forward_loss(&batch).unwrap(),
         );
@@ -48,4 +58,8 @@ fn main() {
     println!("\n== summary ==\n{}", b.summary());
     println!("(comm-volume halving is asserted in tests/tp_equivalence.rs; \
               wall-clock here is CPU-execution bound)");
+    match b.write_json_default() {
+        Ok(path) => println!("scoreboard: {}", path.display()),
+        Err(e) => eprintln!("warning: could not write scoreboard: {e}"),
+    }
 }

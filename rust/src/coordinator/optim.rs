@@ -1,18 +1,27 @@
 //! Host-side AdamW over named parameter sets.
 //!
-//! Used by the TP trainer and the gradient-compression trainer (Fig 7) —
-//! anywhere Rust owns optimizer state. Formulas match
-//! python/compile/train_step.py::_adamw_scaled exactly (bias correction,
-//! global-norm clip, decay only on >=2-D tensors), which is what makes the
-//! TP-vs-fused-HLO equivalence test tight.
+//! Used by the TP trainer, the native fused train step and the
+//! gradient-compression trainer (Fig 7) — anywhere Rust owns optimizer
+//! state. Formulas match python/compile/train_step.py::_adamw_scaled
+//! exactly (bias correction, global-norm clip, decay only on >=2-D
+//! tensors), which is what makes the TP-vs-fused-HLO equivalence test
+//! tight.
+//!
+//! The update is elementwise, so it fans out over flat chunks of each
+//! tensor through the [`ExecCtx`] — bit-identical at every thread count.
+//! The global gradient norm stays a serial f64 reduction (same bits as
+//! the historical scalar path).
 
 use crate::config::TrainConfig;
+use crate::runtime::exec::{split_rows, ExecCtx};
 
 use super::topology::NamedParams;
 
 /// One AdamW step in place. `step` is 1-based. Returns the pre-clip global
 /// gradient norm.
+#[allow(clippy::too_many_arguments)]
 pub fn adamw_step(
+    ctx: &ExecCtx,
     params: &mut NamedParams,
     grads: &NamedParams,
     m: &mut NamedParams,
@@ -36,14 +45,30 @@ pub fn adamw_step(
         let mt = m.by_name.get_mut(&name).unwrap();
         let vt = v.by_name.get_mut(&name).unwrap();
         let decay = if p.shape.len() >= 2 { wd } else { 0.0 };
-        for i in 0..p.data.len() {
-            let gi = g.data[i] * clip;
-            mt.data[i] = b1 * mt.data[i] + (1.0 - b1) * gi;
-            vt.data[i] = b2 * vt.data[i] + (1.0 - b2) * gi * gi;
-            let mhat = mt.data[i] / bc1;
-            let vhat = vt.data[i] / bc2;
-            p.data[i] -= lr * (mhat / (vhat.sqrt() + eps) + decay * p.data[i]);
-        }
+        let ranges =
+            ctx.chunk_ranges(p.data.len(), ExecCtx::grain_rows(12));
+        let p_c = split_rows(&mut p.data, 1, &ranges);
+        let m_c = split_rows(&mut mt.data, 1, &ranges);
+        let v_c = split_rows(&mut vt.data, 1, &ranges);
+        let items: Vec<_> = ranges
+            .iter()
+            .map(|r| r.start)
+            .zip(p_c)
+            .zip(m_c)
+            .zip(v_c)
+            .map(|(((e0, pc), mc), vc)| (e0, pc, mc, vc))
+            .collect();
+        ctx.scatter(items, |(e0, pc, mc, vc)| {
+            let gs = &g.data[e0..e0 + pc.len()];
+            for i in 0..pc.len() {
+                let gi = gs[i] * clip;
+                mc[i] = b1 * mc[i] + (1.0 - b1) * gi;
+                vc[i] = b2 * vc[i] + (1.0 - b2) * gi * gi;
+                let mhat = mc[i] / bc1;
+                let vhat = vc[i] / bc2;
+                pc[i] -= lr * (mhat / (vhat.sqrt() + eps) + decay * pc[i]);
+            }
+        });
     }
     gnorm
 }
@@ -64,6 +89,10 @@ mod tests {
     use crate::tensor::HostTensor;
     use std::collections::BTreeMap;
 
+    fn ser() -> ExecCtx {
+        ExecCtx::serial()
+    }
+
     fn named(vals: &[(&str, Vec<usize>, f32)]) -> NamedParams {
         let mut by_name = BTreeMap::new();
         let mut order = vec![];
@@ -83,7 +112,7 @@ mod tests {
         let mut m = zeros_like(&p);
         let mut v = zeros_like(&p);
         let tc = TrainConfig::default();
-        let gnorm = adamw_step(&mut p, &g, &mut m, &mut v, 1, &tc, 1.0);
+        let gnorm = adamw_step(&ser(), &mut p, &g, &mut m, &mut v, 1, &tc, 1.0);
         assert!((gnorm - 1.0).abs() < 1e-6); // ||0.5 * 4 elems|| = 1
         assert!(p.by_name["w"].data.iter().all(|&x| x < 1.0));
     }
@@ -96,7 +125,7 @@ mod tests {
         let mut m = zeros_like(&p);
         let mut v = zeros_like(&p);
         let tc = TrainConfig::default();
-        adamw_step(&mut p, &g, &mut m, &mut v, 1, &tc, 1.0);
+        adamw_step(&ser(), &mut p, &g, &mut m, &mut v, 1, &tc, 1.0);
         assert!(p.by_name["w"].data[0] < 1.0);
         assert_eq!(p.by_name["b"].data[0], 1.0);
     }
@@ -108,7 +137,7 @@ mod tests {
         let mut m = zeros_like(&p);
         let mut v = zeros_like(&p);
         let tc = TrainConfig::default();
-        adamw_step(&mut p, &g, &mut m, &mut v, 1, &tc, 0.0);
+        adamw_step(&ser(), &mut p, &g, &mut m, &mut v, 1, &tc, 0.0);
         assert_eq!(p.by_name["w"].data[0], 1.0);
     }
 
@@ -120,9 +149,43 @@ mod tests {
         let mut m = zeros_like(&p);
         let mut v = zeros_like(&p);
         let tc = TrainConfig::default();
-        adamw_step(&mut p, &g, &mut m, &mut v, 1, &tc, 1.0);
+        adamw_step(&ser(), &mut p, &g, &mut m, &mut v, 1, &tc, 1.0);
         for &x in &p.by_name["w"].data {
             assert!(x.abs() <= (tc.lr * 1.01) as f32);
+        }
+    }
+
+    #[test]
+    fn parallel_update_is_bitwise_serial() {
+        // The AdamW update is elementwise: chunking must not change bits.
+        // 12000 elements sit well above the grain_rows(12) ≈ 1366-element
+        // chunk floor, so ExecCtx::new(4) genuinely splits the update.
+        let dims = vec![120usize, 100];
+        assert!(
+            ExecCtx::new(4)
+                .chunk_ranges(120 * 100, ExecCtx::grain_rows(12))
+                .len()
+                > 1,
+            "test tensor no longer splits — enlarge it"
+        );
+        let mut p1 = named(&[("w", dims.clone(), 0.9), ("b", vec![111], 0.3)]);
+        let mut p4 = p1.clone();
+        let mut g = named(&[("w", dims.clone(), 0.0), ("b", vec![111], 0.0)]);
+        for (i, v) in g.by_name.get_mut("w").unwrap().data.iter_mut().enumerate()
+        {
+            *v = (i as f32 * 0.37).sin();
+        }
+        let (mut m1, mut v1) = (zeros_like(&p1), zeros_like(&p1));
+        let (mut m4, mut v4) = (zeros_like(&p4), zeros_like(&p4));
+        let tc = TrainConfig::default();
+        let n1 = adamw_step(&ser(), &mut p1, &g, &mut m1, &mut v1, 2, &tc, 0.7);
+        let n4 = adamw_step(
+            &ExecCtx::new(4), &mut p4, &g, &mut m4, &mut v4, 2, &tc, 0.7);
+        assert_eq!(n1, n4);
+        for name in ["w", "b"] {
+            assert_eq!(p1.by_name[name].data, p4.by_name[name].data, "{name}");
+            assert_eq!(m1.by_name[name].data, m4.by_name[name].data, "{name}");
+            assert_eq!(v1.by_name[name].data, v4.by_name[name].data, "{name}");
         }
     }
 }

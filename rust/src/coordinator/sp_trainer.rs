@@ -14,7 +14,7 @@
 use anyhow::{Context, Result};
 
 use crate::data::{Batch, Loader};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, ExecCtx};
 use crate::tensor::HostTensor;
 use crate::util::timer::Stopwatch;
 
@@ -59,6 +59,11 @@ pub struct Trainer<'e, B: Backend + ?Sized> {
     pub config: String,
     pub batch_size: usize,
     pub schedule: Schedule,
+    /// Execution context the fused step executes under, inherited from the
+    /// backend at construction ([`Backend::exec_ctx`]): reported alongside
+    /// tokens/s in the training log, and the knob future overlap work
+    /// (async H2D, double-buffered state) builds on.
+    pub ctx: ExecCtx,
     n_params: usize,
     /// [params..., m..., v...] in schema order.
     state: Vec<HostTensor>,
@@ -100,6 +105,7 @@ impl<'e, B: Backend + ?Sized> Trainer<'e, B> {
             config: config.to_string(),
             batch_size,
             schedule,
+            ctx: engine.exec_ctx(),
             n_params: params.len(),
             state: vec![],
             step: 0,
@@ -184,11 +190,13 @@ impl<'e, B: Backend + ?Sized> Trainer<'e, B> {
             let out = self.train_step(&batch)?;
             if log_every > 0 && (i + 1) % log_every == 0 {
                 println!(
-                    "[{label}] step {:>5}  loss {:.4}  gnorm {:.3}  {:.0} tok/s",
+                    "[{label}] step {:>5}  loss {:.4}  gnorm {:.3}  \
+                     {:.0} tok/s (x{} workers)",
                     self.step,
                     out.loss,
                     out.gnorm,
-                    (self.batch_size * loader.seq_len) as f64 / out.secs
+                    (self.batch_size * loader.seq_len) as f64 / out.secs,
+                    self.ctx.threads()
                 );
             }
         }

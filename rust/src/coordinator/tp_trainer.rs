@@ -22,7 +22,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{LinkSpec, ModelConfig, TrainConfig, Variant};
 use crate::data::Batch;
-use crate::runtime::{Backend, Manifest};
+use crate::runtime::{Backend, ExecCtx, Manifest};
 use crate::tensor::HostTensor;
 use crate::util::timer::Breakdown;
 
@@ -51,6 +51,10 @@ pub struct TpTrainer<'e, B: Backend + ?Sized> {
     pub tc: TrainConfig,
     pub step: usize,
     pub breakdown: Breakdown,
+    /// Execution context inherited from the backend at construction
+    /// ([`Backend::exec_ctx`]): the coordinator's own host-side math
+    /// (AdamW) fans out through it.
+    pub ctx: ExecCtx,
 }
 
 /// Forward stash for one block (primal inputs the bwd stages recompute from).
@@ -101,6 +105,7 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
                     .contains_key(&Manifest::tp_stage_name(config, tp, *b, "attn_fwd"))
             })
             .with_context(|| format!("no tp{tp} stages for config {config}"))?;
+        let ctx = engine.exec_ctx();
         let mut t = TpTrainer {
             engine,
             cfg,
@@ -117,6 +122,7 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
             tc,
             step: 0,
             breakdown: Breakdown::new(),
+            ctx,
         };
         t.reshard()?;
         Ok(t)
@@ -554,8 +560,8 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
     /// AdamW with global-norm clipping (coordinator::optim).
     fn adamw(&mut self, grads: &NamedParams) -> f64 {
         super::optim::adamw_step(
-            &mut self.params, grads, &mut self.m, &mut self.v, self.step,
-            &self.tc, 1.0,
+            &self.ctx, &mut self.params, grads, &mut self.m, &mut self.v,
+            self.step, &self.tc, 1.0,
         )
     }
 

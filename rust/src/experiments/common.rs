@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::sp_trainer::{Schedule, Trainer};
 use crate::data::{tasks, Corpus, CorpusSpec, Loader, TaskSuite};
-use crate::runtime::{default_backend, Backend};
+use crate::runtime::{default_backend_with_threads, Backend};
 use crate::tensor::HostTensor;
 
 pub struct ExpCtx {
@@ -20,8 +20,19 @@ pub struct ExpCtx {
 
 impl ExpCtx {
     pub fn new(artifact_dir: &std::path::Path, scale: f64) -> Result<ExpCtx> {
+        Self::with_threads(artifact_dir, scale, None)
+    }
+
+    /// [`ExpCtx::new`] with an explicit native-backend thread count — the
+    /// CLI's `--threads` flag (`None` = `FAL_THREADS` env, else machine
+    /// parallelism).
+    pub fn with_threads(
+        artifact_dir: &std::path::Path,
+        scale: f64,
+        threads: Option<usize>,
+    ) -> Result<ExpCtx> {
         Ok(ExpCtx {
-            engine: default_backend(artifact_dir)?,
+            engine: default_backend_with_threads(artifact_dir, threads)?,
             scale,
             out_dir: PathBuf::from("reports"),
             seed: 42,

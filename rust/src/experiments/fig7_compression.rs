@@ -91,7 +91,10 @@ fn train_compressed(
             *grads.by_name.get_mut(pname).unwrap() = decoded;
         }
         bd.add("comp", comp_secs);
-        adamw_step(&mut params, &grads, &mut m, &mut v, step, &tc, 1.0);
+        adamw_step(
+            &ctx.engine.exec_ctx(), &mut params, &grads, &mut m, &mut v,
+            step, &tc, 1.0,
+        );
     }
 
     // Validation PPL through the eval_masked artifact (gates = 1).

@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use crate::coordinator::sp_trainer::Schedule;
+use crate::data::TaskSuite;
 use crate::metrics::Report;
 use crate::runtime::Backend;
 use crate::util::table::Table;
@@ -93,25 +94,47 @@ pub fn fig20(ctx: &ExpCtx) -> Result<Report> {
     // The generalization hosts are dedicated configs (small_gqa: 2 kv
     // heads; small_moe: 2-expert Switch-style query projection) with their
     // own parameter schemas, so each (config, variant) pair is a real
-    // train_step artifact on both backends.
+    // train_step artifact on both backends. The hosts also carry the eval
+    // kinds, so the Table 1 zero-shot probe suite runs here too (the
+    // paper's claim that FAL generalizes covers quality, not just loss).
+    let mut zs = Table::new(
+        "Fig 20 companion: zero-shot probe-suite macro average",
+        &["mechanism", "preln", "fal", "falplus"],
+    );
     for (mech, config) in
         [("GQA (2 kv heads)", "small_gqa"), ("MoE-attention", "small_moe")]
     {
         let mut row = vec![mech.to_string()];
+        let mut zrow = vec![mech.to_string()];
+        // The suite derives from the first variant's corpus (same seed ->
+        // same corpus for every variant), avoiding an extra generation.
+        let mut suite: Option<TaskSuite> = None;
         for base in ["preln", "fal", "falplus"] {
-            let (_, mut loader) = ctx.loader(config, 0)?;
+            let (corpus, mut loader) = ctx.loader(config, 0)?;
+            let suite = suite
+                .get_or_insert_with(|| TaskSuite::generate(&corpus, 24, 2024));
             let (trainer, _) = ctx.train_variant(
                 config, base, steps, Schedule::Constant, &mut loader,
                 &format!("fig20-{config}-{base}"))?;
             row.push(Table::fmt(trainer.recent_loss(20), 4));
+            let scores =
+                ctx.zero_shot(config, base, trainer.params(), suite)?;
+            let avg = scores
+                .iter()
+                .find(|(name, _)| name == "Avg")
+                .map(|(_, s)| *s)
+                .unwrap_or(f64::NAN);
+            zrow.push(Table::fmt(avg, 1));
             report.series(
                 &format!("{mech} {base}"),
                 trainer.loss_history.iter().map(|&x| x as f64).collect(),
             );
         }
         table.row(row);
+        zs.row(zrow);
     }
     report.table(table);
+    report.table(zs);
     report.note("paper shape: FAL/FAL+ keep a consistent gap to the \
                  baseline under both attention variants");
     Ok(report)

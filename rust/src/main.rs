@@ -1,11 +1,15 @@
 //! `fal` — launcher CLI for the FAL framework.
 //!
 //! ```text
-//! fal exp <id|all> [--scale 1.0] [--artifacts DIR] [--out reports]
-//! fal train --config small --variant fal [--steps 300] [--eval]
-//! fal tp --config small --variant fal --tp 2 [--steps 10]
+//! fal exp <id|all> [--scale 1.0] [--threads N] [--artifacts DIR] [--out reports]
+//! fal train --config small --variant fal [--steps 300] [--threads N] [--eval]
+//! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N]
 //! fal list            # artifacts + experiments
 //! ```
+//!
+//! `--threads` sizes the native backend's `ExecCtx` worker fan-out
+//! (default: `FAL_THREADS` env, else the machine's parallelism;
+//! `--threads 1` reproduces the historical scalar results bit-for-bit).
 
 use std::path::PathBuf;
 
@@ -26,6 +30,18 @@ fn main() {
 
 fn artifact_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.str_or("artifacts", "artifacts"))
+}
+
+/// `--threads N` (0 = auto-detect); `None` falls back to `FAL_THREADS`.
+fn threads_opt(args: &Args) -> Result<Option<usize>> {
+    Ok(match args.get("threads") {
+        None => None,
+        Some(_) => Some(args.usize_or("threads", 0)?),
+    })
+}
+
+fn exp_ctx(args: &Args, scale: f64) -> Result<ExpCtx> {
+    ExpCtx::with_threads(&artifact_dir(args), scale, threads_opt(args)?)
 }
 
 fn run() -> Result<()> {
@@ -50,10 +66,13 @@ fn print_help() {
     println!(
         "fal — First Attentions Last (NeurIPS 2025) reproduction framework\n\
          \n\
-         USAGE:\n  fal exp <id|all> [--scale S] [--artifacts DIR] [--out DIR]\n\
-         \x20 fal train --config small --variant fal [--steps N] [--eval]\n\
-         \x20 fal tp --config small --variant fal --tp 2 [--steps N]\n\
+         USAGE:\n  fal exp <id|all> [--scale S] [--threads N] [--artifacts DIR] [--out DIR]\n\
+         \x20 fal train --config small --variant fal [--steps N] [--threads N] [--eval]\n\
+         \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N]\n\
          \x20 fal list\n\
+         \n\
+         --threads N sizes the native backend's worker fan-out (default:\n\
+         FAL_THREADS env, else all cores; 1 = exact scalar reference).\n\
          \n\
          Every experiment id runs on the default (native CPU) build — no\n\
          Python, artifacts/ directory, or `--features pjrt` required.\n\
@@ -67,7 +86,7 @@ fn print_help() {
 
 fn cmd_exp(args: &Args) -> Result<()> {
     let scale = args.f64_or("scale", 1.0)?;
-    let mut ctx = ExpCtx::new(&artifact_dir(args), scale)?;
+    let mut ctx = exp_ctx(args, scale)?;
     ctx.out_dir = PathBuf::from(args.str_or("out", "reports"));
     let id = args
         .positional
@@ -93,7 +112,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let config = args.str_or("config", "small");
     let variant = args.str_or("variant", "fal");
     let steps = args.usize_or("steps", 300)?;
-    let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
+    let ctx = exp_ctx(args, 1.0)?;
     let (_, mut loader) = ctx.loader(&config, 0)?;
     let mut t =
         Trainer::new(ctx.engine.as_ref(), &config, &variant, Schedule::Constant)?;
@@ -115,7 +134,7 @@ fn cmd_tp(args: &Args) -> Result<()> {
     let variant = Variant::parse(&args.str_or("variant", "fal"))?;
     let tp = args.usize_or("tp", 2)?;
     let steps = args.usize_or("steps", 10)?;
-    let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
+    let ctx = exp_ctx(args, 1.0)?;
     let (_, mut loader) = ctx.loader(&config, 0)?;
     let mut t = TpTrainer::new(
         ctx.engine.as_ref(), &config, variant, tp, PCIE_GEN4,
@@ -143,7 +162,7 @@ fn cmd_tp(args: &Args) -> Result<()> {
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    let ctx = ExpCtx::new(&artifact_dir(args), 1.0)?;
+    let ctx = exp_ctx(args, 1.0)?;
     let manifest = ctx.engine.manifest();
     println!("backend: {}", ctx.engine.platform());
     println!("configs:");

@@ -1,0 +1,309 @@
+//! Execution context for the native runtime's hot paths.
+//!
+//! [`ExecCtx`] is the parallelism knob every native kernel takes as its
+//! first argument: a std-only scoped-thread worker "pool" (workers are
+//! spawned per parallel region with [`std::thread::scope`] — no queues, no
+//! shared state, no dependencies) plus the partitioning helpers that make
+//! the parallel results *deterministic*:
+//!
+//! * Work is split into **contiguous, balanced chunks** whose boundaries
+//!   depend only on `(n, threads, min_chunk)` — never on dynamic load.
+//! * Kernels preserve the **per-element accumulation order** of the scalar
+//!   reference wherever the dependency structure allows (row panels of a
+//!   matmul, columns of a bias-gradient sum), which makes the parallel
+//!   result bit-identical to `threads = 1` at *any* thread count.
+//! * The only exceptions are cross-row reductions whose partials must be
+//!   combined across chunks (attention dk/dv). Partials are combined in
+//!   ascending chunk order, so they are still deterministic per thread
+//!   count, and `threads = 1` (a single chunk) reproduces the historical
+//!   scalar results bit-for-bit.
+//!
+//! The context is plumbed from [`NativeBackend`](super::NativeBackend)
+//! construction (CLI `--threads`, `FAL_THREADS` env fallback) through
+//! [`Backend::exec_ctx`](super::Backend::exec_ctx) to the coordinators.
+//! See docs/ARCHITECTURE.md §"Execution context & kernel API".
+
+use std::ops::Range;
+
+/// Environment fallback for the thread count (`0` = auto-detect).
+pub const THREADS_ENV: &str = "FAL_THREADS";
+
+/// Execution context: how many worker threads a kernel may fan out to.
+///
+/// Cheap to copy — the "pool" is logical; scoped workers are spawned per
+/// parallel region and joined before the kernel returns, so a context can
+/// be shared freely across backends, trainers and benches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecCtx {
+    threads: usize,
+}
+
+impl ExecCtx {
+    /// Minimum scalar-op work per chunk before fan-out pays for a spawn.
+    /// Kernels derive their per-chunk row floor from this via
+    /// [`ExecCtx::grain_rows`].
+    pub const PAR_GRAIN: usize = 16_384;
+
+    /// Context with an explicit thread count (`0` = auto-detect from the
+    /// machine, like the `FAL_THREADS=0` env setting).
+    pub fn new(threads: usize) -> ExecCtx {
+        let threads = if threads == 0 { available() } else { threads };
+        ExecCtx { threads: threads.max(1) }
+    }
+
+    /// Single-threaded context: every kernel runs the scalar reference
+    /// path on the calling thread (bit-for-bit the historical results).
+    pub fn serial() -> ExecCtx {
+        ExecCtx { threads: 1 }
+    }
+
+    /// Context from the `FAL_THREADS` environment variable, falling back
+    /// to the machine's available parallelism when unset or unparsable.
+    pub fn from_env() -> ExecCtx {
+        match std::env::var(THREADS_ENV) {
+            Ok(v) => match v.trim().parse::<usize>() {
+                Ok(n) => ExecCtx::new(n),
+                Err(_) => ExecCtx::new(0),
+            },
+            Err(_) => ExecCtx::new(0),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Minimum rows per chunk so one chunk carries at least
+    /// [`ExecCtx::PAR_GRAIN`] scalar ops, given `row_ops` ops per row.
+    pub fn grain_rows(row_ops: usize) -> usize {
+        let row_ops = row_ops.max(1);
+        (Self::PAR_GRAIN + row_ops - 1) / row_ops
+    }
+
+    /// Balanced, contiguous partition of `0..n` into at most
+    /// `self.threads` chunks of at least `min_chunk` items each. Chunk
+    /// boundaries depend only on `(n, threads, min_chunk)` — the
+    /// determinism contract every kernel builds on. Empty for `n = 0`.
+    pub fn chunk_ranges(&self, n: usize, min_chunk: usize) -> Vec<Range<usize>> {
+        if n == 0 {
+            return vec![];
+        }
+        let min_chunk = min_chunk.max(1);
+        let chunks = self.threads.min((n / min_chunk).max(1)).min(n);
+        let base = n / chunks;
+        let rem = n % chunks;
+        (0..chunks)
+            .map(|i| {
+                let start = i * base + i.min(rem);
+                let end = start + base + usize::from(i < rem);
+                start..end
+            })
+            .collect()
+    }
+
+    /// Run `f` once per item, concurrently. Item 0 runs on the calling
+    /// thread; the rest each get a scoped worker. Results come back in
+    /// item order. With zero or one item nothing is spawned.
+    ///
+    /// One item per worker is the contract: build the item list from
+    /// [`ExecCtx::chunk_ranges`] (which caps at `threads`), never one item
+    /// per work unit — a longer list would oversubscribe the machine and,
+    /// under a serial context, break the "threads = 1 runs on the calling
+    /// thread" guarantee. Debug builds enforce this.
+    pub fn scatter<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(I) -> T + Sync,
+    {
+        debug_assert!(
+            items.len() <= self.threads.max(1),
+            "ExecCtx::scatter: {} items exceed the {}-thread context — \
+             derive items from chunk_ranges, not from work units",
+            items.len(),
+            self.threads
+        );
+        let mut items = items;
+        if items.len() <= 1 {
+            return items.pop().map(|it| f(it)).into_iter().collect();
+        }
+        let first = items.remove(0);
+        std::thread::scope(|s| {
+            let fr = &f;
+            let handles: Vec<_> = items
+                .into_iter()
+                .map(|it| s.spawn(move || fr(it)))
+                .collect();
+            let mut out = Vec::with_capacity(handles.len() + 1);
+            out.push(fr(first));
+            for h in handles {
+                out.push(h.join().expect("ExecCtx worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Parallel loop over the row panels of a dense row-major buffer
+    /// (`width` elements per row): invokes `f(first_row, panel)` on each
+    /// balanced panel, with at least `min_rows` rows per panel. Panels are
+    /// disjoint `&mut` slices, so this is safe for any elementwise or
+    /// row-independent kernel; per-element results are unchanged by the
+    /// partition, keeping every thread count bit-identical.
+    pub fn par_rows<F>(&self, out: &mut [f32], width: usize, min_rows: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let rows = if width == 0 { 0 } else { out.len() / width };
+        if rows == 0 {
+            return;
+        }
+        let ranges = self.chunk_ranges(rows, min_rows);
+        if ranges.len() == 1 {
+            f(0, out);
+            return;
+        }
+        let panels = split_rows(out, width, &ranges);
+        let items: Vec<(usize, &mut [f32])> =
+            ranges.iter().map(|r| r.start).zip(panels).collect();
+        self.scatter(items, |(r0, panel)| f(r0, panel));
+    }
+}
+
+impl Default for ExecCtx {
+    /// The env-driven default (`FAL_THREADS`, else machine parallelism).
+    fn default() -> ExecCtx {
+        ExecCtx::from_env()
+    }
+}
+
+fn available() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split a dense row-major buffer into disjoint mutable row panels at the
+/// given (contiguous, ascending, complete) row ranges.
+pub fn split_rows<'a>(
+    mut data: &'a mut [f32],
+    width: usize,
+    ranges: &[Range<usize>],
+) -> Vec<&'a mut [f32]> {
+    let mut out = Vec::with_capacity(ranges.len());
+    for r in ranges {
+        let (head, tail) = data.split_at_mut((r.end - r.start) * width);
+        out.push(head);
+        data = tail;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_ranges_cover_and_balance() {
+        let ctx = ExecCtx::new(4);
+        for n in [0usize, 1, 3, 4, 5, 17, 100] {
+            let ranges = ctx.chunk_ranges(n, 1);
+            assert_eq!(ranges.len(), 4.min(n), "n={n}");
+            // Contiguous cover of 0..n.
+            let mut at = 0;
+            for r in &ranges {
+                assert_eq!(r.start, at);
+                at = r.end;
+            }
+            assert_eq!(at, n);
+            // Balanced: sizes differ by at most one.
+            if let (Some(mn), Some(mx)) = (
+                ranges.iter().map(|r| r.len()).min(),
+                ranges.iter().map(|r| r.len()).max(),
+            ) {
+                assert!(mx - mn <= 1, "n={n}: {ranges:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn min_chunk_caps_fanout() {
+        let ctx = ExecCtx::new(8);
+        // 10 rows with a floor of 4 rows/chunk -> at most 2 chunks.
+        assert_eq!(ctx.chunk_ranges(10, 4).len(), 2);
+        // A floor above n -> one chunk.
+        assert_eq!(ctx.chunk_ranges(10, 100).len(), 1);
+        // Serial context never splits.
+        assert_eq!(ExecCtx::serial().chunk_ranges(100, 1).len(), 1);
+    }
+
+    #[test]
+    fn chunking_is_deterministic() {
+        let a = ExecCtx::new(7).chunk_ranges(103, 2);
+        let b = ExecCtx::new(7).chunk_ranges(103, 2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn scatter_preserves_item_order() {
+        let ctx = ExecCtx::new(4);
+        let items: Vec<usize> = (0..4).collect();
+        let out = ctx.scatter(items, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6]);
+        // Degenerate cases.
+        assert!(ctx.scatter(Vec::<usize>::new(), |i| i).is_empty());
+        assert_eq!(ctx.scatter(vec![5usize], |i| i + 1), vec![6]);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "chunk_ranges")]
+    fn scatter_rejects_per_unit_fanout() {
+        // One item per work unit (instead of per chunk) breaks the
+        // threads contract; debug builds catch the misuse.
+        let ctx = ExecCtx::new(2);
+        let items: Vec<usize> = (0..11).collect();
+        ctx.scatter(items, |i| i);
+    }
+
+    #[test]
+    fn par_rows_touches_every_row_once() {
+        let ctx = ExecCtx::new(3);
+        let mut buf = vec![0.0f32; 7 * 4];
+        ctx.par_rows(&mut buf, 4, 1, |r0, panel| {
+            for (i, row) in panel.chunks_mut(4).enumerate() {
+                for v in row.iter_mut() {
+                    *v += (r0 + i) as f32 + 1.0;
+                }
+            }
+        });
+        for (r, row) in buf.chunks(4).enumerate() {
+            assert!(row.iter().all(|&v| v == (r + 1) as f32), "row {r}");
+        }
+    }
+
+    #[test]
+    fn split_rows_partitions_exactly() {
+        let mut buf = vec![0.0f32; 10 * 3];
+        let ranges = vec![0..4, 4..7, 7..10];
+        let panels = split_rows(&mut buf, 3, &ranges);
+        assert_eq!(panels.len(), 3);
+        assert_eq!(panels[0].len(), 12);
+        assert_eq!(panels[1].len(), 9);
+        assert_eq!(panels[2].len(), 9);
+    }
+
+    #[test]
+    fn grain_rows_floor() {
+        assert_eq!(ExecCtx::grain_rows(ExecCtx::PAR_GRAIN), 1);
+        assert_eq!(ExecCtx::grain_rows(ExecCtx::PAR_GRAIN / 2), 2);
+        assert!(ExecCtx::grain_rows(1) >= ExecCtx::PAR_GRAIN);
+        assert_eq!(ExecCtx::grain_rows(0), ExecCtx::PAR_GRAIN);
+    }
+
+    #[test]
+    fn explicit_thread_counts() {
+        assert_eq!(ExecCtx::serial().threads(), 1);
+        assert_eq!(ExecCtx::new(7).threads(), 7);
+        assert!(ExecCtx::new(0).threads() >= 1); // auto-detect
+    }
+}

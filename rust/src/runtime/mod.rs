@@ -23,11 +23,15 @@
 //!
 //! The [`slots`] module owns the named-slot input ordering of the fused
 //! FAL stage, shared by the TP trainer, the native train step, and the
-//! synthetic manifest so the three can never drift.
+//! synthetic manifest so the three can never drift. The [`exec`] module
+//! owns [`ExecCtx`], the native runtime's parallel execution context:
+//! every native kernel takes one, the backend owns one, and
+//! [`Backend::exec_ctx`] hands it to the coordinators.
 
 pub mod artifact;
 #[cfg(feature = "pjrt")]
 pub mod engine;
+pub mod exec;
 #[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod native;
@@ -44,6 +48,7 @@ use crate::tensor::HostTensor;
 pub use artifact::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
+pub use exec::ExecCtx;
 #[cfg(feature = "pjrt")]
 pub use literal::{from_literal, to_literal, untuple};
 pub use native::NativeBackend;
@@ -77,6 +82,14 @@ pub trait Backend {
     /// PJRT loads the aot.py-written binary; the native backend generates a
     /// deterministic GPT-2-style initialization in memory.
     fn load_params(&self, config: &str, seed: u64) -> Result<Vec<HostTensor>>;
+
+    /// The execution context this backend's artifacts run under — the
+    /// coordinators pick it up for their own host-side math (AdamW,
+    /// gradient assembly). Backends without a parallel host runtime (the
+    /// PJRT engine, test doubles) keep the serial default.
+    fn exec_ctx(&self) -> ExecCtx {
+        ExecCtx::serial()
+    }
 
     /// Per-artifact call/latency counters.
     fn stats(&self) -> BTreeMap<String, ExecStats>;
@@ -134,6 +147,17 @@ pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()>
 /// `pjrt` feature is on and a manifest exists on disk, the native CPU
 /// backend (with the built-in synthetic manifest) otherwise.
 pub fn default_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    default_backend_with_threads(artifact_dir, None)
+}
+
+/// [`default_backend`] with an explicit thread count for the native
+/// backend's [`ExecCtx`] (`None` = `FAL_THREADS` env, else machine
+/// parallelism; `Some(0)` = auto-detect). The PJRT engine executes through
+/// XLA and ignores the knob.
+pub fn default_backend_with_threads(
+    artifact_dir: &Path,
+    threads: Option<usize>,
+) -> Result<Box<dyn Backend>> {
     #[cfg(feature = "pjrt")]
     {
         if artifact_dir.join("manifest.json").exists() {
@@ -148,7 +172,10 @@ pub fn default_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
         );
     }
     let _ = artifact_dir;
-    Ok(Box::new(NativeBackend::synthetic()))
+    Ok(Box::new(match threads {
+        Some(n) => NativeBackend::synthetic_with_threads(n),
+        None => NativeBackend::synthetic(),
+    }))
 }
 
 #[cfg(test)]

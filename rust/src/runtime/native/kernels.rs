@@ -1,61 +1,143 @@
-//! f32 reference kernels for the native backend: the forward math mirrors
+//! f32 kernels for the native backend: the forward math mirrors
 //! python/compile/kernels/ref.py, the backward formulas are the hand-derived
 //! VJPs that jax.vjp produces for those forwards.
 //!
-//! Everything operates on [`HostTensor`]s viewed as row-major matrices; the
-//! BLAS-3 building blocks (`matmul`, `layernorm`, `softmax_rows`) live on
-//! `HostTensor` itself, this module adds the transposed-product variants and
-//! the attention/GeLU/LayerNorm backward passes.
+//! Every kernel takes an [`ExecCtx`] and fans out over **row panels**
+//! (contiguous output rows, balanced chunks — see
+//! [`ExecCtx::chunk_ranges`]); attention fans out over `(batch, head)`
+//! units through strided [`MatView`]s. The microkernels are written so the
+//! per-element accumulation order never depends on the partition:
+//!
+//! * `matmul` / `matmul_nt` / `matmul_tn` keep one accumulator per output
+//!   element, fed in ascending inner-dim order — **bit-identical at every
+//!   thread count** (and to the scalar [`HostTensor::matmul`] reference).
+//! * `layernorm` fwd/bwd, `softmax_rows`, `gelu` fwd/bwd, `sum_rows` and
+//!   the attention *forward* are row- (or column-) independent — also
+//!   bit-identical at every thread count.
+//! * The attention *backward*'s dk/dv accumulate across query units; each
+//!   chunk owns a zeroed partial and partials combine in ascending chunk
+//!   order — deterministic per thread count, bit-identical to the
+//!   historical scalar path at `threads = 1`, and within ~1e-6 of it at
+//!   any other thread count (f32 reassociation only).
+//!
+//! Everything operates on [`HostTensor`]s viewed as row-major matrices.
 
-use crate::tensor::{HostTensor, LN_EPS};
+use crate::runtime::exec::{split_rows, ExecCtx};
+use crate::tensor::{DType, HostTensor, MatView, MatViewMut, LN_EPS};
 
 /// tanh-GeLU constant sqrt(2/pi) (matches GPT-2 and ref.py).
 const GELU_C: f32 = 0.797_884_6;
 const GELU_A: f32 = 0.044_715;
 
+/// Rows per register tile of the `matmul` microkernel: enough to amortize
+/// the streamed `b` row across several output rows without growing the
+/// panel's L1 footprint.
+const MATMUL_TILE_ROWS: usize = 4;
+
+// ---------------------------------------------------------------------------
+// BLAS-3: the three matmul variants
+// ---------------------------------------------------------------------------
+
+/// `a @ b` with `a` [..., k] (leading axes flattened) and `b` [k, n]
+/// -> [..., n]. Row-panel parallel; per-element accumulation ascends the
+/// inner dim, so the result is bit-identical to [`HostTensor::matmul`].
+pub fn matmul(ctx: &ExecCtx, a: &HostTensor, b: &HostTensor) -> HostTensor {
+    assert_eq!(b.shape.len(), 2, "matmul rhs must be 2-D");
+    let (m, k) = a.rows_cols();
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    ctx.par_rows(&mut out, n, ExecCtx::grain_rows(2 * k * n), |r0, panel| {
+        matmul_panel(&a.data[r0 * k..], k, &b.data, n, panel);
+    });
+    let mut shape = a.shape.clone();
+    *shape.last_mut().unwrap() = n;
+    HostTensor::from_vec(&shape, out)
+}
+
+/// Panel microkernel: `out` (rows x n, dense, zeroed) += `a_panel` @ `b`.
+/// Register-tiles [`MATMUL_TILE_ROWS`] output rows so each streamed `b`
+/// row is reused across the tile; the k-loop stays outermost per tile, so
+/// every output element accumulates in ascending-k order regardless of
+/// tiling or threading.
+fn matmul_panel(a: &[f32], k: usize, b: &[f32], n: usize, out: &mut [f32]) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    let mut i0 = 0;
+    while i0 < rows {
+        let i1 = (i0 + MATMUL_TILE_ROWS).min(rows);
+        for t in 0..k {
+            let brow = &b[t * n..(t + 1) * n];
+            for r in i0..i1 {
+                let av = a[r * k + t];
+                let orow = &mut out[r * n..(r + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        i0 = i1;
+    }
+}
+
 /// `a @ b^T` with `a` [..., k] and `b` [n, k] -> [..., n]. Avoids
 /// materializing the transpose (rows of both operands are contiguous).
-pub fn matmul_nt(a: &HostTensor, b: &HostTensor) -> HostTensor {
+pub fn matmul_nt(ctx: &ExecCtx, a: &HostTensor, b: &HostTensor) -> HostTensor {
     assert_eq!(b.shape.len(), 2, "matmul_nt rhs must be 2-D");
     let (m, k) = a.rows_cols();
     let (n, k2) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_nt: inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for t in 0..k {
-                acc += arow[t] * brow[t];
+    ctx.par_rows(&mut out, n, ExecCtx::grain_rows(2 * k * n), |r0, panel| {
+        let prows = if n == 0 { 0 } else { panel.len() / n };
+        for ri in 0..prows {
+            let r = r0 + ri;
+            let arow = &a.data[r * k..(r + 1) * k];
+            let orow = &mut panel[ri * n..(ri + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for t in 0..k {
+                    acc += arow[t] * brow[t];
+                }
+                *o = acc;
             }
-            out[i * n + j] = acc;
         }
-    }
+    });
     let mut shape = a.shape.clone();
     *shape.last_mut().unwrap() = n;
     HostTensor::from_vec(&shape, out)
 }
 
 /// `a^T @ b` with `a` [..., ka] and `b` [..., kb] sharing leading axes
-/// -> [ka, kb]. This is the weight-gradient product (sum over tokens).
-pub fn matmul_tn(a: &HostTensor, b: &HostTensor) -> HostTensor {
+/// -> [ka, kb]. This is the weight-gradient product (sum over tokens):
+/// parallel over *output* row panels, with the token loop kept outermost
+/// inside each panel so every `out[i][j]` accumulates in ascending token
+/// order — bit-identical at every thread count.
+pub fn matmul_tn(ctx: &ExecCtx, a: &HostTensor, b: &HostTensor) -> HostTensor {
     let (m, ka) = a.rows_cols();
     let (m2, kb) = b.rows_cols();
     assert_eq!(m, m2, "matmul_tn: leading dims {m} vs {m2}");
     let mut out = vec![0.0f32; ka * kb];
-    for r in 0..m {
-        let arow = &a.data[r * ka..(r + 1) * ka];
-        let brow = &b.data[r * kb..(r + 1) * kb];
-        for (i, &av) in arow.iter().enumerate() {
-            let orow = &mut out[i * kb..(i + 1) * kb];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+    ctx.par_rows(&mut out, kb, ExecCtx::grain_rows(2 * m * kb), |i0, panel| {
+        let pi = if kb == 0 { 0 } else { panel.len() / kb };
+        for r in 0..m {
+            let arow = &a.data[r * ka..(r + 1) * ka];
+            let brow = &b.data[r * kb..(r + 1) * kb];
+            for il in 0..pi {
+                let av = arow[i0 + il];
+                let orow = &mut panel[il * kb..(il + 1) * kb];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
             }
         }
-    }
+    });
     HostTensor::from_vec(&[ka, kb], out)
 }
+
+// ---------------------------------------------------------------------------
+// Elementwise / reductions
+// ---------------------------------------------------------------------------
 
 /// Elementwise sum of two tensors.
 pub fn add(a: &HostTensor, b: &HostTensor) -> HostTensor {
@@ -76,44 +158,119 @@ pub fn add_bias(t: &mut HostTensor, bias: &HostTensor) {
 }
 
 /// Sum a `[..., n]` tensor over all leading axes -> `[n]` (bias gradient).
-pub fn sum_rows(t: &HostTensor) -> HostTensor {
-    let (_, n) = t.rows_cols();
+/// Column-panel parallel: each output element sums its column in ascending
+/// row order, so the reduction is bit-identical at every thread count.
+pub fn sum_rows(ctx: &ExecCtx, t: &HostTensor) -> HostTensor {
+    let (m, n) = t.rows_cols();
     let mut out = vec![0.0f32; n];
-    for row in t.data.chunks(n) {
-        for (o, &v) in out.iter_mut().zip(row) {
-            *o += v;
+    ctx.par_rows(&mut out, 1, ExecCtx::grain_rows(m), |j0, cols| {
+        let w = cols.len();
+        for r in 0..m {
+            let seg = &t.data[r * n + j0..r * n + j0 + w];
+            for (o, &v) in cols.iter_mut().zip(seg) {
+                *o += v;
+            }
         }
-    }
+    });
     HostTensor::from_vec(&[n], out)
 }
 
 /// tanh-approximated GeLU, elementwise.
-pub fn gelu(x: &HostTensor) -> HostTensor {
+pub fn gelu(ctx: &ExecCtx, x: &HostTensor) -> HostTensor {
     let mut out = x.clone();
-    for v in out.data.iter_mut() {
-        let u = GELU_C * (*v + GELU_A * *v * *v * *v);
-        *v = 0.5 * *v * (1.0 + u.tanh());
-    }
+    ctx.par_rows(&mut out.data, 1, ExecCtx::grain_rows(8), |_, chunk| {
+        for v in chunk.iter_mut() {
+            let u = GELU_C * (*v + GELU_A * *v * *v * *v);
+            *v = 0.5 * *v * (1.0 + u.tanh());
+        }
+    });
     out
 }
 
 /// GeLU VJP: dx = dout * gelu'(x).
-pub fn gelu_bwd(x: &HostTensor, dout: &HostTensor) -> HostTensor {
+pub fn gelu_bwd(ctx: &ExecCtx, x: &HostTensor, dout: &HostTensor) -> HostTensor {
     assert_eq!(x.len(), dout.len());
     let mut out = dout.clone();
-    for (d, &v) in out.data.iter_mut().zip(&x.data) {
-        let u = GELU_C * (v + GELU_A * v * v * v);
-        let t = u.tanh();
-        let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
-        *d *= 0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du;
-    }
+    ctx.par_rows(&mut out.data, 1, ExecCtx::grain_rows(12), |e0, chunk| {
+        let xs = &x.data[e0..e0 + chunk.len()];
+        for (d, &v) in chunk.iter_mut().zip(xs) {
+            let u = GELU_C * (v + GELU_A * v * v * v);
+            let t = u.tanh();
+            let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
+            *d *= 0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du;
+        }
+    });
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Row-normalizations
+// ---------------------------------------------------------------------------
+
+/// LayerNorm over the last axis with affine parameters, eps = [`LN_EPS`]
+/// (matches python/compile/kernels/ref.py::layernorm and the scalar
+/// [`HostTensor::layernorm`] bit-for-bit). Row-panel parallel.
+pub fn layernorm(
+    ctx: &ExecCtx,
+    x: &HostTensor,
+    gamma: &HostTensor,
+    beta: &HostTensor,
+) -> HostTensor {
+    let (m, n) = x.rows_cols();
+    assert_eq!(gamma.len(), n, "layernorm: gamma length");
+    assert_eq!(beta.len(), n, "layernorm: beta length");
+    let mut out = vec![0.0f32; m * n];
+    ctx.par_rows(&mut out, n, ExecCtx::grain_rows(6 * n), |r0, panel| {
+        for (ri, orow) in panel.chunks_mut(n).enumerate() {
+            let r = r0 + ri;
+            let row = &x.data[r * n..(r + 1) * n];
+            let mu = row.iter().sum::<f32>() / n as f32;
+            let var =
+                row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+            let inv = 1.0 / (var + LN_EPS).sqrt();
+            for j in 0..n {
+                orow[j] = (row[j] - mu) * inv * gamma.data[j] + beta.data[j];
+            }
+        }
+    });
+    HostTensor { shape: x.shape.clone(), dtype: DType::F32, data: out }
+}
+
+/// Numerically-stable softmax over the last axis (row-panel parallel,
+/// bit-identical to the scalar [`HostTensor::softmax_rows`]).
+pub fn softmax_rows(ctx: &ExecCtx, t: &HostTensor) -> HostTensor {
+    let (_, n) = t.rows_cols();
+    let mut out = HostTensor {
+        shape: t.shape.clone(),
+        dtype: DType::F32,
+        data: t.data.clone(),
+    };
+    ctx.par_rows(&mut out.data, n, ExecCtx::grain_rows(3 * n), |_, panel| {
+        for row in panel.chunks_mut(n) {
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+    });
     out
 }
 
 /// LayerNorm VJP over the last axis: given the primal input `x`, gamma and
 /// the output cotangent, returns (dx, dgamma, dbeta). dgamma/dbeta are
 /// summed over every leading axis.
+///
+/// Two parallel phases: (1) row panels compute dx and stash per-row
+/// (mu, inv); (2) column panels accumulate dgamma/dbeta in ascending row
+/// order. Both phases keep the scalar per-element accumulation order, so
+/// the whole VJP is bit-identical at every thread count.
 pub fn layernorm_bwd(
+    ctx: &ExecCtx,
     x: &HostTensor,
     gamma: &HostTensor,
     dout: &HostTensor,
@@ -124,35 +281,94 @@ pub fn layernorm_bwd(
     let mut dx = vec![0.0f32; m * n];
     let mut dg = vec![0.0f32; n];
     let mut db = vec![0.0f32; n];
-    let mut xhat = vec![0.0f32; n];
-    let mut dxhat = vec![0.0f32; n];
-    for i in 0..m {
-        let row = &x.data[i * n..(i + 1) * n];
-        let drow = &dout.data[i * n..(i + 1) * n];
-        let mu = row.iter().sum::<f32>() / nf;
-        let var =
-            row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / nf;
-        let inv = 1.0 / (var + LN_EPS).sqrt();
-        for j in 0..n {
-            xhat[j] = (row[j] - mu) * inv;
-            dg[j] += drow[j] * xhat[j];
-            db[j] += drow[j];
-            dxhat[j] = drow[j] * gamma.data[j];
-        }
-        let m1 = dxhat.iter().sum::<f32>() / nf;
-        let m2 =
-            dxhat.iter().zip(&xhat).map(|(a, b)| a * b).sum::<f32>() / nf;
-        let orow = &mut dx[i * n..(i + 1) * n];
-        for j in 0..n {
-            orow[j] = (dxhat[j] - m1 - xhat[j] * m2) * inv;
-        }
+    let mut mu = vec![0.0f32; m];
+    let mut inv = vec![0.0f32; m];
+
+    // Phase 1: per-row stats + dx (row-independent).
+    {
+        let ranges = ctx.chunk_ranges(m, ExecCtx::grain_rows(10 * n));
+        let dx_p = split_rows(&mut dx, n, &ranges);
+        let mu_p = split_rows(&mut mu, 1, &ranges);
+        let inv_p = split_rows(&mut inv, 1, &ranges);
+        let items: Vec<_> = ranges
+            .iter()
+            .map(|r| r.start)
+            .zip(dx_p)
+            .zip(mu_p)
+            .zip(inv_p)
+            .map(|(((r0, d), mm), ii)| (r0, d, mm, ii))
+            .collect();
+        ctx.scatter(items, |(r0, dxp, mup, invp)| {
+            for ri in 0..mup.len() {
+                let r = r0 + ri;
+                let row = &x.data[r * n..(r + 1) * n];
+                let drow = &dout.data[r * n..(r + 1) * n];
+                let mu_r = row.iter().sum::<f32>() / nf;
+                let var = row
+                    .iter()
+                    .map(|&v| (v - mu_r) * (v - mu_r))
+                    .sum::<f32>()
+                    / nf;
+                let inv_r = 1.0 / (var + LN_EPS).sqrt();
+                mup[ri] = mu_r;
+                invp[ri] = inv_r;
+                let mut m1s = 0.0f32;
+                let mut m2s = 0.0f32;
+                for j in 0..n {
+                    let dxh = drow[j] * gamma.data[j];
+                    let xh = (row[j] - mu_r) * inv_r;
+                    m1s += dxh;
+                    m2s += dxh * xh;
+                }
+                let m1 = m1s / nf;
+                let m2 = m2s / nf;
+                let orow = &mut dxp[ri * n..(ri + 1) * n];
+                for j in 0..n {
+                    let dxh = drow[j] * gamma.data[j];
+                    let xh = (row[j] - mu_r) * inv_r;
+                    orow[j] = (dxh - m1 - xh * m2) * inv_r;
+                }
+            }
+        });
     }
+
+    // Phase 2: dgamma/dbeta over column panels, rows ascending per column.
+    {
+        let ranges = ctx.chunk_ranges(n, ExecCtx::grain_rows(4 * m));
+        let dg_p = split_rows(&mut dg, 1, &ranges);
+        let db_p = split_rows(&mut db, 1, &ranges);
+        let items: Vec<_> = ranges
+            .iter()
+            .map(|r| r.start)
+            .zip(dg_p)
+            .zip(db_p)
+            .map(|((j0, g), b)| (j0, g, b))
+            .collect();
+        ctx.scatter(items, |(j0, dgp, dbp)| {
+            let w = dgp.len();
+            for r in 0..m {
+                let row = &x.data[r * n + j0..r * n + j0 + w];
+                let drow = &dout.data[r * n + j0..r * n + j0 + w];
+                let (mu_r, inv_r) = (mu[r], inv[r]);
+                for jl in 0..w {
+                    let xh = (row[jl] - mu_r) * inv_r;
+                    dgp[jl] += drow[jl] * xh;
+                    dbp[jl] += drow[jl];
+                }
+            }
+        });
+    }
+
     (
         HostTensor { shape: x.shape.clone(), dtype: x.dtype, data: dx },
         HostTensor::from_vec(&[n], dg),
         HostTensor::from_vec(&[n], db),
     )
 }
+
+// ---------------------------------------------------------------------------
+// Causal attention
+// ---------------------------------------------------------------------------
 
 /// Head-group geometry of one attention call (per shard or full model).
 #[derive(Debug, Clone, Copy)]
@@ -170,63 +386,108 @@ impl AttnGeom {
     }
 }
 
+/// One `(batch, head)` unit's strided Q/K/V windows.
+fn unit_views<'t>(
+    g: &AttnGeom,
+    q: &'t HostTensor,
+    k: &'t HostTensor,
+    v: &'t HostTensor,
+    u: usize,
+) -> (MatView<'t>, MatView<'t>, MatView<'t>, usize, usize) {
+    let (s, dh) = (g.seq, g.head_dim);
+    let (dq_w, dkv_w) = (g.heads * dh, g.kv_heads * dh);
+    let (bi, hi) = (u / g.heads, u % g.heads);
+    let kh = hi / (g.heads / g.kv_heads);
+    let qv = MatView::strided(&q.data[bi * s * dq_w + hi * dh..], s, dh, dq_w);
+    let kv = MatView::strided(&k.data[bi * s * dkv_w + kh * dh..], s, dh, dkv_w);
+    let vv = MatView::strided(&v.data[bi * s * dkv_w + kh * dh..], s, dh, dkv_w);
+    (qv, kv, vv, bi, hi)
+}
+
 /// Causal multi-head attention core: q [b,s,h*dh], k/v [b,s,hkv*dh] with
 /// h % hkv == 0 (GQA) -> o [b,s,h*dh]. Heads live interleaved in the last
-/// axis exactly like the reshape in stages.py::make_attn_fwd.
+/// axis exactly like the reshape in stages.py::make_attn_fwd. Parallel
+/// over `(batch, head)` units; each unit's rows are independent, so the
+/// output is bit-identical at every thread count.
 pub fn causal_attention(
+    ctx: &ExecCtx,
     g: &AttnGeom,
     q: &HostTensor,
     k: &HostTensor,
     v: &HostTensor,
 ) -> HostTensor {
     let (b, s, h, dh) = (g.batch, g.seq, g.heads, g.head_dim);
-    let rep = h / g.kv_heads;
-    let (dq, dkv) = (h * dh, g.kv_heads * dh);
+    let dq_w = h * dh;
     let scale = g.scale();
-    let mut out = vec![0.0f32; b * s * dq];
-    let mut probs = vec![0.0f32; s];
-    for bi in 0..b {
-        for hi in 0..h {
-            let kh = hi / rep;
-            for i in 0..s {
-                let qrow =
-                    &q.data[(bi * s + i) * dq + hi * dh..][..dh];
-                // Scores over keys j <= i, stable softmax.
-                let mut mx = f32::NEG_INFINITY;
-                for j in 0..=i {
-                    let krow =
-                        &k.data[(bi * s + j) * dkv + kh * dh..][..dh];
-                    let mut dot = 0.0f32;
-                    for t in 0..dh {
-                        dot += qrow[t] * krow[t];
-                    }
-                    probs[j] = dot * scale;
-                    mx = mx.max(probs[j]);
-                }
-                let mut sum = 0.0f32;
-                for p in probs[..=i].iter_mut() {
-                    *p = (*p - mx).exp();
-                    sum += *p;
-                }
-                let orow =
-                    &mut out[(bi * s + i) * dq + hi * dh..][..dh];
-                for j in 0..=i {
-                    let w = probs[j] / sum;
-                    let vrow =
-                        &v.data[(bi * s + j) * dkv + kh * dh..][..dh];
-                    for t in 0..dh {
-                        orow[t] += w * vrow[t];
-                    }
-                }
+    let mut out = vec![0.0f32; b * s * dq_w];
+    let ranges = ctx.chunk_ranges(b * h, ExecCtx::grain_rows(s * s * dh));
+    let chunks = ctx.scatter(ranges, |r| {
+        let mut probs = vec![0.0f32; s];
+        let mut bufs = Vec::with_capacity(r.len());
+        for u in r {
+            let (qv, kv, vv, _, _) = unit_views(g, q, k, v, u);
+            let mut buf = vec![0.0f32; s * dh];
+            attn_unit_fwd(scale, &qv, &kv, &vv, &mut probs, &mut buf);
+            bufs.push((u, buf));
+        }
+        bufs
+    });
+    for (u, buf) in chunks.into_iter().flatten() {
+        let (bi, hi) = (u / h, u % h);
+        for i in 0..s {
+            out[(bi * s + i) * dq_w + hi * dh..][..dh]
+                .copy_from_slice(&buf[i * dh..(i + 1) * dh]);
+        }
+    }
+    HostTensor::from_vec(&[b, s, dq_w], out)
+}
+
+/// One unit's forward: `out` is a dense, zeroed [s, dh] buffer.
+fn attn_unit_fwd(
+    scale: f32,
+    q: &MatView,
+    k: &MatView,
+    v: &MatView,
+    probs: &mut [f32],
+    out: &mut [f32],
+) {
+    let (s, dh) = (q.rows(), q.cols());
+    for i in 0..s {
+        let qrow = q.row(i);
+        // Scores over keys j <= i, stable softmax.
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let krow = k.row(j);
+            let mut dot = 0.0f32;
+            for t in 0..dh {
+                dot += qrow[t] * krow[t];
+            }
+            probs[j] = dot * scale;
+            mx = mx.max(probs[j]);
+        }
+        let mut sum = 0.0f32;
+        for p in probs[..=i].iter_mut() {
+            *p = (*p - mx).exp();
+            sum += *p;
+        }
+        let orow = &mut out[i * dh..(i + 1) * dh];
+        for j in 0..=i {
+            let w = probs[j] / sum;
+            let vrow = v.row(j);
+            for t in 0..dh {
+                orow[t] += w * vrow[t];
             }
         }
     }
-    HostTensor::from_vec(&[b, s, dq], out)
 }
 
 /// VJP of [`causal_attention`]: recomputes the probabilities and returns
-/// (dq, dk, dv). dk/dv accumulate over the query heads a KV head serves.
+/// (dq, dk, dv). dq is unit-independent (bit-identical at every thread
+/// count); dk/dv accumulate over the query heads a KV head serves, so each
+/// chunk owns a zeroed partial and partials combine in ascending chunk
+/// order (`threads = 1` — one chunk — reproduces the scalar path exactly).
 pub fn causal_attention_bwd(
+    ctx: &ExecCtx,
     g: &AttnGeom,
     q: &HostTensor,
     k: &HostTensor,
@@ -234,75 +495,158 @@ pub fn causal_attention_bwd(
     dout: &HostTensor,
 ) -> (HostTensor, HostTensor, HostTensor) {
     let (b, s, h, dh) = (g.batch, g.seq, g.heads, g.head_dim);
-    let rep = h / g.kv_heads;
     let (dq_w, dkv_w) = (h * dh, g.kv_heads * dh);
     let scale = g.scale();
+    let kv_len = b * s * dkv_w;
+    // Each chunk owns two full-size dk/dv partials, so cap the fan-out at
+    // ~64 MiB of transient partials regardless of core count (the cap
+    // depends only on the shape and a constant, keeping results
+    // deterministic per thread count; big-model hosts stop scaling the
+    // attention backward before they start swapping).
+    const PARTIAL_BUDGET_ELEMS: usize = 16 * 1024 * 1024;
+    let max_chunks = (PARTIAL_BUDGET_ELEMS / (2 * kv_len).max(1)).max(1);
+    let min_units = ExecCtx::grain_rows(2 * s * s * dh)
+        .max((b * h + max_chunks - 1) / max_chunks);
+    let ranges = ctx.chunk_ranges(b * h, min_units);
+    let chunks = ctx.scatter(ranges, |r| {
+        let mut probs = vec![0.0f32; s];
+        let mut dprobs = vec![0.0f32; s];
+        let mut dq_bufs = Vec::with_capacity(r.len());
+        let mut dk_p = vec![0.0f32; kv_len];
+        let mut dv_p = vec![0.0f32; kv_len];
+        for u in r {
+            let (qv, kv, vv, bi, hi) = unit_views(g, q, k, v, u);
+            let kh = hi / (h / g.kv_heads);
+            let dov = MatView::strided(
+                &dout.data[bi * s * dq_w + hi * dh..],
+                s,
+                dh,
+                dq_w,
+            );
+            let mut dq_buf = vec![0.0f32; s * dh];
+            let mut dk_v = MatViewMut::strided(
+                &mut dk_p[bi * s * dkv_w + kh * dh..],
+                s,
+                dh,
+                dkv_w,
+            );
+            let mut dv_v = MatViewMut::strided(
+                &mut dv_p[bi * s * dkv_w + kh * dh..],
+                s,
+                dh,
+                dkv_w,
+            );
+            attn_unit_bwd(
+                scale, &qv, &kv, &vv, &dov, &mut probs, &mut dprobs,
+                &mut dq_buf, &mut dk_v, &mut dv_v,
+            );
+            dq_bufs.push((u, dq_buf));
+        }
+        (dq_bufs, dk_p, dv_p)
+    });
+
     let mut dq = vec![0.0f32; b * s * dq_w];
-    let mut dk = vec![0.0f32; b * s * dkv_w];
-    let mut dv = vec![0.0f32; b * s * dkv_w];
-    let mut probs = vec![0.0f32; s];
-    let mut dprobs = vec![0.0f32; s];
-    for bi in 0..b {
-        for hi in 0..h {
-            let kh = hi / rep;
+    let mut dk: Option<Vec<f32>> = None;
+    let mut dv: Option<Vec<f32>> = None;
+    for (dq_bufs, dk_p, dv_p) in chunks {
+        for (u, buf) in dq_bufs {
+            let (bi, hi) = (u / h, u % h);
             for i in 0..s {
-                let qrow =
-                    &q.data[(bi * s + i) * dq_w + hi * dh..][..dh];
-                let drow =
-                    &dout.data[(bi * s + i) * dq_w + hi * dh..][..dh];
-                // Recompute the softmax row (j <= i).
-                let mut mx = f32::NEG_INFINITY;
-                for j in 0..=i {
-                    let krow =
-                        &k.data[(bi * s + j) * dkv_w + kh * dh..][..dh];
-                    let mut dot = 0.0f32;
-                    for t in 0..dh {
-                        dot += qrow[t] * krow[t];
-                    }
-                    probs[j] = dot * scale;
-                    mx = mx.max(probs[j]);
+                dq[(bi * s + i) * dq_w + hi * dh..][..dh]
+                    .copy_from_slice(&buf[i * dh..(i + 1) * dh]);
+            }
+        }
+        match &mut dk {
+            None => dk = Some(dk_p),
+            Some(acc) => {
+                for (a, x) in acc.iter_mut().zip(&dk_p) {
+                    *a += x;
                 }
-                let mut sum = 0.0f32;
-                for p in probs[..=i].iter_mut() {
-                    *p = (*p - mx).exp();
-                    sum += *p;
-                }
-                let mut row_dot = 0.0f32;
-                for j in 0..=i {
-                    probs[j] /= sum;
-                    let vrow =
-                        &v.data[(bi * s + j) * dkv_w + kh * dh..][..dh];
-                    let mut dp = 0.0f32;
-                    for t in 0..dh {
-                        dp += drow[t] * vrow[t];
-                    }
-                    dprobs[j] = dp;
-                    row_dot += probs[j] * dp;
-                }
-                let dqrow =
-                    &mut dq[(bi * s + i) * dq_w + hi * dh..][..dh];
-                for j in 0..=i {
-                    let dlogit = probs[j] * (dprobs[j] - row_dot) * scale;
-                    let krow =
-                        &k.data[(bi * s + j) * dkv_w + kh * dh..][..dh];
-                    let dkrow =
-                        &mut dk[(bi * s + j) * dkv_w + kh * dh..][..dh];
-                    let dvrow =
-                        &mut dv[(bi * s + j) * dkv_w + kh * dh..][..dh];
-                    for t in 0..dh {
-                        dqrow[t] += dlogit * krow[t];
-                        dkrow[t] += dlogit * qrow[t];
-                        dvrow[t] += probs[j] * drow[t];
-                    }
+            }
+        }
+        match &mut dv {
+            None => dv = Some(dv_p),
+            Some(acc) => {
+                for (a, x) in acc.iter_mut().zip(&dv_p) {
+                    *a += x;
                 }
             }
         }
     }
     (
         HostTensor::from_vec(&[b, s, dq_w], dq),
-        HostTensor::from_vec(&[b, s, dkv_w], dk),
-        HostTensor::from_vec(&[b, s, dkv_w], dv),
+        HostTensor::from_vec(
+            &[b, s, dkv_w],
+            dk.unwrap_or_else(|| vec![0.0f32; kv_len]),
+        ),
+        HostTensor::from_vec(
+            &[b, s, dkv_w],
+            dv.unwrap_or_else(|| vec![0.0f32; kv_len]),
+        ),
     )
+}
+
+/// One unit's backward. `dq` is a dense, zeroed [s, dh] buffer; `dk`/`dv`
+/// are strided windows into the chunk's partial accumulators.
+#[allow(clippy::too_many_arguments)]
+fn attn_unit_bwd(
+    scale: f32,
+    q: &MatView,
+    k: &MatView,
+    v: &MatView,
+    dout: &MatView,
+    probs: &mut [f32],
+    dprobs: &mut [f32],
+    dq: &mut [f32],
+    dk: &mut MatViewMut,
+    dv: &mut MatViewMut,
+) {
+    let (s, dh) = (q.rows(), q.cols());
+    for i in 0..s {
+        let qrow = q.row(i);
+        let drow = dout.row(i);
+        // Recompute the softmax row (j <= i).
+        let mut mx = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let krow = k.row(j);
+            let mut dot = 0.0f32;
+            for t in 0..dh {
+                dot += qrow[t] * krow[t];
+            }
+            probs[j] = dot * scale;
+            mx = mx.max(probs[j]);
+        }
+        let mut sum = 0.0f32;
+        for p in probs[..=i].iter_mut() {
+            *p = (*p - mx).exp();
+            sum += *p;
+        }
+        let mut row_dot = 0.0f32;
+        for j in 0..=i {
+            probs[j] /= sum;
+            let vrow = v.row(j);
+            let mut dp = 0.0f32;
+            for t in 0..dh {
+                dp += drow[t] * vrow[t];
+            }
+            dprobs[j] = dp;
+            row_dot += probs[j] * dp;
+        }
+        let dqrow = &mut dq[i * dh..(i + 1) * dh];
+        for j in 0..=i {
+            let dlogit = probs[j] * (dprobs[j] - row_dot) * scale;
+            let krow = k.row(j);
+            let dkrow = dk.row_mut(j);
+            for t in 0..dh {
+                dqrow[t] += dlogit * krow[t];
+                dkrow[t] += dlogit * qrow[t];
+            }
+            let dvrow = dv.row_mut(j);
+            for t in 0..dh {
+                dvrow[t] += probs[j] * drow[t];
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -310,15 +654,54 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
+    fn ser() -> ExecCtx {
+        ExecCtx::serial()
+    }
+
+    fn bits(t: &HostTensor) -> Vec<u32> {
+        t.data.iter().map(|v| v.to_bits()).collect()
+    }
+
     #[test]
     fn matmul_variants_agree() {
         let mut rng = Rng::new(1);
         let a = HostTensor::randn(&[3, 5], 1.0, &mut rng);
         let b = HostTensor::randn(&[5, 4], 1.0, &mut rng);
-        let nt = matmul_nt(&a, &b.transpose());
+        let nt = matmul_nt(&ser(), &a, &b.transpose());
         assert!(nt.max_abs_err(&a.matmul(&b)) < 1e-5);
-        let tn = matmul_tn(&a, &a);
+        let tn = matmul_tn(&ser(), &a, &a);
         assert!(tn.max_abs_err(&a.transpose().matmul(&a)) < 1e-5);
+    }
+
+    #[test]
+    fn ctx_matmul_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(21);
+        let a = HostTensor::randn(&[3, 17, 13], 1.0, &mut rng);
+        let b = HostTensor::randn(&[13, 9], 1.0, &mut rng);
+        let reference = a.matmul(&b);
+        for threads in [1usize, 2, 4, 7] {
+            let ctx = ExecCtx::new(threads);
+            assert_eq!(
+                bits(&matmul(&ctx, &a, &b)),
+                bits(&reference),
+                "threads = {threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn ctx_layernorm_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(22);
+        let x = HostTensor::randn(&[9, 16], 1.3, &mut rng);
+        let g = HostTensor::randn(&[16], 0.5, &mut rng);
+        let b = HostTensor::randn(&[16], 0.2, &mut rng);
+        let reference = x.layernorm(&g, &b);
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::new(threads);
+            assert_eq!(bits(&layernorm(&ctx, &x, &g, &b)), bits(&reference));
+        }
+        let sm = x.softmax_rows();
+        assert_eq!(bits(&softmax_rows(&ExecCtx::new(4), &x)), bits(&sm));
     }
 
     #[test]
@@ -326,13 +709,13 @@ mod tests {
         let mut t = HostTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
         add_bias(&mut t, &HostTensor::from_vec(&[2], vec![10., 20.]));
         assert_eq!(t.data, vec![11., 22., 13., 24.]);
-        assert_eq!(sum_rows(&t).data, vec![24., 46.]);
+        assert_eq!(sum_rows(&ser(), &t).data, vec![24., 46.]);
     }
 
     #[test]
     fn gelu_matches_reference_points() {
         let x = HostTensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
-        let y = gelu(&x);
+        let y = gelu(&ser(), &x);
         // Reference values from the JAX oracle (tanh approximation).
         assert!((y.data[0] - (-0.158_808)).abs() < 1e-4, "{}", y.data[0]);
         assert_eq!(y.data[1], 0.0);
@@ -344,15 +727,15 @@ mod tests {
         let mut rng = Rng::new(2);
         let x = HostTensor::randn(&[16], 1.0, &mut rng);
         let dout = HostTensor::ones(&[16]);
-        let dx = gelu_bwd(&x, &dout);
+        let dx = gelu_bwd(&ser(), &x, &dout);
         let h = 1e-3f32;
         for i in 0..16 {
             let mut xp = x.clone();
             let mut xm = x.clone();
             xp.data[i] += h;
             xm.data[i] -= h;
-            let num =
-                (gelu(&xp).data[i] - gelu(&xm).data[i]) / (2.0 * h);
+            let num = (gelu(&ser(), &xp).data[i] - gelu(&ser(), &xm).data[i])
+                / (2.0 * h);
             assert!(
                 (num - dx.data[i]).abs() < 1e-2,
                 "i={i}: numeric {num} vs analytic {}",
@@ -369,7 +752,7 @@ mod tests {
         let b = HostTensor::zeros(&[8]);
         let w = HostTensor::randn(&[2, 8], 1.0, &mut rng);
         let loss = |x_: &HostTensor| x_.layernorm(&g, &b).dot(&w);
-        let (dx, dg, db) = layernorm_bwd(&x, &g, &w);
+        let (dx, dg, db) = layernorm_bwd(&ser(), &x, &g, &w);
         let h = 1e-3f32;
         for i in [0usize, 5, 9, 15] {
             let mut xp = x.clone();
@@ -384,7 +767,7 @@ mod tests {
             );
         }
         // dbeta is just the summed cotangent; dgamma matches xhat-weighting.
-        assert!(db.max_abs_err(&sum_rows(&w)) < 1e-5);
+        assert!(db.max_abs_err(&sum_rows(&ser(), &w)) < 1e-5);
         assert_eq!(dg.shape, vec![8]);
     }
 
@@ -401,7 +784,7 @@ mod tests {
                 v.data[j * 6 + t] = j as f32;
             }
         }
-        let o = causal_attention(&g, &q, &k, &v);
+        let o = causal_attention(&ser(), &g, &q, &k, &v);
         for t in 0..6 {
             assert!((o.data[t] - 0.0).abs() < 1e-6); // pos 0 sees only v0
         }
@@ -415,6 +798,38 @@ mod tests {
     }
 
     #[test]
+    fn attention_parallel_matches_serial() {
+        // seq 32 puts the per-unit work (32^2 * 8 ops) above PAR_GRAIN, so
+        // the 8 (batch, head) units split across workers instead of
+        // collapsing to the serial single-chunk path.
+        let g = AttnGeom { batch: 2, seq: 32, heads: 4, kv_heads: 2, head_dim: 8 };
+        assert!(
+            ExecCtx::new(4)
+                .chunk_ranges(2 * 4, ExecCtx::grain_rows(32 * 32 * 8))
+                .len()
+                > 1,
+            "attention test shape no longer splits — enlarge it"
+        );
+        let mut rng = Rng::new(14);
+        let q = HostTensor::randn(&[2, 32, 32], 0.8, &mut rng);
+        let k = HostTensor::randn(&[2, 32, 16], 0.8, &mut rng);
+        let v = HostTensor::randn(&[2, 32, 16], 0.8, &mut rng);
+        let w = HostTensor::randn(&[2, 32, 32], 1.0, &mut rng);
+        let o1 = causal_attention(&ser(), &g, &q, &k, &v);
+        let (dq1, dk1, dv1) = causal_attention_bwd(&ser(), &g, &q, &k, &v, &w);
+        for threads in [2usize, 4, 7] {
+            let ctx = ExecCtx::new(threads);
+            // Forward and dq are unit-independent: bit-identical.
+            assert_eq!(bits(&causal_attention(&ctx, &g, &q, &k, &v)), bits(&o1));
+            let (dq, dk, dv) = causal_attention_bwd(&ctx, &g, &q, &k, &v, &w);
+            assert_eq!(bits(&dq), bits(&dq1), "threads = {threads}");
+            // dk/dv combine chunk partials: reassociation only.
+            assert!(dk.max_abs_err(&dk1) < 1e-6, "threads = {threads}");
+            assert!(dv.max_abs_err(&dv1) < 1e-6, "threads = {threads}");
+        }
+    }
+
+    #[test]
     fn attention_bwd_finite_difference() {
         let g = AttnGeom { batch: 1, seq: 3, heads: 2, kv_heads: 1, head_dim: 2 };
         let mut rng = Rng::new(5);
@@ -423,9 +838,9 @@ mod tests {
         let v = HostTensor::randn(&[1, 3, 2], 0.7, &mut rng);
         let w = HostTensor::randn(&[1, 3, 4], 1.0, &mut rng);
         let loss = |q_: &HostTensor, k_: &HostTensor, v_: &HostTensor| {
-            causal_attention(&g, q_, k_, v_).dot(&w)
+            causal_attention(&ser(), &g, q_, k_, v_).dot(&w)
         };
-        let (dq, dk, dv) = causal_attention_bwd(&g, &q, &k, &v, &w);
+        let (dq, dk, dv) = causal_attention_bwd(&ser(), &g, &q, &k, &v, &w);
         let h = 1e-3f32;
         let check = |t: &HostTensor, dt: &HostTensor, which: usize| {
             for i in 0..t.len() {

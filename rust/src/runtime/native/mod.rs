@@ -5,8 +5,11 @@
 //! paper's communication schedules (and the whole test suite plus the full
 //! `fal exp all` experiment sweep) executable on a machine with no `xla`
 //! crate, no Python and no `artifacts/` directory. The kernels are
-//! straightforward matmul/layernorm/softmax/GeLU loops — slow next to XLA,
-//! but numerically honest, which is all the FAL-vs-PreLN accounting needs.
+//! cache-blocked f32 microkernels that fan out over row panels through the
+//! backend's [`ExecCtx`] (`--threads` / `FAL_THREADS`; see
+//! [`super::exec`]) — still far from XLA, but numerically honest and
+//! deterministic per thread count, which is all the FAL-vs-PreLN
+//! accounting needs.
 //!
 //! Artifact kinds and where they execute:
 //!
@@ -49,6 +52,7 @@ use anyhow::{bail, Result};
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
+use super::exec::ExecCtx;
 use super::synthetic::{default_specs, synthetic_manifest};
 use super::{validate_inputs, Backend, ExecStats, Manifest};
 
@@ -57,21 +61,37 @@ const INIT_STD: f32 = 0.02;
 
 pub struct NativeBackend {
     manifest: Manifest,
+    /// The execution context every artifact executes under — the worker
+    /// fan-out knob plumbed from the CLI / `FAL_THREADS` at construction.
+    ctx: ExecCtx,
     stats: RefCell<BTreeMap<String, ExecStats>>,
 }
 
 impl NativeBackend {
     /// Wrap an arbitrary manifest (artifacts must carry a `kind` meta the
-    /// native dispatcher understands — see the module-level table).
+    /// native dispatcher understands — see the module-level table), with
+    /// the env-driven default execution context.
     pub fn new(manifest: Manifest) -> NativeBackend {
-        NativeBackend { manifest, stats: RefCell::new(BTreeMap::new()) }
+        Self::with_ctx(manifest, ExecCtx::from_env())
+    }
+
+    /// Wrap a manifest with an explicit execution context.
+    pub fn with_ctx(manifest: Manifest, ctx: ExecCtx) -> NativeBackend {
+        NativeBackend { manifest, ctx, stats: RefCell::new(BTreeMap::new()) }
     }
 
     /// The default backend: the built-in synthetic configs (micro, tiny,
     /// small + its deep/GQA/MoE companions, e2e) with every artifact kind
-    /// registered — the full `fal exp all` surface.
+    /// registered — the full `fal exp all` surface. Thread count comes
+    /// from `FAL_THREADS` (else the machine's parallelism).
     pub fn synthetic() -> NativeBackend {
         Self::new(synthetic_manifest(&default_specs()))
+    }
+
+    /// [`NativeBackend::synthetic`] with an explicit thread count
+    /// (`0` = auto-detect) — what `fal --threads N` constructs.
+    pub fn synthetic_with_threads(threads: usize) -> NativeBackend {
+        Self::with_ctx(synthetic_manifest(&default_specs()), ExecCtx::new(threads))
     }
 }
 
@@ -84,27 +104,36 @@ impl Backend for NativeBackend {
         &self.manifest
     }
 
+    fn exec_ctx(&self) -> ExecCtx {
+        self.ctx
+    }
+
     fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let spec = self.manifest.artifact(name)?;
         validate_inputs(spec, inputs)?;
+        let ctx = &self.ctx;
         let t0 = Instant::now();
         let out = match spec.meta_str("kind") {
-            Some("tp_stage") => stages::run_stage(&self.manifest, spec, inputs)?,
-            Some("train_step") => train_step::run(&self.manifest, spec, inputs)?,
+            Some("tp_stage") => {
+                stages::run_stage(ctx, &self.manifest, spec, inputs)?
+            }
+            Some("train_step") => {
+                train_step::run(ctx, &self.manifest, spec, inputs)?
+            }
             Some("grad_step") => {
-                train_step::run_grad_step(&self.manifest, spec, inputs)?
+                train_step::run_grad_step(ctx, &self.manifest, spec, inputs)?
             }
             Some("gradmag") => {
-                train_step::run_gradmag(&self.manifest, spec, inputs)?
+                train_step::run_gradmag(ctx, &self.manifest, spec, inputs)?
             }
             Some("eval_masked") => {
-                model::run_eval_masked(&self.manifest, spec, inputs)?
+                model::run_eval_masked(ctx, &self.manifest, spec, inputs)?
             }
             Some("score_options") => {
-                model::run_score_options(&self.manifest, spec, inputs)?
+                model::run_score_options(ctx, &self.manifest, spec, inputs)?
             }
             Some("capture") => {
-                model::run_capture(&self.manifest, spec, inputs)?
+                model::run_capture(ctx, &self.manifest, spec, inputs)?
             }
             other => bail!(
                 "native backend cannot execute artifact {name:?} \
@@ -171,6 +200,13 @@ mod tests {
         let b = NativeBackend::synthetic();
         let err = b.execute("nope", &[]).unwrap_err().to_string();
         assert!(err.contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn explicit_thread_count_reaches_exec_ctx() {
+        let b = NativeBackend::synthetic_with_threads(3);
+        assert_eq!(b.exec_ctx().threads(), 3);
+        assert!(NativeBackend::synthetic().exec_ctx().threads() >= 1);
     }
 
     #[test]

@@ -22,10 +22,11 @@ use anyhow::{ensure, Result};
 
 use crate::coordinator::topology::NamedParams;
 use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::exec::ExecCtx;
 use crate::runtime::Manifest;
 use crate::tensor::HostTensor;
 
-use super::kernels::{add, matmul_nt};
+use super::kernels::{add, layernorm, matmul_nt};
 use super::moe::moe_attn_fwd;
 use super::stages::{attn_fwd, embed_fwd, mlp_fwd};
 use super::train_step::{
@@ -48,6 +49,7 @@ fn scaled(t: &HostTensor, s: f32) -> HostTensor {
 /// Gated forward for any variant; returns the final hidden state and,
 /// when `capture` is set, the per-block activation streams.
 fn forward_gated(
+    ctx: &ExecCtx,
     mm: &ModelMeta,
     params: &NamedParams,
     tokens: &HostTensor,
@@ -66,19 +68,22 @@ fn forward_gated(
         mlp_out: Vec::with_capacity(l),
     });
 
-    let mut x = embed_fwd(tokens, params.get("wte")?, params.get("wpe")?);
+    let mut x = embed_fwd(ctx, tokens, params.get("wte")?, params.get("wpe")?);
     let mut fa: Option<HostTensor> = None;
     for li in 0..l {
         let ap = attn_params(params, li)?;
         let mp = mlp_params(params, li)?;
         let lnf = |t: &HostTensor| -> Result<HostTensor> {
-            Ok(t.layernorm(
+            Ok(layernorm(
+                ctx,
+                t,
                 params.blk(li, "lnf_g")?,
                 params.blk(li, "lnf_b")?,
             ))
         };
         let a = if mm.cfg.n_expert > 1 {
             moe_attn_fwd(
+                ctx,
                 &mm.geom,
                 &x,
                 &ap,
@@ -86,7 +91,7 @@ fn forward_gated(
                 params.blk(li, "wq_experts")?,
             )
         } else {
-            attn_fwd(&mm.geom, &x, &ap).out
+            attn_fwd(ctx, &mm.geom, &x, &ap).out
         };
         // The residual stream sees a * mha_scale, the MLP-input path sees
         // a * conn_scale (model.py's surgery gates; both 1.0 in training).
@@ -94,29 +99,29 @@ fn forward_gated(
         let a_conn = scaled(&a, conn_scale[li]);
 
         let mlpf = match block_kind(mm.variant, li, mm.reuse_layer) {
-            BlockKind::PreLn => mlp_fwd(&add(&x, &a_conn), None, &mp),
-            BlockKind::Parallel => mlp_fwd(&x, None, &mp),
+            BlockKind::PreLn => mlp_fwd(ctx, &add(&x, &a_conn), None, &mp),
+            BlockKind::Parallel => mlp_fwd(ctx, &x, None, &mp),
             BlockKind::FalPrep => {
                 let f = lnf(&a_conn)?;
-                let m = mlp_fwd(&x, Some(&f), &mp);
+                let m = mlp_fwd(ctx, &x, Some(&f), &mp);
                 fa = Some(f);
                 m
             }
             BlockKind::FalMain => {
-                mlp_fwd(&x, Some(fa.as_ref().expect("fa set")), &mp)
+                mlp_fwd(ctx, &x, Some(fa.as_ref().expect("fa set")), &mp)
             }
             BlockKind::FalPlusPrep => {
-                let m = mlp_fwd(&x, Some(&a_conn), &mp);
+                let m = mlp_fwd(ctx, &x, Some(&a_conn), &mp);
                 fa = Some(a_conn.clone());
                 m
             }
             BlockKind::FalPlusMain => {
                 let fan = lnf(fa.as_ref().expect("fa set"))?;
-                mlp_fwd(&add(&x, &a_conn), Some(&fan), &mp)
+                mlp_fwd(ctx, &add(&x, &a_conn), Some(&fan), &mp)
             }
             BlockKind::Ablation1 => {
                 let an = lnf(&a_conn)?;
-                mlp_fwd(&x, Some(&an), &mp)
+                mlp_fwd(ctx, &x, Some(&an), &mp)
             }
         };
         if let Some(c) = caps.as_mut() {
@@ -131,13 +136,14 @@ fn forward_gated(
 
 /// Per-token (lse, gold-logit) pairs of the weight-tied head.
 fn head_row_stats(
+    ctx: &ExecCtx,
     mm: &ModelMeta,
     params: &NamedParams,
     x: &HostTensor,
     targets: &HostTensor,
 ) -> Result<Vec<(f32, f32)>> {
-    let xn = x.layernorm(params.get("lnF_g")?, params.get("lnF_b")?);
-    let logits = matmul_nt(&xn, params.get("wte")?);
+    let xn = layernorm(ctx, x, params.get("lnF_g")?, params.get("lnF_b")?);
+    let logits = matmul_nt(ctx, &xn, params.get("wte")?);
     let vocab = mm.cfg.vocab_size;
     let (rows, _) = xn.rows_cols();
     let ids = targets.as_i32();
@@ -155,6 +161,7 @@ fn head_row_stats(
 /// `eval_masked`: inputs [params, tokens, targets, mha_scale, conn_scale],
 /// outputs [loss_sum, count]. Rust accumulates exact PPL across batches.
 pub fn run_eval_masked(
+    ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
     inputs: &[HostTensor],
@@ -171,6 +178,7 @@ pub fn run_eval_masked(
     let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
     let (tokens, targets) = (&inputs[np], &inputs[np + 1]);
     let (x, _) = forward_gated(
+        ctx,
         &mm,
         &params,
         tokens,
@@ -178,7 +186,7 @@ pub fn run_eval_masked(
         &inputs[np + 3].data,
         false,
     )?;
-    let rows = head_row_stats(&mm, &params, &x, targets)?;
+    let rows = head_row_stats(ctx, &mm, &params, &x, targets)?;
     let loss_sum: f64 =
         rows.iter().map(|(lse, gold)| (lse - gold) as f64).sum();
     Ok(vec![
@@ -190,6 +198,7 @@ pub fn run_eval_masked(
 /// `score_options`: inputs [params, tokens, targets, mask], output one
 /// `[B]` tensor of sum over masked positions of log p(target | prefix).
 pub fn run_score_options(
+    ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
     inputs: &[HostTensor],
@@ -207,8 +216,9 @@ pub fn run_score_options(
     let (tokens, targets, mask) =
         (&inputs[np], &inputs[np + 1], &inputs[np + 2]);
     let ones = vec![1.0f32; mm.cfg.n_layer];
-    let (x, _) = forward_gated(&mm, &params, tokens, &ones, &ones, false)?;
-    let rows = head_row_stats(&mm, &params, &x, targets)?;
+    let (x, _) =
+        forward_gated(ctx, &mm, &params, tokens, &ones, &ones, false)?;
+    let rows = head_row_stats(ctx, &mm, &params, &x, targets)?;
     let (b, s) = (tokens.shape[0], tokens.shape[1]);
     let mut ll = vec![0.0f32; b];
     for bi in 0..b {
@@ -225,6 +235,7 @@ pub fn run_score_options(
 /// `capture`: inputs [params, tokens], outputs stacked [L,B,S,D] tensors
 /// [mha_out, mlp_in, mlp_out] — the Fig 3(a) CKA streams.
 pub fn run_capture(
+    ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
     inputs: &[HostTensor],
@@ -242,7 +253,7 @@ pub fn run_capture(
     let tokens = &inputs[np];
     let ones = vec![1.0f32; mm.cfg.n_layer];
     let (_, caps) =
-        forward_gated(&mm, &params, tokens, &ones, &ones, true)?;
+        forward_gated(ctx, &mm, &params, tokens, &ones, &ones, true)?;
     let caps = caps.expect("capture requested");
     let (b, s) = (tokens.shape[0], tokens.shape[1]);
     let stack = |ts: &[HostTensor]| {

@@ -12,12 +12,15 @@
 //! K/V and the attention core are unchanged, so GQA composes freely. The
 //! backward pass is hand-derived like the rest of the native kernels and
 //! follows the same VJP convention (cotangent per primal, primal shapes).
+//! All dense math routes through the [`ExecCtx`]-parallel kernels; the
+//! per-expert gating loops are elementwise and stay scalar.
 
+use crate::runtime::exec::ExecCtx;
 use crate::tensor::HostTensor;
 
 use super::kernels::{
-    causal_attention, causal_attention_bwd, layernorm_bwd, matmul_nt,
-    matmul_tn, AttnGeom,
+    causal_attention, causal_attention_bwd, layernorm, layernorm_bwd, matmul,
+    matmul_nt, matmul_tn, softmax_rows, AttnGeom,
 };
 
 /// Gradients of one MoE-attention call.
@@ -51,21 +54,22 @@ struct MoeFwd {
 
 /// Shared forward: `p` = [ln1_g, ln1_b, wq, wk, wv, wo].
 fn moe_fwd(
+    ctx: &ExecCtx,
     g: &AttnGeom,
     x: &HostTensor,
     p: &[&HostTensor],
     router: &HostTensor,
     wqe: &HostTensor,
 ) -> MoeFwd {
-    let xn = x.layernorm(p[0], p[1]);
-    let gate = xn.matmul(router).softmax_rows(); // [B,S,E]
+    let xn = layernorm(ctx, x, p[0], p[1]);
+    let gate = softmax_rows(ctx, &matmul(ctx, &xn, router)); // [B,S,E]
     let n_expert = router.shape[1];
-    let mut q = xn.matmul(p[2]);
+    let mut q = matmul(ctx, &xn, p[2]);
     let (rows, dq_w) = q.rows_cols();
     let mut qs = Vec::with_capacity(n_expert);
     for e in 0..n_expert {
         let we = expert_mat(wqe, e);
-        let qe = xn.matmul(&we);
+        let qe = matmul(ctx, &xn, &we);
         for r in 0..rows {
             let gv = gate.data[r * n_expert + e];
             let qrow = &mut q.data[r * dq_w..(r + 1) * dq_w];
@@ -76,26 +80,28 @@ fn moe_fwd(
         }
         qs.push(qe);
     }
-    let k = xn.matmul(p[3]);
-    let v = xn.matmul(p[4]);
-    let o = causal_attention(g, &q, &k, &v);
-    let out = o.matmul(p[5]);
+    let k = matmul(ctx, &xn, p[3]);
+    let v = matmul(ctx, &xn, p[4]);
+    let o = causal_attention(ctx, g, &q, &k, &v);
+    let out = matmul(ctx, &o, p[5]);
     MoeFwd { out, xn, gate, qs, q, k, v, o }
 }
 
 /// MoE attention forward -> the block's (full, unsharded) MHA output.
 pub fn moe_attn_fwd(
+    ctx: &ExecCtx,
     g: &AttnGeom,
     x: &HostTensor,
     p: &[&HostTensor],
     router: &HostTensor,
     wqe: &HostTensor,
 ) -> HostTensor {
-    moe_fwd(g, x, p, router, wqe).out
+    moe_fwd(ctx, g, x, p, router, wqe).out
 }
 
 /// VJP of [`moe_attn_fwd`].
 pub fn moe_attn_bwd(
+    ctx: &ExecCtx,
     g: &AttnGeom,
     x: &HostTensor,
     p: &[&HostTensor],
@@ -103,16 +109,16 @@ pub fn moe_attn_bwd(
     wqe: &HostTensor,
     dout: &HostTensor,
 ) -> MoeAttnGrads {
-    let f = moe_fwd(g, x, p, router, wqe);
-    let do_ = matmul_nt(dout, p[5]); // dout @ wo^T
-    let dwo = matmul_tn(&f.o, dout);
-    let (dq, dk, dv) = causal_attention_bwd(g, &f.q, &f.k, &f.v, &do_);
-    let mut dxn = matmul_nt(&dq, p[2]);
-    dxn.add_assign(&matmul_nt(&dk, p[3]));
-    dxn.add_assign(&matmul_nt(&dv, p[4]));
-    let dwq = matmul_tn(&f.xn, &dq);
-    let dwk = matmul_tn(&f.xn, &dk);
-    let dwv = matmul_tn(&f.xn, &dv);
+    let f = moe_fwd(ctx, g, x, p, router, wqe);
+    let do_ = matmul_nt(ctx, dout, p[5]); // dout @ wo^T
+    let dwo = matmul_tn(ctx, &f.o, dout);
+    let (dq, dk, dv) = causal_attention_bwd(ctx, g, &f.q, &f.k, &f.v, &do_);
+    let mut dxn = matmul_nt(ctx, &dq, p[2]);
+    dxn.add_assign(&matmul_nt(ctx, &dk, p[3]));
+    dxn.add_assign(&matmul_nt(ctx, &dv, p[4]));
+    let dwq = matmul_tn(ctx, &f.xn, &dq);
+    let dwk = matmul_tn(ctx, &f.xn, &dk);
+    let dwv = matmul_tn(ctx, &f.xn, &dv);
 
     let n_expert = router.shape[1];
     let (rows, dq_w) = dq.rows_cols();
@@ -133,8 +139,8 @@ pub fn moe_attn_bwd(
             dgate.data[r * n_expert + e] = acc;
         }
         let we = expert_mat(wqe, e);
-        dxn.add_assign(&matmul_nt(&dqs, &we));
-        let dwe = matmul_tn(&f.xn, &dqs);
+        dxn.add_assign(&matmul_nt(ctx, &dqs, &we));
+        let dwe = matmul_tn(ctx, &f.xn, &dqs);
         let n = dwe.len();
         dwqe.data[e * n..(e + 1) * n].copy_from_slice(&dwe.data);
     }
@@ -149,10 +155,10 @@ pub fn moe_attn_bwd(
             orow[t] = grow[t] * (dgrow[t] - rd);
         }
     }
-    let drouter = matmul_tn(&f.xn, &dlogits);
-    dxn.add_assign(&matmul_nt(&dlogits, router));
+    let drouter = matmul_tn(ctx, &f.xn, &dlogits);
+    dxn.add_assign(&matmul_nt(ctx, &dlogits, router));
 
-    let (dx, dg, db) = layernorm_bwd(x, p[0], &dxn);
+    let (dx, dg, db) = layernorm_bwd(ctx, x, p[0], &dxn);
     MoeAttnGrads {
         dx,
         attn: vec![dg, db, dwq, dwk, dwv, dwo],
@@ -165,6 +171,10 @@ pub fn moe_attn_bwd(
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    fn ser() -> ExecCtx {
+        ExecCtx::serial()
+    }
 
     fn setup() -> (AttnGeom, HostTensor, Vec<HostTensor>, HostTensor, HostTensor) {
         let g = AttnGeom { batch: 1, seq: 3, heads: 2, kv_heads: 2, head_dim: 2 };
@@ -188,11 +198,44 @@ mod tests {
     fn experts_change_the_output() {
         let (g, x, p, router, wqe) = setup();
         let views: Vec<&HostTensor> = p.iter().collect();
-        let with = moe_attn_fwd(&g, &x, &views, &router, &wqe);
+        let with = moe_attn_fwd(&ser(), &g, &x, &views, &router, &wqe);
         let zero_e = HostTensor::zeros(&wqe.shape);
-        let without = moe_attn_fwd(&g, &x, &views, &router, &zero_e);
+        let without = moe_attn_fwd(&ser(), &g, &x, &views, &router, &zero_e);
         assert!(with.max_abs_err(&without) > 1e-6);
         assert_eq!(with.shape, x.shape);
+    }
+
+    #[test]
+    fn moe_parallel_matches_serial() {
+        // Sized so the internal matmul panels split (64 token rows against
+        // a grain of ceil(16384 / (2*32*32)) = 8 rows) — the tiny setup()
+        // shapes stay below the PAR_GRAIN floor and would only compare the
+        // serial path with itself.
+        let g = AttnGeom { batch: 2, seq: 32, heads: 4, kv_heads: 4, head_dim: 8 };
+        let d = 32usize;
+        assert!(
+            ExecCtx::new(4)
+                .chunk_ranges(2 * 32, ExecCtx::grain_rows(2 * d * d))
+                .len()
+                > 1,
+            "moe test shape no longer splits — enlarge it"
+        );
+        let mut rng = Rng::new(19);
+        let x = HostTensor::randn(&[2, 32, d], 0.5, &mut rng);
+        let p = vec![
+            HostTensor::ones(&[d]),
+            HostTensor::zeros(&[d]),
+            HostTensor::randn(&[d, d], 0.2, &mut rng),
+            HostTensor::randn(&[d, d], 0.2, &mut rng),
+            HostTensor::randn(&[d, d], 0.2, &mut rng),
+            HostTensor::randn(&[d, d], 0.2, &mut rng),
+        ];
+        let router = HostTensor::randn(&[d, 2], 0.3, &mut rng);
+        let wqe = HostTensor::randn(&[2, d, d], 0.2, &mut rng);
+        let views: Vec<&HostTensor> = p.iter().collect();
+        let base = moe_attn_fwd(&ser(), &g, &x, &views, &router, &wqe);
+        let par = moe_attn_fwd(&ExecCtx::new(4), &g, &x, &views, &router, &wqe);
+        assert_eq!(base.data, par.data);
     }
 
     #[test]
@@ -201,11 +244,11 @@ mod tests {
         let views: Vec<&HostTensor> = p.iter().collect();
         let mut rng = Rng::new(18);
         let w = HostTensor::randn(&[1, 3, 4], 1.0, &mut rng);
-        let grads = moe_attn_bwd(&g, &x, &views, &router, &wqe, &w);
+        let grads = moe_attn_bwd(&ser(), &g, &x, &views, &router, &wqe, &w);
         let h = 1e-3f32;
         let loss = |x_: &HostTensor, r_: &HostTensor, e_: &HostTensor| {
             let v: Vec<&HostTensor> = p.iter().collect();
-            moe_attn_fwd(&g, x_, &v, r_, e_).dot(&w)
+            moe_attn_fwd(&ser(), &g, x_, &v, r_, e_).dot(&w)
         };
         let check = |t: &HostTensor, dt: &HostTensor, which: usize| {
             for i in 0..t.len() {

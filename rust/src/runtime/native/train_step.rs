@@ -26,11 +26,12 @@ use crate::config::{ModelConfig, TrainConfig, Variant};
 use crate::coordinator::optim::{adamw_step, zeros_like};
 use crate::coordinator::topology::NamedParams;
 use crate::runtime::artifact::ArtifactSpec;
+use crate::runtime::exec::ExecCtx;
 use crate::runtime::slots;
 use crate::runtime::Manifest;
 use crate::tensor::HostTensor;
 
-use super::kernels::{add, layernorm_bwd, AttnGeom};
+use super::kernels::{add, layernorm, layernorm_bwd, AttnGeom};
 use super::moe::{moe_attn_bwd, moe_attn_fwd};
 use super::stages::{
     attn_bwd, attn_fwd, embed_bwd, embed_fwd, fal_fused_bwd, fal_fused_fwd,
@@ -190,6 +191,7 @@ fn acc_mlp(grads: &mut NamedParams, li: usize, out: &[HostTensor]) {
 /// Block attention forward with the optional Fig 4(a) probe added to the
 /// output; dispatches to MoE-attention when the config has experts.
 fn block_attn_fwd(
+    ctx: &ExecCtx,
     mm: &ModelMeta,
     params: &NamedParams,
     li: usize,
@@ -199,6 +201,7 @@ fn block_attn_fwd(
     let ap = attn_params(params, li)?;
     let mut a = if mm.cfg.n_expert > 1 {
         moe_attn_fwd(
+            ctx,
             &mm.geom,
             x,
             &ap,
@@ -206,7 +209,7 @@ fn block_attn_fwd(
             params.blk(li, "wq_experts")?,
         )
     } else {
-        attn_fwd(&mm.geom, x, &ap).out
+        attn_fwd(ctx, &mm.geom, x, &ap).out
     };
     if let Some(p) = probe {
         a.add_assign(p);
@@ -216,7 +219,9 @@ fn block_attn_fwd(
 
 /// Block attention backward: accumulates the attention parameter grads
 /// (incl. router/experts for MoE) and returns the dx contribution.
+#[allow(clippy::too_many_arguments)]
 fn block_attn_bwd(
+    ctx: &ExecCtx,
     mm: &ModelMeta,
     params: &NamedParams,
     li: usize,
@@ -227,6 +232,7 @@ fn block_attn_bwd(
     let ap = attn_params(params, li)?;
     if mm.cfg.n_expert > 1 {
         let out = moe_attn_bwd(
+            ctx,
             &mm.geom,
             x,
             &ap,
@@ -239,7 +245,7 @@ fn block_attn_bwd(
         acc_blk(grads, li, "wq_experts", &out.dwq_experts);
         Ok(out.dx)
     } else {
-        let mut out = attn_bwd(&mm.geom, x, &ap, da);
+        let mut out = attn_bwd(ctx, &mm.geom, x, &ap, da);
         let rest = out.split_off(1);
         acc_attn(grads, li, &rest);
         Ok(out.pop().unwrap())
@@ -259,6 +265,7 @@ pub(crate) struct LossAndGrads {
 /// one [B,S,D] tensor per block added to that block's MHA output (the
 /// Fig 4(a) measurement surface; pass `None` for training).
 pub(crate) fn loss_and_grads(
+    ctx: &ExecCtx,
     mm: &ModelMeta,
     params: &NamedParams,
     tokens: &HostTensor,
@@ -271,33 +278,39 @@ pub(crate) fn loss_and_grads(
     }
     let probe = |li: usize| probes.map(|p| &p[li]);
     let moe = mm.cfg.n_expert > 1;
+    let lnf = |a: &HostTensor, li: usize| -> Result<HostTensor> {
+        Ok(layernorm(
+            ctx,
+            a,
+            params.blk(li, "lnf_g")?,
+            params.blk(li, "lnf_b")?,
+        ))
+    };
 
     // ------------------------------ forward ------------------------------
-    let mut x = embed_fwd(tokens, params.get("wte")?, params.get("wpe")?);
+    let mut x = embed_fwd(ctx, tokens, params.get("wte")?, params.get("wpe")?);
     let mut stash: Vec<Stash> = Vec::with_capacity(l);
     let mut fa: Option<HostTensor> = None;
     for li in 0..l {
         match block_kind(mm.variant, li, mm.reuse_layer) {
             BlockKind::PreLn => {
-                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
+                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
                 let h = add(&x, &a);
-                let mo = mlp_fwd(&h, None, &mlp_params(params, li)?).out;
+                let mo = mlp_fwd(ctx, &h, None, &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
                 x = add(&h, &mo);
             }
             BlockKind::Parallel => {
-                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
-                let mo = mlp_fwd(&x, None, &mlp_params(params, li)?).out;
+                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
+                let mo = mlp_fwd(ctx, &x, None, &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: None });
                 x = add(&add(&x, &a), &mo);
             }
             BlockKind::FalPrep => {
-                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
-                let f = a.layernorm(
-                    params.blk(li, "lnf_g")?,
-                    params.blk(li, "lnf_b")?,
-                );
-                let mo = mlp_fwd(&x, Some(&f), &mlp_params(params, li)?).out;
+                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
+                let f = lnf(&a, li)?;
+                let mo =
+                    mlp_fwd(ctx, &x, Some(&f), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
                 x = add(&add(&x, &a), &mo);
                 fa = Some(f);
@@ -307,7 +320,7 @@ pub(crate) fn loss_and_grads(
                 let ap = attn_params(params, li)?;
                 let mp = mlp_params(params, li)?;
                 let fin = fused_inputs(&x, fa_t, &ap, &mp)?;
-                let mut out = fal_fused_fwd(&mm.geom, &fin);
+                let mut out = fal_fused_fwd(ctx, &mm.geom, &fin);
                 // The probe shifts the (linear) block output directly.
                 if let Some(p) = probe(li) {
                     out.add_assign(p);
@@ -318,42 +331,41 @@ pub(crate) fn loss_and_grads(
             BlockKind::FalMain => {
                 // MoE attention has no fused stage; compose explicitly.
                 let fa_t = fa.as_ref().expect("fa set in the preparation block");
-                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
-                let mo = mlp_fwd(&x, Some(fa_t), &mlp_params(params, li)?).out;
+                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
+                let mo =
+                    mlp_fwd(ctx, &x, Some(fa_t), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: None });
                 x = add(&add(&x, &a), &mo);
             }
             BlockKind::FalPlusPrep => {
-                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
-                let mo = mlp_fwd(&x, Some(&a), &mlp_params(params, li)?).out;
+                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
+                let mo =
+                    mlp_fwd(ctx, &x, Some(&a), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
                 x = add(&add(&x, &a), &mo);
                 fa = Some(a);
             }
             BlockKind::FalPlusMain => {
-                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
+                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
                 let h = add(&x, &a);
-                let fan = fa.as_ref().unwrap().layernorm(
-                    params.blk(li, "lnf_g")?,
-                    params.blk(li, "lnf_b")?,
-                );
-                let mo = mlp_fwd(&h, Some(&fan), &mlp_params(params, li)?).out;
+                let fan = lnf(fa.as_ref().unwrap(), li)?;
+                let mo =
+                    mlp_fwd(ctx, &h, Some(&fan), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
                 x = add(&h, &mo);
             }
             BlockKind::Ablation1 => {
-                let a = block_attn_fwd(mm, params, li, &x, probe(li))?;
-                let an = a.layernorm(
-                    params.blk(li, "lnf_g")?,
-                    params.blk(li, "lnf_b")?,
-                );
-                let mo = mlp_fwd(&x, Some(&an), &mlp_params(params, li)?).out;
+                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
+                let an = lnf(&a, li)?;
+                let mo =
+                    mlp_fwd(ctx, &x, Some(&an), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
                 x = add(&add(&x, &a), &mo);
             }
         }
     }
     let head = head_fwd_bwd(
+        ctx,
         &x,
         params.get("lnF_g")?,
         params.get("lnF_b")?,
@@ -375,22 +387,22 @@ pub(crate) fn loss_and_grads(
         dx = match block_kind(mm.variant, li, mm.reuse_layer) {
             BlockKind::PreLn => {
                 let h = stash[li].h_or_a.as_ref().unwrap();
-                let out = mlp_bwd(h, None, &mlp_params(params, li)?, &dx);
+                let out = mlp_bwd(ctx, h, None, &mlp_params(params, li)?, &dx);
                 acc_mlp(&mut grads, li, &out[1..]);
                 let mut dh = out[0].clone();
                 dh.add_assign(&dx); // residual h -> x'
                 d_attn[li] = Some(dh.clone()); // h = x + a: da = dh
-                let dx_a =
-                    block_attn_bwd(mm, params, li, &stash[li].x, &dh, &mut grads)?;
+                let dx_a = block_attn_bwd(
+                    ctx, mm, params, li, &stash[li].x, &dh, &mut grads)?;
                 add(&dx_a, &dh) // residual x -> h
             }
             BlockKind::Parallel => {
-                let out =
-                    mlp_bwd(&stash[li].x, None, &mlp_params(params, li)?, &dx);
+                let out = mlp_bwd(
+                    ctx, &stash[li].x, None, &mlp_params(params, li)?, &dx);
                 acc_mlp(&mut grads, li, &out[1..]);
                 d_attn[li] = Some(dx.clone()); // a enters only the residual
-                let dx_a =
-                    block_attn_bwd(mm, params, li, &stash[li].x, &dx, &mut grads)?;
+                let dx_a = block_attn_bwd(
+                    ctx, mm, params, li, &stash[li].x, &dx, &mut grads)?;
                 let mut d = add(&out[0], &dx_a);
                 d.add_assign(&dx); // direct residual
                 d
@@ -399,6 +411,7 @@ pub(crate) fn loss_and_grads(
                 let a1 = stash[li].h_or_a.as_ref().unwrap();
                 let fa_t = fa.as_ref().unwrap();
                 let out = mlp_bwd(
+                    ctx,
                     &stash[li].x,
                     Some(fa_t),
                     &mlp_params(params, li)?,
@@ -411,15 +424,15 @@ pub(crate) fn loss_and_grads(
                     dfa_total.add_assign(&acc_);
                 }
                 let (da_ln, dg_, db_) =
-                    layernorm_bwd(a1, params.blk(li, "lnf_g")?, &dfa_total);
+                    layernorm_bwd(ctx, a1, params.blk(li, "lnf_g")?, &dfa_total);
                 acc_blk(&mut grads, li, "lnf_g", &dg_);
                 acc_blk(&mut grads, li, "lnf_b", &db_);
                 // a1 receives the residual path and the LNf path.
                 let mut da = dx.clone();
                 da.add_assign(&da_ln);
                 d_attn[li] = Some(da.clone());
-                let dx_a =
-                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let dx_a = block_attn_bwd(
+                    ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
                 let mut d = add(&dx_a, &dx_mlp);
                 d.add_assign(&dx); // direct residual x -> x'
                 d
@@ -429,7 +442,7 @@ pub(crate) fn loss_and_grads(
                 let ap = attn_params(params, li)?;
                 let mp = mlp_params(params, li)?;
                 let fin = fused_inputs(&stash[li].x, fa_t, &ap, &mp)?;
-                let out = fal_fused_bwd(&mm.geom, &fin, &dx);
+                let out = fal_fused_bwd(ctx, &mm.geom, &fin, &dx);
                 // [dx, dfa, dln1_g, dln1_b, dln2_g, dln2_b, dwq, dwk,
                 //  dwv, dwo, dw1, db1, dw2, db2]
                 acc_attn(
@@ -459,6 +472,7 @@ pub(crate) fn loss_and_grads(
             BlockKind::FalMain => {
                 let fa_t = fa.as_ref().unwrap();
                 let out = mlp_bwd(
+                    ctx,
                     &stash[li].x,
                     Some(fa_t),
                     &mlp_params(params, li)?,
@@ -470,8 +484,8 @@ pub(crate) fn loss_and_grads(
                     None => dfa = Some(out[1].clone()),
                 }
                 d_attn[li] = Some(dx.clone());
-                let dx_a =
-                    block_attn_bwd(mm, params, li, &stash[li].x, &dx, &mut grads)?;
+                let dx_a = block_attn_bwd(
+                    ctx, mm, params, li, &stash[li].x, &dx, &mut grads)?;
                 let mut d = add(&out[0], &dx_a);
                 d.add_assign(&dx);
                 d
@@ -479,6 +493,7 @@ pub(crate) fn loss_and_grads(
             BlockKind::FalPlusPrep => {
                 let a1 = stash[li].h_or_a.as_ref().unwrap();
                 let out = mlp_bwd(
+                    ctx,
                     &stash[li].x,
                     Some(a1), // fa == a1, stored raw
                     &mlp_params(params, li)?,
@@ -493,8 +508,8 @@ pub(crate) fn loss_and_grads(
                     da.add_assign(&acc_);
                 }
                 d_attn[li] = Some(da.clone());
-                let dx_a =
-                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let dx_a = block_attn_bwd(
+                    ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
                 let mut d = add(&dx_a, &out[0]);
                 d.add_assign(&dx);
                 d
@@ -502,15 +517,12 @@ pub(crate) fn loss_and_grads(
             BlockKind::FalPlusMain => {
                 let h = stash[li].h_or_a.as_ref().unwrap();
                 let fa_t = fa.as_ref().unwrap();
-                let fan = fa_t.layernorm(
-                    params.blk(li, "lnf_g")?,
-                    params.blk(li, "lnf_b")?,
-                );
+                let fan = lnf(fa_t, li)?;
                 let out =
-                    mlp_bwd(h, Some(&fan), &mlp_params(params, li)?, &dx);
+                    mlp_bwd(ctx, h, Some(&fan), &mlp_params(params, li)?, &dx);
                 acc_mlp(&mut grads, li, &out[2..]);
                 let (dfa_i, dg_, db_) =
-                    layernorm_bwd(fa_t, params.blk(li, "lnf_g")?, &out[1]);
+                    layernorm_bwd(ctx, fa_t, params.blk(li, "lnf_g")?, &out[1]);
                 acc_blk(&mut grads, li, "lnf_g", &dg_);
                 acc_blk(&mut grads, li, "lnf_b", &db_);
                 match &mut dfa {
@@ -521,19 +533,17 @@ pub(crate) fn loss_and_grads(
                 let mut da = dx.clone();
                 da.add_assign(&out[0]);
                 d_attn[li] = Some(da.clone());
-                let dx_a =
-                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let dx_a = block_attn_bwd(
+                    ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
                 let mut d = add(&dx_a, &out[0]);
                 d.add_assign(&dx);
                 d
             }
             BlockKind::Ablation1 => {
                 let a1 = stash[li].h_or_a.as_ref().unwrap();
-                let an = a1.layernorm(
-                    params.blk(li, "lnf_g")?,
-                    params.blk(li, "lnf_b")?,
-                );
+                let an = lnf(a1, li)?;
                 let out = mlp_bwd(
+                    ctx,
                     &stash[li].x,
                     Some(&an),
                     &mlp_params(params, li)?,
@@ -541,14 +551,14 @@ pub(crate) fn loss_and_grads(
                 );
                 acc_mlp(&mut grads, li, &out[2..]);
                 let (da_ln, dg_, db_) =
-                    layernorm_bwd(a1, params.blk(li, "lnf_g")?, &out[1]);
+                    layernorm_bwd(ctx, a1, params.blk(li, "lnf_g")?, &out[1]);
                 acc_blk(&mut grads, li, "lnf_g", &dg_);
                 acc_blk(&mut grads, li, "lnf_b", &db_);
                 let mut da = dx.clone();
                 da.add_assign(&da_ln);
                 d_attn[li] = Some(da.clone());
-                let dx_a =
-                    block_attn_bwd(mm, params, li, &stash[li].x, &da, &mut grads)?;
+                let dx_a = block_attn_bwd(
+                    ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
                 let mut d = add(&dx_a, &out[0]);
                 d.add_assign(&dx);
                 d
@@ -569,6 +579,7 @@ pub(crate) fn loss_and_grads(
 
 /// `train_step`: loss + grads + AdamW, one call.
 pub fn run(
+    ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
     inputs: &[HostTensor],
@@ -591,8 +602,9 @@ pub fn run(
     let tokens = &inputs[3 * np + 2];
     let targets = &inputs[3 * np + 3];
 
-    let out = loss_and_grads(&mm, &params, tokens, targets, None)?;
+    let out = loss_and_grads(ctx, &mm, &params, tokens, targets, None)?;
     let gnorm = adamw_step(
+        ctx,
         &mut params,
         &out.grads,
         &mut m,
@@ -614,6 +626,7 @@ pub fn run(
 /// `grad_step`: inputs [params, tokens, targets], outputs [loss, grads...]
 /// with the gradients in parameter-schema order.
 pub fn run_grad_step(
+    ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
     inputs: &[HostTensor],
@@ -629,7 +642,7 @@ pub fn run_grad_step(
     );
     let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
     let out =
-        loss_and_grads(&mm, &params, &inputs[np], &inputs[np + 1], None)?;
+        loss_and_grads(ctx, &mm, &params, &inputs[np], &inputs[np + 1], None)?;
     let mut outs = Vec::with_capacity(1 + np);
     outs.push(HostTensor::scalar(out.loss));
     outs.extend(out.grads.to_flat());
@@ -639,6 +652,7 @@ pub fn run_grad_step(
 /// `gradmag`: inputs [params, tokens, targets], output one `[L]` tensor
 /// of ||dLoss/d(MHA_i output)|| — Fig 4(a).
 pub fn run_gradmag(
+    ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
     inputs: &[HostTensor],
@@ -654,7 +668,7 @@ pub fn run_gradmag(
     );
     let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
     let out =
-        loss_and_grads(&mm, &params, &inputs[np], &inputs[np + 1], None)?;
+        loss_and_grads(ctx, &mm, &params, &inputs[np], &inputs[np + 1], None)?;
     let norms: Vec<f32> =
         out.d_attn_out.iter().map(|t| t.norm() as f32).collect();
     Ok(vec![HostTensor::from_vec(&[mm.cfg.n_layer], norms)])
@@ -709,8 +723,9 @@ mod tests {
                 [mm.geom.batch, mm.geom.seq, mm.cfg.d_model];
             let zeros: Vec<HostTensor> =
                 (0..l).map(|_| HostTensor::zeros(&shape)).collect();
+            let ctx = ExecCtx::serial();
             let base = loss_and_grads(
-                &mm, &params, &tokens, &targets, Some(&zeros))
+                &ctx, &mm, &params, &tokens, &targets, Some(&zeros))
             .unwrap();
             let h = 1e-2f32;
             for li in 0..l {
@@ -720,11 +735,11 @@ mod tests {
                     pp[li].data[idx] += h;
                     pm[li].data[idx] -= h;
                     let lp = loss_and_grads(
-                        &mm, &params, &tokens, &targets, Some(&pp))
+                        &ctx, &mm, &params, &tokens, &targets, Some(&pp))
                     .unwrap()
                     .loss;
                     let lm = loss_and_grads(
-                        &mm, &params, &tokens, &targets, Some(&pm))
+                        &ctx, &mm, &params, &tokens, &targets, Some(&pm))
                     .unwrap()
                     .loss;
                     let num = (lp - lm) / (2.0 * h);
@@ -749,13 +764,14 @@ mod tests {
             let zeros: Vec<HostTensor> = (0..mm.cfg.n_layer)
                 .map(|_| HostTensor::zeros(&shape))
                 .collect();
-            let a = loss_and_grads(&mm, &params, &tokens, &targets, None)
+            let ctx = ExecCtx::serial();
+            let a = loss_and_grads(&ctx, &mm, &params, &tokens, &targets, None)
                 .unwrap()
                 .loss;
-            let b =
-                loss_and_grads(&mm, &params, &tokens, &targets, Some(&zeros))
-                    .unwrap()
-                    .loss;
+            let b = loss_and_grads(
+                &ctx, &mm, &params, &tokens, &targets, Some(&zeros))
+            .unwrap()
+            .loss;
             assert_eq!(a, b, "{variant:?}");
         }
     }
@@ -768,8 +784,9 @@ mod tests {
             setup("micro", Variant::FalPlus, 2);
         assert_eq!(block_kind(Variant::FalPlus, 0, 2), BlockKind::PreLn);
         assert_eq!(block_kind(Variant::FalPlus, 1, 2), BlockKind::FalPlusPrep);
-        let out =
-            loss_and_grads(&mm, &params, &tokens, &targets, None).unwrap();
+        let out = loss_and_grads(
+            &ExecCtx::serial(), &mm, &params, &tokens, &targets, None)
+        .unwrap();
         assert!(out.loss.is_finite());
         // Block 0 ran as preln: its lnf parameters receive no gradient.
         assert_eq!(

@@ -108,7 +108,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             batch: 2,
             tps: vec![],
             train: base_variants(&HEADLINE),
-            eval_tags: vec![],
+            eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
         },
@@ -117,7 +117,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             batch: 2,
             tps: vec![],
             train: base_variants(&HEADLINE),
-            eval_tags: vec![],
+            eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
         },
@@ -159,12 +159,15 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             capture: false,
         },
         // Fig 20 generalization hosts: GQA (2 kv heads) and MoE-attention.
+        // They carry eval artifacts too, so the Fig 3(b)-style gating and
+        // the Table 1 zero-shot suite run on the generalization hosts
+        // (ROADMAP item; fig20 scores them via score_options).
         SyntheticSpec {
             cfg: model_config("small_gqa", (512, 192, 8, 2, 6, 768, 128), 1),
             batch: 8,
             tps: vec![],
             train: base_variants(&HEADLINE),
-            eval_tags: vec![],
+            eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
         },
@@ -173,7 +176,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             batch: 8,
             tps: vec![],
             train: base_variants(&HEADLINE),
-            eval_tags: vec![],
+            eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
         },
@@ -671,6 +674,20 @@ mod tests {
         for config in ["deep8", "deep12", "small_gqa", "small_moe"] {
             for tag in HEADLINE {
                 assert!(m.find("train_step", config, tag).is_ok(), "{config}/{tag}");
+            }
+        }
+        // The Fig 20 hosts (and their micro test companions) also carry
+        // the eval kinds, so the zero-shot suite runs on GQA/MoE too.
+        for config in ["small_gqa", "small_moe", "micro_gqa", "micro_moe"] {
+            for tag in HEADLINE {
+                assert!(
+                    m.find("eval_masked", config, tag).is_ok(),
+                    "{config}/{tag} eval_masked"
+                );
+                assert!(
+                    m.find("score_options", config, tag).is_ok(),
+                    "{config}/{tag} score_options"
+                );
             }
         }
         // GQA shrinks wk/wv; MoE adds router + experts to the schema.

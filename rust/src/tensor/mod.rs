@@ -4,9 +4,13 @@
 //! all operate on [`HostTensor`]s; the runtime converts them to/from PJRT
 //! literals at executable boundaries.
 
+pub mod view;
+
 use anyhow::{bail, Result};
 
 use crate::util::rng::Rng;
+
+pub use view::{MatView, MatViewMut};
 
 /// Largest integer magnitude that survives an f32 round-trip exactly.
 pub const I32_EXACT_MAX: u32 = 1 << 24;

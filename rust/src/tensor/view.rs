@@ -1,0 +1,239 @@
+//! Borrowed matrix views over flat f32 buffers.
+//!
+//! [`MatView`] / [`MatViewMut`] are the zero-copy currency of the native
+//! kernels: a `(rows, cols, row_stride)` window into a buffer. A *dense*
+//! view (`row_stride == cols`) is what [`HostTensor::view`] produces; a
+//! *strided* view extracts an interleaved panel without materializing it —
+//! e.g. one attention head's `[seq, head_dim]` slice of a `[b, s, h*dh]`
+//! activation, where consecutive rows are `h*dh` floats apart.
+//!
+//! Views carry no dtype: kernels operate on raw f32 storage and the
+//! artifact layer has already validated shapes/dtypes.
+
+use super::HostTensor;
+
+/// Immutable matrix window: `rows x cols`, consecutive rows `row_stride`
+/// floats apart. `data` starts at element (0, 0).
+#[derive(Debug, Clone, Copy)]
+pub struct MatView<'a> {
+    data: &'a [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatView<'a> {
+    /// Dense view: `row_stride == cols`.
+    pub fn new(data: &'a [f32], rows: usize, cols: usize) -> MatView<'a> {
+        Self::strided(data, rows, cols, cols)
+    }
+
+    /// Strided view. The buffer must cover the last row's `cols` elements.
+    pub fn strided(
+        data: &'a [f32],
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+    ) -> MatView<'a> {
+        assert!(row_stride >= cols, "row_stride {row_stride} < cols {cols}");
+        if rows > 0 && cols > 0 {
+            let need = (rows - 1) * row_stride + cols;
+            assert!(
+                data.len() >= need,
+                "view {rows}x{cols} (stride {row_stride}) needs {need} \
+                 floats, buffer has {}",
+                data.len()
+            );
+        }
+        MatView { data, rows, cols, row_stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// A view is dense when its rows are contiguous in memory.
+    pub fn is_dense(&self) -> bool {
+        self.row_stride == self.cols || self.rows <= 1
+    }
+
+    /// Row `i` as a contiguous slice.
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Sub-view of rows `r0..r1` (same stride).
+    pub fn sub_rows(&self, r0: usize, r1: usize) -> MatView<'a> {
+        assert!(r0 <= r1 && r1 <= self.rows, "sub_rows {r0}..{r1}");
+        MatView {
+            data: &self.data[r0 * self.row_stride..],
+            rows: r1 - r0,
+            cols: self.cols,
+            row_stride: self.row_stride,
+        }
+    }
+}
+
+/// Mutable matrix window; same geometry as [`MatView`].
+#[derive(Debug)]
+pub struct MatViewMut<'a> {
+    data: &'a mut [f32],
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+}
+
+impl<'a> MatViewMut<'a> {
+    /// Dense mutable view: `row_stride == cols`.
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize) -> MatViewMut<'a> {
+        Self::strided(data, rows, cols, cols)
+    }
+
+    /// Strided mutable view (bounds checked like [`MatView::strided`]).
+    pub fn strided(
+        data: &'a mut [f32],
+        rows: usize,
+        cols: usize,
+        row_stride: usize,
+    ) -> MatViewMut<'a> {
+        assert!(row_stride >= cols, "row_stride {row_stride} < cols {cols}");
+        if rows > 0 && cols > 0 {
+            let need = (rows - 1) * row_stride + cols;
+            assert!(
+                data.len() >= need,
+                "view {rows}x{cols} (stride {row_stride}) needs {need} \
+                 floats, buffer has {}",
+                data.len()
+            );
+        }
+        MatViewMut { data, rows, cols, row_stride }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row `i` as a contiguous mutable slice.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.row_stride..i * self.row_stride + self.cols]
+    }
+
+    /// Split at row `mid` into two disjoint mutable views — the primitive
+    /// behind handing row panels to parallel workers.
+    pub fn split_rows(self, mid: usize) -> (MatViewMut<'a>, MatViewMut<'a>) {
+        assert!(mid <= self.rows, "split_rows at {mid} of {}", self.rows);
+        let (head, tail) = self.data.split_at_mut(mid * self.row_stride);
+        (
+            MatViewMut {
+                data: head,
+                rows: mid,
+                cols: self.cols,
+                row_stride: self.row_stride,
+            },
+            MatViewMut {
+                data: tail,
+                rows: self.rows - mid,
+                cols: self.cols,
+                row_stride: self.row_stride,
+            },
+        )
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_view(&self) -> MatView<'_> {
+        MatView {
+            data: self.data,
+            rows: self.rows,
+            cols: self.cols,
+            row_stride: self.row_stride,
+        }
+    }
+}
+
+impl HostTensor {
+    /// Dense 2-D view of this tensor: leading axes flattened into rows,
+    /// the last axis as columns (the [`HostTensor::rows_cols`] geometry).
+    pub fn view(&self) -> MatView<'_> {
+        let (r, c) = self.rows_cols();
+        MatView::new(&self.data, r, c)
+    }
+
+    /// Dense mutable 2-D view (same geometry as [`HostTensor::view`]).
+    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+        let (r, c) = self.rows_cols();
+        MatViewMut::new(&mut self.data, r, c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_view_rows() {
+        let t = HostTensor::from_vec(&[2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        let v = t.view();
+        assert_eq!((v.rows(), v.cols()), (2, 3));
+        assert!(v.is_dense());
+        assert_eq!(v.row(1), &[3., 4., 5.]);
+    }
+
+    #[test]
+    fn strided_view_extracts_interleaved_panel() {
+        // [s=3, h*dh=4] with dh=2: head 1 is the odd column pair.
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let head1 = MatView::strided(&data[2..], 3, 2, 4);
+        assert!(!head1.is_dense());
+        assert_eq!(head1.row(0), &[2., 3.]);
+        assert_eq!(head1.row(2), &[10., 11.]);
+    }
+
+    #[test]
+    fn sub_rows_keeps_stride() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let v = MatView::strided(&data, 3, 2, 4);
+        let tail = v.sub_rows(1, 3);
+        assert_eq!(tail.rows(), 2);
+        assert_eq!(tail.row(0), &[4., 5.]);
+        assert_eq!(tail.row(1), &[8., 9.]);
+    }
+
+    #[test]
+    fn split_rows_is_disjoint() {
+        let mut data = vec![0.0f32; 4 * 3];
+        let v = MatViewMut::new(&mut data, 4, 3);
+        let (mut a, mut b) = v.split_rows(1);
+        a.row_mut(0)[0] = 1.0;
+        b.row_mut(2)[2] = 2.0;
+        assert_eq!(data[0], 1.0);
+        assert_eq!(data[11], 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs")]
+    fn bounds_checked() {
+        let data = vec![0.0f32; 5];
+        let _ = MatView::strided(&data, 2, 2, 4);
+    }
+
+    #[test]
+    fn flattened_leading_axes() {
+        let t = HostTensor::zeros(&[2, 3, 4]);
+        let v = t.view();
+        assert_eq!((v.rows(), v.cols()), (6, 4));
+    }
+}

@@ -3,14 +3,49 @@
 //! `cargo bench` targets declare `harness = false` and drive this runner:
 //! warmup, timed iterations, mean/p50/p95 and optional throughput, with a
 //! `--filter` CLI matching criterion's substring selection.
+//!
+//! Cases registered through [`Bench::bench_case`] carry machine-readable
+//! metadata (op, shape, threads) and can be persisted to a JSON scoreboard
+//! with [`Bench::write_json`] — `BENCH_native.json` is how the native
+//! runtime's perf trajectory is tracked across PRs instead of eyeballed.
 
+use std::path::Path;
 use std::time::Instant;
+
+use crate::util::json::{self, Json};
 
 use super::timer::Stats;
 
+/// Machine-readable identity of one bench case (for the JSON scoreboard).
+#[derive(Debug, Clone)]
+pub struct CaseMeta {
+    /// Operation family, e.g. "matmul", "train_step".
+    pub op: String,
+    /// Shape tag, e.g. "1024x192x768" or a config name.
+    pub shape: String,
+    /// ExecCtx thread count the case ran with.
+    pub threads: usize,
+}
+
+impl CaseMeta {
+    pub fn new(op: &str, shape: &str, threads: usize) -> CaseMeta {
+        CaseMeta { op: op.into(), shape: shape.into(), threads }
+    }
+}
+
+/// One finished measurement.
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,
+    /// Throughput (units/s) when the case declared units per iteration.
+    pub thr: Option<f64>,
+    /// Present for cases registered through [`Bench::bench_case`].
+    pub meta: Option<CaseMeta>,
+}
+
 pub struct Bench {
     filter: Option<String>,
-    pub results: Vec<(String, Stats, Option<f64>)>,
+    pub results: Vec<BenchResult>,
     warmup_iters: usize,
     iters: usize,
 }
@@ -62,6 +97,28 @@ impl Bench {
         &mut self,
         name: &str,
         units_per_iter: f64,
+        f: impl FnMut() -> T,
+    ) {
+        self.run_case(name, None, units_per_iter, f);
+    }
+
+    /// [`Bench::bench`] with scoreboard metadata: the case lands in
+    /// [`Bench::write_json`] output keyed by (op, shape, threads).
+    pub fn bench_case<T>(
+        &mut self,
+        name: &str,
+        meta: CaseMeta,
+        units_per_iter: f64,
+        f: impl FnMut() -> T,
+    ) {
+        self.run_case(name, Some(meta), units_per_iter, f);
+    }
+
+    fn run_case<T>(
+        &mut self,
+        name: &str,
+        meta: Option<CaseMeta>,
+        units_per_iter: f64,
         mut f: impl FnMut() -> T,
     ) {
         if !self.enabled(name) {
@@ -83,7 +140,12 @@ impl Bench {
             None
         };
         println!("{}", render_line(name, &stats, thr));
-        self.results.push((name.to_string(), stats, thr));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            stats,
+            thr,
+            meta,
+        });
     }
 
     /// Record an externally-measured sample set (e.g. per-step times from a
@@ -95,16 +157,80 @@ impl Bench {
         let stats = Stats::from_samples(samples);
         let thr = if units > 0.0 { Some(units / stats.mean) } else { None };
         println!("{}", render_line(name, &stats, thr));
-        self.results.push((name.to_string(), stats, thr));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            stats,
+            thr,
+            meta: None,
+        });
     }
 
     pub fn summary(&self) -> String {
         let mut out = String::new();
-        for (name, stats, thr) in &self.results {
-            out.push_str(&render_line(name, stats, *thr));
+        for r in &self.results {
+            out.push_str(&render_line(&r.name, &r.stats, r.thr));
             out.push('\n');
         }
         out
+    }
+
+    /// Persist every metadata-carrying case to a JSON scoreboard, merged
+    /// with the file's existing cases by name (other bench binaries append
+    /// to the same file without clobbering each other). Format:
+    ///
+    /// ```json
+    /// {"version":1,"cases":[{"name":..,"op":..,"shape":..,"threads":..,
+    ///   "ns_per_iter":..,"p50_ns":..,"p95_ns":..,"thr_per_s":..}, ...]}
+    /// ```
+    /// [`Bench::write_json`] at the shared scoreboard location:
+    /// `$FAL_BENCH_JSON`, defaulting to `BENCH_native.json` in the current
+    /// directory. Every bench binary writes here so the cases merge into
+    /// one file. Returns the resolved path.
+    pub fn write_json_default(&self) -> std::io::Result<std::path::PathBuf> {
+        let path = std::path::PathBuf::from(
+            std::env::var("FAL_BENCH_JSON")
+                .unwrap_or_else(|_| "BENCH_native.json".to_string()),
+        );
+        self.write_json(&path)?;
+        Ok(path)
+    }
+
+    pub fn write_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut by_name = std::collections::BTreeMap::new();
+        if let Ok(old) = std::fs::read_to_string(path) {
+            if let Ok(v) = Json::parse(&old) {
+                if let Some(Json::Arr(cases)) = v.opt("cases") {
+                    for c in cases {
+                        if let Ok(n) =
+                            c.get("name").and_then(|n| n.as_str().map(String::from))
+                        {
+                            by_name.insert(n, c.clone());
+                        }
+                    }
+                }
+            }
+        }
+        for r in &self.results {
+            let Some(meta) = &r.meta else { continue };
+            let mut pairs = vec![
+                ("name", json::s(&r.name)),
+                ("op", json::s(&meta.op)),
+                ("shape", json::s(&meta.shape)),
+                ("threads", json::num(meta.threads as f64)),
+                ("ns_per_iter", json::num((r.stats.mean * 1e9).round())),
+                ("p50_ns", json::num((r.stats.p50 * 1e9).round())),
+                ("p95_ns", json::num((r.stats.p95 * 1e9).round())),
+            ];
+            if let Some(t) = r.thr {
+                pairs.push(("thr_per_s", json::num(t.round())));
+            }
+            by_name.insert(r.name.clone(), json::obj(pairs));
+        }
+        let doc = json::obj(vec![
+            ("version", json::num(1.0)),
+            ("cases", Json::Arr(by_name.into_values().collect())),
+        ]);
+        std::fs::write(path, doc.dump() + "\n")
     }
 }
 
@@ -155,7 +281,7 @@ mod tests {
             n
         });
         assert_eq!(b.results.len(), 1);
-        assert!(b.results[0].2.unwrap() > 0.0);
+        assert!(b.results[0].thr.unwrap() > 0.0);
         // warmup(1) + iters(3)
         assert_eq!(n, 4);
     }
@@ -164,6 +290,39 @@ mod tests {
     fn record_external() {
         let mut b = Bench::with_iters(1, 0);
         b.record("ext", &[0.1, 0.2, 0.3], 0.0);
-        assert_eq!(b.results[0].1.n, 3);
+        assert_eq!(b.results[0].stats.n, 3);
+    }
+
+    #[test]
+    fn json_scoreboard_merges_by_name() {
+        let dir = std::env::temp_dir().join("fal_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_native.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut b1 = Bench::with_iters(2, 0);
+        b1.bench_case("matmul_t1", CaseMeta::new("matmul", "8x8x8", 1), 512.0, || 1);
+        b1.bench_case("matmul_t4", CaseMeta::new("matmul", "8x8x8", 4), 512.0, || 1);
+        b1.bench("untagged", 0.0, || 1); // no meta -> not persisted
+        b1.write_json(&path).unwrap();
+
+        // A second binary writes one overlapping + one new case.
+        let mut b2 = Bench::with_iters(2, 0);
+        b2.bench_case("matmul_t1", CaseMeta::new("matmul", "8x8x8", 1), 512.0, || 1);
+        b2.bench_case("tp_step", CaseMeta::new("tp_train_step", "tiny", 2), 1.0, || 1);
+        b2.write_json(&path).unwrap();
+
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let cases = v.get("cases").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = cases
+            .iter()
+            .map(|c| c.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["matmul_t1", "matmul_t4", "tp_step"]);
+        for c in cases {
+            assert!(c.get("ns_per_iter").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(c.get("threads").unwrap().as_usize().unwrap() >= 1);
+        }
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -343,6 +343,55 @@ fn gqa_and_moe_train_steps_execute_and_update_their_params() {
     }
 }
 
+/// The Fig 20 hosts carry the eval kinds too (ROADMAP item): eval_masked
+/// with unit gates must agree with the fused-step eval loss on GQA and
+/// MoE-attention configs, and score_options must produce per-sequence
+/// log-likelihoods — the zero-shot suite's primitive on those hosts.
+#[test]
+fn eval_kinds_execute_on_gqa_and_moe_hosts() {
+    let eng = backend();
+    for config in ["micro_gqa", "micro_moe"] {
+        let cfg = eng.manifest().config(config).unwrap().clone();
+        let corpus =
+            Corpus::generate(CorpusSpec::for_vocab(cfg.vocab_size), 5_000, 5);
+        let loader = Loader::new(&corpus, cfg.seq_len, 2, 0.1, 7);
+        let b = loader.fixed_batch(1);
+        for tag in ["preln", "fal", "falplus"] {
+            let mut sp =
+                Trainer::new(&eng, config, tag, Schedule::Constant).unwrap();
+            let sp_loss = sp.eval_loss(&b).unwrap() as f64;
+            let spec = eng.manifest().find("eval_masked", config, tag).unwrap();
+            let mut inputs = eng.load_params(config, 0).unwrap();
+            inputs.push(b.tokens.clone());
+            inputs.push(b.targets.clone());
+            inputs.push(HostTensor::ones(&[cfg.n_layer]));
+            inputs.push(HostTensor::ones(&[cfg.n_layer]));
+            let out = eng.execute(&spec.name.clone(), &inputs).unwrap();
+            let masked = out[0].data[0] as f64 / out[1].data[0] as f64;
+            let rel = ((masked - sp_loss) / sp_loss).abs();
+            assert!(
+                rel < 1e-4,
+                "{config}/{tag}: eval_masked {masked} vs trainer {sp_loss}"
+            );
+        }
+        // score_options: one finite log-likelihood per batch row.
+        let spec =
+            eng.manifest().find("score_options", config, "fal").unwrap();
+        let batch = spec.meta.get("batch").unwrap().as_usize().unwrap();
+        let mut inputs = eng.load_params(config, 0).unwrap();
+        let (tok, tgt) = token_pair(&eng, config, batch, 21);
+        inputs.push(tok);
+        inputs.push(tgt);
+        inputs.push(HostTensor::ones(&[batch, cfg.seq_len]));
+        let out = eng.execute(&spec.name.clone(), &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![batch], "{config}");
+        assert!(
+            out[0].data.iter().all(|v| v.is_finite() && *v < 0.0),
+            "{config}: masked log-likelihoods must be finite and negative"
+        );
+    }
+}
+
 /// End-to-end: a whole experiment id that previously required the PJRT
 /// backend (capture + gradmag + eval_masked + training) now runs natively.
 #[test]

@@ -19,7 +19,7 @@ use fal::coordinator::collectives::CommLedger;
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::data::{Corpus, CorpusSpec, Loader};
 use fal::runtime::native::kernels;
-use fal::runtime::{Backend, ExecCtx, Manifest, NativeBackend};
+use fal::runtime::{Backend, ExecCtx, Manifest, NativeBackend, SchedMode};
 use fal::tensor::HostTensor;
 use fal::util::benchkit::{Bench, CaseMeta};
 use fal::util::rng::Rng;
@@ -102,27 +102,48 @@ fn main() {
     }
 
     // ------------------------------------------------------------------
-    // Fused native train step (loss + grads + AdamW) on the small config
-    // — the end-to-end number the ISSUE's >=3x acceptance bar reads.
+    // Fused native train step (loss + grads + AdamW) on the small config,
+    // per StageGraph schedule: the `graph` rows run the FAL blocks'
+    // MHA ∥ MLP branches on concurrent worker lanes, the `serial` rows the
+    // historical back-to-back schedule — the MHA‖MLP overlap speedup is
+    // the graph-vs-serial delta at the same thread count (t >= 2).
     // ------------------------------------------------------------------
     {
         let cfg_tokens = (8 * 128) as f64;
         let corpus = Corpus::generate(CorpusSpec::for_vocab(512), 50_000, 1);
-        for threads in [1usize, 4] {
-            let engine = NativeBackend::synthetic_with_threads(threads);
-            let cfg = engine.manifest().config("small").unwrap().clone();
-            let loader = Loader::new(&corpus, cfg.seq_len, 8, 0.1, 2);
-            let batch = loader.fixed_batch(3);
-            let mut t =
-                Trainer::new(&engine, "small", "fal", Schedule::Constant)
-                    .unwrap();
-            t.train_step(&batch).unwrap(); // warm
-            b.bench_case(
-                &format!("fused_train_step_small_fal_t{threads}"),
-                CaseMeta::new("train_step", "small/fal", threads),
-                cfg_tokens,
-                || t.train_step(&batch).unwrap().loss,
-            );
+        for threads in [1usize, 2, 4] {
+            // At threads = 1 the two schedules are the same code path by
+            // construction — one baseline row suffices.
+            let scheds: &[SchedMode] = if threads == 1 {
+                &[SchedMode::Serial]
+            } else {
+                &[SchedMode::Serial, SchedMode::Graph]
+            };
+            for &sched in scheds {
+                let engine = NativeBackend::synthetic_with_ctx(
+                    ExecCtx::new(threads).with_sched(sched),
+                );
+                let cfg = engine.manifest().config("small").unwrap().clone();
+                let loader = Loader::new(&corpus, cfg.seq_len, 8, 0.1, 2);
+                let batch = loader.fixed_batch(3);
+                let mut t =
+                    Trainer::new(&engine, "small", "fal", Schedule::Constant)
+                        .unwrap();
+                t.train_step(&batch).unwrap(); // warm
+                b.bench_case(
+                    &format!(
+                        "fused_train_step_small_fal_t{threads}_{}",
+                        sched.name()
+                    ),
+                    CaseMeta::new(
+                        "train_step",
+                        &format!("small/fal/{}", sched.name()),
+                        threads,
+                    ),
+                    cfg_tokens,
+                    || t.train_step(&batch).unwrap().loss,
+                );
+            }
         }
     }
 

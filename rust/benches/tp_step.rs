@@ -1,25 +1,30 @@
 //! End-to-end TP coordinator step bench (tiny config): the paper's central
 //! comparison run live — Pre-LN (2 AR/block) vs FAL (1 AR/block) — with the
-//! real sharded stage kernels on the native backend. Also times
+//! real sharded stage kernels on the native backend, under both StageGraph
+//! schedules (`serial` = the historical rank loop, `graph` = rank-parallel
+//! shard nodes + MHA ∥ MLP branch fork in the fused FAL stage). Also times
 //! forward-only (TTFT path). Runs with default features: no artifacts
 //! needed.
 //!
 //! Cases are persisted to `BENCH_native.json` (override with
 //! `FAL_BENCH_JSON`) alongside the runtime_hotpath scoreboard; the thread
-//! count is whatever the backend's ExecCtx resolved to (`FAL_THREADS`).
+//! count is whatever `FAL_THREADS` resolves to, and the schedule is part
+//! of the case name so `*_graph` vs `*_serial` rows track the overlap
+//! speedup across PRs.
 //!
 //! `cargo bench --bench tp_step`
 
 use fal::config::{TrainConfig, Variant, PCIE_GEN4};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::data::{Corpus, CorpusSpec, Loader};
-use fal::runtime::{Backend, NativeBackend};
+use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
 use fal::util::benchkit::{Bench, CaseMeta};
 
 fn main() {
-    let engine = NativeBackend::synthetic();
-    let threads = engine.exec_ctx().threads();
-    let cfg = engine.manifest().config("tiny").unwrap().clone();
+    let base_ctx = ExecCtx::from_env();
+    let threads = base_ctx.threads();
+    let probe = NativeBackend::synthetic();
+    let cfg = probe.manifest().config("tiny").unwrap().clone();
     let corpus =
         Corpus::generate(CorpusSpec::for_vocab(cfg.vocab_size), 50_000, 1);
     let loader = Loader::new(&corpus, cfg.seq_len, 4, 0.1, 2);
@@ -30,34 +35,54 @@ fn main() {
     for (variant, name) in
         [(Variant::PreLn, "preln"), (Variant::Fal, "fal")]
     {
-        let mut t = TpTrainer::new(
-            &engine, "tiny", variant, 2, PCIE_GEN4, TrainConfig::default())
-        .unwrap();
-        // Warm the stage executables.
-        t.train_step(&batch).unwrap();
-        // The thread count is part of the case name: write_json merges by
-        // name, so runs at different FAL_THREADS must not clobber each
-        // other's scoreboard rows.
-        b.bench_case(
-            &format!("tp2_tiny_train_step_{name}_t{threads}"),
-            CaseMeta::new("tp_train_step", &format!("tiny/{name}"), threads),
-            tokens_per_step,
-            || t.train_step(&batch).unwrap().0,
-        );
+        // Train step under both schedules: the graph-vs-serial delta is
+        // the rank-parallel + branch-fork overlap win.
+        for sched in [SchedMode::Serial, SchedMode::Graph] {
+            let engine =
+                NativeBackend::synthetic_with_ctx(base_ctx.with_sched(sched));
+            let mut t = TpTrainer::new(
+                &engine, "tiny", variant, 2, PCIE_GEN4,
+                TrainConfig::default())
+            .unwrap();
+            // Warm the stage executables.
+            t.train_step(&batch).unwrap();
+            // Thread count and schedule are part of the case name:
+            // write_json merges by name, so runs at different FAL_THREADS
+            // / schedules must not clobber each other's scoreboard rows.
+            b.bench_case(
+                &format!(
+                    "tp2_tiny_train_step_{name}_t{threads}_{}",
+                    sched.name()
+                ),
+                CaseMeta::new(
+                    "tp_train_step",
+                    &format!("tiny/{name}/{}", sched.name()),
+                    threads,
+                ),
+                tokens_per_step,
+                || t.train_step(&batch).unwrap().0,
+            );
+        }
+        // Forward-only (TTFT) under the default graph schedule. The sched
+        // suffix keeps this row from merge-colliding with the pre-sched
+        // (serial-loop) measurements of earlier scoreboards.
+        let engine =
+            NativeBackend::synthetic_with_ctx(base_ctx.with_sched(SchedMode::Graph));
         let mut f = TpTrainer::new(
             &engine, "tiny", variant, 2, PCIE_GEN4, TrainConfig::default())
         .unwrap();
         f.forward_loss(&batch).unwrap();
         b.bench_case(
-            &format!("tp2_tiny_forward_{name}_t{threads}"),
-            CaseMeta::new("tp_forward", &format!("tiny/{name}"), threads),
+            &format!("tp2_tiny_forward_{name}_t{threads}_graph"),
+            CaseMeta::new("tp_forward", &format!("tiny/{name}/graph"), threads),
             tokens_per_step,
             || f.forward_loss(&batch).unwrap(),
         );
     }
     println!("\n== summary ==\n{}", b.summary());
     println!("(comm-volume halving is asserted in tests/tp_equivalence.rs; \
-              wall-clock here is CPU-execution bound)");
+              wall-clock here is CPU-execution bound — compare *_graph vs \
+              *_serial rows for the overlap win)");
     match b.write_json_default() {
         Ok(path) => println!("scoreboard: {}", path.display()),
         Err(e) => eprintln!("warning: could not write scoreboard: {e}"),

@@ -11,6 +11,7 @@ use std::sync::Mutex;
 
 use crate::config::LinkSpec;
 use crate::costmodel::{broadcast_time, ring_allreduce_time};
+use crate::runtime::ExecCtx;
 use crate::tensor::HostTensor;
 
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
@@ -48,11 +49,32 @@ impl CommLedger {
     /// Sum `parts` elementwise into a single tensor (the all-reduce result
     /// every shard receives) and account for it.
     pub fn all_reduce(&self, parts: &[HostTensor]) -> HostTensor {
+        self.all_reduce_ctx(&ExecCtx::serial(), parts)
+    }
+
+    /// [`CommLedger::all_reduce`] with the host-side shard summation fanned
+    /// out through the trainer's [`ExecCtx`]. Each element accumulates the
+    /// shards in ascending rank order exactly like the serial loop — the
+    /// partition only changes *which worker* owns an element, never its
+    /// accumulation order — so numerics and accounting are unchanged at
+    /// every thread count.
+    pub fn all_reduce_ctx(&self, ctx: &ExecCtx, parts: &[HostTensor]) -> HostTensor {
         assert!(!parts.is_empty());
         let mut out = parts[0].clone();
-        for p in &parts[1..] {
-            out.add_assign(p);
-        }
+        let rest = &parts[1..];
+        ctx.par_rows(
+            &mut out.data,
+            1,
+            ExecCtx::grain_rows(rest.len().max(1)),
+            |e0, chunk| {
+                for p in rest {
+                    let seg = &p.data[e0..e0 + chunk.len()];
+                    for (o, &v) in chunk.iter_mut().zip(seg) {
+                        *o += v;
+                    }
+                }
+            },
+        );
         let bytes = out.size_bytes() as f64;
         let mut s = self.stats.lock().unwrap();
         s.allreduces += 1;
@@ -153,6 +175,40 @@ mod tests {
                 x.max_abs_err(&y) == 0.0
             },
         );
+    }
+
+    #[test]
+    fn all_reduce_ctx_bitwise_matches_serial() {
+        // The ExecCtx-routed reduction keeps ascending-rank accumulation
+        // per element: bit-identical to the serial loop at every thread
+        // count, with identical accounting.
+        let mut rng = Rng::new(17);
+        // 16k elements with 3 adds each: above the PAR_GRAIN floor, so the
+        // parallel path genuinely splits at threads >= 2.
+        let parts: Vec<HostTensor> = (0..4)
+            .map(|_| HostTensor::randn(&[128, 128], 1.0, &mut rng))
+            .collect();
+        assert!(
+            ExecCtx::new(2)
+                .chunk_ranges(128 * 128, ExecCtx::grain_rows(3))
+                .len()
+                > 1,
+            "test shape no longer splits — enlarge it"
+        );
+        let serial = CommLedger::new(PCIE_GEN4, 4);
+        let base = serial.all_reduce(&parts);
+        for threads in [1usize, 2, 4, 7] {
+            let ledger = CommLedger::new(PCIE_GEN4, 4);
+            let out =
+                ledger.all_reduce_ctx(&ExecCtx::new(threads), &parts);
+            let same = out
+                .data
+                .iter()
+                .zip(&base.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "threads = {threads}");
+            assert_eq!(ledger.stats(), serial.stats());
+        }
     }
 
     #[test]

@@ -135,12 +135,17 @@ impl<'e, B: Backend + ?Sized> Trainer<'e, B> {
     }
 
     fn run(&self, step: f32, lr_scale: f32, batch: &Batch) -> Result<Vec<HostTensor>> {
-        let mut inputs = self.state.clone();
-        inputs.push(HostTensor::scalar(step));
-        inputs.push(HostTensor::scalar(lr_scale));
-        inputs.push(batch.tokens.clone());
-        inputs.push(batch.targets.clone());
-        self.engine.execute(&self.artifact, &inputs)
+        // Borrowed views over the persistent state: the per-step scalars
+        // are the only tensors materialized here — the [params, m, v]
+        // vector is never cloned into the executable call.
+        let step_t = HostTensor::scalar(step);
+        let lr_t = HostTensor::scalar(lr_scale);
+        let mut inputs: Vec<&HostTensor> = self.state.iter().collect();
+        inputs.push(&step_t);
+        inputs.push(&lr_t);
+        inputs.push(&batch.tokens);
+        inputs.push(&batch.targets);
+        self.engine.execute_in(&self.ctx, &self.artifact, &inputs)
     }
 
     /// One optimizer step on `batch`.

@@ -13,16 +13,26 @@
 //! FAL block 1:             attn_fwd ─AR─ lnf ─ mlp_fal_fwd ─AR─    (2 AR)
 //! ```
 //!
-//! The `CommLedger` counts every collective byte; the AdamW optimizer and
-//! gradient clipping live here (Rust owns state management), matching the
-//! fused train-step HLO up to f32 reassociation — enforced by
+//! Within each stage the virtual ranks are *independent until the
+//! all-reduce*: `TpTrainer::rank_stages` submits them as sibling
+//! StageGraph nodes, so under `--sched graph` the shards execute
+//! concurrently on subdivided worker lanes and join — in ascending rank
+//! order, which keeps losses and parameters 0-ulp identical to the
+//! historical serial rank loop (`--sched serial`). Stage inputs are
+//! borrowed views (`&HostTensor`) straight out of the parameter shards and
+//! the replicated activations: nothing is cloned per rank per stage.
+//!
+//! The `CommLedger` counts every collective byte (its host-side shard
+//! summation fans out through the trainer's ExecCtx); the AdamW optimizer
+//! and gradient clipping live here (Rust owns state management), matching
+//! the fused train-step HLO up to f32 reassociation — enforced by
 //! rust/tests/tp_equivalence.rs.
 
 use anyhow::{Context, Result};
 
 use crate::config::{LinkSpec, ModelConfig, TrainConfig, Variant};
 use crate::data::Batch;
-use crate::runtime::{Backend, ExecCtx, Manifest};
+use crate::runtime::{Backend, ExecCtx, Manifest, StageGraph};
 use crate::tensor::HostTensor;
 use crate::util::timer::Breakdown;
 
@@ -46,14 +56,20 @@ pub struct TpTrainer<'e, B: Backend + ?Sized> {
     m: NamedParams,
     v: NamedParams,
     /// FAL: the replicated normalized first-attention signal of the last
-    /// forward pass (needed by every block's backward stage).
+    /// forward pass (needed by every block's backward stage). Shard stages
+    /// borrow it — it is never cloned per block.
     fa_cache: Option<HostTensor>,
     pub tc: TrainConfig,
     pub step: usize,
+    /// Wall-clock attribution: `fwd`/`bwd`/`opt` phase sums plus one
+    /// `stage.<name>` span bucket per stage kind. Stage spans are recorded
+    /// from the (possibly concurrent) rank nodes and union-merge, so
+    /// overlapped ranks report wall-clock, not summed worker time.
     pub breakdown: Breakdown,
     /// Execution context inherited from the backend at construction
-    /// ([`Backend::exec_ctx`]): the coordinator's own host-side math
-    /// (AdamW) fans out through it.
+    /// ([`Backend::exec_ctx`]): the rank fan-out, the coordinator's own
+    /// host-side math (AdamW, all-reduce summation) and the StageGraph
+    /// schedule mode all run under it.
     pub ctx: ExecCtx,
 }
 
@@ -64,12 +80,20 @@ struct BlockStash {
     h_or_a: Option<HostTensor>,
 }
 
-/// fal_fused stage inputs via the shared named-slot builder
-/// ([`crate::runtime::slots::FAL_FUSED_SLOTS`]) — the same source the
-/// native train step and the synthetic manifest use, so the orderings
-/// cannot drift. The slot set is statically correct here, hence `expect`.
-fn fused_inputs(x: &HostTensor, fa: &HostTensor, s: &BlockShard) -> Vec<HostTensor> {
-    crate::runtime::slots::fused_inputs_from_parts(x, fa, &s.attn, &s.mlp)
+/// fal_fused stage inputs as borrowed views, via the shared named-slot
+/// builder ([`crate::runtime::slots::FAL_FUSED_SLOTS`]) — the same source
+/// the native train step and the synthetic manifest use, so the orderings
+/// cannot drift. Nothing is cloned: `x`, the replicated `fa` signal and
+/// the shard slices are all borrowed. The slot set is statically correct
+/// here, hence `expect`.
+fn fused_input_refs<'t>(
+    x: &'t HostTensor,
+    fa: &'t HostTensor,
+    s: &'t BlockShard,
+) -> Vec<&'t HostTensor> {
+    let attn: Vec<&HostTensor> = s.attn.iter().collect();
+    let mlp: Vec<&HostTensor> = s.mlp.iter().collect();
+    crate::runtime::slots::fused_inputs_from_parts(&x, &fa, &attn, &mlp)
         .expect("fal_fused slot bundles")
 }
 
@@ -140,26 +164,54 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
         Manifest::tp_stage_name(&self.cfg.name, self.tp, self.batch, stage)
     }
 
-    fn exec(&self, stage: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    /// Execute one stage artifact under `ctx` with borrowed inputs.
+    fn exec_in(
+        &self,
+        ctx: &ExecCtx,
+        stage: &str,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
         self.engine
-            .execute(&self.stage(stage), inputs)
+            .execute_in(ctx, &self.stage(stage), inputs)
             .with_context(|| format!("stage {stage}"))
     }
 
-    /// Run one stage on every shard and all-reduce the first output.
-    /// `build` assembles the per-shard input vector.
+    /// Run `stage` once per rank as sibling StageGraph nodes — the
+    /// rank-parallel fan-out joined at the caller's all-reduce barrier.
+    /// `per_rank[r]` is rank `r`'s borrowed input vector; results come
+    /// back in rank order (the deterministic join the 0-ulp contract
+    /// rests on). Each node records a `stage.<name>` span, so the
+    /// breakdown reports wall-clock even when ranks overlap.
+    fn rank_stages(
+        &self,
+        stage: &str,
+        per_rank: Vec<Vec<&HostTensor>>,
+    ) -> Result<Vec<Vec<HostTensor>>> {
+        let bucket = format!("stage.{stage}");
+        let bucket = &bucket;
+        let mut g = StageGraph::new();
+        for (r, inputs) in per_rank.into_iter().enumerate() {
+            g.node(format!("{stage}[r{r}]"), &[], move |sub, _| {
+                let _span = self.breakdown.span(bucket);
+                self.exec_in(sub, stage, &inputs)
+            });
+        }
+        g.run(&self.ctx).into_iter().collect()
+    }
+
+    /// Run one stage on every shard and all-reduce the first output
+    /// through the trainer's ExecCtx.
     fn sharded_allreduce(
         &self,
         stage: &str,
-        build: impl Fn(&BlockShard) -> Vec<HostTensor>,
-        li: usize,
+        per_rank: Vec<Vec<&HostTensor>>,
     ) -> Result<HostTensor> {
-        let mut parts = Vec::with_capacity(self.tp);
-        for r in 0..self.tp {
-            let inputs = build(&self.shards[li][r]);
-            parts.push(self.exec(stage, &inputs)?.into_iter().next().unwrap());
-        }
-        Ok(self.ledger.all_reduce(&parts))
+        let outs = self.rank_stages(stage, per_rank)?;
+        let parts: Vec<HostTensor> = outs
+            .into_iter()
+            .map(|o| o.into_iter().next().unwrap())
+            .collect();
+        Ok(self.ledger.all_reduce_ctx(&self.ctx, &parts))
     }
 
     // ------------------------------------------------------------------
@@ -168,12 +220,13 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
 
     /// Forward pass; returns (final hidden x, per-block stash).
     fn forward(&mut self, batch: &Batch) -> Result<(HostTensor, Vec<BlockStash>)> {
-        let embed = self.exec(
+        let embed = self.exec_in(
+            &self.ctx,
             "embed_fwd",
             &[
-                batch.tokens.clone(),
-                self.params.get("wte")?.clone(),
-                self.params.get("wpe")?.clone(),
+                &batch.tokens,
+                self.params.get("wte")?,
+                self.params.get("wpe")?,
             ],
         )?;
         let mut x = embed.into_iter().next().unwrap();
@@ -184,68 +237,65 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
         for li in 0..self.cfg.n_layer {
             match (self.variant, li) {
                 (Variant::PreLn, _) => {
-                    let a = self.sharded_allreduce(
-                        "attn_fwd",
-                        |s| {
-                            let mut v = vec![x.clone()];
-                            v.extend(s.attn.iter().cloned());
+                    let per_rank = (0..self.tp)
+                        .map(|r| {
+                            let mut v: Vec<&HostTensor> = vec![&x];
+                            v.extend(&self.shards[li][r].attn);
                             v
-                        },
-                        li,
-                    )?;
+                        })
+                        .collect();
+                    let a = self.sharded_allreduce("attn_fwd", per_rank)?;
                     let mut h = x.clone();
                     h.add_assign(&a);
-                    let m = self.sharded_allreduce(
-                        "mlp_preln_fwd",
-                        |s| {
-                            let mut v = vec![h.clone()];
-                            v.extend(s.mlp.iter().cloned());
+                    let per_rank = (0..self.tp)
+                        .map(|r| {
+                            let mut v: Vec<&HostTensor> = vec![&h];
+                            v.extend(&self.shards[li][r].mlp);
                             v
-                        },
-                        li,
-                    )?;
+                        })
+                        .collect();
+                    let m = self.sharded_allreduce("mlp_preln_fwd", per_rank)?;
                     stash.push(BlockStash { x: x.clone(), h_or_a: Some(h.clone()) });
                     x = h;
                     x.add_assign(&m);
                 }
                 (Variant::Fal, 0) => {
-                    let a = self.sharded_allreduce(
-                        "attn_fwd",
-                        |s| {
-                            let mut v = vec![x.clone()];
-                            v.extend(s.attn.iter().cloned());
+                    let per_rank = (0..self.tp)
+                        .map(|r| {
+                            let mut v: Vec<&HostTensor> = vec![&x];
+                            v.extend(&self.shards[0][r].attn);
                             v
-                        },
-                        0,
-                    )?;
-                    let lnf = self.shards[0][0].lnf.clone();
+                        })
+                        .collect();
+                    let a = self.sharded_allreduce("attn_fwd", per_rank)?;
+                    let lnf = &self.shards[0][0].lnf;
                     let fa = self
-                        .exec("lnf_fwd", &[a.clone(), lnf[0].clone(), lnf[1].clone()])?
+                        .exec_in(&self.ctx, "lnf_fwd", &[&a, &lnf[0], &lnf[1]])?
                         .into_iter()
                         .next()
                         .unwrap();
-                    let m = self.sharded_allreduce(
-                        "mlp_fal_fwd",
-                        |s| {
-                            let mut v = vec![x.clone(), fa.clone()];
-                            v.extend(s.mlp.iter().cloned());
+                    let per_rank = (0..self.tp)
+                        .map(|r| {
+                            let mut v: Vec<&HostTensor> = vec![&x, &fa];
+                            v.extend(&self.shards[0][r].mlp);
                             v
-                        },
-                        0,
-                    )?;
+                        })
+                        .collect();
+                    let m = self.sharded_allreduce("mlp_fal_fwd", per_rank)?;
                     stash.push(BlockStash { x: x.clone(), h_or_a: Some(a.clone()) });
                     x.add_assign(&a);
                     x.add_assign(&m);
                     self.fa_cache = Some(fa);
                 }
                 (Variant::Fal, _) => {
-                    let fa = self.fa_cache.clone().expect("fa set in block 1");
-                    // One fused stage, one all-reduce (Fig 2b).
-                    let out = self.sharded_allreduce(
-                        "fal_fused_fwd",
-                        |s| fused_inputs(&x, &fa, s),
-                        li,
-                    )?;
+                    let fa =
+                        self.fa_cache.as_ref().expect("fa set in block 1");
+                    // One fused stage, one all-reduce (Fig 2b). The fused
+                    // kernel itself forks MHA ∥ MLP as sibling nodes.
+                    let per_rank = (0..self.tp)
+                        .map(|r| fused_input_refs(&x, fa, &self.shards[li][r]))
+                        .collect();
+                    let out = self.sharded_allreduce("fal_fused_fwd", per_rank)?;
                     stash.push(BlockStash { x: x.clone(), h_or_a: None });
                     x.add_assign(&out);
                 }
@@ -262,21 +312,21 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
     /// One full training step. Returns (loss, grad_norm).
     pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
         self.step += 1;
-        let mut bd = std::mem::take(&mut self.breakdown);
 
         let t0 = std::time::Instant::now();
         let (x_final, stash) = self.forward(batch)?;
-        let head = self.exec(
+        let head = self.exec_in(
+            &self.ctx,
             "head_fwd_bwd",
             &[
-                x_final,
-                self.params.get("lnF_g")?.clone(),
-                self.params.get("lnF_b")?.clone(),
-                self.params.get("wte")?.clone(),
-                batch.targets.clone(),
+                &x_final,
+                self.params.get("lnF_g")?,
+                self.params.get("lnF_b")?,
+                self.params.get("wte")?,
+                &batch.targets,
             ],
         )?;
-        bd.add("fwd", t0.elapsed().as_secs_f64());
+        self.breakdown.add("fwd", t0.elapsed().as_secs_f64());
 
         let t1 = std::time::Instant::now();
         let loss = head[0].data[0];
@@ -303,24 +353,24 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
             };
         }
 
-        let out = self.exec(
+        let out = self.exec_in(
+            &self.ctx,
             "embed_bwd",
             &[
-                batch.tokens.clone(),
-                self.params.get("wte")?.clone(),
-                self.params.get("wpe")?.clone(),
-                dx,
+                &batch.tokens,
+                self.params.get("wte")?,
+                self.params.get("wpe")?,
+                &dx,
             ],
         )?;
         self.add_grad(&mut grads, "wte", &out[0]);
         self.add_grad(&mut grads, "wpe", &out[1]);
-        bd.add("bwd", t1.elapsed().as_secs_f64());
+        self.breakdown.add("bwd", t1.elapsed().as_secs_f64());
 
         let t2 = std::time::Instant::now();
         let gnorm = self.adamw(&grads);
         self.reshard()?;
-        bd.add("opt", t2.elapsed().as_secs_f64());
-        self.breakdown = bd;
+        self.breakdown.add("opt", t2.elapsed().as_secs_f64());
         Ok((loss, gnorm as f32))
     }
 
@@ -330,62 +380,80 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
 
     /// Pre-LN block backward: 2 all-reduces, mirroring forward.
     fn bwd_block_preln(
-        &mut self,
+        &self,
         li: usize,
         stash: &BlockStash,
         dx_out: HostTensor,
         grads: &mut NamedParams,
     ) -> Result<HostTensor> {
         let h = stash.h_or_a.as_ref().unwrap();
-        // x' = h + m(h):  dm = dx_out, backprop per shard.
+        // x' = h + m(h):  dm = dx_out, backprop rank-parallel.
+        let per_rank = (0..self.tp)
+            .map(|r| {
+                let mut v: Vec<&HostTensor> = vec![h];
+                v.extend(&self.shards[li][r].mlp);
+                v.push(&dx_out);
+                v
+            })
+            .collect();
+        let outs = self.rank_stages("mlp_preln_bwd", per_rank)?;
         let mut dh_parts = Vec::with_capacity(self.tp);
-        for r in 0..self.tp {
-            let s = self.shards[li][r].clone();
-            let mut inputs = vec![h.clone()];
-            inputs.extend(s.mlp.iter().cloned());
-            inputs.push(dx_out.clone());
-            let out = self.exec("mlp_preln_bwd", &inputs)?;
+        for (r, out) in outs.into_iter().enumerate() {
             // outputs: dh, dln2_g, dln2_b, dw1, db1, dw2, db2
-            self.accum_mlp_grads(li, r, &out[1..], grads);
-            dh_parts.push(out.into_iter().next().unwrap());
+            let mut it = out.into_iter();
+            let dh_r = it.next().unwrap();
+            let rest: Vec<HostTensor> = it.collect();
+            self.accum_mlp_grads(li, r, &rest, grads);
+            dh_parts.push(dh_r);
         }
-        let mut dh = self.ledger.all_reduce(&dh_parts);
+        let mut dh = self.ledger.all_reduce_ctx(&self.ctx, &dh_parts);
         dh.add_assign(&dx_out); // residual h -> x'
 
         // h = x + a:  da = dh.
+        let per_rank = (0..self.tp)
+            .map(|r| {
+                let mut v: Vec<&HostTensor> = vec![&stash.x];
+                v.extend(&self.shards[li][r].attn);
+                v.push(&dh);
+                v
+            })
+            .collect();
+        let outs = self.rank_stages("attn_bwd", per_rank)?;
         let mut dx_parts = Vec::with_capacity(self.tp);
-        for r in 0..self.tp {
-            let s = self.shards[li][r].clone();
-            let mut inputs = vec![stash.x.clone()];
-            inputs.extend(s.attn.iter().cloned());
-            inputs.push(dh.clone());
-            let out = self.exec("attn_bwd", &inputs)?;
+        for (r, out) in outs.into_iter().enumerate() {
             // outputs: dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo
-            self.accum_attn_grads(li, r, &out[1..], grads);
-            dx_parts.push(out.into_iter().next().unwrap());
+            let mut it = out.into_iter();
+            let dx_r = it.next().unwrap();
+            let rest: Vec<HostTensor> = it.collect();
+            self.accum_attn_grads(li, r, &rest, grads);
+            dx_parts.push(dx_r);
         }
-        let mut dx = self.ledger.all_reduce(&dx_parts);
+        let mut dx = self.ledger.all_reduce_ctx(&self.ctx, &dx_parts);
         dx.add_assign(&dh); // residual x -> h
         Ok(dx)
     }
 
     /// FAL block i>1 backward: a single (fused dx ⊕ dfa) all-reduce.
     fn bwd_block_fal(
-        &mut self,
+        &self,
         li: usize,
         stash: &BlockStash,
         dx_out: HostTensor,
         dfa: &mut Option<HostTensor>,
         grads: &mut NamedParams,
     ) -> Result<HostTensor> {
-        let fa = self.fa_cache.clone().context("fa cache empty")?;
+        let fa = self.fa_cache.as_ref().context("fa cache empty")?;
+        let per_rank = (0..self.tp)
+            .map(|r| {
+                let mut v = fused_input_refs(&stash.x, fa, &self.shards[li][r]);
+                v.push(&dx_out);
+                v
+            })
+            .collect();
+        let outs = self.rank_stages("fal_fused_bwd", per_rank)?;
         let mut dx_acc: Option<HostTensor> = None;
         let mut dfa_acc: Option<HostTensor> = None;
-        for r in 0..self.tp {
-            let s = self.shards[li][r].clone();
-            let mut inputs = fused_inputs(&stash.x, &fa, &s);
-            inputs.push(dx_out.clone());
-            let mut out = self.exec("fal_fused_bwd", &inputs)?;
+        for (r, mut out) in outs.into_iter().enumerate() {
             // outputs: dx, dfa, dln1_g, dln1_b, dln2_g, dln2_b,
             //          dwq, dwk, dwv, dwo, dw1, db1, dw2, db2
             let rest = out.split_off(2);
@@ -419,23 +487,27 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
 
     /// FAL block 1 backward: LNf + attention assembled like the forward.
     fn bwd_fal_block1(
-        &mut self,
+        &self,
         stash: &BlockStash,
         dx_out: HostTensor,
         dfa: &mut Option<HostTensor>,
         grads: &mut NamedParams,
     ) -> Result<HostTensor> {
-        let a1 = stash.h_or_a.as_ref().unwrap().clone();
-        let fa = self.fa_cache.clone().context("fa cache empty")?;
+        let a1 = stash.h_or_a.as_ref().unwrap();
+        let fa = self.fa_cache.as_ref().context("fa cache empty")?;
         // x2 = x1 + a1 + m(x1, fa):  dm = dx_out.
+        let per_rank = (0..self.tp)
+            .map(|r| {
+                let mut v: Vec<&HostTensor> = vec![&stash.x, fa];
+                v.extend(&self.shards[0][r].mlp);
+                v.push(&dx_out);
+                v
+            })
+            .collect();
+        let outs = self.rank_stages("mlp_fal_bwd", per_rank)?;
         let mut dx_parts = Vec::with_capacity(self.tp);
         let mut dfa_parts = Vec::with_capacity(self.tp);
-        for r in 0..self.tp {
-            let s = self.shards[0][r].clone();
-            let mut inputs = vec![stash.x.clone(), fa.clone()];
-            inputs.extend(s.mlp.iter().cloned());
-            inputs.push(dx_out.clone());
-            let mut out = self.exec("mlp_fal_bwd", &inputs)?;
+        for (r, mut out) in outs.into_iter().enumerate() {
             // outputs: dx, dfa, dln2_g, dln2_b, dw1, db1, dw2, db2
             let rest = out.split_off(2);
             self.accum_mlp_grads(0, r, &rest, grads);
@@ -443,17 +515,18 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
             dx_parts.push(it.next().unwrap());
             dfa_parts.push(it.next().unwrap());
         }
-        let dx_mlp = self.ledger.all_reduce(&dx_parts);
-        let mut dfa_total = self.ledger.all_reduce(&dfa_parts);
+        let dx_mlp = self.ledger.all_reduce_ctx(&self.ctx, &dx_parts);
+        let mut dfa_total = self.ledger.all_reduce_ctx(&self.ctx, &dfa_parts);
         if let Some(acc) = dfa.take() {
             dfa_total.add_assign(&acc);
         }
 
         // fa = LNf(a1): backward through the shared LN (shard-0 params).
-        let lnf = self.shards[0][0].lnf.clone();
-        let out = self.exec(
+        let lnf = &self.shards[0][0].lnf;
+        let out = self.exec_in(
+            &self.ctx,
             "lnf_bwd",
-            &[a1, lnf[0].clone(), lnf[1].clone(), dfa_total],
+            &[a1, &lnf[0], &lnf[1], &dfa_total],
         )?;
         self.add_grad(grads, "blocks.0.lnf_g", &out[1]);
         self.add_grad(grads, "blocks.0.lnf_b", &out[2]);
@@ -462,17 +535,24 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
         let mut da = dx_out.clone();
         da.add_assign(&out[0]);
 
+        let per_rank = (0..self.tp)
+            .map(|r| {
+                let mut v: Vec<&HostTensor> = vec![&stash.x];
+                v.extend(&self.shards[0][r].attn);
+                v.push(&da);
+                v
+            })
+            .collect();
+        let outs = self.rank_stages("attn_bwd", per_rank)?;
         let mut dx_attn_parts = Vec::with_capacity(self.tp);
-        for r in 0..self.tp {
-            let s = self.shards[0][r].clone();
-            let mut inputs = vec![stash.x.clone()];
-            inputs.extend(s.attn.iter().cloned());
-            inputs.push(da.clone());
-            let out = self.exec("attn_bwd", &inputs)?;
-            self.accum_attn_grads(0, r, &out[1..], grads);
-            dx_attn_parts.push(out.into_iter().next().unwrap());
+        for (r, out) in outs.into_iter().enumerate() {
+            let mut it = out.into_iter();
+            let dx_r = it.next().unwrap();
+            let rest: Vec<HostTensor> = it.collect();
+            self.accum_attn_grads(0, r, &rest, grads);
+            dx_attn_parts.push(dx_r);
         }
-        let mut dx = self.ledger.all_reduce(&dx_attn_parts);
+        let mut dx = self.ledger.all_reduce_ctx(&self.ctx, &dx_attn_parts);
         dx.add_assign(&dx_mlp);
         dx.add_assign(&dx_out); // direct residual x1 -> x2
         Ok(dx)
@@ -569,14 +649,15 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
     /// batch loss; parameters untouched.
     pub fn forward_loss(&mut self, batch: &Batch) -> Result<f32> {
         let (x_final, _) = self.forward(batch)?;
-        let head = self.exec(
+        let head = self.exec_in(
+            &self.ctx,
             "head_fwd_bwd",
             &[
-                x_final,
-                self.params.get("lnF_g")?.clone(),
-                self.params.get("lnF_b")?.clone(),
-                self.params.get("wte")?.clone(),
-                batch.targets.clone(),
+                &x_final,
+                self.params.get("lnF_g")?,
+                self.params.get("lnF_b")?,
+                self.params.get("wte")?,
+                &batch.targets,
             ],
         )?;
         Ok(head[0].data[0])

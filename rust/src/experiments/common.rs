@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::sp_trainer::{Schedule, Trainer};
 use crate::data::{tasks, Corpus, CorpusSpec, Loader, TaskSuite};
-use crate::runtime::{default_backend_with_threads, Backend};
+use crate::runtime::{default_backend_with_opts, Backend, SchedMode};
 use crate::tensor::HostTensor;
 
 pub struct ExpCtx {
@@ -31,8 +31,19 @@ impl ExpCtx {
         scale: f64,
         threads: Option<usize>,
     ) -> Result<ExpCtx> {
+        Self::with_opts(artifact_dir, scale, threads, None)
+    }
+
+    /// [`ExpCtx::with_threads`] plus an explicit StageGraph schedule mode —
+    /// the CLI's `--sched` flag (`None` = `FAL_SCHED` env, default graph).
+    pub fn with_opts(
+        artifact_dir: &std::path::Path,
+        scale: f64,
+        threads: Option<usize>,
+        sched: Option<SchedMode>,
+    ) -> Result<ExpCtx> {
         Ok(ExpCtx {
-            engine: default_backend_with_threads(artifact_dir, threads)?,
+            engine: default_backend_with_opts(artifact_dir, threads, sched)?,
             scale,
             out_dir: PathBuf::from("reports"),
             seed: 42,
@@ -168,11 +179,20 @@ impl ExpCtx {
                 tgts.extend(&chunk[0].targets);
                 msk.extend(&chunk[0].mask);
             }
-            let mut inputs: Vec<HostTensor> = params.to_vec();
-            inputs.push(HostTensor::from_i32(&[batch, s], &toks));
-            inputs.push(HostTensor::from_i32(&[batch, s], &tgts));
-            inputs.push(HostTensor::from_vec(&[batch, s], msk));
-            let out = self.engine.execute(&name, &inputs)?;
+            // Parameters enter as borrowed views — only the three
+            // per-batch tensors are materialized.
+            let toks_t = HostTensor::from_i32(&[batch, s], &toks);
+            let tgts_t = HostTensor::from_i32(&[batch, s], &tgts);
+            let msk_t = HostTensor::from_vec(&[batch, s], msk);
+            let mut inputs: Vec<&HostTensor> = params.iter().collect();
+            inputs.push(&toks_t);
+            inputs.push(&tgts_t);
+            inputs.push(&msk_t);
+            let out = self.engine.execute_in(
+                &self.engine.exec_ctx(),
+                &name,
+                &inputs,
+            )?;
             for (j, r) in chunk.iter().enumerate() {
                 scores[r.task][r.example][r.option] = out[0].data[j] as f64;
             }

@@ -69,7 +69,7 @@ fn train_compressed(
     let mut v = zeros_like(&params);
     let tc = TrainConfig::default();
     let (_, mut loader) = ctx.loader(config, 0)?;
-    let mut bd = Breakdown::new();
+    let bd = Breakdown::new();
     let mut wire_total = 0.0f64;
     let world = 2usize;
 

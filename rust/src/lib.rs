@@ -10,9 +10,11 @@
 //! * **Native backend (default)** — [`runtime::NativeBackend`]: pure-Rust
 //!   cache-blocked f32 kernels (matmul/LayerNorm/softmax/GeLU, causal
 //!   attention with hand-derived VJPs) that fan out over row panels
-//!   through [`runtime::ExecCtx`] (`--threads` / `FAL_THREADS`), plus an
-//!   in-memory synthetic manifest. Builds and tests with zero external
-//!   state: no `xla` crate, no Python, no `artifacts/` directory.
+//!   through [`runtime::ExecCtx`] (`--threads` / `FAL_THREADS`), scheduled
+//!   rank-/branch-parallel by the [`runtime::StageGraph`] task graph
+//!   (`--sched` / `FAL_SCHED`), plus an in-memory synthetic manifest.
+//!   Builds and tests with zero external state: no `xla` crate, no
+//!   Python, no `artifacts/` directory.
 //! * **PJRT backend (feature `pjrt`)** — `runtime::Engine`: executes the
 //!   AOT-lowered HLO artifacts produced by `python/compile/aot.py` (JAX +
 //!   Pallas kernels) through the PJRT C API. Python never runs on the

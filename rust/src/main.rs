@@ -1,15 +1,19 @@
 //! `fal` — launcher CLI for the FAL framework.
 //!
 //! ```text
-//! fal exp <id|all> [--scale 1.0] [--threads N] [--artifacts DIR] [--out reports]
-//! fal train --config small --variant fal [--steps 300] [--threads N] [--eval]
-//! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N]
+//! fal exp <id|all> [--scale 1.0] [--threads N] [--sched graph|serial] [--artifacts DIR] [--out reports]
+//! fal train --config small --variant fal [--steps 300] [--threads N] [--sched M] [--eval]
+//! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M]
 //! fal list            # artifacts + experiments
 //! ```
 //!
 //! `--threads` sizes the native backend's `ExecCtx` worker fan-out
 //! (default: `FAL_THREADS` env, else the machine's parallelism;
 //! `--threads 1` reproduces the historical scalar results bit-for-bit).
+//! `--sched` picks the StageGraph schedule (default: `FAL_SCHED` env, else
+//! `graph` — rank-/branch-parallel stage execution; `serial` is the
+//! escape hatch running the historical sequential loops, bit-identical
+//! to `graph` at every thread count).
 
 use std::path::PathBuf;
 
@@ -18,7 +22,7 @@ use fal::config::{TrainConfig, Variant, PCIE_GEN4};
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::experiments::{self, ExpCtx};
-use fal::runtime::Backend;
+use fal::runtime::{Backend, SchedMode};
 use fal::util::cli::Args;
 
 fn main() {
@@ -40,8 +44,21 @@ fn threads_opt(args: &Args) -> Result<Option<usize>> {
     })
 }
 
+/// `--sched serial|graph`; `None` falls back to `FAL_SCHED` (default graph).
+fn sched_opt(args: &Args) -> Result<Option<SchedMode>> {
+    Ok(match args.get("sched") {
+        None => None,
+        Some(v) => Some(SchedMode::parse(v)?),
+    })
+}
+
 fn exp_ctx(args: &Args, scale: f64) -> Result<ExpCtx> {
-    ExpCtx::with_threads(&artifact_dir(args), scale, threads_opt(args)?)
+    ExpCtx::with_opts(
+        &artifact_dir(args),
+        scale,
+        threads_opt(args)?,
+        sched_opt(args)?,
+    )
 }
 
 fn run() -> Result<()> {
@@ -66,13 +83,16 @@ fn print_help() {
     println!(
         "fal — First Attentions Last (NeurIPS 2025) reproduction framework\n\
          \n\
-         USAGE:\n  fal exp <id|all> [--scale S] [--threads N] [--artifacts DIR] [--out DIR]\n\
-         \x20 fal train --config small --variant fal [--steps N] [--threads N] [--eval]\n\
-         \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N]\n\
+         USAGE:\n  fal exp <id|all> [--scale S] [--threads N] [--sched M] [--artifacts DIR] [--out DIR]\n\
+         \x20 fal train --config small --variant fal [--steps N] [--threads N] [--sched M] [--eval]\n\
+         \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M]\n\
          \x20 fal list\n\
          \n\
          --threads N sizes the native backend's worker fan-out (default:\n\
          FAL_THREADS env, else all cores; 1 = exact scalar reference).\n\
+         --sched serial|graph picks the StageGraph schedule (default:\n\
+         FAL_SCHED env, else graph; serial = the historical sequential\n\
+         loops, bit-identical at every thread count).\n\
          \n\
          Every experiment id runs on the default (native CPU) build — no\n\
          Python, artifacts/ directory, or `--features pjrt` required.\n\

@@ -7,8 +7,8 @@
 //! boundary as [`HostTensor`]s; a buffer-resident path (`execute_buffers`)
 //! keeps state on device between steps for the hot training loop.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::path::Path;
 use std::time::Instant;
 
@@ -17,15 +17,32 @@ use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaCompu
 
 use super::artifact::Manifest;
 use super::literal::{from_literal, into_anyhow, to_literal, untuple};
-use super::{validate_inputs, Backend, ExecStats};
+use super::{validate_inputs, Backend, ExecCtx, ExecStats};
 use crate::tensor::HostTensor;
 
 pub struct Engine {
     client: PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<BTreeMap<String, PjRtLoadedExecutable>>,
-    stats: RefCell<BTreeMap<String, ExecStats>>,
+    /// Arc-wrapped so executions clone the handle and drop the lock before
+    /// running — concurrent StageGraph stage executions must not serialize
+    /// on the cache.
+    cache: Mutex<BTreeMap<String, Arc<PjRtLoadedExecutable>>>,
+    stats: Mutex<BTreeMap<String, ExecStats>>,
 }
+
+// SAFETY: `Backend` requires `Sync` only so StageGraph nodes *may*
+// execute stages concurrently through one shared `&Backend`. For this
+// engine that concurrency never actually occurs: `Engine` keeps the
+// default serial `Backend::exec_ctx` (re-asserted by the explicit
+// override below), so every trainer-driven StageGraph takes the
+// sequential path and `execute_in` is never entered from two threads.
+// The interior maps are Mutex-guarded regardless. The PJRT C API
+// documents clients/executables as thread-safe, but the vendored Rust
+// wrapper types do not carry the auto trait — anyone plumbing a parallel
+// ExecCtx into this engine (ROADMAP: `Engine::new` thread knob) must
+// first verify the wrapper's thread-safety and replace this impl with a
+// compiler-checked one.
+unsafe impl Sync for Engine {}
 
 impl Engine {
     pub fn new(artifact_dir: &Path) -> Result<Engine> {
@@ -34,15 +51,15 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            cache: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new(BTreeMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(BTreeMap::new()),
         })
     }
 
     /// Compile (or fetch from cache) the named artifact.
     pub fn prepare(&self, name: &str) -> Result<()> {
         use anyhow::Context;
-        if self.cache.borrow().contains_key(name) {
+        if self.cache.lock().unwrap().contains_key(name) {
             return Ok(());
         }
         let spec = self.manifest.artifact(name)?;
@@ -57,8 +74,14 @@ impl Engine {
             .compile(&comp)
             .map_err(into_anyhow)
             .with_context(|| format!("compiling artifact {name:?}"))?;
-        self.cache.borrow_mut().insert(name.to_string(), exe);
-        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_secs +=
+        // A racing thread may have compiled the same artifact meanwhile;
+        // keep the first insertion so cached handles stay stable.
+        self.cache
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(exe));
+        self.stats.lock().unwrap().entry(name.to_string()).or_default().compile_secs +=
             t0.elapsed().as_secs_f64();
         Ok(())
     }
@@ -73,11 +96,10 @@ impl Engine {
     ) -> Result<Vec<PjRtBuffer>> {
         self.prepare(name)?;
         let t0 = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("prepared above");
+        let exe = self.cache.lock().unwrap().get(name).cloned().expect("prepared above");
         let mut result = exe.execute_b::<PjRtBuffer>(inputs).map_err(into_anyhow)?;
         let outs = result.swap_remove(0);
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         let e = stats.entry(name.to_string()).or_default();
         e.calls += 1;
         e.exec_secs += t0.elapsed().as_secs_f64();
@@ -94,12 +116,11 @@ impl Engine {
     ) -> Result<Vec<PjRtBuffer>> {
         self.prepare(name)?;
         let t0 = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("prepared above");
+        let exe = self.cache.lock().unwrap().get(name).cloned().expect("prepared above");
         let mut result =
             exe.execute_b::<&PjRtBuffer>(inputs).map_err(into_anyhow)?;
         let outs = result.swap_remove(0);
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         let e = stats.entry(name.to_string()).or_default();
         e.calls += 1;
         e.exec_secs += t0.elapsed().as_secs_f64();
@@ -130,8 +151,21 @@ impl Backend for Engine {
         &self.manifest
     }
 
-    /// Execute by name with host tensors; returns flattened outputs.
-    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    /// Serial on purpose — XLA owns its own threadpool, and the
+    /// `unsafe impl Sync` above is justified by StageGraph never running
+    /// this engine's stages concurrently. Keep the two in lockstep.
+    fn exec_ctx(&self) -> ExecCtx {
+        ExecCtx::serial()
+    }
+
+    /// Execute by name with host tensors; returns flattened outputs. The
+    /// execution context is ignored: XLA owns its own threadpool.
+    fn execute_in(
+        &self,
+        _ctx: &ExecCtx,
+        name: &str,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
         self.prepare(name)?;
         let spec = self.manifest.artifact(name)?;
         validate_inputs(spec, inputs)?;
@@ -148,7 +182,7 @@ impl Backend for Engine {
         // are collected here and dropped only after `to_literal_sync`.
         let mut literals = Vec::with_capacity(inputs.len());
         let mut bufs = Vec::with_capacity(inputs.len());
-        for t in inputs {
+        for &t in inputs {
             let lit = to_literal(t)?;
             bufs.push(
                 self.client
@@ -160,8 +194,7 @@ impl Backend for Engine {
         let convert_in = t0.elapsed().as_secs_f64();
 
         let t1 = Instant::now();
-        let cache = self.cache.borrow();
-        let exe = cache.get(name).expect("prepared above");
+        let exe = self.cache.lock().unwrap().get(name).cloned().expect("prepared above");
         let result = exe.execute_b::<PjRtBuffer>(&bufs).map_err(into_anyhow)?;
         let root = result[0][0].to_literal_sync().map_err(into_anyhow)?;
         drop(literals);
@@ -171,7 +204,7 @@ impl Backend for Engine {
         let outs = untuple(root)?;
         let convert_out = t2.elapsed().as_secs_f64();
 
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         let e = stats.entry(name.to_string()).or_default();
         e.calls += 1;
         e.exec_secs += exec;
@@ -184,7 +217,7 @@ impl Backend for Engine {
     }
 
     fn stats(&self) -> BTreeMap<String, ExecStats> {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 }
 

@@ -18,12 +18,27 @@
 //!   count, and `threads = 1` (a single chunk) reproduces the historical
 //!   scalar results bit-for-bit.
 //!
+//! # Partition knob vs worker knob
+//!
+//! A context carries two counts. [`ExecCtx::threads`] is the *partition*
+//! knob: chunk boundaries — and therefore every kernel's bits — depend
+//! only on it. [`ExecCtx::workers`] is the *concurrency* knob: how many
+//! OS threads a parallel region may actually occupy. They start equal;
+//! task-level nesting ([`ExecCtx::fork_join`], the StageGraph scheduler in
+//! [`super::sched`]) subdivides `workers` across branches while leaving
+//! `threads` untouched, so a kernel inside a branch produces exactly the
+//! bits it would under the full context — it just executes its chunks on
+//! fewer workers. This is what keeps `--sched graph` bit-identical to
+//! `--sched serial` at every thread count, with no oversubscription.
+//!
 //! The context is plumbed from [`NativeBackend`](super::NativeBackend)
-//! construction (CLI `--threads`, `FAL_THREADS` env fallback) through
-//! [`Backend::exec_ctx`](super::Backend::exec_ctx) to the coordinators.
-//! See docs/ARCHITECTURE.md §"Execution context & kernel API".
+//! construction (CLI `--threads` / `--sched`, `FAL_THREADS` / `FAL_SCHED`
+//! env fallbacks) through [`Backend::exec_ctx`](super::Backend::exec_ctx)
+//! to the coordinators. See docs/ARCHITECTURE.md §1b–§1c.
 
 use std::ops::Range;
+
+use super::sched::SchedMode;
 
 /// Environment fallback for the thread count (`0` = auto-detect).
 pub const THREADS_ENV: &str = "FAL_THREADS";
@@ -35,7 +50,12 @@ pub const THREADS_ENV: &str = "FAL_THREADS";
 /// be shared freely across backends, trainers and benches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecCtx {
+    /// Partition knob: chunking determinism parameter (§module docs).
     threads: usize,
+    /// Concurrency knob: workers this context may occupy right now.
+    workers: usize,
+    /// Schedule mode StageGraph runs consult (serial escape hatch).
+    sched: SchedMode,
 }
 
 impl ExecCtx {
@@ -45,20 +65,23 @@ impl ExecCtx {
     pub const PAR_GRAIN: usize = 16_384;
 
     /// Context with an explicit thread count (`0` = auto-detect from the
-    /// machine, like the `FAL_THREADS=0` env setting).
+    /// machine, like the `FAL_THREADS=0` env setting). The schedule mode
+    /// comes from `FAL_SCHED` (default graph).
     pub fn new(threads: usize) -> ExecCtx {
         let threads = if threads == 0 { available() } else { threads };
-        ExecCtx { threads: threads.max(1) }
+        let threads = threads.max(1);
+        ExecCtx { threads, workers: threads, sched: SchedMode::from_env() }
     }
 
     /// Single-threaded context: every kernel runs the scalar reference
     /// path on the calling thread (bit-for-bit the historical results).
     pub fn serial() -> ExecCtx {
-        ExecCtx { threads: 1 }
+        ExecCtx { threads: 1, workers: 1, sched: SchedMode::Serial }
     }
 
-    /// Context from the `FAL_THREADS` environment variable, falling back
-    /// to the machine's available parallelism when unset or unparsable.
+    /// Context from the `FAL_THREADS` / `FAL_SCHED` environment variables,
+    /// falling back to the machine's available parallelism (and the graph
+    /// schedule) when unset or unparsable.
     pub fn from_env() -> ExecCtx {
         match std::env::var(THREADS_ENV) {
             Ok(v) => match v.trim().parse::<usize>() {
@@ -69,8 +92,24 @@ impl ExecCtx {
         }
     }
 
+    /// This context with an explicit schedule mode (the CLI `--sched`
+    /// override).
+    pub fn with_sched(self, sched: SchedMode) -> ExecCtx {
+        ExecCtx { sched, ..self }
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Workers this context may occupy (≤ [`ExecCtx::threads`]; subdivided
+    /// by [`ExecCtx::fork_join`]).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn sched(&self) -> SchedMode {
+        self.sched
     }
 
     /// Minimum rows per chunk so one chunk carries at least
@@ -83,7 +122,8 @@ impl ExecCtx {
     /// Balanced, contiguous partition of `0..n` into at most
     /// `self.threads` chunks of at least `min_chunk` items each. Chunk
     /// boundaries depend only on `(n, threads, min_chunk)` — the
-    /// determinism contract every kernel builds on. Empty for `n = 0`.
+    /// determinism contract every kernel builds on (note: *threads*, never
+    /// the current worker subdivision). Empty for `n = 0`.
     pub fn chunk_ranges(&self, n: usize, min_chunk: usize) -> Vec<Range<usize>> {
         if n == 0 {
             return vec![];
@@ -101,15 +141,17 @@ impl ExecCtx {
             .collect()
     }
 
-    /// Run `f` once per item, concurrently. Item 0 runs on the calling
-    /// thread; the rest each get a scoped worker. Results come back in
-    /// item order. With zero or one item nothing is spawned.
+    /// Run `f` once per item, concurrently on up to [`ExecCtx::workers`]
+    /// workers. Results come back in item order. When there are more items
+    /// than workers (a subdivided context), contiguous item groups share a
+    /// worker and run in ascending item order — the result values are
+    /// independent of the worker count. With zero or one item (or one
+    /// worker) nothing is spawned.
     ///
-    /// One item per worker is the contract: build the item list from
-    /// [`ExecCtx::chunk_ranges`] (which caps at `threads`), never one item
-    /// per work unit — a longer list would oversubscribe the machine and,
-    /// under a serial context, break the "threads = 1 runs on the calling
-    /// thread" guarantee. Debug builds enforce this.
+    /// Derive the item list from [`ExecCtx::chunk_ranges`] (which caps at
+    /// `threads`), never one item per work unit — a longer list would
+    /// break the partition-determinism contract. Debug builds enforce
+    /// this.
     pub fn scatter<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
     where
         I: Send,
@@ -123,21 +165,93 @@ impl ExecCtx {
             items.len(),
             self.threads
         );
-        let mut items = items;
-        if items.len() <= 1 {
-            return items.pop().map(|it| f(it)).into_iter().collect();
+        let n = items.len();
+        let w = self.workers.max(1).min(n);
+        if n <= 1 || w <= 1 {
+            return items.into_iter().map(|it| f(it)).collect();
         }
-        let first = items.remove(0);
+        // Contiguous, balanced item groups — one per worker lane.
+        let base = n / w;
+        let rem = n % w;
+        let mut it = items.into_iter();
+        let mut groups: Vec<Vec<I>> = Vec::with_capacity(w);
+        for g in 0..w {
+            let len = base + usize::from(g < rem);
+            groups.push((0..len).map(|_| it.next().unwrap()).collect());
+        }
         std::thread::scope(|s| {
             let fr = &f;
-            let handles: Vec<_> = items
+            let rest = groups.split_off(1);
+            let handles: Vec<_> = rest
                 .into_iter()
-                .map(|it| s.spawn(move || fr(it)))
+                .map(|g| {
+                    s.spawn(move || {
+                        g.into_iter().map(fr).collect::<Vec<T>>()
+                    })
+                })
                 .collect();
-            let mut out = Vec::with_capacity(handles.len() + 1);
-            out.push(fr(first));
+            let first = groups.pop().unwrap();
+            let mut out: Vec<T> = first.into_iter().map(fr).collect();
             for h in handles {
-                out.push(h.join().expect("ExecCtx worker panicked"));
+                out.extend(h.join().expect("ExecCtx worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Task-level nested submission: run `tasks` concurrently on worker
+    /// lanes, handing each task a context whose worker share is an equal
+    /// subdivision of this pool (never oversubscribing) while the
+    /// partition knob stays untouched. Results come back in task order; a
+    /// single task keeps the full pool. This is the primitive the
+    /// StageGraph scheduler ([`super::sched`]) forks waves with.
+    pub fn fork_join<T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send,
+        F: FnOnce(&ExecCtx) -> T + Send,
+    {
+        let k = tasks.len();
+        if k == 0 {
+            return vec![];
+        }
+        let lanes = self.workers.max(1).min(k);
+        if lanes <= 1 {
+            // One task deserves the whole pool; a 1-worker pool runs its
+            // tasks back to back on the calling thread.
+            let sub = if k == 1 {
+                *self
+            } else {
+                ExecCtx { workers: 1, ..*self }
+            };
+            return tasks.into_iter().map(|f| f(&sub)).collect();
+        }
+        let base_t = k / lanes;
+        let rem_t = k % lanes;
+        let base_w = self.workers / lanes;
+        let rem_w = self.workers % lanes;
+        let mut it = tasks.into_iter();
+        let mut groups: Vec<(ExecCtx, Vec<F>)> = Vec::with_capacity(lanes);
+        for l in 0..lanes {
+            let nt = base_t + usize::from(l < rem_t);
+            let nw = (base_w + usize::from(l < rem_w)).max(1);
+            let sub = ExecCtx { workers: nw, ..*self };
+            groups.push((sub, (0..nt).map(|_| it.next().unwrap()).collect()));
+        }
+        std::thread::scope(|s| {
+            let rest = groups.split_off(1);
+            let handles: Vec<_> = rest
+                .into_iter()
+                .map(|(sub, fs)| {
+                    s.spawn(move || {
+                        fs.into_iter().map(|f| f(&sub)).collect::<Vec<T>>()
+                    })
+                })
+                .collect();
+            let (sub0, fs0) = groups.pop().unwrap();
+            let mut out: Vec<T> =
+                fs0.into_iter().map(|f| f(&sub0)).collect();
+            for h in handles {
+                out.extend(h.join().expect("ExecCtx fork_join lane panicked"));
             }
             out
         })
@@ -170,7 +284,8 @@ impl ExecCtx {
 }
 
 impl Default for ExecCtx {
-    /// The env-driven default (`FAL_THREADS`, else machine parallelism).
+    /// The env-driven default (`FAL_THREADS` / `FAL_SCHED`, else machine
+    /// parallelism with the graph schedule).
     fn default() -> ExecCtx {
         ExecCtx::from_env()
     }
@@ -244,6 +359,17 @@ mod tests {
     }
 
     #[test]
+    fn chunking_ignores_worker_subdivision() {
+        // The partition knob is `threads`; a subdivided context chunks
+        // identically (the bit-exactness keystone of --sched graph).
+        let full = ExecCtx::new(8);
+        let sub = ExecCtx { workers: 2, ..full };
+        assert_eq!(full.chunk_ranges(103, 2), sub.chunk_ranges(103, 2));
+        assert_eq!(sub.threads(), 8);
+        assert_eq!(sub.workers(), 2);
+    }
+
+    #[test]
     fn scatter_preserves_item_order() {
         let ctx = ExecCtx::new(4);
         let items: Vec<usize> = (0..4).collect();
@@ -255,6 +381,16 @@ mod tests {
     }
 
     #[test]
+    fn scatter_groups_items_when_workers_are_subdivided() {
+        // 7 items on a 2-worker (but 8-thread) context: contiguous groups,
+        // results still in item order.
+        let ctx = ExecCtx { workers: 2, ..ExecCtx::new(8) };
+        let items: Vec<usize> = (0..7).collect();
+        let out = ctx.scatter(items, |i| i + 100);
+        assert_eq!(out, (100..107).collect::<Vec<_>>());
+    }
+
+    #[test]
     #[cfg(debug_assertions)]
     #[should_panic(expected = "chunk_ranges")]
     fn scatter_rejects_per_unit_fanout() {
@@ -263,6 +399,40 @@ mod tests {
         let ctx = ExecCtx::new(2);
         let items: Vec<usize> = (0..11).collect();
         ctx.scatter(items, |i| i);
+    }
+
+    #[test]
+    fn fork_join_orders_and_subdivides() {
+        let ctx = ExecCtx::new(4);
+        let probe: fn(&ExecCtx) -> (usize, usize) =
+            |c| (c.workers(), c.threads());
+        // Two tasks split the pool 2 + 2; partition knob untouched.
+        let out = ctx.fork_join(vec![probe, probe]);
+        assert_eq!(out, vec![(2, 4), (2, 4)]);
+        // Three tasks on 4 workers: 2 + 1 + 1.
+        let subs = ctx.fork_join(
+            (0..3)
+                .map(|_| |c: &ExecCtx| c.workers())
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(subs, vec![2, 1, 1]);
+        // A single task keeps the whole pool.
+        let workers: fn(&ExecCtx) -> usize = |c| c.workers();
+        assert_eq!(ctx.fork_join(vec![workers]), vec![4]);
+        // More tasks than workers: grouped, order preserved.
+        let many = ctx.fork_join(
+            (0..9)
+                .map(|i| move |_: &ExecCtx| i)
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(many, (0..9).collect::<Vec<_>>());
+        // Serial context: sequential, 1 worker each (but full partition).
+        let ser = ExecCtx::serial().fork_join(vec![probe, probe]);
+        assert_eq!(ser, vec![(1, 1), (1, 1)]);
+        // Empty task list.
+        assert!(ctx
+            .fork_join(Vec::<fn(&ExecCtx) -> usize>::new())
+            .is_empty());
     }
 
     #[test]
@@ -303,7 +473,15 @@ mod tests {
     #[test]
     fn explicit_thread_counts() {
         assert_eq!(ExecCtx::serial().threads(), 1);
+        assert_eq!(ExecCtx::serial().sched(), SchedMode::Serial);
         assert_eq!(ExecCtx::new(7).threads(), 7);
+        assert_eq!(ExecCtx::new(7).workers(), 7);
         assert!(ExecCtx::new(0).threads() >= 1); // auto-detect
+        let g = ExecCtx::new(2).with_sched(SchedMode::Graph);
+        assert_eq!(g.sched(), SchedMode::Graph);
+        assert_eq!(
+            g.with_sched(SchedMode::Serial).sched(),
+            SchedMode::Serial
+        );
     }
 }

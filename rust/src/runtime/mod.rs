@@ -26,7 +26,11 @@
 //! synthetic manifest so the three can never drift. The [`exec`] module
 //! owns [`ExecCtx`], the native runtime's parallel execution context:
 //! every native kernel takes one, the backend owns one, and
-//! [`Backend::exec_ctx`] hands it to the coordinators.
+//! [`Backend::exec_ctx`] hands it to the coordinators. The [`sched`]
+//! module layers the [`StageGraph`] scheduler on top: stage closures with
+//! declared dependencies, executed rank-/branch-parallel under
+//! `--sched graph` (bit-identical to `--sched serial` at every thread
+//! count — docs/ARCHITECTURE.md §1c).
 
 pub mod artifact;
 #[cfg(feature = "pjrt")]
@@ -35,6 +39,7 @@ pub mod exec;
 #[cfg(feature = "pjrt")]
 pub mod literal;
 pub mod native;
+pub mod sched;
 pub mod slots;
 pub mod synthetic;
 
@@ -52,6 +57,7 @@ pub use exec::ExecCtx;
 #[cfg(feature = "pjrt")]
 pub use literal::{from_literal, to_literal, untuple};
 pub use native::NativeBackend;
+pub use sched::{Joined, SchedMode, StageGraph};
 pub use synthetic::{default_specs, synthetic_manifest, SyntheticSpec};
 
 /// Per-artifact execution counters (shared by every backend).
@@ -68,15 +74,37 @@ pub struct ExecStats {
 /// Object-safe on purpose — `ExpCtx` and the CLI hold a `Box<dyn Backend>`
 /// selected at startup, while the trainers stay generic (`B: Backend +
 /// ?Sized`) so they monomorphize when the concrete type is known.
-pub trait Backend {
+///
+/// `Sync` is a supertrait: the StageGraph scheduler executes independent
+/// stage artifacts (e.g. the TP trainer's per-rank shards) concurrently
+/// from scoped worker threads sharing one `&Backend`.
+pub trait Backend: Sync {
     /// Short platform tag, e.g. "native-cpu" or the PJRT platform name.
     fn platform(&self) -> String;
 
     /// The artifact/schema/config contract this backend serves.
     fn manifest(&self) -> &Manifest;
 
-    /// Execute the named artifact; returns the flattened output tuple.
-    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+    /// Execute the named artifact with *borrowed* inputs under an explicit
+    /// execution context — the hot path. StageGraph nodes call this with
+    /// their subdivided worker lane so concurrent stages never
+    /// oversubscribe the machine; callers assembling inputs from
+    /// parameter/shard storage pass views instead of cloning tensors.
+    /// Backends that own their execution resources (the PJRT engine, whose
+    /// XLA runtime has its own pool) may ignore `ctx`.
+    fn execute_in(
+        &self,
+        ctx: &ExecCtx,
+        name: &str,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>>;
+
+    /// Execute the named artifact under the backend's own context;
+    /// returns the flattened output tuple.
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.execute_in(&self.exec_ctx(), name, &refs)
+    }
 
     /// Initial parameter snapshot for `config` at `seed`, in schema order.
     /// PJRT loads the aot.py-written binary; the native backend generates a
@@ -109,8 +137,14 @@ pub trait Backend {
     }
 }
 
+/// Clone a borrowed input view into owned tensors (the full-model kinds
+/// re-pack parameters into `NamedParams`, which owns its storage).
+pub fn owned_inputs(inputs: &[&HostTensor]) -> Vec<HostTensor> {
+    inputs.iter().map(|t| (*t).clone()).collect()
+}
+
 /// Shared input validation: arity and shapes against the artifact spec.
-pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<()> {
     if inputs.len() != spec.inputs.len() {
         bail!(
             "artifact {}: got {} inputs, expected {}",
@@ -147,7 +181,7 @@ pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()>
 /// `pjrt` feature is on and a manifest exists on disk, the native CPU
 /// backend (with the built-in synthetic manifest) otherwise.
 pub fn default_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
-    default_backend_with_threads(artifact_dir, None)
+    default_backend_with_opts(artifact_dir, None, None)
 }
 
 /// [`default_backend`] with an explicit thread count for the native
@@ -157,6 +191,17 @@ pub fn default_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
 pub fn default_backend_with_threads(
     artifact_dir: &Path,
     threads: Option<usize>,
+) -> Result<Box<dyn Backend>> {
+    default_backend_with_opts(artifact_dir, threads, None)
+}
+
+/// [`default_backend_with_threads`] plus an explicit StageGraph schedule
+/// mode for the native backend (`None` = `FAL_SCHED` env, default graph)
+/// — what the CLI's `--threads` / `--sched` construct.
+pub fn default_backend_with_opts(
+    artifact_dir: &Path,
+    threads: Option<usize>,
+    sched: Option<SchedMode>,
 ) -> Result<Box<dyn Backend>> {
     #[cfg(feature = "pjrt")]
     {
@@ -172,10 +217,14 @@ pub fn default_backend_with_threads(
         );
     }
     let _ = artifact_dir;
-    Ok(Box::new(match threads {
-        Some(n) => NativeBackend::synthetic_with_threads(n),
-        None => NativeBackend::synthetic(),
-    }))
+    let mut ctx = match threads {
+        Some(n) => ExecCtx::new(n),
+        None => ExecCtx::from_env(),
+    };
+    if let Some(mode) = sched {
+        ctx = ctx.with_sched(mode);
+    }
+    Ok(Box::new(NativeBackend::synthetic_with_ctx(ctx)))
 }
 
 #[cfg(test)]
@@ -203,7 +252,8 @@ mod tests {
             .map(|s| HostTensor::zeros(&s.shape))
             .collect();
         bad[0] = HostTensor::zeros(&[1, 2, 3]);
-        let err = validate_inputs(spec, &bad).unwrap_err().to_string();
+        let bad_refs: Vec<&HostTensor> = bad.iter().collect();
+        let err = validate_inputs(spec, &bad_refs).unwrap_err().to_string();
         assert!(err.contains("shape"), "{err}");
     }
 }

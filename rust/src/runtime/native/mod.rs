@@ -43,8 +43,8 @@ pub mod moe;
 pub mod stages;
 pub mod train_step;
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -61,10 +61,15 @@ const INIT_STD: f32 = 0.02;
 
 pub struct NativeBackend {
     manifest: Manifest,
-    /// The execution context every artifact executes under — the worker
-    /// fan-out knob plumbed from the CLI / `FAL_THREADS` at construction.
+    /// The execution context every artifact executes under by default —
+    /// the worker fan-out / schedule knobs plumbed from the CLI
+    /// (`--threads` / `--sched`, `FAL_THREADS` / `FAL_SCHED`) at
+    /// construction. `execute_in` callers (StageGraph nodes) may override
+    /// it per call with their subdivided worker lane.
     ctx: ExecCtx,
-    stats: RefCell<BTreeMap<String, ExecStats>>,
+    /// Mutex, not RefCell: rank-parallel StageGraph nodes execute stages
+    /// concurrently through one shared `&Backend`.
+    stats: Mutex<BTreeMap<String, ExecStats>>,
 }
 
 impl NativeBackend {
@@ -77,7 +82,7 @@ impl NativeBackend {
 
     /// Wrap a manifest with an explicit execution context.
     pub fn with_ctx(manifest: Manifest, ctx: ExecCtx) -> NativeBackend {
-        NativeBackend { manifest, ctx, stats: RefCell::new(BTreeMap::new()) }
+        NativeBackend { manifest, ctx, stats: Mutex::new(BTreeMap::new()) }
     }
 
     /// The default backend: the built-in synthetic configs (micro, tiny,
@@ -91,7 +96,14 @@ impl NativeBackend {
     /// [`NativeBackend::synthetic`] with an explicit thread count
     /// (`0` = auto-detect) — what `fal --threads N` constructs.
     pub fn synthetic_with_threads(threads: usize) -> NativeBackend {
-        Self::with_ctx(synthetic_manifest(&default_specs()), ExecCtx::new(threads))
+        Self::synthetic_with_ctx(ExecCtx::new(threads))
+    }
+
+    /// [`NativeBackend::synthetic`] with a fully explicit execution
+    /// context (thread count, worker pool, schedule mode) — what the
+    /// determinism tests and the sched-aware benches construct.
+    pub fn synthetic_with_ctx(ctx: ExecCtx) -> NativeBackend {
+        Self::with_ctx(synthetic_manifest(&default_specs()), ctx)
     }
 }
 
@@ -108,10 +120,14 @@ impl Backend for NativeBackend {
         self.ctx
     }
 
-    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    fn execute_in(
+        &self,
+        ctx: &ExecCtx,
+        name: &str,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
         let spec = self.manifest.artifact(name)?;
         validate_inputs(spec, inputs)?;
-        let ctx = &self.ctx;
         let t0 = Instant::now();
         let out = match spec.meta_str("kind") {
             Some("tp_stage") => {
@@ -140,7 +156,7 @@ impl Backend for NativeBackend {
                  (unknown kind {other:?})"
             ),
         };
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().unwrap();
         let e = stats.entry(name.to_string()).or_default();
         e.calls += 1;
         e.exec_secs += t0.elapsed().as_secs_f64();
@@ -169,7 +185,7 @@ impl Backend for NativeBackend {
     }
 
     fn stats(&self) -> BTreeMap<String, ExecStats> {
-        self.stats.borrow().clone()
+        self.stats.lock().unwrap().clone()
     }
 }
 

@@ -23,7 +23,7 @@ use anyhow::{ensure, Result};
 use crate::coordinator::topology::NamedParams;
 use crate::runtime::artifact::ArtifactSpec;
 use crate::runtime::exec::ExecCtx;
-use crate::runtime::Manifest;
+use crate::runtime::{owned_inputs, Manifest};
 use crate::tensor::HostTensor;
 
 use super::kernels::{add, layernorm, matmul_nt};
@@ -164,7 +164,7 @@ pub fn run_eval_masked(
     ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
-    inputs: &[HostTensor],
+    inputs: &[&HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let mm = model_meta(manifest, spec)?;
     let schema = manifest.schema(&mm.cfg.name)?.to_vec();
@@ -175,8 +175,9 @@ pub fn run_eval_masked(
         inputs.len(),
         np + 4
     );
-    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
-    let (tokens, targets) = (&inputs[np], &inputs[np + 1]);
+    let params =
+        NamedParams::from_flat(&schema, owned_inputs(&inputs[..np]));
+    let (tokens, targets) = (inputs[np], inputs[np + 1]);
     let (x, _) = forward_gated(
         ctx,
         &mm,
@@ -201,7 +202,7 @@ pub fn run_score_options(
     ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
-    inputs: &[HostTensor],
+    inputs: &[&HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let mm = model_meta(manifest, spec)?;
     let schema = manifest.schema(&mm.cfg.name)?.to_vec();
@@ -212,9 +213,10 @@ pub fn run_score_options(
         inputs.len(),
         np + 3
     );
-    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let params =
+        NamedParams::from_flat(&schema, owned_inputs(&inputs[..np]));
     let (tokens, targets, mask) =
-        (&inputs[np], &inputs[np + 1], &inputs[np + 2]);
+        (inputs[np], inputs[np + 1], inputs[np + 2]);
     let ones = vec![1.0f32; mm.cfg.n_layer];
     let (x, _) =
         forward_gated(ctx, &mm, &params, tokens, &ones, &ones, false)?;
@@ -238,7 +240,7 @@ pub fn run_capture(
     ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
-    inputs: &[HostTensor],
+    inputs: &[&HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let mm = model_meta(manifest, spec)?;
     let schema = manifest.schema(&mm.cfg.name)?.to_vec();
@@ -249,8 +251,9 @@ pub fn run_capture(
         inputs.len(),
         np + 1
     );
-    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
-    let tokens = &inputs[np];
+    let params =
+        NamedParams::from_flat(&schema, owned_inputs(&inputs[..np]));
+    let tokens = inputs[np];
     let ones = vec![1.0f32; mm.cfg.n_layer];
     let (_, caps) =
         forward_gated(ctx, &mm, &params, tokens, &ones, &ones, true)?;

@@ -30,6 +30,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::ModelConfig;
 use crate::runtime::artifact::ArtifactSpec;
 use crate::runtime::exec::ExecCtx;
+use crate::runtime::sched::StageGraph;
 use crate::runtime::Manifest;
 use crate::tensor::HostTensor;
 
@@ -56,7 +57,7 @@ pub fn run_stage(
     ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
-    inputs: &[HostTensor],
+    inputs: &[&HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let config = spec
         .meta_str("config")
@@ -68,7 +69,7 @@ pub fn run_stage(
         .meta_str("stage")
         .context("tp_stage artifact missing stage meta")?;
     let g = geom(cfg, tp, batch);
-    let i: Vec<&HostTensor> = inputs.iter().collect();
+    let i = inputs;
     Ok(match stage {
         "embed_fwd" => vec![embed_fwd(ctx, i[0], i[1], i[2])],
         "embed_bwd" => {
@@ -269,16 +270,27 @@ pub fn mlp_bwd(
 /// FAL block i>1: attention partial + MLP partial in one stage. Inputs in
 /// [`crate::runtime::slots::FAL_FUSED_SLOTS`] order:
 /// [x, fa, ln1_g, ln1_b, ln2_g, ln2_b, wq, wk, wv, wo, w1, b1, w2, b2].
+///
+/// The two branches share no dependency — the paper's single-device
+/// MHA ∥ MLP overlap — so they run as sibling [`StageGraph`] nodes:
+/// concurrent worker lanes under `--sched graph`, back to back under
+/// `--sched serial`, bit-identical either way (the branch kernels chunk
+/// by [`ExecCtx::threads`], which forking leaves untouched).
 pub fn fal_fused_fwd(ctx: &ExecCtx, g: &AttnGeom, i: &[&HostTensor]) -> HostTensor {
     let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
     let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
-    let a_p = attn_fwd(ctx, g, i[0], &attn_p).out;
-    let m_p = mlp_fwd(ctx, i[0], Some(i[1]), &mlp_p).out;
+    let mut sg = StageGraph::new();
+    sg.node("mha_fwd", &[], |c, _| attn_fwd(c, g, i[0], &attn_p).out);
+    sg.node("mlp_fwd", &[], |c, _| mlp_fwd(c, i[0], Some(i[1]), &mlp_p).out);
+    let mut outs = sg.run(ctx);
+    let m_p = outs.pop().unwrap();
+    let a_p = outs.pop().unwrap();
     add(&a_p, &m_p)
 }
 
 /// VJP of `fal_fused_fwd`: outputs [dx, dfa, dln1_g, dln1_b, dln2_g,
-/// dln2_b, dwq, dwk, dwv, dwo, dw1, db1, dw2, db2].
+/// dln2_b, dwq, dwk, dwv, dwo, dw1, db1, dw2, db2]. Like the forward,
+/// the attention and MLP backwards fork as sibling nodes.
 pub fn fal_fused_bwd(
     ctx: &ExecCtx,
     g: &AttnGeom,
@@ -287,8 +299,14 @@ pub fn fal_fused_bwd(
 ) -> Vec<HostTensor> {
     let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
     let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
-    let a = attn_bwd(ctx, g, i[0], &attn_p, dout);
-    let m = mlp_bwd(ctx, i[0], Some(i[1]), &mlp_p, dout);
+    let mut sg = StageGraph::new();
+    sg.node("mha_bwd", &[], |c, _| attn_bwd(c, g, i[0], &attn_p, dout));
+    sg.node("mlp_bwd", &[], |c, _| {
+        mlp_bwd(c, i[0], Some(i[1]), &mlp_p, dout)
+    });
+    let mut outs = sg.run(ctx);
+    let m = outs.pop().unwrap();
+    let a = outs.pop().unwrap();
     // a: [dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo]
     // m: [dx, dfa, dln2_g, dln2_b, dw1, db1, dw2, db2]
     let dx = add(&a[0], &m[0]);
@@ -453,6 +471,58 @@ mod tests {
         let out = attn_fwd(&ser(), &g, &x, &views).out;
         assert_eq!(out.shape, vec![1, 3, 4]);
         assert!(std::ptr::eq(views[2], &owned[2]));
+    }
+
+    #[test]
+    fn fused_stage_fork_bitwise_matches_serial_schedule() {
+        // The MHA ∥ MLP sibling fork must not change a single bit relative
+        // to the sequential schedule, at any thread count: branch kernels
+        // chunk by the partition knob, which forking leaves untouched.
+        use crate::runtime::sched::SchedMode;
+        let g = AttnGeom { batch: 2, seq: 32, heads: 2, kv_heads: 2, head_dim: 8 };
+        let d = 16usize;
+        let ff = 32usize;
+        let mut rng = Rng::new(77);
+        let x = HostTensor::randn(&[2, 32, d], 0.5, &mut rng);
+        let fa = HostTensor::randn(&[2, 32, d], 0.5, &mut rng);
+        let owned: Vec<HostTensor> = vec![
+            x.clone(),
+            fa.clone(),
+            HostTensor::ones(&[d]),                       // ln1_g
+            HostTensor::zeros(&[d]),                      // ln1_b
+            HostTensor::ones(&[d]),                       // ln2_g
+            HostTensor::zeros(&[d]),                      // ln2_b
+            HostTensor::randn(&[d, d], 0.2, &mut rng),    // wq
+            HostTensor::randn(&[d, d], 0.2, &mut rng),    // wk
+            HostTensor::randn(&[d, d], 0.2, &mut rng),    // wv
+            HostTensor::randn(&[d, d], 0.2, &mut rng),    // wo
+            HostTensor::randn(&[d, ff], 0.2, &mut rng),   // w1
+            HostTensor::zeros(&[ff]),                     // b1
+            HostTensor::randn(&[ff, d], 0.2, &mut rng),   // w2
+            HostTensor::zeros(&[d]),                      // b2
+        ];
+        let i: Vec<&HostTensor> = owned.iter().collect();
+        let dout = HostTensor::randn(&[2, 32, d], 1.0, &mut rng);
+        let bits =
+            |t: &HostTensor| t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        for threads in [1usize, 2, 4, 7] {
+            let ser = ExecCtx::new(threads).with_sched(SchedMode::Serial);
+            let gra = ExecCtx::new(threads).with_sched(SchedMode::Graph);
+            assert_eq!(
+                bits(&fal_fused_fwd(&ser, &g, &i)),
+                bits(&fal_fused_fwd(&gra, &g, &i)),
+                "fwd threads = {threads}"
+            );
+            let bs = fal_fused_bwd(&ser, &g, &i, &dout);
+            let bg = fal_fused_bwd(&gra, &g, &i, &dout);
+            for (k, (a, b)) in bs.iter().zip(&bg).enumerate() {
+                assert_eq!(
+                    bits(a),
+                    bits(b),
+                    "bwd output #{k} threads = {threads}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -27,8 +27,9 @@ use crate::coordinator::optim::{adamw_step, zeros_like};
 use crate::coordinator::topology::NamedParams;
 use crate::runtime::artifact::ArtifactSpec;
 use crate::runtime::exec::ExecCtx;
+use crate::runtime::sched::StageGraph;
 use crate::runtime::slots;
-use crate::runtime::Manifest;
+use crate::runtime::{owned_inputs, Manifest};
 use crate::tensor::HostTensor;
 
 use super::kernels::{add, layernorm, layernorm_bwd, AttnGeom};
@@ -294,9 +295,32 @@ pub(crate) fn loss_and_grads(
     for li in 0..l {
         match block_kind(mm.variant, li, mm.reuse_layer) {
             BlockKind::PreLn => {
-                let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
-                let h = add(&x, &a);
-                let mo = mlp_fwd(ctx, &h, None, &mlp_params(params, li)?).out;
+                // MHA → MLP expressed as a two-node dependency chain: the
+                // degenerate StageGraph the FAL sibling fork contrasts
+                // with. The chain runs sequentially under either schedule
+                // (a one-node wave keeps the full pool), so this is the
+                // historical execution, just routed through the scheduler.
+                let mut sg = StageGraph::new();
+                let xr = &x;
+                let na = sg.node("mha_fwd", &[], |c, _| {
+                    block_attn_fwd(c, mm, params, li, xr, probe(li))
+                        .map(|a| vec![a])
+                });
+                sg.node("mlp_fwd", &[na], move |c, j| {
+                    let a = match j.get(na) {
+                        Ok(v) => &v[0],
+                        Err(e) => anyhow::bail!("mha_fwd failed: {e}"),
+                    };
+                    let h = add(xr, a);
+                    let mo =
+                        mlp_fwd(c, &h, None, &mlp_params(params, li)?).out;
+                    Ok(vec![h, mo])
+                });
+                let mut it = sg.run(ctx).into_iter();
+                it.next().unwrap()?; // surface an attention error first
+                let mut hm = it.next().unwrap()?;
+                let mo = hm.pop().unwrap();
+                let h = hm.pop().unwrap();
                 stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
                 x = add(&h, &mo);
             }
@@ -582,7 +606,7 @@ pub fn run(
     ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
-    inputs: &[HostTensor],
+    inputs: &[&HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let mm = model_meta(manifest, spec)?;
     let schema = manifest.schema(&mm.cfg.name)?.to_vec();
@@ -593,14 +617,16 @@ pub fn run(
         inputs.len(),
         3 * np + 4
     );
-    let mut params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
-    let mut m = NamedParams::from_flat(&schema, inputs[np..2 * np].to_vec());
+    let mut params =
+        NamedParams::from_flat(&schema, owned_inputs(&inputs[..np]));
+    let mut m =
+        NamedParams::from_flat(&schema, owned_inputs(&inputs[np..2 * np]));
     let mut v =
-        NamedParams::from_flat(&schema, inputs[2 * np..3 * np].to_vec());
+        NamedParams::from_flat(&schema, owned_inputs(&inputs[2 * np..3 * np]));
     let step = (inputs[3 * np].data[0].max(1.0)) as usize;
     let lr_scale = inputs[3 * np + 1].data[0] as f64;
-    let tokens = &inputs[3 * np + 2];
-    let targets = &inputs[3 * np + 3];
+    let tokens = inputs[3 * np + 2];
+    let targets = inputs[3 * np + 3];
 
     let out = loss_and_grads(ctx, &mm, &params, tokens, targets, None)?;
     let gnorm = adamw_step(
@@ -629,7 +655,7 @@ pub fn run_grad_step(
     ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
-    inputs: &[HostTensor],
+    inputs: &[&HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let mm = model_meta(manifest, spec)?;
     let schema = manifest.schema(&mm.cfg.name)?.to_vec();
@@ -640,9 +666,9 @@ pub fn run_grad_step(
         inputs.len(),
         np + 2
     );
-    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let params = NamedParams::from_flat(&schema, owned_inputs(&inputs[..np]));
     let out =
-        loss_and_grads(ctx, &mm, &params, &inputs[np], &inputs[np + 1], None)?;
+        loss_and_grads(ctx, &mm, &params, inputs[np], inputs[np + 1], None)?;
     let mut outs = Vec::with_capacity(1 + np);
     outs.push(HostTensor::scalar(out.loss));
     outs.extend(out.grads.to_flat());
@@ -655,7 +681,7 @@ pub fn run_gradmag(
     ctx: &ExecCtx,
     manifest: &Manifest,
     spec: &ArtifactSpec,
-    inputs: &[HostTensor],
+    inputs: &[&HostTensor],
 ) -> Result<Vec<HostTensor>> {
     let mm = model_meta(manifest, spec)?;
     let schema = manifest.schema(&mm.cfg.name)?.to_vec();
@@ -666,9 +692,9 @@ pub fn run_gradmag(
         inputs.len(),
         np + 2
     );
-    let params = NamedParams::from_flat(&schema, inputs[..np].to_vec());
+    let params = NamedParams::from_flat(&schema, owned_inputs(&inputs[..np]));
     let out =
-        loss_and_grads(ctx, &mm, &params, &inputs[np], &inputs[np + 1], None)?;
+        loss_and_grads(ctx, &mm, &params, inputs[np], inputs[np + 1], None)?;
     let norms: Vec<f32> =
         out.d_attn_out.iter().map(|t| t.norm() as f32).collect();
     Ok(vec![HostTensor::from_vec(&[mm.cfg.n_layer], norms)])

@@ -1,0 +1,347 @@
+//! StageGraph: a deterministic task-graph scheduler over [`ExecCtx`].
+//!
+//! The paper's headline structural claim is that FAL removes the per-block
+//! MHA→MLP dependency, "enabling parallel execution of MHA and MLP" — a
+//! *scheduling* property. This module is the layer that expresses such
+//! schedules explicitly: a [`StageGraph`] holds stage closures with
+//! declared dependencies and runs independent ones concurrently on the
+//! context's worker pool, while a dependency chain degenerates to the
+//! plain sequential order.
+//!
+//! # Determinism contract
+//!
+//! Results are **bit-identical between [`SchedMode::Serial`] and
+//! [`SchedMode::Graph`] at every thread count**, because three things are
+//! structure-only:
+//!
+//! 1. **Node values.** A node reads only its declared dependencies (via
+//!    [`Joined`]), so values are independent of execution interleaving.
+//! 2. **Kernel bits.** [`ExecCtx::fork_join`] subdivides the *worker*
+//!    pool but never the *partition* knob ([`ExecCtx::threads`]): a
+//!    kernel inside a branch chunks its work exactly as it would under
+//!    the full context and merely executes those chunks on fewer
+//!    workers, so even the reassociating reductions (attention dk/dv)
+//!    combine partials in the same order.
+//! 3. **Join order.** Nodes are grouped into dependency waves; waves run
+//!    in order and each wave's results are joined in node-id order.
+//!    Serial mode runs nodes in node-id order (which is a topological
+//!    order — dependencies must precede their dependents).
+//!
+//! # Pool subdivision
+//!
+//! A wave of `k` independent nodes on a `w`-worker context runs on
+//! `min(k, w)` lanes; each lane receives a contiguous group of nodes and
+//! an equal share of the workers (never oversubscribing), so a
+//! branch-parallel block can still panel-parallelize its matmuls. Nested
+//! submission composes: a node may itself run a [`StageGraph`] or call
+//! [`ExecCtx::fork_join`] on the subdivided context it is handed.
+//!
+//! See docs/ARCHITECTURE.md §1c.
+
+use anyhow::{bail, Result};
+
+use super::exec::ExecCtx;
+
+/// Environment fallback for the schedule mode (`serial` | `graph`).
+pub const SCHED_ENV: &str = "FAL_SCHED";
+
+/// How a [`StageGraph`] executes: the `--sched` knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedMode {
+    /// Escape hatch: run every node sequentially (node-id order) with the
+    /// full worker pool — the historical loop schedule.
+    Serial,
+    /// Run independent nodes concurrently on subdivided worker lanes.
+    #[default]
+    Graph,
+}
+
+impl SchedMode {
+    pub fn parse(s: &str) -> Result<SchedMode> {
+        match s.trim() {
+            "serial" => Ok(SchedMode::Serial),
+            "graph" => Ok(SchedMode::Graph),
+            other => bail!("unknown schedule {other:?}; one of serial|graph"),
+        }
+    }
+
+    /// `FAL_SCHED` env; default [`SchedMode::Graph`] when unset. An
+    /// unparsable value also falls back to the default, but loudly — the
+    /// escape hatch must never be silently ignored on a typo.
+    pub fn from_env() -> SchedMode {
+        match std::env::var(SCHED_ENV) {
+            Ok(v) => SchedMode::parse(&v).unwrap_or_else(|_| {
+                eprintln!(
+                    "warning: {SCHED_ENV}={v:?} is not serial|graph — \
+                     using the default ({}) schedule",
+                    SchedMode::default().name()
+                );
+                SchedMode::default()
+            }),
+            Err(_) => SchedMode::default(),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedMode::Serial => "serial",
+            SchedMode::Graph => "graph",
+        }
+    }
+}
+
+/// Completed dependency results a node reads from.
+pub struct Joined<'g, T> {
+    results: &'g [Option<T>],
+    /// The reading node's declared dependencies — the only ids it may get.
+    deps: &'g [usize],
+}
+
+impl<'g, T> Joined<'g, T> {
+    /// The result of dependency node `id`. Panics if `id` was not declared
+    /// in the reading node's dependency list — an undeclared read could
+    /// silently race the wave schedule, so the contract is enforced, not
+    /// just documented.
+    pub fn get(&self, id: usize) -> &T {
+        assert!(
+            self.deps.contains(&id),
+            "StageGraph: node reads undeclared dependency {id} \
+             (declared: {:?})",
+            self.deps
+        );
+        self.results[id]
+            .as_ref()
+            .expect("StageGraph: reading a node that has not completed")
+    }
+}
+
+type NodeFn<'a, T> = Box<dyn FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a>;
+
+struct Node<'a, T> {
+    #[allow(dead_code)]
+    label: String,
+    deps: Vec<usize>,
+    run: NodeFn<'a, T>,
+}
+
+/// A set of stage closures with declared dependencies, executed by
+/// [`StageGraph::run`] with a deterministic join order.
+///
+/// Nodes must be added in topological order (every dependency id is
+/// smaller than the node's own id) — enforced at [`StageGraph::node`].
+pub struct StageGraph<'a, T> {
+    nodes: Vec<Node<'a, T>>,
+}
+
+impl<'a, T> Default for StageGraph<'a, T> {
+    fn default() -> Self {
+        StageGraph { nodes: vec![] }
+    }
+}
+
+impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a stage node. `deps` are node ids returned by earlier `node`
+    /// calls; the closure receives the (possibly subdivided) execution
+    /// context and the joined dependency results. Returns the node id.
+    pub fn node(
+        &mut self,
+        label: impl Into<String>,
+        deps: &[usize],
+        f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
+    ) -> usize {
+        let id = self.nodes.len();
+        for &d in deps {
+            assert!(
+                d < id,
+                "StageGraph: node {id} depends on {d}, which must precede it"
+            );
+        }
+        self.nodes.push(Node {
+            label: label.into(),
+            deps: deps.to_vec(),
+            run: Box::new(f),
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Execute the graph under `ctx` (mode = [`ExecCtx::sched`]); returns
+    /// the node results in node-id order.
+    pub fn run(self, ctx: &ExecCtx) -> Vec<T> {
+        let n = self.nodes.len();
+        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        if ctx.sched() == SchedMode::Serial || ctx.workers() <= 1 {
+            // Sequential node-id order — a topological order by
+            // construction — with the full pool per node.
+            for (i, node) in self.nodes.into_iter().enumerate() {
+                let joined =
+                    Joined { results: &results, deps: &node.deps };
+                let out = (node.run)(ctx, &joined);
+                results[i] = Some(out);
+            }
+            return results.into_iter().map(|r| r.unwrap()).collect();
+        }
+
+        // Dependency waves: wave(i) = 1 + max(wave(dep)); independent
+        // nodes share a wave and fork across worker lanes.
+        let mut wave = vec![0usize; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            wave[i] =
+                node.deps.iter().map(|&d| wave[d] + 1).max().unwrap_or(0);
+        }
+        let max_wave = wave.iter().copied().max().unwrap_or(0);
+        let mut nodes: Vec<Option<Node<'a, T>>> =
+            self.nodes.into_iter().map(Some).collect();
+        for w in 0..=max_wave {
+            let ids: Vec<usize> = (0..n).filter(|&i| wave[i] == w).collect();
+            let tasks: Vec<Node<'a, T>> =
+                ids.iter().map(|&i| nodes[i].take().unwrap()).collect();
+            let outs = ctx.fork_join(
+                tasks
+                    .into_iter()
+                    .map(|node| {
+                        let results = &results;
+                        move |sub: &ExecCtx| {
+                            let joined =
+                                Joined { results, deps: &node.deps };
+                            (node.run)(sub, &joined)
+                        }
+                    })
+                    .collect(),
+            );
+            for (&i, out) in ids.iter().zip(outs) {
+                results[i] = Some(out);
+            }
+        }
+        results.into_iter().map(|r| r.unwrap()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(threads: usize, mode: SchedMode) -> ExecCtx {
+        ExecCtx::new(threads).with_sched(mode)
+    }
+
+    #[test]
+    fn sched_mode_parses() {
+        assert_eq!(SchedMode::parse("serial").unwrap(), SchedMode::Serial);
+        assert_eq!(SchedMode::parse("graph").unwrap(), SchedMode::Graph);
+        assert!(SchedMode::parse("fancy").is_err());
+        assert_eq!(SchedMode::default(), SchedMode::Graph);
+        assert_eq!(SchedMode::Serial.name(), "serial");
+    }
+
+    #[test]
+    fn results_come_back_in_node_order() {
+        for mode in [SchedMode::Serial, SchedMode::Graph] {
+            let mut g = StageGraph::new();
+            for i in 0..5 {
+                g.node(format!("n{i}"), &[], move |_, _| i * 10);
+            }
+            assert_eq!(g.run(&ctx(4, mode)), vec![0, 10, 20, 30, 40], "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn chain_reads_dependency_results() {
+        for mode in [SchedMode::Serial, SchedMode::Graph] {
+            let mut g = StageGraph::new();
+            let a = g.node("a", &[], |_, _| 1usize);
+            let b = g.node("b", &[a], move |_, j| j.get(a) + 10);
+            let c = g.node("c", &[b], move |_, j| j.get(b) * 2);
+            assert_eq!(g.run(&ctx(4, mode)), vec![1, 11, 22], "{mode:?}");
+            let _ = c;
+        }
+    }
+
+    #[test]
+    fn diamond_joins_both_branches() {
+        for mode in [SchedMode::Serial, SchedMode::Graph] {
+            for threads in [1usize, 2, 4, 7] {
+                let mut g = StageGraph::new();
+                let a = g.node("a", &[], |_, _| 3i64);
+                let b = g.node("b", &[a], move |_, j| j.get(a) + 1);
+                let c = g.node("c", &[a], move |_, j| j.get(a) * 5);
+                g.node("d", &[b, c], move |_, j| j.get(b) + j.get(c));
+                assert_eq!(
+                    g.run(&ctx(threads, mode)),
+                    vec![3, 4, 15, 19],
+                    "{mode:?} t{threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn siblings_subdivide_workers_chain_keeps_full_pool() {
+        // Two independent nodes split a 4-worker pool 2+2; a lone node in
+        // its wave keeps the whole pool.
+        let mut g = StageGraph::new();
+        let a = g.node("a", &[], |c, _| c.workers());
+        let b = g.node("b", &[], |c, _| c.workers());
+        g.node("tail", &[a, b], |c, _| c.workers());
+        let out = g.run(&ctx(4, SchedMode::Graph));
+        assert_eq!(out, vec![2, 2, 4]);
+        // Serial mode never subdivides.
+        let mut g = StageGraph::new();
+        g.node("a", &[], |c, _| c.workers());
+        g.node("b", &[], |c, _| c.workers());
+        assert_eq!(g.run(&ctx(4, SchedMode::Serial)), vec![4, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must precede")]
+    fn forward_dependency_is_rejected() {
+        let mut g: StageGraph<'_, usize> = StageGraph::new();
+        g.node("a", &[3], |_, _| 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared dependency")]
+    fn undeclared_dependency_read_is_rejected() {
+        // Node b reads a without declaring it — under the serial schedule
+        // the value would happen to be present, so the contract must be
+        // enforced, not schedule-dependent.
+        let mut g = StageGraph::new();
+        let a = g.node("a", &[], |_, _| 1usize);
+        g.node("b", &[], move |_, j| *j.get(a));
+        g.run(&ctx(1, SchedMode::Serial));
+    }
+
+    #[test]
+    fn empty_graph_is_fine() {
+        let g: StageGraph<'_, usize> = StageGraph::new();
+        assert!(g.is_empty());
+        assert!(g.run(&ctx(4, SchedMode::Graph)).is_empty());
+    }
+
+    #[test]
+    fn nested_graphs_compose() {
+        // A node may run its own graph on the subdivided context.
+        let mut g = StageGraph::new();
+        g.node("outer_a", &[], |c, _| {
+            let mut inner = StageGraph::new();
+            inner.node("inner_1", &[], |ic, _| ic.workers());
+            inner.node("inner_2", &[], |ic, _| ic.workers());
+            inner.run(c).into_iter().sum::<usize>()
+        });
+        g.node("outer_b", &[], |c, _| c.workers());
+        let out = g.run(&ctx(4, SchedMode::Graph));
+        // outer_a got 2 workers, split 1+1 by the inner graph.
+        assert_eq!(out, vec![2, 2]);
+    }
+}

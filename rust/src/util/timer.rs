@@ -1,9 +1,24 @@
 //! Lightweight timing utilities: scoped stopwatches and named accumulators.
 //!
 //! The TP trainer uses [`Breakdown`] to attribute wall-clock to the paper's
-//! Fig 7 categories (FWD / BWD / Comm / (De)Comp / Opt).
+//! Fig 7 categories (FWD / BWD / Comm / (De)Comp / Opt). Since the
+//! StageGraph scheduler runs stages on concurrent worker lanes, the
+//! accumulator is interior-mutable (`&self` recording, Mutex-guarded) and
+//! offers two recording modes:
+//!
+//! * [`Breakdown::add`] / [`Breakdown::time`] — plain duration sums, for
+//!   sequential phases.
+//! * [`Breakdown::span`] — a drop-guard recording a `(start, end)` wall
+//!   interval. Overlapping spans of the same bucket are merged by interval
+//!   union, so a phase whose stages overlap across workers reports
+//!   **wall-clock**, not the sum of per-worker times.
+//!
+//! [`Breakdown::get`] returns `sum + union(spans)` per bucket. A bucket's
+//! intervals collapse into a scalar whenever its last open guard drops, so
+//! span memory is bounded by concurrent guards, not run length.
 
 use std::collections::BTreeMap;
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// Simple stopwatch.
@@ -24,10 +39,71 @@ impl Stopwatch {
     }
 }
 
-/// Named duration accumulators for phase breakdowns.
 #[derive(Debug, Default, Clone)]
-pub struct Breakdown {
+struct Inner {
+    /// Plain summed durations per bucket.
     acc: BTreeMap<String, f64>,
+    /// Union length of already-collapsed span history per bucket.
+    closed: BTreeMap<String, f64>,
+    /// Wall intervals per bucket not yet collapsible, seconds relative to
+    /// `epoch`.
+    spans: BTreeMap<String, Vec<(f64, f64)>>,
+    /// Start times of currently-open guards per bucket.
+    open: BTreeMap<String, Vec<f64>>,
+}
+
+/// Named duration accumulators for phase breakdowns (thread-safe; see the
+/// module docs for the two recording modes).
+#[derive(Debug)]
+pub struct Breakdown {
+    /// Common clock origin for span intervals.
+    epoch: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Breakdown {
+    fn default() -> Self {
+        Breakdown { epoch: Instant::now(), inner: Mutex::new(Inner::default()) }
+    }
+}
+
+impl Clone for Breakdown {
+    fn clone(&self) -> Self {
+        Breakdown {
+            epoch: self.epoch,
+            inner: Mutex::new(self.inner.lock().unwrap().clone()),
+        }
+    }
+}
+
+/// The single definition of a bucket's total: plain sums + collapsed span
+/// history + the union of still-pending spans. `get`, `entries` (and
+/// therefore `total`/`shares`) all read through here.
+fn bucket_total(inner: &Inner, name: &str) -> f64 {
+    inner.acc.get(name).copied().unwrap_or(0.0)
+        + inner.closed.get(name).copied().unwrap_or(0.0)
+        + inner.spans.get(name).map(|s| union_secs(s)).unwrap_or(0.0)
+}
+
+/// Total length of the union of (possibly overlapping) intervals.
+fn union_secs(spans: &[(f64, f64)]) -> f64 {
+    if spans.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = spans.to_vec();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut total = 0.0;
+    let (mut lo, mut hi) = sorted[0];
+    for &(s, e) in &sorted[1..] {
+        if s <= hi {
+            hi = hi.max(e);
+        } else {
+            total += hi - lo;
+            lo = s;
+            hi = e;
+        }
+    }
+    total + (hi - lo)
 }
 
 impl Breakdown {
@@ -35,43 +111,133 @@ impl Breakdown {
         Self::default()
     }
 
-    pub fn add(&mut self, name: &str, secs: f64) {
-        *self.acc.entry(name.to_string()).or_default() += secs;
+    /// Accumulate `secs` into the named bucket (plain sum).
+    pub fn add(&self, name: &str, secs: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        *inner.acc.entry(name.to_string()).or_default() += secs;
     }
 
-    /// Time a closure into the named bucket.
-    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+    /// Time a closure into the named bucket (plain sum).
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
         self.add(name, t0.elapsed().as_secs_f64());
         out
     }
 
+    /// Open a wall-clock span in the named bucket; the interval is
+    /// recorded when the guard drops. Safe to call from concurrent worker
+    /// tasks — overlapping intervals of one bucket union-merge, so the
+    /// bucket reports wall time, not summed worker time. Whenever a
+    /// bucket's last open guard drops, its accumulated intervals collapse
+    /// into a scalar (a later guard's interval starts at "now", after
+    /// every collapsed end, so the union is exact) — memory stays bounded
+    /// by the number of concurrently-open guards, not by run length.
+    pub fn span(&self, name: &str) -> SpanGuard<'_> {
+        let mut inner = self.inner.lock().unwrap();
+        // Clock read *under* the lock: any collapse that completed before
+        // this guard existed acquired the lock first, so its collapsed
+        // ends all precede this start — the exactness invariant.
+        let start = self.epoch.elapsed().as_secs_f64();
+        inner.open.entry(name.to_string()).or_default().push(start);
+        SpanGuard { bd: self, name: name.to_string(), start }
+    }
+
+    /// Close a guard's interval: deregister the open start, record the
+    /// interval, and collapse the bucket once no guards remain open.
+    fn close_span(&self, name: &str, start: f64, end: f64) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if let Some(starts) = inner.open.get_mut(name) {
+            if let Some(i) = starts.iter().position(|&s| s == start) {
+                starts.swap_remove(i);
+            }
+        }
+        inner
+            .spans
+            .entry(name.to_string())
+            .or_default()
+            .push((start, end));
+        let quiescent =
+            inner.open.get(name).map(|v| v.is_empty()).unwrap_or(true);
+        if quiescent {
+            if let Some(spans) = inner.spans.get_mut(name) {
+                let settled = union_secs(spans);
+                spans.clear();
+                *inner.closed.entry(name.to_string()).or_default() += settled;
+            }
+        }
+    }
+
+    /// Raw interval insert (no open-guard bookkeeping, no collapsing) —
+    /// kept for tests that construct synthetic overlap patterns.
+    #[cfg(test)]
+    fn record_span(&self, name: &str, start: f64, end: f64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .spans
+            .entry(name.to_string())
+            .or_default()
+            .push((start, end));
+    }
+
+    /// Bucket total: plain sums + collapsed span history + the union of
+    /// still-pending spans.
     pub fn get(&self, name: &str) -> f64 {
-        self.acc.get(name).copied().unwrap_or(0.0)
+        bucket_total(&self.inner.lock().unwrap(), name)
+    }
+
+    /// All buckets with their totals, name-sorted.
+    pub fn entries(&self) -> Vec<(String, f64)> {
+        let inner = self.inner.lock().unwrap();
+        let mut names: Vec<&String> = inner
+            .acc
+            .keys()
+            .chain(inner.closed.keys())
+            .chain(inner.spans.keys())
+            .collect();
+        names.sort();
+        names.dedup();
+        names
+            .into_iter()
+            .map(|n| (n.clone(), bucket_total(&inner, n)))
+            .collect()
     }
 
     pub fn total(&self) -> f64 {
-        self.acc.values().sum()
-    }
-
-    pub fn entries(&self) -> impl Iterator<Item = (&str, f64)> {
-        self.acc.iter().map(|(k, v)| (k.as_str(), *v))
+        self.entries().iter().map(|(_, v)| v).sum()
     }
 
     /// Percentage share per bucket.
     pub fn shares(&self) -> Vec<(String, f64)> {
-        let total = self.total().max(1e-12);
-        self.acc
-            .iter()
-            .map(|(k, v)| (k.clone(), 100.0 * v / total))
+        let entries = self.entries();
+        let total: f64 = entries.iter().map(|(_, v)| v).sum::<f64>().max(1e-12);
+        entries
+            .into_iter()
+            .map(|(k, v)| (k, 100.0 * v / total))
             .collect()
     }
 
-    pub fn merge(&mut self, other: &Breakdown) {
-        for (k, v) in &other.acc {
-            *self.acc.entry(k.clone()).or_default() += v;
+    /// Fold `other`'s bucket totals into this accumulator's plain sums
+    /// (spans collapse to their union — the clocks don't share an epoch).
+    pub fn merge(&self, other: &Breakdown) {
+        for (k, v) in other.entries() {
+            self.add(&k, v);
         }
+    }
+}
+
+/// Drop guard for [`Breakdown::span`].
+pub struct SpanGuard<'b> {
+    bd: &'b Breakdown,
+    name: String,
+    start: f64,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        let end = self.bd.epoch.elapsed().as_secs_f64();
+        self.bd.close_span(&self.name, self.start, end);
     }
 }
 
@@ -109,7 +275,7 @@ mod tests {
 
     #[test]
     fn breakdown_accumulates() {
-        let mut b = Breakdown::new();
+        let b = Breakdown::new();
         b.add("fwd", 1.0);
         b.add("fwd", 0.5);
         b.add("comm", 0.5);
@@ -122,7 +288,7 @@ mod tests {
 
     #[test]
     fn breakdown_times_closures() {
-        let mut b = Breakdown::new();
+        let b = Breakdown::new();
         let v = b.time("work", || {
             std::thread::sleep(Duration::from_millis(5));
             42
@@ -133,14 +299,123 @@ mod tests {
 
     #[test]
     fn merge_sums() {
-        let mut a = Breakdown::new();
+        let a = Breakdown::new();
         a.add("x", 1.0);
-        let mut b = Breakdown::new();
+        let b = Breakdown::new();
         b.add("x", 2.0);
         b.add("y", 3.0);
         a.merge(&b);
         assert_eq!(a.get("x"), 3.0);
         assert_eq!(a.get("y"), 3.0);
+    }
+
+    #[test]
+    fn concurrent_adds_do_not_race() {
+        // The scheduler records from worker tasks: &self adds from many
+        // threads must all land.
+        let b = Breakdown::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        b.add("bwd", 0.001);
+                    }
+                });
+            }
+        });
+        assert!((b.get("bwd") - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn union_merges_overlaps() {
+        assert_eq!(union_secs(&[]), 0.0);
+        assert_eq!(union_secs(&[(0.0, 1.0)]), 1.0);
+        // Full overlap, partial overlap, disjoint.
+        assert!((union_secs(&[(0.0, 1.0), (0.0, 1.0)]) - 1.0).abs() < 1e-12);
+        assert!(
+            (union_secs(&[(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)]) - 3.0).abs()
+                < 1e-12
+        );
+        // Unsorted input.
+        assert!(
+            (union_secs(&[(3.0, 4.0), (0.0, 2.0), (1.0, 2.5)]) - 3.5).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn overlapping_spans_report_wall_clock() {
+        // Four overlapped intervals recorded from concurrent workers:
+        // the bucket reports their 1s union, not the 3.4s sum.
+        let b = Breakdown::new();
+        std::thread::scope(|s| {
+            for i in 0..4 {
+                let b = &b;
+                s.spawn(move || b.record_span("fwd", i as f64 * 0.1, 1.0));
+            }
+        });
+        assert!((b.get("fwd") - 1.0).abs() < 1e-9, "{}", b.get("fwd"));
+    }
+
+    #[test]
+    fn sequential_spans_sum() {
+        let b = Breakdown::new();
+        for _ in 0..2 {
+            let _g = b.span("opt");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(b.get("opt") >= 0.008);
+        // Each guard closed with no overlap pending, so the intervals
+        // collapsed into the scalar history — span memory stays bounded.
+        {
+            let inner = b.inner.lock().unwrap();
+            assert!(inner
+                .spans
+                .get("opt")
+                .map(|v| v.is_empty())
+                .unwrap_or(true));
+            assert!(inner.closed.get("opt").copied().unwrap_or(0.0) >= 0.008);
+        }
+        // Spans and adds combine in one bucket.
+        b.add("opt", 1.0);
+        assert!(b.get("opt") >= 1.008);
+        assert_eq!(b.entries().len(), 1);
+    }
+
+    #[test]
+    fn concurrent_guards_collapse_to_wall_clock() {
+        // Real guards overlapping across threads: the union survives the
+        // collapse-on-quiescence path (the last drop folds everything).
+        let b = Breakdown::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    let _g = b.span("fwd");
+                    std::thread::sleep(Duration::from_millis(5));
+                });
+            }
+        });
+        let t = b.get("fwd");
+        assert!(t >= 0.004, "union lost time: {t}");
+        // All guards dropped -> pending spans collapsed.
+        assert!(b
+            .inner
+            .lock()
+            .unwrap()
+            .spans
+            .get("fwd")
+            .map(|v| v.is_empty())
+            .unwrap_or(true));
+    }
+
+    #[test]
+    fn clone_snapshots_state() {
+        let b = Breakdown::new();
+        b.add("x", 2.0);
+        let c = b.clone();
+        b.add("x", 1.0);
+        assert_eq!(c.get("x"), 2.0);
+        assert_eq!(b.get("x"), 3.0);
     }
 
     #[test]

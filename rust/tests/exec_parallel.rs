@@ -8,7 +8,7 @@
 //! kernel rewrite.
 
 use fal::runtime::native::kernels::{self, AttnGeom};
-use fal::runtime::{Backend, ExecCtx, NativeBackend};
+use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
 use fal::tensor::HostTensor;
 use fal::util::proptest::Prop;
 use fal::util::rng::Rng;
@@ -202,9 +202,9 @@ fn attention_bwd_reductions_within_1e6() {
     }
 }
 
-/// One fused train step at a given thread count: (loss, gnorm, outputs).
-fn fused_step_at(threads: usize) -> (f32, f32, Vec<HostTensor>) {
-    let eng = NativeBackend::synthetic_with_threads(threads);
+/// One fused train step under an explicit context: (loss, gnorm, outputs).
+fn fused_step_ctx(ctx: ExecCtx) -> (f32, f32, Vec<HostTensor>) {
+    let eng = NativeBackend::synthetic_with_ctx(ctx);
     let cfg = eng.manifest().config("tiny").unwrap().clone();
     let spec = eng.manifest().find("train_step", "tiny", "fal").unwrap();
     let name = spec.name.clone();
@@ -227,6 +227,11 @@ fn fused_step_at(threads: usize) -> (f32, f32, Vec<HostTensor>) {
     inputs.push(HostTensor::from_i32(&[batch, cfg.seq_len], &shifted));
     let out = eng.execute(&name, &inputs).unwrap();
     (out[0].data[0], out[1].data[0], out)
+}
+
+/// [`fused_step_ctx`] at a thread count with the env-default schedule.
+fn fused_step_at(threads: usize) -> (f32, f32, Vec<HostTensor>) {
+    fused_step_ctx(ExecCtx::new(threads))
 }
 
 #[test]
@@ -254,6 +259,36 @@ fn fused_train_step_loss_invariant_across_thread_counts() {
             assert!(
                 a.max_abs_err(b) <= 1e-3,
                 "threads {t}: output #{i} drifted beyond one optimizer step"
+            );
+        }
+    }
+}
+
+/// The StageGraph acceptance bar: `--sched graph` (branch-parallel
+/// MHA ∥ MLP in the fused FAL step) must be **bit-identical** to
+/// `--sched serial` at threads {1, 2, 4, 7} — every output of the fused
+/// train step, params and optimizer state included. The fork subdivides
+/// only the worker pool, never the partition knob, so even the
+/// reassociating attention dk/dv reductions combine in the same order.
+#[test]
+fn graph_sched_bit_identical_to_serial_sched() {
+    for threads in [1usize, 2, 4, 7] {
+        let (loss_s, gnorm_s, out_s) =
+            fused_step_ctx(ExecCtx::new(threads).with_sched(SchedMode::Serial));
+        let (loss_g, gnorm_g, out_g) =
+            fused_step_ctx(ExecCtx::new(threads).with_sched(SchedMode::Graph));
+        assert_eq!(
+            loss_s.to_bits(),
+            loss_g.to_bits(),
+            "threads {threads}: loss diverged across schedules"
+        );
+        assert_eq!(gnorm_s.to_bits(), gnorm_g.to_bits(), "threads {threads}");
+        assert_eq!(out_s.len(), out_g.len());
+        for (i, (a, b)) in out_s.iter().zip(&out_g).enumerate() {
+            assert_eq!(
+                bits(a),
+                bits(b),
+                "threads {threads}: output #{i} not 0-ulp across schedules"
             );
         }
     }

@@ -13,7 +13,7 @@ use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::costmodel;
 use fal::data::{Batch, Corpus, CorpusSpec, Loader};
-use fal::runtime::{Backend, NativeBackend};
+use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
 
 fn engine() -> NativeBackend {
     NativeBackend::synthetic()
@@ -177,6 +177,51 @@ fn tp_loss_decreases_over_steps() {
         last < first - 0.3,
         "TP training failed to learn: {first} -> {last}"
     );
+}
+
+/// StageGraph acceptance: the rank-parallel schedule (`--sched graph`,
+/// shard stages as sibling graph nodes joined at each all-reduce in
+/// ascending rank order) must reproduce the historical serial rank loop
+/// (`--sched serial`) **0-ulp** — losses and every updated parameter —
+/// at threads {1, 2, 4, 7}, for both the Pre-LN and the fused FAL
+/// schedules.
+#[test]
+fn rank_parallel_graph_matches_serial_loop_zero_ulp() {
+    let run = |variant: Variant, threads: usize, sched: SchedMode| {
+        let eng = NativeBackend::synthetic_with_ctx(
+            ExecCtx::new(threads).with_sched(sched),
+        );
+        let b = batch(&eng, 9);
+        let mut tp = TpTrainer::new(
+            &eng, "tiny", variant, 2, PCIE_GEN4, TrainConfig::default(),
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..2 {
+            losses.push(tp.train_step(&b).unwrap().0.to_bits());
+        }
+        let params: Vec<Vec<u32>> = tp
+            .params
+            .to_flat()
+            .iter()
+            .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        (losses, params)
+    };
+    for variant in [Variant::PreLn, Variant::Fal] {
+        for threads in [1usize, 2, 4, 7] {
+            let (loss_s, params_s) = run(variant, threads, SchedMode::Serial);
+            let (loss_g, params_g) = run(variant, threads, SchedMode::Graph);
+            assert_eq!(
+                loss_s, loss_g,
+                "{variant:?} t{threads}: losses diverged across schedules"
+            );
+            assert_eq!(
+                params_s, params_g,
+                "{variant:?} t{threads}: params not 0-ulp across schedules"
+            );
+        }
+    }
 }
 
 #[test]

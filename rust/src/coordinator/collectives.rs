@@ -59,6 +59,14 @@ impl CommLedger {
     /// accumulation order — so numerics and accounting are unchanged at
     /// every thread count.
     pub fn all_reduce_ctx(&self, ctx: &ExecCtx, parts: &[HostTensor]) -> HostTensor {
+        let refs: Vec<&HostTensor> = parts.iter().collect();
+        self.all_reduce_refs(ctx, &refs)
+    }
+
+    /// [`CommLedger::all_reduce_ctx`] over borrowed shard parts — the form
+    /// a StageGraph comm node uses, where the rank outputs live in the
+    /// graph's result slots and are only borrowed through `Joined`.
+    pub fn all_reduce_refs(&self, ctx: &ExecCtx, parts: &[&HostTensor]) -> HostTensor {
         assert!(!parts.is_empty());
         let mut out = parts[0].clone();
         let rest = &parts[1..];
@@ -83,6 +91,12 @@ impl CommLedger {
         out
     }
 
+    /// Modeled wall-clock of one all-reduce of `bytes` on this group's
+    /// link — what a comm node's virtual-clock drain is derived from.
+    pub fn allreduce_model_secs(&self, bytes: f64) -> f64 {
+        ring_allreduce_time(bytes, self.world, &self.link)
+    }
+
     /// In-place variant reducing into `acc` (hot path: avoids a clone).
     pub fn all_reduce_into(&self, acc: &mut HostTensor, rest: &[&HostTensor]) {
         for p in rest {
@@ -103,6 +117,19 @@ impl CommLedger {
         s.broadcast_bytes += bytes;
         s.modeled_secs +=
             broadcast_time(bytes, self.world, &self.link) * (self.world - 1).max(0) as f64;
+        t.clone()
+    }
+
+    /// Record a point-to-point hand-off of `t` to exactly one peer (the
+    /// pipeline boundary send). Counted under the broadcast counters —
+    /// same payload-byte semantics — but the modeled link time is a single
+    /// peer transfer, independent of the group's world size.
+    pub fn send(&self, t: &HostTensor) -> HostTensor {
+        let bytes = t.size_bytes() as f64;
+        let mut s = self.stats.lock().unwrap();
+        s.broadcasts += 1;
+        s.broadcast_bytes += bytes;
+        s.modeled_secs += broadcast_time(bytes, 2, &self.link);
         t.clone()
     }
 
@@ -144,6 +171,70 @@ mod tests {
         let c = HostTensor::from_vec(&[2], vec![4., 5.]);
         ledger.all_reduce_into(&mut acc, &[&b, &c]);
         assert_eq!(acc.data, vec![7., 9.]);
+    }
+
+    #[test]
+    fn allreduce_into_empty_rest_is_identity_but_accounted() {
+        // A rank whose peers contributed nothing still participates in the
+        // collective: data unchanged, one all-reduce charged.
+        let ledger = CommLedger::new(PCIE_GEN4, 4);
+        let mut acc = HostTensor::from_vec(&[3], vec![1., 2., 3.]);
+        ledger.all_reduce_into(&mut acc, &[]);
+        assert_eq!(acc.data, vec![1., 2., 3.]);
+        let s = ledger.stats();
+        assert_eq!(s.allreduces, 1);
+        assert_eq!(s.allreduce_bytes, 12.0);
+        assert!(s.modeled_secs > 0.0);
+    }
+
+    #[test]
+    fn allreduce_into_single_rank_world_costs_nothing() {
+        // world = 1: the collective is a no-op on the wire — counted, byte
+        // payload recorded, but zero modeled link time.
+        let ledger = CommLedger::new(PCIE_GEN4, 1);
+        let mut acc = HostTensor::ones(&[8]);
+        ledger.all_reduce_into(&mut acc, &[]);
+        let s = ledger.stats();
+        assert_eq!(s.allreduces, 1);
+        assert_eq!(s.allreduce_bytes, 32.0);
+        assert_eq!(s.modeled_secs, 0.0);
+    }
+
+    #[test]
+    fn allreduce_into_accounting_matches_clone_path() {
+        // The in-place variant must charge exactly like all_reduce on the
+        // same payload (same count, bytes, modeled time).
+        let parts: Vec<HostTensor> =
+            (0..3).map(|i| HostTensor::from_vec(&[4], vec![i as f32; 4])).collect();
+        let a = CommLedger::new(PCIE_GEN4, 3);
+        let out = a.all_reduce(&parts);
+        let b = CommLedger::new(PCIE_GEN4, 3);
+        let mut acc = parts[0].clone();
+        b.all_reduce_into(&mut acc, &[&parts[1], &parts[2]]);
+        assert_eq!(out.data, acc.data);
+        assert_eq!(a.stats(), b.stats());
+    }
+
+    #[test]
+    fn all_reduce_refs_matches_owned_path() {
+        let parts: Vec<HostTensor> = (0..4)
+            .map(|i| HostTensor::from_vec(&[5], vec![0.1 * i as f32 + 1.0; 5]))
+            .collect();
+        let a = CommLedger::new(PCIE_GEN4, 4);
+        let owned = a.all_reduce_ctx(&ExecCtx::new(2), &parts);
+        let b = CommLedger::new(PCIE_GEN4, 4);
+        let refs: Vec<&HostTensor> = parts.iter().collect();
+        let borrowed = b.all_reduce_refs(&ExecCtx::new(2), &refs);
+        let same = owned
+            .data
+            .iter()
+            .zip(&borrowed.data)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same);
+        assert_eq!(a.stats(), b.stats());
+        assert!(
+            b.allreduce_model_secs(owned.size_bytes() as f64) > 0.0
+        );
     }
 
     #[test]
@@ -273,6 +364,24 @@ mod tests {
             let want =
                 (10.0e-6 + 2048.0 / 5.0e9) * (tp as f64 - 1.0);
             assert_close(s.modeled_secs, want, &format!("bcast tp={tp}"));
+        }
+    }
+
+    #[test]
+    fn p2p_send_charges_one_peer_regardless_of_world() {
+        // The pipeline boundary hand-off moves data to exactly one peer:
+        // modeled time must not scale with the group size (unlike
+        // broadcast, which fans out to world-1 receivers).
+        let t = HostTensor::ones(&[512]); // 2048 bytes
+        let want = 10.0e-6 + 2048.0 / 5.0e9;
+        for world in [2usize, 4, 8] {
+            let ledger = CommLedger::new(PCIE_GEN4, world);
+            let out = ledger.send(&t);
+            assert_eq!(out.data, t.data);
+            let s = ledger.stats();
+            assert_eq!(s.broadcasts, 1);
+            assert_eq!(s.broadcast_bytes, 2048.0);
+            assert_close(s.modeled_secs, want, &format!("send world={world}"));
         }
     }
 

@@ -1,8 +1,8 @@
-//! Data- and pipeline-parallel schedules for the Apdx B comparison (Fig 10).
+//! Data- and pipeline-parallel schedules for the Apdx B comparison (Fig 10),
+//! plus an *executed* GPipe pipeline trainer on StageGraph.
 //!
-//! The paper motivates TP by comparing one training step of DP, PP and TP on
-//! 2 GPUs. We model each schedule's time and memory from the same cost
-//! primitives the TP model uses:
+//! The analytic half models each schedule's time and memory from the same
+//! cost primitives the TP model uses:
 //!
 //! * **DP** — full replica per GPU, per-step all-reduce of *all gradients*
 //!   (model-sized payload, overlappable only partially).
@@ -11,12 +11,31 @@
 //!   sends.
 //! * **TP (Megatron)** — per-block activation all-reduces (the schedule FAL
 //!   halves).
+//!
+//! [`PpTrainer`] is the comm-as-a-node machinery one level up from the TP
+//! trainer: micro-batch × stage cells are StageGraph compute nodes, the
+//! point-to-point boundary sends are [`StageGraph::comm_node`]s, and the
+//! GPipe staircase *is* the dependency structure — cell (μ, s) depends on
+//! the send from (μ, s−1) and, for device exclusivity, on cell (μ−1, s).
+//! Under `--sched overlap` a send's simulated wire time stays in flight
+//! while the upstream device starts the next micro-batch — the classic
+//! pipeline comm/compute overlap — and the loss is 0-ulp identical across
+//! serial/graph/overlap because node values read only declared deps.
+
+use anyhow::{Context, Result};
 
 use crate::config::{GpuSpec, LinkSpec, ModelConfig, Variant};
 use crate::costmodel::{
     activation_bytes, block_cost, broadcast_time, compute_time,
     ring_allreduce_time,
 };
+use crate::data::Batch;
+use crate::runtime::{Backend, ExecCtx, Manifest, StageGraph};
+use crate::tensor::HostTensor;
+use crate::util::timer::Breakdown;
+
+use super::collectives::CommLedger;
+use super::topology::NamedParams;
 
 #[derive(Debug, Clone, Copy)]
 pub struct ParallelCost {
@@ -128,6 +147,276 @@ pub fn tp_cost(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Executed GPipe pipeline on StageGraph (micro-batch cells + P2P comm nodes)
+// ---------------------------------------------------------------------------
+
+use super::{dep_outs, StageOut};
+
+/// A GPipe forward pipeline over the native tp=1 stage kernels: `stages`
+/// contiguous layer ranges ("devices"), the batch split into `micro`
+/// micro-batches, scheduled as one [`StageGraph`] per forward pass.
+///
+/// Pre-LN only (the Fig 10 baseline schedule); the loss head runs on the
+/// last device as part of its cell. Boundary activations between devices
+/// are comm nodes whose wire time is `comm_sim_scale ×` the `costmodel`
+/// point-to-point time and whose bytes land in the [`CommLedger`] via
+/// [`CommLedger::send`] (one-peer transfer, identically in every schedule
+/// mode).
+pub struct PpTrainer<'e, B: Backend + ?Sized> {
+    pub engine: &'e B,
+    pub cfg: ModelConfig,
+    /// Pipeline depth (number of virtual devices).
+    pub stages: usize,
+    /// Micro-batches per step.
+    pub micro: usize,
+    /// Rows per micro-batch (= lowered stage batch).
+    pub micro_batch: usize,
+    /// Full-batch rows this pipeline consumes per forward.
+    pub batch: usize,
+    pub ledger: CommLedger,
+    pub params: NamedParams,
+    /// `sched.comm` / `sched.compute` node spans land here.
+    pub breakdown: Breakdown,
+    /// Virtual wire-time scale for the boundary sends (0 = off).
+    pub comm_sim_scale: f64,
+    pub ctx: ExecCtx,
+    /// Layer range [start, end) per stage.
+    layer_ranges: Vec<(usize, usize)>,
+}
+
+impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
+    pub fn new(
+        engine: &'e B,
+        config: &str,
+        stages: usize,
+        micro: usize,
+        link: LinkSpec,
+    ) -> Result<PpTrainer<'e, B>> {
+        let cfg = engine.manifest().config(config)?.clone();
+        anyhow::ensure!(stages >= 1, "pipeline needs at least one stage");
+        anyhow::ensure!(micro >= 1, "pipeline needs at least one micro-batch");
+        anyhow::ensure!(
+            cfg.n_layer % stages == 0,
+            "n_layer {} not divisible into {stages} pipeline stages",
+            cfg.n_layer
+        );
+        // Full batch: the largest registered tp=1 bundle; micro-batch:
+        // full / micro, which must itself be a registered bundle.
+        let batch = [8usize, 4, 2]
+            .into_iter()
+            .find(|b| {
+                engine
+                    .manifest()
+                    .artifacts
+                    .contains_key(&Manifest::tp_stage_name(config, 1, *b, "attn_fwd"))
+            })
+            .with_context(|| format!("no tp1 stages for config {config}"))?;
+        anyhow::ensure!(
+            batch % micro == 0,
+            "batch {batch} not divisible into {micro} micro-batches"
+        );
+        let micro_batch = batch / micro;
+        anyhow::ensure!(
+            engine.manifest().artifacts.contains_key(
+                &Manifest::tp_stage_name(config, 1, micro_batch, "attn_fwd")
+            ),
+            "no tp1 stage bundle at micro-batch {micro_batch} for {config} \
+             (register it in runtime/synthetic.rs pp_batches)"
+        );
+        let schema = engine.manifest().schema(config)?.to_vec();
+        let params = NamedParams::from_flat(&schema, engine.load_params(config, 0)?);
+        let per = cfg.n_layer / stages;
+        let layer_ranges =
+            (0..stages).map(|s| (s * per, (s + 1) * per)).collect();
+        Ok(PpTrainer {
+            engine,
+            cfg,
+            stages,
+            micro,
+            micro_batch,
+            batch,
+            ledger: CommLedger::new(link, stages),
+            params,
+            breakdown: Breakdown::new(),
+            comm_sim_scale: 0.0,
+            ctx: engine.exec_ctx(),
+            layer_ranges,
+        })
+    }
+
+    fn stage_name(&self, stage: &str) -> String {
+        Manifest::tp_stage_name(&self.cfg.name, 1, self.micro_batch, stage)
+    }
+
+    fn exec_in(
+        &self,
+        ctx: &ExecCtx,
+        stage: &str,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.engine
+            .execute_in(ctx, &self.stage_name(stage), inputs)
+            .with_context(|| format!("pp stage {stage}"))
+    }
+
+    /// Simulated wire time for one boundary activation hand-off.
+    fn send_sim_secs(&self) -> f64 {
+        if self.comm_sim_scale <= 0.0 {
+            return 0.0;
+        }
+        let bytes =
+            (self.micro_batch * self.cfg.seq_len * self.cfg.d_model * 4) as f64;
+        self.comm_sim_scale * broadcast_time(bytes, 2, &self.ledger.link)
+    }
+
+    /// Run the layers of pipeline stage `s` on boundary input `x`
+    /// (stage 0 starts from the embedding; the last stage finishes with
+    /// the loss head and returns `[loss, count]`).
+    fn run_cell(
+        &self,
+        sub: &ExecCtx,
+        s: usize,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        boundary: Option<&HostTensor>,
+    ) -> Result<Vec<HostTensor>> {
+        let mut x = match boundary {
+            Some(b) => b.clone(),
+            None => {
+                let out = self.exec_in(
+                    sub,
+                    "embed_fwd",
+                    &[tokens, self.params.get("wte")?, self.params.get("wpe")?],
+                )?;
+                out.into_iter().next().unwrap()
+            }
+        };
+        let (l0, l1) = self.layer_ranges[s];
+        for li in l0..l1 {
+            let p = |f: &str| self.params.blk(li, f);
+            let attn_in: Vec<&HostTensor> = vec![
+                &x, p("ln1_g")?, p("ln1_b")?, p("wq")?, p("wk")?, p("wv")?,
+                p("wo")?,
+            ];
+            let a = self.exec_in(sub, "attn_fwd", &attn_in)?;
+            let mut h = x.clone();
+            h.add_assign(&a[0]);
+            let mlp_in: Vec<&HostTensor> = vec![
+                &h, p("ln2_g")?, p("ln2_b")?, p("w1")?, p("b1")?, p("w2")?,
+                p("b2")?,
+            ];
+            let m = self.exec_in(sub, "mlp_preln_fwd", &mlp_in)?;
+            x = h;
+            x.add_assign(&m[0]);
+        }
+        if s + 1 == self.stages {
+            let head = self.exec_in(
+                sub,
+                "head_fwd_bwd",
+                &[
+                    &x,
+                    self.params.get("lnF_g")?,
+                    self.params.get("lnF_b")?,
+                    self.params.get("wte")?,
+                    targets,
+                ],
+            )?;
+            Ok(vec![head[0].clone(), head[1].clone()])
+        } else {
+            Ok(vec![x])
+        }
+    }
+
+    /// One pipelined forward pass over `batch` (which must carry
+    /// [`PpTrainer::batch`] rows); returns the token-weighted mean loss.
+    /// `&self`: the pipeline mutates nothing — the ledger and breakdown
+    /// are interior-mutable, so concurrent cells record freely.
+    pub fn forward_loss(&self, batch: &Batch) -> Result<f32> {
+        anyhow::ensure!(
+            batch.tokens.shape[0] == self.batch,
+            "pipeline lowered for batch {}, got {}",
+            self.batch,
+            batch.tokens.shape[0]
+        );
+        let mb = self.micro_batch;
+        let micro_tokens: Vec<HostTensor> = (0..self.micro)
+            .map(|u| batch.tokens.slice_rows(u * mb, (u + 1) * mb))
+            .collect();
+        let micro_targets: Vec<HostTensor> = (0..self.micro)
+            .map(|u| batch.targets.slice_rows(u * mb, (u + 1) * mb))
+            .collect();
+        let sim = self.send_sim_secs();
+
+        let mut g: StageGraph<'_, StageOut> =
+            StageGraph::new().with_breakdown(&self.breakdown);
+        // prev_cell[s]: last cell node on device s (exclusivity chain);
+        // head ids collect the last stage's outputs per micro-batch.
+        let mut prev_cell: Vec<Option<usize>> = vec![None; self.stages];
+        let mut head_ids = Vec::with_capacity(self.micro);
+        for u in 0..self.micro {
+            let mut carry: Option<usize> = None; // send node feeding stage s
+            for s in 0..self.stages {
+                let mut deps: Vec<usize> = Vec::with_capacity(2);
+                if let Some(c) = carry {
+                    deps.push(c);
+                }
+                if let Some(p) = prev_cell[s] {
+                    deps.push(p);
+                }
+                let toks = &micro_tokens[u];
+                let tgts = &micro_targets[u];
+                let cell = g.node(
+                    format!("cell[u{u},s{s}]"),
+                    &deps,
+                    move |sub, j| {
+                        let boundary = match carry {
+                            Some(c) => Some(&dep_outs(j, c)?[0]),
+                            None => None,
+                        };
+                        self.run_cell(sub, s, toks, tgts, boundary)
+                    },
+                );
+                prev_cell[s] = Some(cell);
+                if s + 1 == self.stages {
+                    head_ids.push(cell);
+                    carry = None;
+                } else {
+                    let send = g.comm_node(
+                        format!("send[u{u},s{s}->{}]", s + 1),
+                        &[cell],
+                        sim,
+                        move |_, j| {
+                            let x = &dep_outs(j, cell)?[0];
+                            // P2P hand-off: one activation to one peer.
+                            Ok(vec![self.ledger.send(x)])
+                        },
+                    );
+                    carry = Some(send);
+                }
+            }
+        }
+
+        let outs: Vec<Vec<HostTensor>> =
+            g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for &id in &head_ids {
+            let loss = outs[id][0].data[0] as f64;
+            let count = outs[id][1].data[0] as f64;
+            num += loss * count;
+            den += count;
+        }
+        Ok((num / den.max(1.0)) as f32)
+    }
+
+    /// GPipe bubble fraction of this pipeline's schedule, (t−1)/(m+t−1) —
+    /// the analytic quantity [`pp_cost`] charges, exposed for reports.
+    pub fn bubble_fraction(&self) -> f64 {
+        let (t, m) = (self.stages as f64, self.micro as f64);
+        (t - 1.0) / (m + t - 1.0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,5 +469,21 @@ mod tests {
         let pp2 = pp_cost(&c, &RTX_3090, &PCIE_GEN4, 2, 16, 2);
         let pp8 = pp_cost(&c, &RTX_3090, &PCIE_GEN4, 2, 16, 8);
         assert!(pp8.step_secs < pp2.step_secs);
+    }
+
+    #[test]
+    fn pp_trainer_shapes_and_bubble() {
+        let eng = crate::runtime::NativeBackend::synthetic();
+        let t = PpTrainer::new(&eng, "tiny", 2, 2, PCIE_GEN4).unwrap();
+        assert_eq!(t.batch, 4);
+        assert_eq!(t.micro_batch, 2);
+        assert_eq!(t.layer_ranges, vec![(0, 2), (2, 4)]);
+        assert!((t.bubble_fraction() - 1.0 / 3.0).abs() < 1e-12);
+        // Four micro-batches ride the b=1 bundle.
+        let t = PpTrainer::new(&eng, "tiny", 2, 4, PCIE_GEN4).unwrap();
+        assert_eq!(t.micro_batch, 1);
+        // Indivisible layer or batch splits are rejected.
+        assert!(PpTrainer::new(&eng, "tiny", 3, 2, PCIE_GEN4).is_err());
+        assert!(PpTrainer::new(&eng, "tiny", 2, 3, PCIE_GEN4).is_err());
     }
 }

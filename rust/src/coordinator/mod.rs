@@ -44,3 +44,33 @@ pub mod overlap;
 pub mod sp_trainer;
 pub mod topology;
 pub mod tp_trainer;
+
+use anyhow::Result;
+
+use crate::runtime::Joined;
+use crate::tensor::HostTensor;
+
+/// Node result type of the StageGraph-based trainers (TP and pipeline):
+/// a stage's output tuple, or the error the post-run collection
+/// propagates.
+pub(crate) type StageOut = Result<Vec<HostTensor>>;
+
+/// Outputs of dependency node `id`, propagating an upstream failure as a
+/// fresh error (anyhow errors are not cloneable).
+pub(crate) fn dep_outs<'s>(
+    j: &'s Joined<'_, StageOut>,
+    id: usize,
+) -> Result<&'s [HostTensor]> {
+    match j.get(id) {
+        Ok(v) => Ok(v.as_slice()),
+        Err(e) => anyhow::bail!("upstream stage node {id} failed: {e}"),
+    }
+}
+
+/// First output of dependency node `id` (the single-tensor convention).
+pub(crate) fn dep_t<'s>(
+    j: &'s Joined<'_, StageOut>,
+    id: usize,
+) -> Result<&'s HostTensor> {
+    Ok(&dep_outs(j, id)?[0])
+}

@@ -196,12 +196,13 @@ impl<'e, B: Backend + ?Sized> Trainer<'e, B> {
             if log_every > 0 && (i + 1) % log_every == 0 {
                 println!(
                     "[{label}] step {:>5}  loss {:.4}  gnorm {:.3}  \
-                     {:.0} tok/s (x{} workers)",
+                     {:.0} tok/s (x{} workers, {} sched)",
                     self.step,
                     out.loss,
                     out.gnorm,
                     (self.batch_size * loader.seq_len) as f64 / out.secs,
-                    self.ctx.threads()
+                    self.ctx.threads(),
+                    self.ctx.sched().name()
                 );
             }
         }

@@ -13,20 +13,30 @@
 //! FAL block 1:             attn_fwd ─AR─ lnf ─ mlp_fal_fwd ─AR─    (2 AR)
 //! ```
 //!
-//! Within each stage the virtual ranks are *independent until the
-//! all-reduce*: `TpTrainer::rank_stages` submits them as sibling
-//! StageGraph nodes, so under `--sched graph` the shards execute
-//! concurrently on subdivided worker lanes and join — in ascending rank
-//! order, which keeps losses and parameters 0-ulp identical to the
-//! historical serial rank loop (`--sched serial`). Stage inputs are
-//! borrowed views (`&HostTensor`) straight out of the parameter shards and
-//! the replicated activations: nothing is cloned per rank per stage.
+//! The whole forward pass (and the whole backward pass) is **one
+//! StageGraph**: the per-rank shard executions of every stage are sibling
+//! nodes, and every all-reduce is a [`StageGraph::comm_node`] whose value
+//! is the ascending-rank shard sum (via [`CommLedger::all_reduce_refs`])
+//! and whose declared dependencies are exactly its producing rank nodes.
+//! Under `--sched serial|graph` the comm nodes serialize like the
+//! historical rank loop; under `--sched overlap` the scheduler releases a
+//! comm node's value eagerly and keeps its simulated link drain
+//! (`comm_sim_scale` × the `costmodel` ring time) in flight, so the next
+//! block's MHA (FAL: and MLP) rank nodes run concurrently with the
+//! in-flight reduction. Losses and parameters stay **0-ulp identical
+//! across all three modes at every thread count**: node values read only
+//! declared dependencies, reductions accumulate in ascending rank order,
+//! and gradient accumulation happens after the graph completes, in the
+//! historical block/rank order (rust/tests/tp_equivalence.rs asserts the
+//! three-way equivalence).
 //!
-//! The `CommLedger` counts every collective byte (its host-side shard
-//! summation fans out through the trainer's ExecCtx); the AdamW optimizer
-//! and gradient clipping live here (Rust owns state management), matching
-//! the fused train-step HLO up to f32 reassociation — enforced by
-//! rust/tests/tp_equivalence.rs.
+//! Stage inputs are borrowed views (`&HostTensor`) straight out of the
+//! parameter shards and the graph's own result slots: nothing is cloned
+//! per rank per stage. The `CommLedger` counts every collective byte (the
+//! simulated drain never touches the ledger — accounting is invariant
+//! across schedules); the AdamW optimizer and gradient clipping live here
+//! (Rust owns state management), matching the fused train-step HLO up to
+//! f32 reassociation.
 
 use anyhow::{Context, Result};
 
@@ -61,11 +71,18 @@ pub struct TpTrainer<'e, B: Backend + ?Sized> {
     fa_cache: Option<HostTensor>,
     pub tc: TrainConfig,
     pub step: usize,
-    /// Wall-clock attribution: `fwd`/`bwd`/`opt` phase sums plus one
-    /// `stage.<name>` span bucket per stage kind. Stage spans are recorded
-    /// from the (possibly concurrent) rank nodes and union-merge, so
-    /// overlapped ranks report wall-clock, not summed worker time.
+    /// Wall-clock attribution: `fwd`/`bwd`/`opt` phase sums, one
+    /// `stage.<name>` span bucket per stage kind, plus the scheduler's
+    /// `sched.comm` / `sched.compute` node spans (comm spans include the
+    /// simulated drain). Spans union-merge, so overlapped work reports
+    /// wall-clock, not summed worker time.
     pub breakdown: Breakdown,
+    /// Virtual-clock scale for the simulated all-reduce link occupancy:
+    /// each comm node drains `comm_sim_scale ×` the `costmodel` ring time
+    /// of its payload on the ledger's link. `0.0` (default) disables the
+    /// simulation — values and ledger accounting are unaffected either
+    /// way; only wall-clock (and therefore the measurable overlap) moves.
+    pub comm_sim_scale: f64,
     /// Execution context inherited from the backend at construction
     /// ([`Backend::exec_ctx`]): the rank fan-out, the coordinator's own
     /// host-side math (AdamW, all-reduce summation) and the StageGraph
@@ -79,6 +96,8 @@ struct BlockStash {
     /// Pre-LN: h = x + full MHA out. FAL block 1: the assembled MHA out a1.
     h_or_a: Option<HostTensor>,
 }
+
+use super::{dep_outs, dep_t, StageOut};
 
 /// fal_fused stage inputs as borrowed views, via the shared named-slot
 /// builder ([`crate::runtime::slots::FAL_FUSED_SLOTS`]) — the same source
@@ -95,6 +114,72 @@ fn fused_input_refs<'t>(
     let mlp: Vec<&HostTensor> = s.mlp.iter().collect();
     crate::runtime::slots::fused_inputs_from_parts(&x, &fa, &attn, &mlp)
         .expect("fal_fused slot bundles")
+}
+
+/// Forward rank-stage families (per-shard graph nodes).
+#[derive(Debug, Clone, Copy)]
+enum FwdStage {
+    Attn,
+    MlpPreLn,
+    MlpFal,
+    Fused,
+}
+
+impl FwdStage {
+    fn name(self) -> &'static str {
+        match self {
+            FwdStage::Attn => "attn_fwd",
+            FwdStage::MlpPreLn => "mlp_preln_fwd",
+            FwdStage::MlpFal => "mlp_fal_fwd",
+            FwdStage::Fused => "fal_fused_fwd",
+        }
+    }
+
+    fn bucket(self) -> &'static str {
+        match self {
+            FwdStage::Attn => "stage.attn_fwd",
+            FwdStage::MlpPreLn => "stage.mlp_preln_fwd",
+            FwdStage::MlpFal => "stage.mlp_fal_fwd",
+            FwdStage::Fused => "stage.fal_fused_fwd",
+        }
+    }
+}
+
+/// Backward rank-stage families; the stashed primals enter as borrows.
+#[derive(Clone, Copy)]
+enum BwdStage<'t> {
+    MlpPreLn { h: &'t HostTensor },
+    Attn { x: &'t HostTensor },
+    MlpFal { x: &'t HostTensor, fa: &'t HostTensor },
+    Fused { x: &'t HostTensor, fa: &'t HostTensor },
+}
+
+impl BwdStage<'_> {
+    fn name(self) -> &'static str {
+        match self {
+            BwdStage::MlpPreLn { .. } => "mlp_preln_bwd",
+            BwdStage::Attn { .. } => "attn_bwd",
+            BwdStage::MlpFal { .. } => "mlp_fal_bwd",
+            BwdStage::Fused { .. } => "fal_fused_bwd",
+        }
+    }
+
+    fn bucket(self) -> &'static str {
+        match self {
+            BwdStage::MlpPreLn { .. } => "stage.mlp_preln_bwd",
+            BwdStage::Attn { .. } => "stage.attn_bwd",
+            BwdStage::MlpFal { .. } => "stage.mlp_fal_bwd",
+            BwdStage::Fused { .. } => "stage.fal_fused_bwd",
+        }
+    }
+}
+
+/// Per-block backward node ids kept for the post-run gradient
+/// accumulation (which replays the historical block/rank order exactly).
+enum BwdIds {
+    PreLn { mlp_ranks: Vec<usize>, attn_ranks: Vec<usize> },
+    Fal { fused_ranks: Vec<usize> },
+    Fal1 { mlp_ranks: Vec<usize>, lnf_id: usize, attn_ranks: Vec<usize> },
 }
 
 use super::optim::zeros_like;
@@ -146,6 +231,7 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
             tc,
             step: 0,
             breakdown: Breakdown::new(),
+            comm_sim_scale: 0.0,
             ctx,
         };
         t.reshard()?;
@@ -176,50 +262,148 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
             .with_context(|| format!("stage {stage}"))
     }
 
-    /// Run `stage` once per rank as sibling StageGraph nodes — the
-    /// rank-parallel fan-out joined at the caller's all-reduce barrier.
-    /// `per_rank[r]` is rank `r`'s borrowed input vector; results come
-    /// back in rank order (the deterministic join the 0-ulp contract
-    /// rests on). Each node records a `stage.<name>` span, so the
-    /// breakdown reports wall-clock even when ranks overlap.
-    fn rank_stages(
-        &self,
-        stage: &str,
-        per_rank: Vec<Vec<&HostTensor>>,
-    ) -> Result<Vec<Vec<HostTensor>>> {
-        let bucket = format!("stage.{stage}");
-        let bucket = &bucket;
-        let mut g = StageGraph::new();
-        for (r, inputs) in per_rank.into_iter().enumerate() {
-            g.node(format!("{stage}[r{r}]"), &[], move |sub, _| {
-                let _span = self.breakdown.span(bucket);
-                self.exec_in(sub, stage, &inputs)
-            });
+    /// Simulated link drain per all-reduce: every collective in this
+    /// trainer moves one `[B, S, D]` f32 activation, so the virtual-clock
+    /// cost is a single static number per trainer.
+    fn comm_sim_secs(&self) -> f64 {
+        if self.comm_sim_scale <= 0.0 {
+            return 0.0;
         }
-        g.run(&self.ctx).into_iter().collect()
+        let bytes =
+            (self.batch * self.cfg.seq_len * self.cfg.d_model * 4) as f64;
+        self.comm_sim_scale * self.ledger.allreduce_model_secs(bytes)
     }
 
-    /// Run one stage on every shard and all-reduce the first output
-    /// through the trainer's ExecCtx.
-    fn sharded_allreduce(
-        &self,
-        stage: &str,
-        per_rank: Vec<Vec<&HostTensor>>,
-    ) -> Result<HostTensor> {
-        let outs = self.rank_stages(stage, per_rank)?;
-        let parts: Vec<HostTensor> = outs
-            .into_iter()
-            .map(|o| o.into_iter().next().unwrap())
-            .collect();
-        Ok(self.ledger.all_reduce_ctx(&self.ctx, &parts))
+    /// Add one rank-stage node per shard for a forward stage family.
+    /// Each node depends only on the activation node(s) it reads.
+    fn fwd_rank_nodes<'s>(
+        &'s self,
+        g: &mut StageGraph<'s, StageOut>,
+        li: usize,
+        stage: FwdStage,
+        x_id: usize,
+        fa_id: Option<usize>,
+    ) -> Vec<usize> {
+        let mut deps = vec![x_id];
+        if matches!(stage, FwdStage::MlpFal | FwdStage::Fused) {
+            deps.push(fa_id.expect("fa node required for FAL MLP stages"));
+        }
+        let mut ids = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let shard = &self.shards[li][r];
+            ids.push(g.node(
+                format!("L{li}.{}[r{r}]", stage.name()),
+                &deps,
+                move |sub, j| {
+                    let x = dep_t(j, x_id)?;
+                    let v: Vec<&HostTensor> = match stage {
+                        FwdStage::Attn => {
+                            let mut v: Vec<&HostTensor> = vec![x];
+                            v.extend(shard.attn.iter());
+                            v
+                        }
+                        FwdStage::MlpPreLn => {
+                            let mut v: Vec<&HostTensor> = vec![x];
+                            v.extend(shard.mlp.iter());
+                            v
+                        }
+                        FwdStage::MlpFal => {
+                            let fa = dep_t(j, fa_id.unwrap())?;
+                            let mut v: Vec<&HostTensor> = vec![x, fa];
+                            v.extend(shard.mlp.iter());
+                            v
+                        }
+                        FwdStage::Fused => {
+                            let fa = dep_t(j, fa_id.unwrap())?;
+                            fused_input_refs(x, fa, shard)
+                        }
+                    };
+                    let _s = self.breakdown.span(stage.bucket());
+                    self.exec_in(sub, stage.name(), &v)
+                },
+            ));
+        }
+        ids
+    }
+
+    /// Add one rank-stage node per shard for a backward stage family,
+    /// depending on the upstream cotangent node `dout_id`.
+    fn bwd_rank_nodes<'s>(
+        &'s self,
+        g: &mut StageGraph<'s, StageOut>,
+        li: usize,
+        stage: BwdStage<'s>,
+        dout_id: usize,
+    ) -> Vec<usize> {
+        let mut ids = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let shard = &self.shards[li][r];
+            ids.push(g.node(
+                format!("L{li}.{}[r{r}]", stage.name()),
+                &[dout_id],
+                move |sub, j| {
+                    let dout = dep_t(j, dout_id)?;
+                    let mut v: Vec<&HostTensor> = match stage {
+                        BwdStage::MlpPreLn { h } => {
+                            let mut v: Vec<&HostTensor> = vec![h];
+                            v.extend(shard.mlp.iter());
+                            v
+                        }
+                        BwdStage::Attn { x } => {
+                            let mut v: Vec<&HostTensor> = vec![x];
+                            v.extend(shard.attn.iter());
+                            v
+                        }
+                        BwdStage::MlpFal { x, fa } => {
+                            let mut v: Vec<&HostTensor> = vec![x, fa];
+                            v.extend(shard.mlp.iter());
+                            v
+                        }
+                        BwdStage::Fused { x, fa } => {
+                            fused_input_refs(x, fa, shard)
+                        }
+                    };
+                    v.push(dout);
+                    let _s = self.breakdown.span(stage.bucket());
+                    self.exec_in(sub, stage.name(), &v)
+                },
+            ));
+        }
+        ids
+    }
+
+    /// The all-reduce as a graph node: depends only on its producing rank
+    /// nodes, sums their `part`-th outputs in ascending rank order (the
+    /// 0-ulp contract) through the subdivided context, and carries the
+    /// simulated link drain the scheduler overlaps under `--sched overlap`.
+    fn ar_node_at<'s>(
+        &'s self,
+        g: &mut StageGraph<'s, StageOut>,
+        label: String,
+        ranks: &[usize],
+        part: usize,
+        sim: f64,
+    ) -> usize {
+        let deps = ranks.to_vec();
+        g.comm_node(label, ranks, sim, move |sub, j| {
+            let mut parts: Vec<&HostTensor> = Vec::with_capacity(deps.len());
+            for &id in &deps {
+                parts.push(&dep_outs(j, id)?[part]);
+            }
+            Ok(vec![self.ledger.all_reduce_refs(sub, &parts)])
+        })
     }
 
     // ------------------------------------------------------------------
     // Forward
     // ------------------------------------------------------------------
 
-    /// Forward pass; returns (final hidden x, per-block stash).
-    fn forward(&mut self, batch: &Batch) -> Result<(HostTensor, Vec<BlockStash>)> {
+    /// Forward pass as one StageGraph; returns (final hidden x, per-block
+    /// stash, FAL's fa signal).
+    fn forward_graph(
+        &self,
+        batch: &Batch,
+    ) -> Result<(HostTensor, Vec<BlockStash>, Option<HostTensor>)> {
         let embed = self.exec_in(
             &self.ctx,
             "embed_fwd",
@@ -229,80 +413,359 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
                 self.params.get("wpe")?,
             ],
         )?;
-        let mut x = embed.into_iter().next().unwrap();
+        let x0 = embed.into_iter().next().unwrap();
         // The paper's Fig 2 "Broadcast": the block input is replicated.
-        self.ledger.broadcast(&x);
+        self.ledger.broadcast(&x0);
 
-        let mut stash = Vec::with_capacity(self.cfg.n_layer);
+        let sim = self.comm_sim_secs();
+        let mut g: StageGraph<'_, StageOut> =
+            StageGraph::new().with_breakdown(&self.breakdown);
+        let mut x_id = g.node("embed.x", &[], move |_, _| Ok(vec![x0]));
+        let mut fa_id: Option<usize> = None;
+        // (block input id, stashed h/a id) per block, read post-run.
+        let mut stash_ids: Vec<(usize, Option<usize>)> =
+            Vec::with_capacity(self.cfg.n_layer);
+
         for li in 0..self.cfg.n_layer {
             match (self.variant, li) {
                 (Variant::PreLn, _) => {
-                    let per_rank = (0..self.tp)
-                        .map(|r| {
-                            let mut v: Vec<&HostTensor> = vec![&x];
-                            v.extend(&self.shards[li][r].attn);
-                            v
-                        })
-                        .collect();
-                    let a = self.sharded_allreduce("attn_fwd", per_rank)?;
-                    let mut h = x.clone();
-                    h.add_assign(&a);
-                    let per_rank = (0..self.tp)
-                        .map(|r| {
-                            let mut v: Vec<&HostTensor> = vec![&h];
-                            v.extend(&self.shards[li][r].mlp);
-                            v
-                        })
-                        .collect();
-                    let m = self.sharded_allreduce("mlp_preln_fwd", per_rank)?;
-                    stash.push(BlockStash { x: x.clone(), h_or_a: Some(h.clone()) });
-                    x = h;
-                    x.add_assign(&m);
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, li, FwdStage::Attn, x_id, None,
+                    );
+                    let ar_a = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.attn"), &ranks, 0, sim,
+                    );
+                    let h_id = g.node(
+                        format!("L{li}.resid.h"),
+                        &[x_id, ar_a],
+                        move |_, j| {
+                            let mut h = dep_t(j, x_id)?.clone();
+                            h.add_assign(dep_t(j, ar_a)?);
+                            Ok(vec![h])
+                        },
+                    );
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, li, FwdStage::MlpPreLn, h_id, None,
+                    );
+                    let ar_m = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.mlp"), &ranks, 0, sim,
+                    );
+                    let xn = g.node(
+                        format!("L{li}.resid.x"),
+                        &[h_id, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, h_id)?.clone();
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                    stash_ids.push((x_id, Some(h_id)));
+                    x_id = xn;
                 }
                 (Variant::Fal, 0) => {
-                    let per_rank = (0..self.tp)
-                        .map(|r| {
-                            let mut v: Vec<&HostTensor> = vec![&x];
-                            v.extend(&self.shards[0][r].attn);
-                            v
-                        })
-                        .collect();
-                    let a = self.sharded_allreduce("attn_fwd", per_rank)?;
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, 0, FwdStage::Attn, x_id, None,
+                    );
+                    let ar_a = self.ar_node_at(
+                        &mut g, "L0.ar.attn".into(), &ranks, 0, sim,
+                    );
                     let lnf = &self.shards[0][0].lnf;
-                    let fa = self
-                        .exec_in(&self.ctx, "lnf_fwd", &[&a, &lnf[0], &lnf[1]])?
-                        .into_iter()
-                        .next()
-                        .unwrap();
-                    let per_rank = (0..self.tp)
-                        .map(|r| {
-                            let mut v: Vec<&HostTensor> = vec![&x, &fa];
-                            v.extend(&self.shards[0][r].mlp);
-                            v
-                        })
-                        .collect();
-                    let m = self.sharded_allreduce("mlp_fal_fwd", per_rank)?;
-                    stash.push(BlockStash { x: x.clone(), h_or_a: Some(a.clone()) });
-                    x.add_assign(&a);
-                    x.add_assign(&m);
-                    self.fa_cache = Some(fa);
+                    let fa = g.node("L0.lnf_fwd", &[ar_a], move |sub, j| {
+                        let a = dep_t(j, ar_a)?;
+                        let _s = self.breakdown.span("stage.lnf_fwd");
+                        self.exec_in(sub, "lnf_fwd", &[a, &lnf[0], &lnf[1]])
+                    });
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, 0, FwdStage::MlpFal, x_id, Some(fa),
+                    );
+                    let ar_m = self.ar_node_at(
+                        &mut g, "L0.ar.mlp".into(), &ranks, 0, sim,
+                    );
+                    let xn = g.node(
+                        "L0.resid.x",
+                        &[x_id, ar_a, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, x_id)?.clone();
+                            x.add_assign(dep_t(j, ar_a)?);
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                    stash_ids.push((x_id, Some(ar_a)));
+                    fa_id = Some(fa);
+                    x_id = xn;
                 }
                 (Variant::Fal, _) => {
-                    let fa =
-                        self.fa_cache.as_ref().expect("fa set in block 1");
                     // One fused stage, one all-reduce (Fig 2b). The fused
                     // kernel itself forks MHA ∥ MLP as sibling nodes.
-                    let per_rank = (0..self.tp)
-                        .map(|r| fused_input_refs(&x, fa, &self.shards[li][r]))
-                        .collect();
-                    let out = self.sharded_allreduce("fal_fused_fwd", per_rank)?;
-                    stash.push(BlockStash { x: x.clone(), h_or_a: None });
-                    x.add_assign(&out);
+                    let fa = fa_id.expect("fa node set in block 1");
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, li, FwdStage::Fused, x_id, Some(fa),
+                    );
+                    let ar = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.fused"), &ranks, 0, sim,
+                    );
+                    let xn = g.node(
+                        format!("L{li}.resid.x"),
+                        &[x_id, ar],
+                        move |_, j| {
+                            let mut x = dep_t(j, x_id)?.clone();
+                            x.add_assign(dep_t(j, ar)?);
+                            Ok(vec![x])
+                        },
+                    );
+                    stash_ids.push((x_id, None));
+                    x_id = xn;
                 }
                 _ => unreachable!(),
             }
         }
-        Ok((x, stash))
+
+        let outs: Vec<Vec<HostTensor>> =
+            g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
+        let mut stash = Vec::with_capacity(self.cfg.n_layer);
+        for &(xin, ha) in &stash_ids {
+            stash.push(BlockStash {
+                x: outs[xin][0].clone(),
+                h_or_a: ha.map(|id| outs[id][0].clone()),
+            });
+        }
+        let x_final = outs[x_id][0].clone();
+        let fa = fa_id.map(|id| outs[id][0].clone());
+        Ok((x_final, stash, fa))
+    }
+
+    // ------------------------------------------------------------------
+    // Backward
+    // ------------------------------------------------------------------
+
+    /// Backward pass as one StageGraph (rank nodes + comm nodes + the
+    /// residual/dfa chain); gradient accumulation replays post-run in the
+    /// historical order. Returns the embedding cotangent dx.
+    fn backward_graph(
+        &self,
+        stash: &[BlockStash],
+        dx_head: HostTensor,
+        grads: &mut NamedParams,
+    ) -> Result<HostTensor> {
+        let sim = self.comm_sim_secs();
+        let mut g: StageGraph<'_, StageOut> =
+            StageGraph::new().with_breakdown(&self.breakdown);
+        let mut dx_id = g.node("head.dx", &[], move |_, _| Ok(vec![dx_head]));
+        // FAL: shard-local dfa partials accumulate across blocks; the one
+        // dfa all-reduce happens in block 1's backward.
+        let mut dfa_acc_id: Option<usize> = None;
+        let mut recs: Vec<(usize, BwdIds)> = Vec::new();
+
+        for li in (0..self.cfg.n_layer).rev() {
+            match (self.variant, li) {
+                (Variant::PreLn, _) => {
+                    // x' = h + m(h):  dm = dx_out, backprop rank-parallel.
+                    let h = stash[li].h_or_a.as_ref().unwrap();
+                    let mlp_ranks = self.bwd_rank_nodes(
+                        &mut g, li, BwdStage::MlpPreLn { h }, dx_id,
+                    );
+                    let ar_dh = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.dh"), &mlp_ranks, 0, sim,
+                    );
+                    let d0 = dx_id;
+                    let dh_id = g.node(
+                        format!("L{li}.dh"),
+                        &[ar_dh, d0],
+                        move |_, j| {
+                            let mut dh = dep_t(j, ar_dh)?.clone();
+                            dh.add_assign(dep_t(j, d0)?); // residual h -> x'
+                            Ok(vec![dh])
+                        },
+                    );
+                    // h = x + a:  da = dh.
+                    let attn_ranks = self.bwd_rank_nodes(
+                        &mut g, li, BwdStage::Attn { x: &stash[li].x }, dh_id,
+                    );
+                    let ar_dx = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.dx"), &attn_ranks, 0, sim,
+                    );
+                    let new_dx = g.node(
+                        format!("L{li}.dx"),
+                        &[ar_dx, dh_id],
+                        move |_, j| {
+                            let mut dx = dep_t(j, ar_dx)?.clone();
+                            dx.add_assign(dep_t(j, dh_id)?); // residual x -> h
+                            Ok(vec![dx])
+                        },
+                    );
+                    recs.push((li, BwdIds::PreLn { mlp_ranks, attn_ranks }));
+                    dx_id = new_dx;
+                }
+                (Variant::Fal, 0) => {
+                    // x2 = x1 + a1 + m(x1, fa):  dm = dx_out.
+                    let fa = self.fa_cache.as_ref().context("fa cache empty")?;
+                    let a1 = stash[0].h_or_a.as_ref().unwrap();
+                    let mlp_ranks = self.bwd_rank_nodes(
+                        &mut g,
+                        0,
+                        BwdStage::MlpFal { x: &stash[0].x, fa },
+                        dx_id,
+                    );
+                    let ar_dx_mlp = self.ar_node_at(
+                        &mut g, "L0.ar.dx_mlp".into(), &mlp_ranks, 0, sim,
+                    );
+                    let ar_dfa = self.ar_node_at(
+                        &mut g, "L0.ar.dfa".into(), &mlp_ranks, 1, sim,
+                    );
+                    let dfa_total = match dfa_acc_id {
+                        None => ar_dfa,
+                        Some(acc) => g.node(
+                            "L0.dfa.total",
+                            &[ar_dfa, acc],
+                            move |_, j| {
+                                let mut t = dep_t(j, ar_dfa)?.clone();
+                                t.add_assign(dep_t(j, acc)?);
+                                Ok(vec![t])
+                            },
+                        ),
+                    };
+                    // fa = LNf(a1): backward through the shared LN
+                    // (shard-0 parameters).
+                    let lnf = &self.shards[0][0].lnf;
+                    let lnf_id = g.node(
+                        "L0.lnf_bwd",
+                        &[dfa_total],
+                        move |sub, j| {
+                            let d = dep_t(j, dfa_total)?;
+                            let _s = self.breakdown.span("stage.lnf_bwd");
+                            self.exec_in(
+                                sub,
+                                "lnf_bwd",
+                                &[a1, &lnf[0], &lnf[1], d],
+                            )
+                        },
+                    );
+                    // a1 receives: residual path (dx_out) + LNf path.
+                    let d0 = dx_id;
+                    let da_id = g.node("L0.da", &[d0, lnf_id], move |_, j| {
+                        let mut da = dep_t(j, d0)?.clone();
+                        da.add_assign(&dep_outs(j, lnf_id)?[0]);
+                        Ok(vec![da])
+                    });
+                    let attn_ranks = self.bwd_rank_nodes(
+                        &mut g, 0, BwdStage::Attn { x: &stash[0].x }, da_id,
+                    );
+                    let ar_dx_attn = self.ar_node_at(
+                        &mut g, "L0.ar.dx_attn".into(), &attn_ranks, 0, sim,
+                    );
+                    let new_dx = g.node(
+                        "L0.dx",
+                        &[ar_dx_attn, ar_dx_mlp, d0],
+                        move |_, j| {
+                            let mut dx = dep_t(j, ar_dx_attn)?.clone();
+                            dx.add_assign(dep_t(j, ar_dx_mlp)?);
+                            dx.add_assign(dep_t(j, d0)?); // direct residual
+                            Ok(vec![dx])
+                        },
+                    );
+                    recs.push((
+                        0,
+                        BwdIds::Fal1 { mlp_ranks, lnf_id, attn_ranks },
+                    ));
+                    dx_id = new_dx;
+                }
+                (Variant::Fal, _) => {
+                    let fa = self.fa_cache.as_ref().context("fa cache empty")?;
+                    let fused_ranks = self.bwd_rank_nodes(
+                        &mut g,
+                        li,
+                        BwdStage::Fused { x: &stash[li].x, fa },
+                        dx_id,
+                    );
+                    // One all-reduce per FAL block backward: dx only. dfa
+                    // partials stay *shard-local* and accumulate across
+                    // blocks; the single dfa all-reduce happens once, in
+                    // block 1's backward — this is what keeps FAL's
+                    // backward at one collective per block.
+                    let ar_dx = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.dx"), &fused_ranks, 0, sim,
+                    );
+                    let d0 = dx_id;
+                    let new_dx = g.node(
+                        format!("L{li}.dx"),
+                        &[ar_dx, d0],
+                        move |_, j| {
+                            let mut dx = dep_t(j, ar_dx)?.clone();
+                            dx.add_assign(dep_t(j, d0)?); // residual
+                            Ok(vec![dx])
+                        },
+                    );
+                    let deps = fused_ranks.clone();
+                    let dfa_part = g.node(
+                        format!("L{li}.dfa.partial"),
+                        &fused_ranks,
+                        move |_, j| {
+                            let mut acc = dep_outs(j, deps[0])?[1].clone();
+                            for &id in &deps[1..] {
+                                acc.add_assign(&dep_outs(j, id)?[1]);
+                            }
+                            Ok(vec![acc])
+                        },
+                    );
+                    dfa_acc_id = Some(match dfa_acc_id {
+                        None => dfa_part,
+                        Some(prev) => g.node(
+                            format!("L{li}.dfa.acc"),
+                            &[prev, dfa_part],
+                            move |_, j| {
+                                let mut acc = dep_t(j, prev)?.clone();
+                                acc.add_assign(dep_t(j, dfa_part)?);
+                                Ok(vec![acc])
+                            },
+                        ),
+                    });
+                    recs.push((li, BwdIds::Fal { fused_ranks }));
+                    dx_id = new_dx;
+                }
+                _ => unreachable!(),
+            }
+        }
+
+        let outs: Vec<Vec<HostTensor>> =
+            g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
+
+        // Gradient accumulation, after the graph completed, in the
+        // historical order (blocks descending, ranks ascending) — scatter
+        // targets per (block, rank) are disjoint or order-preserved, so
+        // the update is bit-identical to the old inline loop.
+        for (li, rec) in &recs {
+            match rec {
+                BwdIds::PreLn { mlp_ranks, attn_ranks } => {
+                    // mlp outputs: dh, dln2_g, dln2_b, dw1, db1, dw2, db2
+                    for (r, &id) in mlp_ranks.iter().enumerate() {
+                        self.accum_mlp_grads(*li, r, &outs[id][1..], grads);
+                    }
+                    // attn outputs: dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo
+                    for (r, &id) in attn_ranks.iter().enumerate() {
+                        self.accum_attn_grads(*li, r, &outs[id][1..], grads);
+                    }
+                }
+                BwdIds::Fal { fused_ranks } => {
+                    // outputs: dx, dfa, then the 12 parameter grads.
+                    for (r, &id) in fused_ranks.iter().enumerate() {
+                        self.accum_fused_grads(*li, r, &outs[id][2..], grads);
+                    }
+                }
+                BwdIds::Fal1 { mlp_ranks, lnf_id, attn_ranks } => {
+                    // mlp outputs: dx, dfa, dln2_g, dln2_b, dw1, db1, dw2, db2
+                    for (r, &id) in mlp_ranks.iter().enumerate() {
+                        self.accum_mlp_grads(0, r, &outs[id][2..], grads);
+                    }
+                    self.add_grad(grads, "blocks.0.lnf_g", &outs[*lnf_id][1]);
+                    self.add_grad(grads, "blocks.0.lnf_b", &outs[*lnf_id][2]);
+                    for (r, &id) in attn_ranks.iter().enumerate() {
+                        self.accum_attn_grads(0, r, &outs[id][1..], grads);
+                    }
+                }
+            }
+        }
+        Ok(outs[dx_id][0].clone())
     }
 
     // ------------------------------------------------------------------
@@ -314,7 +777,10 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
         self.step += 1;
 
         let t0 = std::time::Instant::now();
-        let (x_final, stash) = self.forward(batch)?;
+        let (x_final, stash, fa) = self.forward_graph(batch)?;
+        if let Some(fa) = fa {
+            self.fa_cache = Some(fa);
+        }
         let head = self.exec_in(
             &self.ctx,
             "head_fwd_bwd",
@@ -330,28 +796,14 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
 
         let t1 = std::time::Instant::now();
         let loss = head[0].data[0];
-        let mut dx = head[2].clone();
-        self.ledger.broadcast(&dx); // loss-head grad replicated to shards
+        let dx0 = head[2].clone();
+        self.ledger.broadcast(&dx0); // loss-head grad replicated to shards
         let mut grads = zeros_like(&self.params);
         self.add_grad(&mut grads, "lnF_g", &head[3]);
         self.add_grad(&mut grads, "lnF_b", &head[4]);
         self.add_grad(&mut grads, "wte", &head[5]);
 
-        let mut dfa: Option<HostTensor> = None;
-        for li in (0..self.cfg.n_layer).rev() {
-            dx = match (self.variant, li) {
-                (Variant::PreLn, _) => {
-                    self.bwd_block_preln(li, &stash[li], dx, &mut grads)?
-                }
-                (Variant::Fal, 0) => {
-                    self.bwd_fal_block1(&stash[0], dx, &mut dfa, &mut grads)?
-                }
-                (Variant::Fal, _) => {
-                    self.bwd_block_fal(li, &stash[li], dx, &mut dfa, &mut grads)?
-                }
-                _ => unreachable!(),
-            };
-        }
+        let dx = self.backward_graph(&stash, dx0, &mut grads)?;
 
         let out = self.exec_in(
             &self.ctx,
@@ -376,186 +828,6 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
 
     fn add_grad(&self, grads: &mut NamedParams, name: &str, t: &HostTensor) {
         grads.by_name.get_mut(name).unwrap().add_assign(t);
-    }
-
-    /// Pre-LN block backward: 2 all-reduces, mirroring forward.
-    fn bwd_block_preln(
-        &self,
-        li: usize,
-        stash: &BlockStash,
-        dx_out: HostTensor,
-        grads: &mut NamedParams,
-    ) -> Result<HostTensor> {
-        let h = stash.h_or_a.as_ref().unwrap();
-        // x' = h + m(h):  dm = dx_out, backprop rank-parallel.
-        let per_rank = (0..self.tp)
-            .map(|r| {
-                let mut v: Vec<&HostTensor> = vec![h];
-                v.extend(&self.shards[li][r].mlp);
-                v.push(&dx_out);
-                v
-            })
-            .collect();
-        let outs = self.rank_stages("mlp_preln_bwd", per_rank)?;
-        let mut dh_parts = Vec::with_capacity(self.tp);
-        for (r, out) in outs.into_iter().enumerate() {
-            // outputs: dh, dln2_g, dln2_b, dw1, db1, dw2, db2
-            let mut it = out.into_iter();
-            let dh_r = it.next().unwrap();
-            let rest: Vec<HostTensor> = it.collect();
-            self.accum_mlp_grads(li, r, &rest, grads);
-            dh_parts.push(dh_r);
-        }
-        let mut dh = self.ledger.all_reduce_ctx(&self.ctx, &dh_parts);
-        dh.add_assign(&dx_out); // residual h -> x'
-
-        // h = x + a:  da = dh.
-        let per_rank = (0..self.tp)
-            .map(|r| {
-                let mut v: Vec<&HostTensor> = vec![&stash.x];
-                v.extend(&self.shards[li][r].attn);
-                v.push(&dh);
-                v
-            })
-            .collect();
-        let outs = self.rank_stages("attn_bwd", per_rank)?;
-        let mut dx_parts = Vec::with_capacity(self.tp);
-        for (r, out) in outs.into_iter().enumerate() {
-            // outputs: dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo
-            let mut it = out.into_iter();
-            let dx_r = it.next().unwrap();
-            let rest: Vec<HostTensor> = it.collect();
-            self.accum_attn_grads(li, r, &rest, grads);
-            dx_parts.push(dx_r);
-        }
-        let mut dx = self.ledger.all_reduce_ctx(&self.ctx, &dx_parts);
-        dx.add_assign(&dh); // residual x -> h
-        Ok(dx)
-    }
-
-    /// FAL block i>1 backward: a single (fused dx ⊕ dfa) all-reduce.
-    fn bwd_block_fal(
-        &self,
-        li: usize,
-        stash: &BlockStash,
-        dx_out: HostTensor,
-        dfa: &mut Option<HostTensor>,
-        grads: &mut NamedParams,
-    ) -> Result<HostTensor> {
-        let fa = self.fa_cache.as_ref().context("fa cache empty")?;
-        let per_rank = (0..self.tp)
-            .map(|r| {
-                let mut v = fused_input_refs(&stash.x, fa, &self.shards[li][r]);
-                v.push(&dx_out);
-                v
-            })
-            .collect();
-        let outs = self.rank_stages("fal_fused_bwd", per_rank)?;
-        let mut dx_acc: Option<HostTensor> = None;
-        let mut dfa_acc: Option<HostTensor> = None;
-        for (r, mut out) in outs.into_iter().enumerate() {
-            // outputs: dx, dfa, dln1_g, dln1_b, dln2_g, dln2_b,
-            //          dwq, dwk, dwv, dwo, dw1, db1, dw2, db2
-            let rest = out.split_off(2);
-            self.accum_fused_grads(li, r, &rest, grads);
-            let mut it = out.into_iter();
-            let dx_r = it.next().unwrap();
-            let dfa_r = it.next().unwrap();
-            match &mut dx_acc {
-                Some(a) => a.add_assign(&dx_r),
-                None => dx_acc = Some(dx_r),
-            }
-            match &mut dfa_acc {
-                Some(a) => a.add_assign(&dfa_r),
-                None => dfa_acc = Some(dfa_r),
-            }
-        }
-        let mut dx = dx_acc.unwrap();
-        let dfa_block = dfa_acc.unwrap();
-        // One all-reduce per FAL block backward: dx only. dfa partials stay
-        // *shard-local* and accumulate across blocks; the single dfa
-        // all-reduce happens once, in block 1's backward (bwd_fal_block1) —
-        // this is what keeps FAL's backward at one collective per block.
-        self.ledger.account_allreduce_bytes(dx.size_bytes() as f64);
-        dx.add_assign(&dx_out); // residual
-        match dfa {
-            Some(acc) => acc.add_assign(&dfa_block),
-            None => *dfa = Some(dfa_block),
-        }
-        Ok(dx)
-    }
-
-    /// FAL block 1 backward: LNf + attention assembled like the forward.
-    fn bwd_fal_block1(
-        &self,
-        stash: &BlockStash,
-        dx_out: HostTensor,
-        dfa: &mut Option<HostTensor>,
-        grads: &mut NamedParams,
-    ) -> Result<HostTensor> {
-        let a1 = stash.h_or_a.as_ref().unwrap();
-        let fa = self.fa_cache.as_ref().context("fa cache empty")?;
-        // x2 = x1 + a1 + m(x1, fa):  dm = dx_out.
-        let per_rank = (0..self.tp)
-            .map(|r| {
-                let mut v: Vec<&HostTensor> = vec![&stash.x, fa];
-                v.extend(&self.shards[0][r].mlp);
-                v.push(&dx_out);
-                v
-            })
-            .collect();
-        let outs = self.rank_stages("mlp_fal_bwd", per_rank)?;
-        let mut dx_parts = Vec::with_capacity(self.tp);
-        let mut dfa_parts = Vec::with_capacity(self.tp);
-        for (r, mut out) in outs.into_iter().enumerate() {
-            // outputs: dx, dfa, dln2_g, dln2_b, dw1, db1, dw2, db2
-            let rest = out.split_off(2);
-            self.accum_mlp_grads(0, r, &rest, grads);
-            let mut it = out.into_iter();
-            dx_parts.push(it.next().unwrap());
-            dfa_parts.push(it.next().unwrap());
-        }
-        let dx_mlp = self.ledger.all_reduce_ctx(&self.ctx, &dx_parts);
-        let mut dfa_total = self.ledger.all_reduce_ctx(&self.ctx, &dfa_parts);
-        if let Some(acc) = dfa.take() {
-            dfa_total.add_assign(&acc);
-        }
-
-        // fa = LNf(a1): backward through the shared LN (shard-0 params).
-        let lnf = &self.shards[0][0].lnf;
-        let out = self.exec_in(
-            &self.ctx,
-            "lnf_bwd",
-            &[a1, &lnf[0], &lnf[1], &dfa_total],
-        )?;
-        self.add_grad(grads, "blocks.0.lnf_g", &out[1]);
-        self.add_grad(grads, "blocks.0.lnf_b", &out[2]);
-
-        // a1 receives: residual path (dx_out) + LNf path.
-        let mut da = dx_out.clone();
-        da.add_assign(&out[0]);
-
-        let per_rank = (0..self.tp)
-            .map(|r| {
-                let mut v: Vec<&HostTensor> = vec![&stash.x];
-                v.extend(&self.shards[0][r].attn);
-                v.push(&da);
-                v
-            })
-            .collect();
-        let outs = self.rank_stages("attn_bwd", per_rank)?;
-        let mut dx_attn_parts = Vec::with_capacity(self.tp);
-        for (r, out) in outs.into_iter().enumerate() {
-            let mut it = out.into_iter();
-            let dx_r = it.next().unwrap();
-            let rest: Vec<HostTensor> = it.collect();
-            self.accum_attn_grads(0, r, &rest, grads);
-            dx_attn_parts.push(dx_r);
-        }
-        let mut dx = self.ledger.all_reduce_ctx(&self.ctx, &dx_attn_parts);
-        dx.add_assign(&dx_mlp);
-        dx.add_assign(&dx_out); // direct residual x1 -> x2
-        Ok(dx)
     }
 
     // ------------------------------------------------------------------
@@ -648,7 +920,10 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
     /// Forward-only pass (inference TTFT measurement, Fig 19): returns the
     /// batch loss; parameters untouched.
     pub fn forward_loss(&mut self, batch: &Batch) -> Result<f32> {
-        let (x_final, _) = self.forward(batch)?;
+        let (x_final, _stash, fa) = self.forward_graph(batch)?;
+        if let Some(fa) = fa {
+            self.fa_cache = Some(fa);
+        }
         let head = self.exec_in(
             &self.ctx,
             "head_fwd_bwd",

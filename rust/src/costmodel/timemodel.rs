@@ -128,6 +128,22 @@ pub fn inference_time(
     total
 }
 
+/// Predicted fraction of collective wall-clock an overlap-aware schedule
+/// can hide behind independent compute: with comm modeled as schedulable
+/// work on its own link resource (the `--sched overlap` CommNode model),
+/// the hideable share is bounded by how much concurrent compute exists —
+/// `min(1, compute/comm)` — the same two-resource makespan reasoning as
+/// [`crate::coordinator::overlap::overlap_block`], with compute and the
+/// link as the two pipes. The `tp_step` bench reports the realized
+/// fraction (measured from `Breakdown` span intersections) against this
+/// prediction.
+pub fn predicted_hidden_fraction(compute_secs: f64, comm_secs: f64) -> f64 {
+    if comm_secs <= 0.0 {
+        return 1.0;
+    }
+    (compute_secs.max(0.0) / comm_secs).min(1.0)
+}
+
 /// Single-GPU tokens/sec (Fig 8a): TP=1, no interconnect.
 pub fn single_gpu_throughput(
     cfg: &ModelConfig,
@@ -221,6 +237,18 @@ mod tests {
         let fal = inference_time(&c, Variant::Fal, &H200, &NVLINK, 8, 1, 2048);
         let saving = 1.0 - fal / base;
         assert!((0.02..0.40).contains(&saving), "saving {saving:.3}");
+    }
+
+    #[test]
+    fn predicted_hidden_fraction_bounds() {
+        // No comm -> everything "hidden"; comm >> compute -> ratio; comm
+        // <= compute -> fully hideable.
+        assert_eq!(predicted_hidden_fraction(1.0, 0.0), 1.0);
+        assert_eq!(predicted_hidden_fraction(0.0, 1.0), 0.0);
+        assert!((predicted_hidden_fraction(1.0, 4.0) - 0.25).abs() < 1e-12);
+        assert_eq!(predicted_hidden_fraction(5.0, 1.0), 1.0);
+        // Never negative, never above 1.
+        assert_eq!(predicted_hidden_fraction(-1.0, 2.0), 0.0);
     }
 
     #[test]

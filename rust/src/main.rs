@@ -1,9 +1,10 @@
 //! `fal` — launcher CLI for the FAL framework.
 //!
 //! ```text
-//! fal exp <id|all> [--scale 1.0] [--threads N] [--sched graph|serial] [--artifacts DIR] [--out reports]
+//! fal exp <id|all> [--scale 1.0] [--threads N] [--sched graph|serial|overlap] [--artifacts DIR] [--out reports]
 //! fal train --config small --variant fal [--steps 300] [--threads N] [--sched M] [--eval]
-//! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M]
+//! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M] [--comm-sim S]
+//! fal pp --config tiny --stages 2 --micro 2 [--steps 4] [--threads N] [--sched M] [--comm-sim S]
 //! fal list            # artifacts + experiments
 //! ```
 //!
@@ -12,13 +13,18 @@
 //! `--threads 1` reproduces the historical scalar results bit-for-bit).
 //! `--sched` picks the StageGraph schedule (default: `FAL_SCHED` env, else
 //! `graph` — rank-/branch-parallel stage execution; `serial` is the
-//! escape hatch running the historical sequential loops, bit-identical
-//! to `graph` at every thread count).
+//! escape hatch running the historical sequential loops; `overlap` runs
+//! dependency-driven with in-flight all-reduce drains hidden behind the
+//! next block's compute — all three bit-identical at every thread count).
+//! `--comm-sim S` scales the simulated link occupancy of each collective
+//! (0 = off): the virtual clock that makes the overlap win measurable on
+//! CPU (reported in the trainer's `sched.comm` / `sched.compute` buckets).
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 use fal::config::{TrainConfig, Variant, PCIE_GEN4};
+use fal::coordinator::dp_pp::PpTrainer;
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::experiments::{self, ExpCtx};
@@ -67,10 +73,11 @@ fn run() -> Result<()> {
         print_help();
         return Ok(());
     }
-    match args.expect_subcommand(&["exp", "train", "tp", "list"])? {
+    match args.expect_subcommand(&["exp", "train", "tp", "pp", "list"])? {
         "exp" => cmd_exp(&args),
         "train" => cmd_train(&args),
         "tp" => cmd_tp(&args),
+        "pp" => cmd_pp(&args),
         "list" => cmd_list(&args),
         _ => {
             print_help();
@@ -85,14 +92,19 @@ fn print_help() {
          \n\
          USAGE:\n  fal exp <id|all> [--scale S] [--threads N] [--sched M] [--artifacts DIR] [--out DIR]\n\
          \x20 fal train --config small --variant fal [--steps N] [--threads N] [--sched M] [--eval]\n\
-         \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M]\n\
+         \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
+         \x20 fal pp --config tiny --stages 2 --micro 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
          \x20 fal list\n\
          \n\
          --threads N sizes the native backend's worker fan-out (default:\n\
          FAL_THREADS env, else all cores; 1 = exact scalar reference).\n\
-         --sched serial|graph picks the StageGraph schedule (default:\n\
-         FAL_SCHED env, else graph; serial = the historical sequential\n\
-         loops, bit-identical at every thread count).\n\
+         --sched serial|graph|overlap picks the StageGraph schedule\n\
+         (default: FAL_SCHED env, else graph; serial = the historical\n\
+         sequential loops; overlap = dependency-driven with all-reduce\n\
+         drains overlapped by the next block's compute — all three\n\
+         bit-identical at every thread count).\n\
+         --comm-sim S scales each collective's simulated link occupancy\n\
+         (0 = off) so the overlap win is measurable on CPU.\n\
          \n\
          Every experiment id runs on the default (native CPU) build — no\n\
          Python, artifacts/ directory, or `--features pjrt` required.\n\
@@ -159,6 +171,7 @@ fn cmd_tp(args: &Args) -> Result<()> {
     let mut t = TpTrainer::new(
         ctx.engine.as_ref(), &config, variant, tp, PCIE_GEN4,
         TrainConfig::default())?;
+    t.comm_sim_scale = args.f64_or("comm-sim", 0.0)?;
     for i in 0..steps {
         let b = loader.next_train();
         let (loss, gnorm) = t.train_step(&b)?;
@@ -177,6 +190,39 @@ fn cmd_tp(args: &Args) -> Result<()> {
     );
     for (k, v) in t.breakdown.entries() {
         println!("  {k:<6} {v:.2}s");
+    }
+    Ok(())
+}
+
+fn cmd_pp(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let stages = args.usize_or("stages", 2)?;
+    let micro = args.usize_or("micro", 2)?;
+    let steps = args.usize_or("steps", 4)?;
+    let ctx = exp_ctx(args, 1.0)?;
+    let (_, mut loader) = ctx.loader(&config, 0)?;
+    let mut t = PpTrainer::new(
+        ctx.engine.as_ref(), &config, stages, micro, PCIE_GEN4)?;
+    t.comm_sim_scale = args.f64_or("comm-sim", 0.0)?;
+    for i in 0..steps {
+        let b = loader.next_train();
+        let loss = t.forward_loss(&b)?;
+        println!("pipeline pass {:>3}  loss {loss:.4}", i + 1);
+    }
+    let s = t.ledger.stats();
+    println!(
+        "\npipeline: {} stages x {} micro-batches (bubble {:.1}%), {} \
+         boundary sends ({:.2} MB), modeled comm {:.5}s on {}",
+        t.stages,
+        t.micro,
+        100.0 * t.bubble_fraction(),
+        s.broadcasts,
+        s.broadcast_bytes / 1e6,
+        s.modeled_secs,
+        t.ledger.link.name,
+    );
+    for (k, v) in t.breakdown.entries() {
+        println!("  {k:<14} {v:.3}s");
     }
     Ok(())
 }

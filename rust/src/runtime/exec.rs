@@ -81,12 +81,20 @@ impl ExecCtx {
 
     /// Context from the `FAL_THREADS` / `FAL_SCHED` environment variables,
     /// falling back to the machine's available parallelism (and the graph
-    /// schedule) when unset or unparsable.
+    /// schedule) when unset. An unparsable `FAL_THREADS` also falls back,
+    /// but loudly — a typo'd thread pin must never silently run on every
+    /// core (mirrors the `FAL_SCHED` warning in [`SchedMode::from_env`]).
     pub fn from_env() -> ExecCtx {
         match std::env::var(THREADS_ENV) {
             Ok(v) => match v.trim().parse::<usize>() {
                 Ok(n) => ExecCtx::new(n),
-                Err(_) => ExecCtx::new(0),
+                Err(_) => {
+                    eprintln!(
+                        "warning: {THREADS_ENV}={v:?} is not a thread count \
+                         (integer, 0 = auto) — using auto-detected parallelism"
+                    );
+                    ExecCtx::new(0)
+                }
             },
             Err(_) => ExecCtx::new(0),
         }
@@ -110,6 +118,14 @@ impl ExecCtx {
 
     pub fn sched(&self) -> SchedMode {
         self.sched
+    }
+
+    /// This context restricted to at most `n` workers, partition knob
+    /// untouched — how the overlap scheduler ([`super::sched`]) hands each
+    /// running node a single lane without oversubscribing or changing any
+    /// kernel's chunk boundaries.
+    pub fn with_workers(&self, n: usize) -> ExecCtx {
+        ExecCtx { workers: n.clamp(1, self.workers.max(1)), ..*self }
     }
 
     /// Minimum rows per chunk so one chunk carries at least
@@ -468,6 +484,16 @@ mod tests {
         assert_eq!(ExecCtx::grain_rows(ExecCtx::PAR_GRAIN / 2), 2);
         assert!(ExecCtx::grain_rows(1) >= ExecCtx::PAR_GRAIN);
         assert_eq!(ExecCtx::grain_rows(0), ExecCtx::PAR_GRAIN);
+    }
+
+    #[test]
+    fn with_workers_caps_and_floors() {
+        let c = ExecCtx::new(8);
+        assert_eq!(c.with_workers(2).workers(), 2);
+        assert_eq!(c.with_workers(2).threads(), 8);
+        assert_eq!(c.with_workers(0).workers(), 1);
+        // Never grows beyond the current pool.
+        assert_eq!(c.with_workers(3).with_workers(99).workers(), 3);
     }
 
     #[test]

@@ -8,52 +8,89 @@
 //! context's worker pool, while a dependency chain degenerates to the
 //! plain sequential order.
 //!
+//! # Communication as a node
+//!
+//! A [`StageGraph::comm_node`] is a stage whose value is a collective's
+//! host-side result (the shard sum every rank receives) and whose *link
+//! occupancy* is simulated by a deterministic busy-wait of `sim_secs`
+//! (derived from `costmodel` link specs by the callers) — the virtual
+//! clock that makes communication/computation overlap observable on a CPU
+//! testbed where the actual data movement is a host-memory reduction.
+//!
+//! Under [`SchedMode::Serial`] and [`SchedMode::Graph`] the busy-wait is
+//! inline: dependents (and, in graph mode, the next wave) wait for value
+//! *and* drain — the serialized Fig 2 timeline. Under
+//! [`SchedMode::Overlap`] execution is dependency-driven (no wave
+//! barrier) and a comm node releases its *value* to dependents as soon as
+//! the host reduction finishes, while the link drain stays in flight on
+//! its lane — the ideal asynchronously-launched collective that
+//! overlap-aware planners (Galvatron-style) schedule against. Any node
+//! not data-dependent on the in-flight payload proceeds concurrently, so
+//! the next block's compute hides the reduction. The graph still
+//! completes only after every drain.
+//!
 //! # Determinism contract
 //!
-//! Results are **bit-identical between [`SchedMode::Serial`] and
-//! [`SchedMode::Graph`] at every thread count**, because three things are
-//! structure-only:
+//! Results are **bit-identical across all three modes at every thread
+//! count**, because four things are structure-only:
 //!
 //! 1. **Node values.** A node reads only its declared dependencies (via
 //!    [`Joined`]), so values are independent of execution interleaving.
-//! 2. **Kernel bits.** [`ExecCtx::fork_join`] subdivides the *worker*
-//!    pool but never the *partition* knob ([`ExecCtx::threads`]): a
-//!    kernel inside a branch chunks its work exactly as it would under
-//!    the full context and merely executes those chunks on fewer
-//!    workers, so even the reassociating reductions (attention dk/dv)
-//!    combine partials in the same order.
-//! 3. **Join order.** Nodes are grouped into dependency waves; waves run
-//!    in order and each wave's results are joined in node-id order.
-//!    Serial mode runs nodes in node-id order (which is a topological
-//!    order — dependencies must precede their dependents).
+//! 2. **Kernel bits.** Subdivision touches only the *worker* pool, never
+//!    the *partition* knob ([`ExecCtx::threads`]): a kernel inside a
+//!    branch chunks its work exactly as it would under the full context
+//!    and merely executes those chunks on fewer workers, so even the
+//!    reassociating reductions (attention dk/dv) combine partials in the
+//!    same order.
+//! 3. **Join order.** Results always come back in node-id order,
+//!    whichever order nodes executed in.
+//! 4. **Virtual clocks are value-free.** The comm busy-wait happens after
+//!    the value is produced and never feeds into any value.
 //!
 //! # Pool subdivision
 //!
-//! A wave of `k` independent nodes on a `w`-worker context runs on
-//! `min(k, w)` lanes; each lane receives a contiguous group of nodes and
-//! an equal share of the workers (never oversubscribing), so a
-//! branch-parallel block can still panel-parallelize its matmuls. Nested
-//! submission composes: a node may itself run a [`StageGraph`] or call
-//! [`ExecCtx::fork_join`] on the subdivided context it is handed.
+//! Graph mode groups nodes into dependency waves; a wave of `k`
+//! independent nodes on a `w`-worker context runs on `min(k, w)` lanes,
+//! each lane receiving a contiguous group of nodes and an equal share of
+//! the workers (never oversubscribing). Overlap mode runs up to `w` ready
+//! nodes concurrently, one worker lane each (lowest node id first when
+//! several are ready). Nested submission composes either way: a node may
+//! itself run a [`StageGraph`] or call [`ExecCtx::fork_join`] on the
+//! context it is handed.
 //!
-//! See docs/ARCHITECTURE.md §1c.
+//! See docs/ARCHITECTURE.md §1c–§1d.
+
+use std::sync::{Condvar, Mutex, OnceLock};
 
 use anyhow::{bail, Result};
 
 use super::exec::ExecCtx;
+use crate::util::timer::{Breakdown, SpanGuard};
 
-/// Environment fallback for the schedule mode (`serial` | `graph`).
+/// Environment fallback for the schedule mode (`serial` | `graph` |
+/// `overlap`).
 pub const SCHED_ENV: &str = "FAL_SCHED";
+
+/// Breakdown bucket comm nodes record wall-clock spans into.
+pub const COMM_BUCKET: &str = "sched.comm";
+/// Breakdown bucket compute nodes record wall-clock spans into.
+pub const COMPUTE_BUCKET: &str = "sched.compute";
 
 /// How a [`StageGraph`] executes: the `--sched` knob.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SchedMode {
     /// Escape hatch: run every node sequentially (node-id order) with the
-    /// full worker pool — the historical loop schedule.
+    /// full worker pool — the historical loop schedule. Comm drains are
+    /// inline (fully serialized communication).
     Serial,
-    /// Run independent nodes concurrently on subdivided worker lanes.
+    /// Run independent nodes concurrently on subdivided worker lanes,
+    /// wave by wave. Comm drains are inline at wave granularity.
     #[default]
     Graph,
+    /// Dependency-driven execution with eager comm-value release: a comm
+    /// node's simulated link drain stays in flight while every node not
+    /// depending on it (and even its data dependents) proceeds.
+    Overlap,
 }
 
 impl SchedMode {
@@ -61,7 +98,8 @@ impl SchedMode {
         match s.trim() {
             "serial" => Ok(SchedMode::Serial),
             "graph" => Ok(SchedMode::Graph),
-            other => bail!("unknown schedule {other:?}; one of serial|graph"),
+            "overlap" => Ok(SchedMode::Overlap),
+            other => bail!("unknown schedule {other:?}; one of serial|graph|overlap"),
         }
     }
 
@@ -72,7 +110,7 @@ impl SchedMode {
         match std::env::var(SCHED_ENV) {
             Ok(v) => SchedMode::parse(&v).unwrap_or_else(|_| {
                 eprintln!(
-                    "warning: {SCHED_ENV}={v:?} is not serial|graph — \
+                    "warning: {SCHED_ENV}={v:?} is not serial|graph|overlap — \
                      using the default ({}) schedule",
                     SchedMode::default().name()
                 );
@@ -86,13 +124,27 @@ impl SchedMode {
         match self {
             SchedMode::Serial => "serial",
             SchedMode::Graph => "graph",
+            SchedMode::Overlap => "overlap",
         }
+    }
+}
+
+/// Deterministic busy-wait: occupies the calling worker for `secs` of
+/// wall-clock without producing or consuming any value — the virtual link
+/// clock of a [`StageGraph::comm_node`].
+pub fn virtual_link_wait(secs: f64) {
+    if secs <= 0.0 {
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    while t0.elapsed().as_secs_f64() < secs {
+        std::hint::spin_loop();
     }
 }
 
 /// Completed dependency results a node reads from.
 pub struct Joined<'g, T> {
-    results: &'g [Option<T>],
+    results: &'g [OnceLock<T>],
     /// The reading node's declared dependencies — the only ids it may get.
     deps: &'g [usize],
 }
@@ -100,8 +152,8 @@ pub struct Joined<'g, T> {
 impl<'g, T> Joined<'g, T> {
     /// The result of dependency node `id`. Panics if `id` was not declared
     /// in the reading node's dependency list — an undeclared read could
-    /// silently race the wave schedule, so the contract is enforced, not
-    /// just documented.
+    /// silently race the schedule, so the contract is enforced, not just
+    /// documented.
     pub fn get(&self, id: usize) -> &T {
         assert!(
             self.deps.contains(&id),
@@ -110,18 +162,36 @@ impl<'g, T> Joined<'g, T> {
             self.deps
         );
         self.results[id]
-            .as_ref()
+            .get()
             .expect("StageGraph: reading a node that has not completed")
     }
 }
 
 type NodeFn<'a, T> = Box<dyn FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a>;
 
+#[derive(Debug, Clone, Copy)]
+enum NodeKind {
+    Compute,
+    /// Communication: after the value is produced, the node occupies a
+    /// virtual link for `sim_secs` of wall-clock.
+    Comm { sim_secs: f64 },
+}
+
 struct Node<'a, T> {
     #[allow(dead_code)]
     label: String,
     deps: Vec<usize>,
+    kind: NodeKind,
     run: NodeFn<'a, T>,
+}
+
+fn span_guard<'b>(bd: Option<&'b Breakdown>, kind: NodeKind) -> Option<SpanGuard<'b>> {
+    bd.map(|b| {
+        b.span(match kind {
+            NodeKind::Comm { .. } => COMM_BUCKET,
+            NodeKind::Compute => COMPUTE_BUCKET,
+        })
+    })
 }
 
 /// A set of stage closures with declared dependencies, executed by
@@ -131,17 +201,27 @@ struct Node<'a, T> {
 /// smaller than the node's own id) — enforced at [`StageGraph::node`].
 pub struct StageGraph<'a, T> {
     nodes: Vec<Node<'a, T>>,
+    /// Optional wall-clock attribution: every node records a
+    /// [`COMM_BUCKET`] / [`COMPUTE_BUCKET`] span here while it runs
+    /// (comm spans include the drain).
+    bd: Option<&'a Breakdown>,
 }
 
 impl<'a, T> Default for StageGraph<'a, T> {
     fn default() -> Self {
-        StageGraph { nodes: vec![] }
+        StageGraph { nodes: vec![], bd: None }
     }
 }
 
 impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Record per-node comm/compute wall-clock spans into `bd`.
+    pub fn with_breakdown(mut self, bd: &'a Breakdown) -> Self {
+        self.bd = Some(bd);
+        self
     }
 
     /// Add a stage node. `deps` are node ids returned by earlier `node`
@@ -151,6 +231,31 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         &mut self,
         label: impl Into<String>,
         deps: &[usize],
+        f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
+    ) -> usize {
+        self.push(label, deps, NodeKind::Compute, f)
+    }
+
+    /// Add a communication node: its closure produces the collective's
+    /// host-side value; the scheduler then occupies a virtual link for
+    /// `sim_secs` (see the module docs for the per-mode semantics).
+    /// `sim_secs <= 0.0` degenerates to a plain node tagged as comm (the
+    /// span bookkeeping still lands in [`COMM_BUCKET`]).
+    pub fn comm_node(
+        &mut self,
+        label: impl Into<String>,
+        deps: &[usize],
+        sim_secs: f64,
+        f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
+    ) -> usize {
+        self.push(label, deps, NodeKind::Comm { sim_secs }, f)
+    }
+
+    fn push(
+        &mut self,
+        label: impl Into<String>,
+        deps: &[usize],
+        kind: NodeKind,
         f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
     ) -> usize {
         let id = self.nodes.len();
@@ -163,6 +268,7 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         self.nodes.push(Node {
             label: label.into(),
             deps: deps.to_vec(),
+            kind,
             run: Box::new(f),
         });
         id
@@ -179,22 +285,40 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
     /// Execute the graph under `ctx` (mode = [`ExecCtx::sched`]); returns
     /// the node results in node-id order.
     pub fn run(self, ctx: &ExecCtx) -> Vec<T> {
-        let n = self.nodes.len();
-        let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        if ctx.sched() == SchedMode::Serial || ctx.workers() <= 1 {
-            // Sequential node-id order — a topological order by
-            // construction — with the full pool per node.
-            for (i, node) in self.nodes.into_iter().enumerate() {
-                let joined =
-                    Joined { results: &results, deps: &node.deps };
-                let out = (node.run)(ctx, &joined);
-                results[i] = Some(out);
-            }
-            return results.into_iter().map(|r| r.unwrap()).collect();
+        match ctx.sched() {
+            _ if ctx.workers() <= 1 => self.run_serial(ctx),
+            SchedMode::Serial => self.run_serial(ctx),
+            SchedMode::Graph => self.run_waves(ctx),
+            SchedMode::Overlap => self.run_overlap(ctx),
         }
+    }
 
-        // Dependency waves: wave(i) = 1 + max(wave(dep)); independent
-        // nodes share a wave and fork across worker lanes.
+    /// Sequential node-id order — a topological order by construction —
+    /// with the full pool per node and inline comm drains.
+    fn run_serial(self, ctx: &ExecCtx) -> Vec<T> {
+        let bd = self.bd;
+        let n = self.nodes.len();
+        let results: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+        for (i, node) in self.nodes.into_iter().enumerate() {
+            let joined = Joined { results: &results, deps: &node.deps };
+            let _g = span_guard(bd, node.kind);
+            let out = (node.run)(ctx, &joined);
+            if let NodeKind::Comm { sim_secs } = node.kind {
+                virtual_link_wait(sim_secs);
+            }
+            if results[i].set(out).is_err() {
+                unreachable!("StageGraph: node {i} completed twice");
+            }
+        }
+        collect(results)
+    }
+
+    /// Dependency waves: wave(i) = 1 + max(wave(dep)); independent nodes
+    /// share a wave and fork across worker lanes; comm drains are inline
+    /// on the node's lane (the wave barrier waits for them).
+    fn run_waves(self, ctx: &ExecCtx) -> Vec<T> {
+        let bd = self.bd;
+        let n = self.nodes.len();
         let mut wave = vec![0usize; n];
         for (i, node) in self.nodes.iter().enumerate() {
             wave[i] =
@@ -203,6 +327,7 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         let max_wave = wave.iter().copied().max().unwrap_or(0);
         let mut nodes: Vec<Option<Node<'a, T>>> =
             self.nodes.into_iter().map(Some).collect();
+        let results: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
         for w in 0..=max_wave {
             let ids: Vec<usize> = (0..n).filter(|&i| wave[i] == w).collect();
             let tasks: Vec<Node<'a, T>> =
@@ -215,22 +340,173 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
                         move |sub: &ExecCtx| {
                             let joined =
                                 Joined { results, deps: &node.deps };
-                            (node.run)(sub, &joined)
+                            let _g = span_guard(bd, node.kind);
+                            let out = (node.run)(sub, &joined);
+                            if let NodeKind::Comm { sim_secs } = node.kind {
+                                virtual_link_wait(sim_secs);
+                            }
+                            out
                         }
                     })
                     .collect(),
             );
             for (&i, out) in ids.iter().zip(outs) {
-                results[i] = Some(out);
+                if results[i].set(out).is_err() {
+                    unreachable!("StageGraph: node {i} completed twice");
+                }
             }
         }
-        results.into_iter().map(|r| r.unwrap()).collect()
+        collect(results)
     }
+
+    /// Dependency-driven list scheduler: up to `workers` ready nodes run
+    /// concurrently (lowest id first), one worker lane each. A comm node
+    /// releases its value — unblocking dependents — as soon as its closure
+    /// returns, then drains its virtual link on the lane; the run returns
+    /// only after every node completed and every drain finished.
+    fn run_overlap(self, ctx: &ExecCtx) -> Vec<T> {
+        let bd = self.bd;
+        let n = self.nodes.len();
+        if n == 0 {
+            return vec![];
+        }
+        let mut dependents: Vec<Vec<usize>> = vec![vec![]; n];
+        let mut indeg = vec![0usize; n];
+        for (i, node) in self.nodes.iter().enumerate() {
+            indeg[i] = node.deps.len();
+            for &d in &node.deps {
+                dependents[d].push(i);
+            }
+        }
+        let dependents = &dependents;
+
+        struct St<'a, T> {
+            nodes: Vec<Option<Node<'a, T>>>,
+            ready: Vec<usize>,
+            indeg: Vec<usize>,
+            /// Nodes whose value has not been produced yet.
+            pending: usize,
+            panic: Option<Box<dyn std::any::Any + Send>>,
+        }
+        let ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let st = Mutex::new(St {
+            nodes: self.nodes.into_iter().map(Some).collect(),
+            ready,
+            indeg,
+            pending: n,
+            panic: None,
+        });
+        let cv = Condvar::new();
+        let results: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+        let lanes = ctx.workers().min(n).max(1);
+        let sub = ctx.with_workers(1);
+
+        std::thread::scope(|s| {
+            let st = &st;
+            let cv = &cv;
+            let results = &results;
+            let sub = &sub;
+            let work = move || {
+                'outer: loop {
+                    let mut guard = st.lock().unwrap();
+                    let (id, node) = loop {
+                        if guard.panic.is_some() || guard.pending == 0 {
+                            break 'outer;
+                        }
+                        if !guard.ready.is_empty() {
+                            let mut pos = 0;
+                            for p in 1..guard.ready.len() {
+                                if guard.ready[p] < guard.ready[pos] {
+                                    pos = p;
+                                }
+                            }
+                            let id = guard.ready.swap_remove(pos);
+                            let node = guard.nodes[id].take().unwrap();
+                            break (id, node);
+                        }
+                        guard = cv.wait(guard).unwrap();
+                    };
+                    drop(guard);
+
+                    let Node { label: _, deps, kind, run } = node;
+                    let joined = Joined { results, deps: &deps };
+                    let outcome = std::panic::catch_unwind(
+                        std::panic::AssertUnwindSafe(|| {
+                            let _g = span_guard(bd, kind);
+                            run(sub, &joined)
+                        }),
+                    );
+                    match outcome {
+                        Ok(out) => {
+                            if results[id].set(out).is_err() {
+                                unreachable!(
+                                    "StageGraph: node {id} completed twice"
+                                );
+                            }
+                            {
+                                let mut g = st.lock().unwrap();
+                                // saturating: a sibling's panic handler may
+                                // already have zeroed `pending` to release
+                                // the waiters.
+                                g.pending = g.pending.saturating_sub(1);
+                                for &d in &dependents[id] {
+                                    g.indeg[d] -= 1;
+                                    if g.indeg[d] == 0 {
+                                        g.ready.push(d);
+                                    }
+                                }
+                                cv.notify_all();
+                            }
+                            // Eager value release: the drain happens after
+                            // dependents were unblocked — the in-flight
+                            // reduction overlaps whatever is ready.
+                            if let NodeKind::Comm { sim_secs } = kind {
+                                if sim_secs > 0.0 {
+                                    let _g = span_guard(bd, kind);
+                                    virtual_link_wait(sim_secs);
+                                }
+                            }
+                        }
+                        Err(payload) => {
+                            let mut g = st.lock().unwrap();
+                            g.panic = Some(payload);
+                            g.pending = 0;
+                            g.ready.clear();
+                            cv.notify_all();
+                            return;
+                        }
+                    }
+                }
+            };
+            for _ in 1..lanes {
+                s.spawn(work);
+            }
+            work();
+        });
+
+        if let Some(p) = st.into_inner().unwrap().panic {
+            std::panic::resume_unwind(p);
+        }
+        collect(results)
+    }
+}
+
+fn collect<T>(results: Vec<OnceLock<T>>) -> Vec<T> {
+    results
+        .into_iter()
+        .map(|c| {
+            c.into_inner()
+                .expect("StageGraph: node never completed")
+        })
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    const MODES: [SchedMode; 3] =
+        [SchedMode::Serial, SchedMode::Graph, SchedMode::Overlap];
 
     fn ctx(threads: usize, mode: SchedMode) -> ExecCtx {
         ExecCtx::new(threads).with_sched(mode)
@@ -240,14 +516,16 @@ mod tests {
     fn sched_mode_parses() {
         assert_eq!(SchedMode::parse("serial").unwrap(), SchedMode::Serial);
         assert_eq!(SchedMode::parse("graph").unwrap(), SchedMode::Graph);
+        assert_eq!(SchedMode::parse("overlap").unwrap(), SchedMode::Overlap);
         assert!(SchedMode::parse("fancy").is_err());
         assert_eq!(SchedMode::default(), SchedMode::Graph);
         assert_eq!(SchedMode::Serial.name(), "serial");
+        assert_eq!(SchedMode::Overlap.name(), "overlap");
     }
 
     #[test]
     fn results_come_back_in_node_order() {
-        for mode in [SchedMode::Serial, SchedMode::Graph] {
+        for mode in MODES {
             let mut g = StageGraph::new();
             for i in 0..5 {
                 g.node(format!("n{i}"), &[], move |_, _| i * 10);
@@ -258,7 +536,7 @@ mod tests {
 
     #[test]
     fn chain_reads_dependency_results() {
-        for mode in [SchedMode::Serial, SchedMode::Graph] {
+        for mode in MODES {
             let mut g = StageGraph::new();
             let a = g.node("a", &[], |_, _| 1usize);
             let b = g.node("b", &[a], move |_, j| j.get(a) + 10);
@@ -270,7 +548,7 @@ mod tests {
 
     #[test]
     fn diamond_joins_both_branches() {
-        for mode in [SchedMode::Serial, SchedMode::Graph] {
+        for mode in MODES {
             for threads in [1usize, 2, 4, 7] {
                 let mut g = StageGraph::new();
                 let a = g.node("a", &[], |_, _| 3i64);
@@ -283,6 +561,140 @@ mod tests {
                     "{mode:?} t{threads}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn comm_nodes_preserve_values_in_every_mode() {
+        // A chain interleaving comm and compute: identical values across
+        // modes, with the comm drain never feeding into any value.
+        for mode in MODES {
+            for threads in [1usize, 2, 4] {
+                let mut g = StageGraph::new();
+                let a = g.node("a", &[], |_, _| 2i64);
+                let ar =
+                    g.comm_node("ar", &[a], 0.002, move |_, j| j.get(a) * 7);
+                let b = g.node("b", &[ar], move |_, j| j.get(ar) + 1);
+                g.comm_node("ar2", &[b], 0.0, move |_, j| j.get(b) * 3);
+                assert_eq!(
+                    g.run(&ctx(threads, mode)),
+                    vec![2, 14, 15, 45],
+                    "{mode:?} t{threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_hides_comm_drain_behind_independent_compute() {
+        // comm node (long drain) + independent compute: overlap mode's
+        // wall-clock is ~max of the two, not the sum. A single-core
+        // machine cannot overlap spinning work at all, so skip there; on
+        // a loaded CI runner any one sample can be starved by concurrent
+        // tests, so take the best of a few attempts before judging.
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cores < 2 {
+            return;
+        }
+        let drain = 0.12;
+        let spin = 0.08;
+        let build = |g: &mut StageGraph<'_, u32>| {
+            let a = g.node("a", &[], |_, _| 1u32);
+            g.comm_node("ar", &[a], drain, move |_, j| j.get(a) + 1);
+            g.node("busy", &[], move |_, _| {
+                virtual_link_wait(spin);
+                7
+            });
+        };
+        let timed = |mode: SchedMode| {
+            let mut g = StageGraph::new();
+            build(&mut g);
+            let t0 = std::time::Instant::now();
+            let out = g.run(&ctx(2, mode));
+            (out, t0.elapsed().as_secs_f64())
+        };
+        let (serial, t_serial) = timed(SchedMode::Serial);
+        // Values are mode-invariant on every attempt; timing needs only
+        // one clean sample to demonstrate the hiding.
+        let mut best_overlap = f64::INFINITY;
+        for _ in 0..3 {
+            let (overlap, t) = timed(SchedMode::Overlap);
+            assert_eq!(serial, overlap);
+            best_overlap = best_overlap.min(t);
+            if best_overlap < t_serial - 0.5 * spin {
+                break;
+            }
+        }
+        assert!(t_serial >= drain + spin - 0.01, "serial {t_serial}");
+        assert!(
+            best_overlap < t_serial - 0.25 * spin,
+            "overlap {best_overlap} vs serial {t_serial}: drain not hidden"
+        );
+    }
+
+    #[test]
+    fn overlap_releases_comm_value_before_drain() {
+        // The dependent of a comm node starts while the drain is still in
+        // flight: it must *complete* well before the 100ms drain could
+        // have finished — the eager-value contract, asserted by clock.
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        if cores < 2 {
+            return; // the dependent needs its own core during the drain
+        }
+        let drain = 0.1;
+        let t0 = std::time::Instant::now();
+        let dep_done_us = AtomicU64::new(u64::MAX);
+        let mut g = StageGraph::new();
+        let a = g.node("a", &[], |_, _| 5u64);
+        let ar = g.comm_node("ar", &[a], drain, move |_, j| j.get(a) * 2);
+        g.node("dep", &[ar], |_, j| {
+            let v = *j.get(ar);
+            dep_done_us
+                .store(t0.elapsed().as_micros() as u64, Ordering::SeqCst);
+            v + 1
+        });
+        let out = g.run(&ctx(2, SchedMode::Overlap));
+        let total = t0.elapsed().as_secs_f64();
+        assert_eq!(out, vec![5, 10, 11]);
+        // If values were released only after the drain, the dependent
+        // could not have finished before `drain` elapsed.
+        let dep_at = dep_done_us.load(Ordering::SeqCst) as f64 / 1e6;
+        assert!(
+            dep_at < drain * 0.8,
+            "dependent ran at {dep_at}s — comm value not released eagerly \
+             (drain {drain}s)"
+        );
+        // The run still waited for the full drain.
+        assert!(total >= drain - 0.01, "drain not awaited: {total}");
+    }
+
+    #[test]
+    fn breakdown_buckets_split_comm_and_compute() {
+        use crate::util::timer::Breakdown;
+        for mode in MODES {
+            let bd = Breakdown::new();
+            let mut g = StageGraph::new().with_breakdown(&bd);
+            let a = g.node("a", &[], |_, _| {
+                virtual_link_wait(0.004);
+                1u8
+            });
+            g.comm_node("ar", &[a], 0.004, move |_, j| *j.get(a));
+            g.run(&ctx(2, mode));
+            assert!(
+                bd.get(COMPUTE_BUCKET) >= 0.003,
+                "{mode:?}: compute bucket {}",
+                bd.get(COMPUTE_BUCKET)
+            );
+            assert!(
+                bd.get(COMM_BUCKET) >= 0.003,
+                "{mode:?}: comm bucket {}",
+                bd.get(COMM_BUCKET)
+            );
         }
     }
 
@@ -301,6 +713,14 @@ mod tests {
         g.node("a", &[], |c, _| c.workers());
         g.node("b", &[], |c, _| c.workers());
         assert_eq!(g.run(&ctx(4, SchedMode::Serial)), vec![4, 4]);
+        // Overlap mode hands every node a single lane (partition intact).
+        let mut g = StageGraph::new();
+        g.node("a", &[], |c, _| (c.workers(), c.threads()));
+        g.node("b", &[], |c, _| (c.workers(), c.threads()));
+        assert_eq!(
+            g.run(&ctx(4, SchedMode::Overlap)),
+            vec![(1, 4), (1, 4)]
+        );
     }
 
     #[test]
@@ -323,10 +743,22 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "boom")]
+    fn overlap_propagates_worker_panics() {
+        let mut g: StageGraph<'_, usize> = StageGraph::new();
+        g.node("a", &[], |_, _| 1);
+        g.node("bad", &[], |_, _| panic!("boom"));
+        g.node("c", &[], |_, _| 3);
+        g.run(&ctx(3, SchedMode::Overlap));
+    }
+
+    #[test]
     fn empty_graph_is_fine() {
-        let g: StageGraph<'_, usize> = StageGraph::new();
-        assert!(g.is_empty());
-        assert!(g.run(&ctx(4, SchedMode::Graph)).is_empty());
+        for mode in MODES {
+            let g: StageGraph<'_, usize> = StageGraph::new();
+            assert!(g.is_empty());
+            assert!(g.run(&ctx(4, mode)).is_empty());
+        }
     }
 
     #[test]
@@ -343,5 +775,16 @@ mod tests {
         let out = g.run(&ctx(4, SchedMode::Graph));
         // outer_a got 2 workers, split 1+1 by the inner graph.
         assert_eq!(out, vec![2, 2]);
+        // Overlap: each outer node has one lane; the inner graph then runs
+        // its serial path (workers <= 1) — same values.
+        let mut g = StageGraph::new();
+        g.node("outer_a", &[], |c, _| {
+            let mut inner = StageGraph::new();
+            inner.node("inner_1", &[], |ic, _| ic.workers());
+            inner.node("inner_2", &[], |ic, _| ic.workers());
+            inner.run(c).into_iter().sum::<usize>()
+        });
+        let out = g.run(&ctx(4, SchedMode::Overlap));
+        assert_eq!(out, vec![2]);
     }
 }

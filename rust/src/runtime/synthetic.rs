@@ -54,6 +54,10 @@ pub struct SyntheticSpec {
     pub grad_tags: Vec<&'static str>,
     /// Register the `capture` (Fig 3a activation) artifact (preln).
     pub capture: bool,
+    /// Extra tp=1 stage bundles at these batch sizes — the micro-batch
+    /// shapes the GPipe pipeline trainer (`coordinator::dp_pp::PpTrainer`)
+    /// executes its cells at.
+    pub pp_batches: Vec<usize>,
 }
 
 /// All six architecture variants (python/compile/configs.py::VARIANTS).
@@ -100,6 +104,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: EVAL_TAGS.to_vec(),
             grad_tags: GRAD_TAGS.to_vec(),
             capture: true,
+            pp_batches: vec![],
         },
         // Micro-scale GQA / MoE companions: same artifact surface as the
         // Fig 20 hosts at gradient-check cost (CI-speed integration tests).
@@ -111,6 +116,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
+            pp_batches: vec![],
         },
         SyntheticSpec {
             cfg: model_config("micro_moe", (31, 8, 2, 2, 2, 16, 5), 2),
@@ -120,6 +126,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
+            pp_batches: vec![],
         },
         SyntheticSpec {
             cfg: model_config("tiny", (256, 64, 4, 4, 4, 256, 64), 1),
@@ -129,6 +136,9 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: EVAL_TAGS.to_vec(),
             grad_tags: GRAD_TAGS.to_vec(),
             capture: true,
+            // GPipe micro-batch bundles: tiny's batch-4 step splits into
+            // 2x2 or 4x1 micro-batches (dp_pp::PpTrainer).
+            pp_batches: vec![1, 2],
         },
         SyntheticSpec {
             cfg: model_config("small", (512, 192, 8, 8, 6, 768, 128), 1),
@@ -138,6 +148,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: EVAL_TAGS.to_vec(),
             grad_tags: GRAD_TAGS.to_vec(),
             capture: true,
+            pp_batches: vec![],
         },
         // Fig 9 depth scaling: same shape as `small`, more layers.
         SyntheticSpec {
@@ -148,6 +159,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: vec![],
             grad_tags: vec![],
             capture: false,
+            pp_batches: vec![],
         },
         SyntheticSpec {
             cfg: model_config("deep12", (512, 192, 8, 8, 12, 768, 128), 1),
@@ -157,6 +169,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: vec![],
             grad_tags: vec![],
             capture: false,
+            pp_batches: vec![],
         },
         // Fig 20 generalization hosts: GQA (2 kv heads) and MoE-attention.
         // They carry eval artifacts too, so the Fig 3(b)-style gating and
@@ -170,6 +183,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
+            pp_batches: vec![],
         },
         SyntheticSpec {
             cfg: model_config("small_moe", (512, 192, 8, 8, 6, 768, 128), 2),
@@ -179,6 +193,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: HEADLINE.to_vec(),
             grad_tags: vec![],
             capture: false,
+            pp_batches: vec![],
         },
         SyntheticSpec {
             cfg: model_config("e2e", (4096, 512, 8, 8, 8, 2048, 256), 1),
@@ -188,6 +203,7 @@ pub fn default_specs() -> Vec<SyntheticSpec> {
             eval_tags: E2E_TAGS.to_vec(),
             grad_tags: vec![],
             capture: false,
+            pp_batches: vec![],
         },
     ]
 }
@@ -471,6 +487,29 @@ pub fn synthetic_manifest(specs: &[SyntheticSpec]) -> Manifest {
             }
         }
 
+        // Micro-batch (tp = 1) stage bundles for the GPipe pipeline.
+        for &pb in &spec.pp_batches {
+            if pb == spec.batch && spec.tps.contains(&1) {
+                continue; // already registered above
+            }
+            for (stage, inputs, outputs) in stage_specs(cfg, 1, pb) {
+                let name = Manifest::tp_stage_name(&cfg.name, 1, pb, stage);
+                register(ArtifactSpec {
+                    name: name.clone(),
+                    file: String::from("(native)"),
+                    inputs,
+                    outputs,
+                    meta: meta(&[
+                        ("kind", Json::Str("tp_stage".into())),
+                        ("config", Json::Str(cfg.name.clone())),
+                        ("stage", Json::Str(stage.into())),
+                        ("tp", Json::Num(1.0)),
+                        ("batch", Json::Num(pb as f64)),
+                    ]),
+                });
+            }
+        }
+
         // Fused train-step artifacts (single-process trainer), one per
         // registered variant tag.
         for &(tag, variant, reuse) in &spec.train {
@@ -614,6 +653,22 @@ mod tests {
         assert!(m
             .artifacts
             .contains_key(&Manifest::tp_stage_name("small", 8, 8, "mlp_preln_fwd")));
+    }
+
+    #[test]
+    fn registers_pipeline_micro_batch_bundles() {
+        let m = synthetic_manifest(&default_specs());
+        // tiny carries tp=1 bundles at b=4 (base) plus b=2 and b=1.
+        for b in [4usize, 2, 1] {
+            let a = m
+                .artifact(&Manifest::tp_stage_name("tiny", 1, b, "attn_fwd"))
+                .unwrap();
+            assert_eq!(a.inputs[0].shape, vec![b, 64, 64], "b={b}");
+        }
+        // Other configs register no micro-batch extras.
+        assert!(m
+            .artifact(&Manifest::tp_stage_name("small", 1, 2, "attn_fwd"))
+            .is_err());
     }
 
     #[test]

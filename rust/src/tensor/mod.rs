@@ -191,8 +191,9 @@ impl HostTensor {
         HostTensor::from_vec(&[r, c1 - c0], data)
     }
 
-    /// Slice along axis 0 (rows [r0, r1)) of any tensor. An empty range
-    /// (r0 == r1) yields a valid zero-row tensor.
+    /// Slice along axis 0 (rows [r0, r1)) of any tensor, preserving the
+    /// dtype (token tensors stay I32 through the shared f32 store). An
+    /// empty range (r0 == r1) yields a valid zero-row tensor.
     pub fn slice_rows(&self, r0: usize, r1: usize) -> HostTensor {
         assert!(!self.shape.is_empty(), "slice_rows needs a >=1-D tensor");
         let row: usize = self.shape[1..].iter().product();
@@ -203,7 +204,10 @@ impl HostTensor {
         );
         let mut shape = self.shape.clone();
         shape[0] = r1 - r0;
-        HostTensor::from_vec(&shape, self.data[r0 * row..r1 * row].to_vec())
+        let mut out =
+            HostTensor::from_vec(&shape, self.data[r0 * row..r1 * row].to_vec());
+        out.dtype = self.dtype;
+        out
     }
 
     /// 1-D slice [i0, i1). An empty range yields a valid [0]-shaped tensor.
@@ -366,6 +370,13 @@ mod tests {
         let s = t.slice_rows(1, 3);
         assert_eq!(s.shape, vec![2, 2]);
         assert_eq!(s.data, vec![2., 3., 4., 5.]);
+        assert_eq!(s.dtype, DType::F32);
+        // Token (I32) tensors keep their dtype through the slice — the
+        // pipeline trainer slices micro-batches out of token batches.
+        let t = HostTensor::from_i32(&[4, 2], &[1, 2, 3, 4, 5, 6, 7, 8]);
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.dtype, DType::I32);
+        assert_eq!(s.as_i32(), vec![3, 4, 5, 6]);
     }
 
     #[test]

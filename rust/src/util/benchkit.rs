@@ -151,6 +151,30 @@ impl Bench {
     /// Record an externally-measured sample set (e.g. per-step times from a
     /// training loop) under this bench's reporting format.
     pub fn record(&mut self, name: &str, samples: &[f64], units: f64) {
+        self.record_with_meta(name, None, samples, units);
+    }
+
+    /// [`Bench::record`] with scoreboard metadata: externally-measured
+    /// samples that should land in the JSON scoreboard (e.g. the realized
+    /// comm/compute overlap fraction, encoded in seconds so `ns_per_iter`
+    /// carries fraction × 1e9).
+    pub fn record_case(
+        &mut self,
+        name: &str,
+        meta: CaseMeta,
+        samples: &[f64],
+        units: f64,
+    ) {
+        self.record_with_meta(name, Some(meta), samples, units);
+    }
+
+    fn record_with_meta(
+        &mut self,
+        name: &str,
+        meta: Option<CaseMeta>,
+        samples: &[f64],
+        units: f64,
+    ) {
         if !self.enabled(name) || samples.is_empty() {
             return;
         }
@@ -161,7 +185,7 @@ impl Bench {
             name: name.to_string(),
             stats,
             thr,
-            meta: None,
+            meta,
         });
     }
 
@@ -291,6 +315,16 @@ mod tests {
         let mut b = Bench::with_iters(1, 0);
         b.record("ext", &[0.1, 0.2, 0.3], 0.0);
         assert_eq!(b.results[0].stats.n, 3);
+        assert!(b.results[0].meta.is_none());
+        // record_case carries metadata -> persisted by write_json.
+        b.record_case(
+            "frac",
+            CaseMeta::new("overlap_fraction", "tiny", 4),
+            &[0.5],
+            0.0,
+        );
+        assert!(b.results[1].meta.is_some());
+        assert!((b.results[1].stats.mean - 0.5).abs() < 1e-12);
     }
 
     #[test]

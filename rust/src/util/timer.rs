@@ -50,6 +50,11 @@ struct Inner {
     spans: BTreeMap<String, Vec<(f64, f64)>>,
     /// Start times of currently-open guards per bucket.
     open: BTreeMap<String, Vec<f64>>,
+    /// Buckets whose intervals are kept verbatim (never collapsed) so
+    /// cross-bucket overlap can be measured after the fact. Opt-in
+    /// ([`Breakdown::retain_intervals`]) because memory then grows with
+    /// the number of spans, not the number of concurrent guards.
+    retained: std::collections::BTreeSet<String>,
 }
 
 /// Named duration accumulators for phase breakdowns (thread-safe; see the
@@ -85,25 +90,28 @@ fn bucket_total(inner: &Inner, name: &str) -> f64 {
         + inner.spans.get(name).map(|s| union_secs(s)).unwrap_or(0.0)
 }
 
-/// Total length of the union of (possibly overlapping) intervals.
-fn union_secs(spans: &[(f64, f64)]) -> f64 {
+/// Sorted, merged union of (possibly overlapping) intervals.
+fn merge_intervals(spans: &[(f64, f64)]) -> Vec<(f64, f64)> {
     if spans.is_empty() {
-        return 0.0;
+        return vec![];
     }
     let mut sorted = spans.to_vec();
     sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let mut total = 0.0;
-    let (mut lo, mut hi) = sorted[0];
+    let mut out: Vec<(f64, f64)> = vec![sorted[0]];
     for &(s, e) in &sorted[1..] {
-        if s <= hi {
-            hi = hi.max(e);
+        let last = out.last_mut().unwrap();
+        if s <= last.1 {
+            last.1 = last.1.max(e);
         } else {
-            total += hi - lo;
-            lo = s;
-            hi = e;
+            out.push((s, e));
         }
     }
-    total + (hi - lo)
+    out
+}
+
+/// Total length of the union of (possibly overlapping) intervals.
+fn union_secs(spans: &[(f64, f64)]) -> f64 {
+    merge_intervals(spans).iter().map(|(s, e)| e - s).sum()
 }
 
 impl Breakdown {
@@ -160,13 +168,60 @@ impl Breakdown {
             .push((start, end));
         let quiescent =
             inner.open.get(name).map(|v| v.is_empty()).unwrap_or(true);
-        if quiescent {
+        if quiescent && !inner.retained.contains(name) {
             if let Some(spans) = inner.spans.get_mut(name) {
                 let settled = union_secs(spans);
                 spans.clear();
                 *inner.closed.entry(name.to_string()).or_default() += settled;
             }
         }
+    }
+
+    /// Keep the named bucket's span intervals verbatim instead of
+    /// collapsing them on quiescence, so [`Breakdown::intervals`] and
+    /// [`Breakdown::intersection_secs`] can inspect them later (the
+    /// realized comm/compute overlap measurement). Memory for that bucket
+    /// then grows with recorded spans — bench/test opt-in.
+    pub fn retain_intervals(&self, name: &str) {
+        self.inner
+            .lock()
+            .unwrap()
+            .retained
+            .insert(name.to_string());
+    }
+
+    /// Closed wall intervals of a (retained) bucket, epoch-relative.
+    pub fn intervals(&self, name: &str) -> Vec<(f64, f64)> {
+        self.inner
+            .lock()
+            .unwrap()
+            .spans
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Wall-clock length of `union(a) ∩ union(b)` — how much of bucket
+    /// `a`'s wall time was concurrently covered by bucket `b`. Both
+    /// buckets must have been retained ([`Breakdown::retain_intervals`]);
+    /// non-retained (collapsed) history is invisible here.
+    pub fn intersection_secs(&self, a: &str, b: &str) -> f64 {
+        let ua = merge_intervals(&self.intervals(a));
+        let ub = merge_intervals(&self.intervals(b));
+        let (mut i, mut j, mut total) = (0usize, 0usize, 0.0f64);
+        while i < ua.len() && j < ub.len() {
+            let lo = ua[i].0.max(ub[j].0);
+            let hi = ua[i].1.min(ub[j].1);
+            if hi > lo {
+                total += hi - lo;
+            }
+            if ua[i].1 <= ub[j].1 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        total
     }
 
     /// Raw interval insert (no open-guard bookkeeping, no collapsing) —
@@ -406,6 +461,51 @@ mod tests {
             .get("fwd")
             .map(|v| v.is_empty())
             .unwrap_or(true));
+    }
+
+    #[test]
+    fn retained_intervals_survive_and_intersect() {
+        let b = Breakdown::new();
+        b.retain_intervals("comm");
+        b.retain_intervals("compute");
+        // Synthetic pattern: comm [0,2] and [5,6]; compute [1,4].
+        b.record_span("comm", 0.0, 2.0);
+        b.record_span("comm", 5.0, 6.0);
+        b.record_span("compute", 1.0, 4.0);
+        assert_eq!(b.intervals("comm").len(), 2);
+        // Totals still read through the union.
+        assert!((b.get("comm") - 3.0).abs() < 1e-12);
+        // comm ∩ compute = [1,2] -> 1s.
+        assert!((b.intersection_secs("comm", "compute") - 1.0).abs() < 1e-12);
+        assert!((b.intersection_secs("compute", "comm") - 1.0).abs() < 1e-12);
+        // Disjoint / missing buckets intersect to zero.
+        assert_eq!(b.intersection_secs("comm", "nope"), 0.0);
+    }
+
+    #[test]
+    fn retained_guards_do_not_collapse() {
+        let b = Breakdown::new();
+        b.retain_intervals("opt");
+        for _ in 0..3 {
+            let _g = b.span("opt");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert_eq!(b.intervals("opt").len(), 3);
+        assert!(b.get("opt") >= 0.004);
+        // A non-retained bucket still collapses (bounded memory).
+        for _ in 0..2 {
+            let _g = b.span("fwd");
+        }
+        assert!(b.intervals("fwd").is_empty());
+    }
+
+    #[test]
+    fn merge_intervals_merges() {
+        assert!(merge_intervals(&[]).is_empty());
+        assert_eq!(
+            merge_intervals(&[(3.0, 4.0), (0.0, 2.0), (1.0, 2.5)]),
+            vec![(0.0, 2.5), (3.0, 4.0)]
+        );
     }
 
     #[test]

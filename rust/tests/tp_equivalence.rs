@@ -179,14 +179,16 @@ fn tp_loss_decreases_over_steps() {
     );
 }
 
-/// StageGraph acceptance: the rank-parallel schedule (`--sched graph`,
-/// shard stages as sibling graph nodes joined at each all-reduce in
-/// ascending rank order) must reproduce the historical serial rank loop
-/// (`--sched serial`) **0-ulp** — losses and every updated parameter —
-/// at threads {1, 2, 4, 7}, for both the Pre-LN and the fused FAL
-/// schedules.
+/// StageGraph acceptance: the rank-parallel schedule (`--sched graph`)
+/// and the comm-overlapping schedule (`--sched overlap`, all-reduces as
+/// eager-value comm nodes) must both reproduce the historical serial rank
+/// loop (`--sched serial`) **0-ulp** — losses and every updated parameter
+/// — at threads {1, 2, 4, 7}, for both the Pre-LN and the fused FAL
+/// schedules. The CommLedger byte accounting is also schedule-invariant:
+/// same collective count, payload bytes and (same-sized payloads, so
+/// order-insensitive) modeled link time in all three modes.
 #[test]
-fn rank_parallel_graph_matches_serial_loop_zero_ulp() {
+fn overlap_graph_serial_three_way_zero_ulp() {
     let run = |variant: Variant, threads: usize, sched: SchedMode| {
         let eng = NativeBackend::synthetic_with_ctx(
             ExecCtx::new(threads).with_sched(sched),
@@ -206,19 +208,77 @@ fn rank_parallel_graph_matches_serial_loop_zero_ulp() {
             .iter()
             .map(|t| t.data.iter().map(|v| v.to_bits()).collect())
             .collect();
-        (losses, params)
+        (losses, params, tp.ledger.stats())
     };
     for variant in [Variant::PreLn, Variant::Fal] {
         for threads in [1usize, 2, 4, 7] {
-            let (loss_s, params_s) = run(variant, threads, SchedMode::Serial);
-            let (loss_g, params_g) = run(variant, threads, SchedMode::Graph);
+            let (loss_s, params_s, stats_s) =
+                run(variant, threads, SchedMode::Serial);
+            for sched in [SchedMode::Graph, SchedMode::Overlap] {
+                let (loss, params, stats) = run(variant, threads, sched);
+                assert_eq!(
+                    loss_s, loss,
+                    "{variant:?} t{threads} {sched:?}: losses diverged"
+                );
+                assert_eq!(
+                    params_s, params,
+                    "{variant:?} t{threads} {sched:?}: params not 0-ulp"
+                );
+                // Byte-accounting invariance across schedules.
+                assert_eq!(stats.allreduces, stats_s.allreduces);
+                assert_eq!(stats.broadcasts, stats_s.broadcasts);
+                assert_eq!(stats.allreduce_bytes, stats_s.allreduce_bytes);
+                assert_eq!(stats.broadcast_bytes, stats_s.broadcast_bytes);
+                let rel = (stats.modeled_secs - stats_s.modeled_secs).abs()
+                    / stats_s.modeled_secs.max(1e-12);
+                assert!(
+                    rel < 1e-9,
+                    "{variant:?} t{threads} {sched:?}: modeled comm drifted \
+                     ({} vs {})",
+                    stats.modeled_secs,
+                    stats_s.modeled_secs
+                );
+            }
+        }
+    }
+}
+
+/// The reuse-layer ablation rides the fused native train step (tag
+/// `falplus_k2`): its StageGraph execution (MHA ∥ MLP forks, degenerate
+/// chains) must also be 0-ulp identical across serial/graph/overlap at
+/// every thread count — losses and the full updated parameter state.
+#[test]
+fn falplus_k2_three_way_zero_ulp() {
+    let run = |threads: usize, sched: SchedMode| {
+        let eng = NativeBackend::synthetic_with_ctx(
+            ExecCtx::new(threads).with_sched(sched),
+        );
+        let b = batch(&eng, 11);
+        let mut t =
+            Trainer::new(&eng, "tiny", "falplus_k2", Schedule::Constant)
+                .unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..2 {
+            losses.push(t.train_step(&b).unwrap().loss.to_bits());
+        }
+        let params: Vec<Vec<u32>> = t
+            .params()
+            .iter()
+            .map(|p| p.data.iter().map(|v| v.to_bits()).collect())
+            .collect();
+        (losses, params)
+    };
+    for threads in [1usize, 2, 4, 7] {
+        let (loss_s, params_s) = run(threads, SchedMode::Serial);
+        for sched in [SchedMode::Graph, SchedMode::Overlap] {
+            let (loss, params) = run(threads, sched);
             assert_eq!(
-                loss_s, loss_g,
-                "{variant:?} t{threads}: losses diverged across schedules"
+                loss_s, loss,
+                "falplus_k2 t{threads} {sched:?}: losses diverged"
             );
             assert_eq!(
-                params_s, params_g,
-                "{variant:?} t{threads}: params not 0-ulp across schedules"
+                params_s, params,
+                "falplus_k2 t{threads} {sched:?}: params not 0-ulp"
             );
         }
     }

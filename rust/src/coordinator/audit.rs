@@ -1,0 +1,126 @@
+//! Registry of auditable schedules: every StageGraph the trainers run,
+//! constructed and capture-run so `fal audit` can statically verify the
+//! scheduler contracts before a real training step ever executes.
+//!
+//! Each entry builds the exact graph `train_step`/`forward_loss` would
+//! (same builders, same labels), runs it once in capture mode — forced
+//! serial, with a read recorder threaded through the [`Joined`] handle —
+//! and hands the resulting (spec, trace) pair to
+//! [`crate::runtime::audit::audit`]. Structural violations (cycles,
+//! dangling or self deps, duplicate labels) are *hard*; lints cover
+//! declared-but-never-read dependencies, unreachable nodes, and the
+//! paper's Fig 2 anti-pattern — a collective with zero independent
+//! compute to hide behind, reported with its predicted exposed seconds.
+//!
+//! [`Joined`]: crate::runtime::Joined
+
+use anyhow::Result;
+
+use crate::config::{TrainConfig, Variant, PCIE_GEN4};
+use crate::data::Batch;
+use crate::runtime::audit::{audit, AuditReport};
+use crate::runtime::native::kernels::AttnGeom;
+use crate::runtime::native::stages::{
+    fal_fused_bwd_graph, fal_fused_fwd_graph,
+};
+use crate::runtime::Backend;
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+
+use super::dp_pp::PpTrainer;
+use super::tp_trainer::TpTrainer;
+
+/// One audited schedule: its registry name and the auditor's verdict.
+pub struct GraphAudit {
+    pub name: String,
+    pub report: AuditReport,
+}
+
+/// Deterministic synthetic token batch of `b` rows × `s` positions.
+fn token_batch(b: usize, s: usize, vocab: usize) -> Batch {
+    let toks: Vec<i32> =
+        (0..b * s).map(|i| ((i * 7 + 3) % vocab) as i32).collect();
+    let tgts: Vec<i32> =
+        (0..b * s).map(|i| ((i * 5 + 1) % vocab) as i32).collect();
+    Batch {
+        tokens: HostTensor::from_i32(&[b, s], &toks),
+        targets: HostTensor::from_i32(&[b, s], &tgts),
+    }
+}
+
+/// Build, capture and audit every registered trainer graph on `engine`:
+/// the TP fwd+bwd schedules for preln/fal/falplus at tp=2, the GPipe
+/// pipeline forward, and the fused FAL block's intra-stage fork. Comm
+/// simulation runs at scale 1.0 so the overlap report predicts real
+/// exposed seconds on the ledger's link.
+pub fn audit_registered_graphs(engine: &dyn Backend) -> Result<Vec<GraphAudit>> {
+    let mut out = Vec::new();
+
+    for variant in [Variant::PreLn, Variant::Fal, Variant::FalPlus] {
+        let mut t = TpTrainer::new(
+            engine,
+            "tiny",
+            variant,
+            2,
+            PCIE_GEN4,
+            TrainConfig::default(),
+        )?;
+        t.comm_sim_scale = 1.0;
+        let batch = token_batch(t.batch, t.cfg.seq_len, t.cfg.vocab_size);
+        for (name, spec, trace) in t.captured_graphs(&batch)? {
+            out.push(GraphAudit { name, report: audit(&spec, &trace) });
+        }
+    }
+
+    let mut p = PpTrainer::new(engine, "tiny", 2, 2, PCIE_GEN4)?;
+    p.comm_sim_scale = 1.0;
+    let batch = token_batch(p.batch, p.cfg.seq_len, p.cfg.vocab_size);
+    let (name, spec, trace) = p.captured_graph(&batch)?;
+    out.push(GraphAudit { name, report: audit(&spec, &trace) });
+
+    // The fused FAL block's MHA ∥ MLP sibling fork (no collectives —
+    // audited for structure and read discipline).
+    let geom =
+        AttnGeom { batch: 2, seq: 32, heads: 2, kv_heads: 2, head_dim: 8 };
+    let (d, ff) = (16usize, 32usize);
+    let mut rng = Rng::new(7);
+    let owned: Vec<HostTensor> = vec![
+        HostTensor::randn(&[2, 32, d], 0.5, &mut rng), // x
+        HostTensor::randn(&[2, 32, d], 0.5, &mut rng), // fa
+        HostTensor::ones(&[d]),                        // ln1_g
+        HostTensor::zeros(&[d]),                       // ln1_b
+        HostTensor::ones(&[d]),                        // ln2_g
+        HostTensor::zeros(&[d]),                       // ln2_b
+        HostTensor::randn(&[d, d], 0.2, &mut rng),     // wq
+        HostTensor::randn(&[d, d], 0.2, &mut rng),     // wk
+        HostTensor::randn(&[d, d], 0.2, &mut rng),     // wv
+        HostTensor::randn(&[d, d], 0.2, &mut rng),     // wo
+        HostTensor::randn(&[d, ff], 0.2, &mut rng),    // w1
+        HostTensor::zeros(&[ff]),                      // b1
+        HostTensor::randn(&[ff, d], 0.2, &mut rng),    // w2
+        HostTensor::zeros(&[d]),                       // b2
+    ];
+    let inputs: Vec<&HostTensor> = owned.iter().collect();
+    let ctx = engine.exec_ctx();
+    {
+        let g = fal_fused_fwd_graph(&geom, &inputs);
+        let spec = g.spec();
+        let (_outs, trace) = g.run_captured(&ctx);
+        out.push(GraphAudit {
+            name: "block.fal_fused.fwd".into(),
+            report: audit(&spec, &trace),
+        });
+    }
+    let dout = HostTensor::randn(&[2, 32, d], 1.0, &mut rng);
+    {
+        let g = fal_fused_bwd_graph(&geom, &inputs, &dout);
+        let spec = g.spec();
+        let (_outs, trace) = g.run_captured(&ctx);
+        out.push(GraphAudit {
+            name: "block.fal_fused.bwd".into(),
+            report: audit(&spec, &trace),
+        });
+    }
+
+    Ok(out)
+}

@@ -30,7 +30,9 @@ use crate::costmodel::{
     ring_allreduce_time,
 };
 use crate::data::Batch;
-use crate::runtime::{Backend, ExecCtx, Manifest, StageGraph};
+use crate::runtime::{
+    Backend, ExecCtx, GraphSpec, GraphTrace, Manifest, StageGraph,
+};
 use crate::tensor::HostTensor;
 use crate::util::timer::Breakdown;
 
@@ -328,11 +330,11 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         }
     }
 
-    /// One pipelined forward pass over `batch` (which must carry
-    /// [`PpTrainer::batch`] rows); returns the token-weighted mean loss.
-    /// `&self`: the pipeline mutates nothing — the ledger and breakdown
-    /// are interior-mutable, so concurrent cells record freely.
-    pub fn forward_loss(&self, batch: &Batch) -> Result<f32> {
+    /// Split the step batch into per-micro-batch token/target slices.
+    fn micro_slices(
+        &self,
+        batch: &Batch,
+    ) -> Result<(Vec<HostTensor>, Vec<HostTensor>)> {
         anyhow::ensure!(
             batch.tokens.shape[0] == self.batch,
             "pipeline lowered for batch {}, got {}",
@@ -340,14 +342,23 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
             batch.tokens.shape[0]
         );
         let mb = self.micro_batch;
-        let micro_tokens: Vec<HostTensor> = (0..self.micro)
+        let toks = (0..self.micro)
             .map(|u| batch.tokens.slice_rows(u * mb, (u + 1) * mb))
             .collect();
-        let micro_targets: Vec<HostTensor> = (0..self.micro)
+        let tgts = (0..self.micro)
             .map(|u| batch.targets.slice_rows(u * mb, (u + 1) * mb))
             .collect();
-        let sim = self.send_sim_secs();
+        Ok((toks, tgts))
+    }
 
+    /// Wire the GPipe staircase as one StageGraph without running it;
+    /// returns the graph plus the last stage's head cells (the outputs).
+    fn build_forward_graph<'s>(
+        &'s self,
+        micro_tokens: &'s [HostTensor],
+        micro_targets: &'s [HostTensor],
+    ) -> (StageGraph<'s, StageOut>, Vec<usize>) {
+        let sim = self.send_sim_secs();
         let mut g: StageGraph<'_, StageOut> =
             StageGraph::new().with_breakdown(&self.breakdown);
         // prev_cell[s]: last cell node on device s (exclusivity chain);
@@ -357,18 +368,18 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         for u in 0..self.micro {
             let mut carry: Option<usize> = None; // send node feeding stage s
             for s in 0..self.stages {
-                let mut deps: Vec<usize> = Vec::with_capacity(2);
-                if let Some(c) = carry {
-                    deps.push(c);
-                }
-                if let Some(p) = prev_cell[s] {
-                    deps.push(p);
-                }
+                // The boundary send is a *data* dependency; the previous
+                // micro-batch's cell on the same device is pure
+                // scheduling (device exclusivity) — an ordering edge the
+                // cell never reads.
+                let deps: Vec<usize> = carry.into_iter().collect();
+                let ordering: Vec<usize> = prev_cell[s].into_iter().collect();
                 let toks = &micro_tokens[u];
                 let tgts = &micro_targets[u];
-                let cell = g.node(
+                let cell = g.node_with_ordering(
                     format!("cell[u{u},s{s}]"),
                     &deps,
+                    &ordering,
                     move |sub, j| {
                         let boundary = match carry {
                             Some(c) => Some(&dep_outs(j, c)?[0]),
@@ -396,7 +407,20 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
                 }
             }
         }
+        for &id in &head_ids {
+            g.mark_output(id);
+        }
+        (g, head_ids)
+    }
 
+    /// One pipelined forward pass over `batch` (which must carry
+    /// [`PpTrainer::batch`] rows); returns the token-weighted mean loss.
+    /// `&self`: the pipeline mutates nothing — the ledger and breakdown
+    /// are interior-mutable, so concurrent cells record freely.
+    pub fn forward_loss(&self, batch: &Batch) -> Result<f32> {
+        let (micro_tokens, micro_targets) = self.micro_slices(batch)?;
+        let (g, head_ids) =
+            self.build_forward_graph(&micro_tokens, &micro_targets);
         let outs: Vec<Vec<HostTensor>> =
             g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
         let (mut num, mut den) = (0.0f64, 0.0f64);
@@ -407,6 +431,29 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
             den += count;
         }
         Ok((num / den.max(1.0)) as f32)
+    }
+
+    /// Build and capture-run the GPipe forward graph for `fal audit`:
+    /// a forced-serial run with a read recorder, yielding the (name,
+    /// spec, trace) triple the static auditor checks. The device-
+    /// exclusivity edges show up as ordering deps, exempt from the
+    /// unused-dependency lint.
+    pub fn captured_graph(
+        &self,
+        batch: &Batch,
+    ) -> Result<(String, GraphSpec, GraphTrace)> {
+        let (micro_tokens, micro_targets) = self.micro_slices(batch)?;
+        let (g, _head_ids) =
+            self.build_forward_graph(&micro_tokens, &micro_targets);
+        let spec = g.spec();
+        let (outs, trace) = g.run_captured(&self.ctx);
+        let _: Vec<Vec<HostTensor>> =
+            outs.into_iter().collect::<Result<_>>()?;
+        Ok((
+            format!("pp.gpipe.t{}m{}.fwd", self.stages, self.micro),
+            spec,
+            trace,
+        ))
     }
 
     /// GPipe bubble fraction of this pipeline's schedule, (t−1)/(m+t−1) —

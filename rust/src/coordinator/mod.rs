@@ -12,6 +12,8 @@
 //!   execution (Fig 5 / Fig 8).
 //! * [`dp_pp`] — minimal data- and pipeline-parallel schedules for the
 //!   Apdx B comparison (Fig 10).
+//! * [`audit`] — the registry of auditable schedules: every trainer
+//!   StageGraph, capture-run and statically checked (`fal audit`).
 //!
 //! # The invariants the coordinator rests on
 //!
@@ -37,6 +39,7 @@
 //! `[d]`, so a hand-maintained ordering could drift without failing shape
 //! validation.
 
+pub mod audit;
 pub mod collectives;
 pub mod dp_pp;
 pub mod optim;

@@ -11,7 +11,13 @@
 //! FAL fwd  (block i>1):    fal_fused_fwd ────────────────AR──>     (1 AR)
 //! FAL bwd  (block i>1):    fal_fused_bwd ────────────────AR──>     (1 AR)
 //! FAL block 1:             attn_fwd ─AR─ lnf ─ mlp_fal_fwd ─AR─    (2 AR)
+//! FAL+ fwd (block i>1):    attn_fwd ─AR─ (lnf_i ∥) mlp_fal ─AR─   (2 AR)
 //! ```
+//!
+//! FAL+ keeps Pre-LN's two-collective count but re-normalizes the raw
+//! first-attention signal per block (`LNf_i`), so each main block's
+//! `lnf_fwd` depends only on the block-1 signal — independent compute the
+//! overlap schedule can run under the in-flight MHA all-reduce.
 //!
 //! The whole forward pass (and the whole backward pass) is **one
 //! StageGraph**: the per-rank shard executions of every stage are sibling
@@ -42,7 +48,9 @@ use anyhow::{Context, Result};
 
 use crate::config::{LinkSpec, ModelConfig, TrainConfig, Variant};
 use crate::data::Batch;
-use crate::runtime::{Backend, ExecCtx, Manifest, StageGraph};
+use crate::runtime::{
+    Backend, ExecCtx, GraphSpec, GraphTrace, Manifest, StageGraph,
+};
 use crate::tensor::HostTensor;
 use crate::util::timer::Breakdown;
 
@@ -93,8 +101,12 @@ pub struct TpTrainer<'e, B: Backend + ?Sized> {
 /// Forward stash for one block (primal inputs the bwd stages recompute from).
 struct BlockStash {
     x: HostTensor,
-    /// Pre-LN: h = x + full MHA out. FAL block 1: the assembled MHA out a1.
+    /// Pre-LN and FAL+ main blocks: h = x + full MHA out. FAL and FAL+
+    /// block 1: the assembled MHA out a1.
     h_or_a: Option<HostTensor>,
+    /// FAL+ main blocks: this block's own normalization LNf_i(fa) of the
+    /// first-attention signal — the MLP backward's `fa` primal.
+    fan: Option<HostTensor>,
 }
 
 use super::{dep_outs, dep_t, StageOut};
@@ -180,6 +192,52 @@ enum BwdIds {
     PreLn { mlp_ranks: Vec<usize>, attn_ranks: Vec<usize> },
     Fal { fused_ranks: Vec<usize> },
     Fal1 { mlp_ranks: Vec<usize>, lnf_id: usize, attn_ranks: Vec<usize> },
+    FalPlusMain { mlp_ranks: Vec<usize>, lnf_id: usize, attn_ranks: Vec<usize> },
+    FalPlusPrep { mlp_ranks: Vec<usize>, attn_ranks: Vec<usize> },
+}
+
+impl BwdIds {
+    /// Node ids whose outputs the post-run gradient accumulation reads —
+    /// marked as graph outputs so the auditor sees them as live sinks.
+    fn grad_nodes(&self) -> Vec<usize> {
+        match self {
+            BwdIds::PreLn { mlp_ranks, attn_ranks }
+            | BwdIds::FalPlusPrep { mlp_ranks, attn_ranks } => {
+                mlp_ranks.iter().chain(attn_ranks).copied().collect()
+            }
+            BwdIds::Fal { fused_ranks } => fused_ranks.clone(),
+            BwdIds::Fal1 { mlp_ranks, lnf_id, attn_ranks }
+            | BwdIds::FalPlusMain { mlp_ranks, lnf_id, attn_ranks } => {
+                mlp_ranks
+                    .iter()
+                    .chain(std::iter::once(lnf_id))
+                    .chain(attn_ranks)
+                    .copied()
+                    .collect()
+            }
+        }
+    }
+}
+
+/// A built (not yet run) forward StageGraph plus the node ids read
+/// post-run — what [`TpTrainer::forward_graph`] executes and
+/// `fal audit` capture-runs.
+struct FwdGraph<'s> {
+    g: StageGraph<'s, StageOut>,
+    /// Final hidden-state node.
+    x_id: usize,
+    /// FAL/FAL+: the replicated first-attention signal node.
+    fa_id: Option<usize>,
+    /// Per block: (input id, stashed h/a id, FAL+ stashed LNf_i(fa) id).
+    stash_ids: Vec<(usize, Option<usize>, Option<usize>)>,
+}
+
+/// A built backward StageGraph: the final embedding-cotangent node plus
+/// the per-block rank ids the gradient-accumulation replay walks.
+struct BwdGraph<'s> {
+    g: StageGraph<'s, StageOut>,
+    dx_id: usize,
+    recs: Vec<(usize, BwdIds)>,
 }
 
 use super::optim::zeros_like;
@@ -194,8 +252,12 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
         tc: TrainConfig,
     ) -> Result<TpTrainer<'e, B>> {
         anyhow::ensure!(
-            matches!(variant, Variant::PreLn | Variant::Fal),
-            "TP schedules implemented for preln and fal (the paper's Fig 2)"
+            matches!(
+                variant,
+                Variant::PreLn | Variant::Fal | Variant::FalPlus
+            ),
+            "TP schedules implemented for preln, fal and falplus (the \
+             paper's Fig 2)"
         );
         let cfg = engine.manifest().config(config)?.clone();
         let dims = shard_dims(&cfg, tp)?;
@@ -398,12 +460,10 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
     // Forward
     // ------------------------------------------------------------------
 
-    /// Forward pass as one StageGraph; returns (final hidden x, per-block
-    /// stash, FAL's fa signal).
-    fn forward_graph(
-        &self,
-        batch: &Batch,
-    ) -> Result<(HostTensor, Vec<BlockStash>, Option<HostTensor>)> {
+    /// Wire the forward pass as one StageGraph without running it. The
+    /// embedding executes eagerly — it is replicated work outside the
+    /// Fig 2 rank schedule — and enters the graph as the root node.
+    fn build_forward_graph(&self, batch: &Batch) -> Result<FwdGraph<'_>> {
         let embed = self.exec_in(
             &self.ctx,
             "embed_fwd",
@@ -422,8 +482,8 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
             StageGraph::new().with_breakdown(&self.breakdown);
         let mut x_id = g.node("embed.x", &[], move |_, _| Ok(vec![x0]));
         let mut fa_id: Option<usize> = None;
-        // (block input id, stashed h/a id) per block, read post-run.
-        let mut stash_ids: Vec<(usize, Option<usize>)> =
+        // (block input id, stashed h/a id, FAL+ lnf id), read post-run.
+        let mut stash_ids: Vec<(usize, Option<usize>, Option<usize>)> =
             Vec::with_capacity(self.cfg.n_layer);
 
         for li in 0..self.cfg.n_layer {
@@ -459,7 +519,7 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
                             Ok(vec![x])
                         },
                     );
-                    stash_ids.push((x_id, Some(h_id)));
+                    stash_ids.push((x_id, Some(h_id), None));
                     x_id = xn;
                 }
                 (Variant::Fal, 0) => {
@@ -491,7 +551,7 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
                             Ok(vec![x])
                         },
                     );
-                    stash_ids.push((x_id, Some(ar_a)));
+                    stash_ids.push((x_id, Some(ar_a), None));
                     fa_id = Some(fa);
                     x_id = xn;
                 }
@@ -514,40 +574,157 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
                             Ok(vec![x])
                         },
                     );
-                    stash_ids.push((x_id, None));
+                    stash_ids.push((x_id, None, None));
+                    x_id = xn;
+                }
+                (Variant::FalPlus, 0) => {
+                    // FAL+ preparation block: fa is the *raw* assembled
+                    // MHA out (no shared LNf) — each main block applies
+                    // its own LNf_i.  x2 = x1 + a1 + m(x1, a1).
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, 0, FwdStage::Attn, x_id, None,
+                    );
+                    let ar_a = self.ar_node_at(
+                        &mut g, "L0.ar.attn".into(), &ranks, 0, sim,
+                    );
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, 0, FwdStage::MlpFal, x_id, Some(ar_a),
+                    );
+                    let ar_m = self.ar_node_at(
+                        &mut g, "L0.ar.mlp".into(), &ranks, 0, sim,
+                    );
+                    let xn = g.node(
+                        "L0.resid.x",
+                        &[x_id, ar_a, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, x_id)?.clone();
+                            x.add_assign(dep_t(j, ar_a)?);
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                    stash_ids.push((x_id, Some(ar_a), None));
+                    fa_id = Some(ar_a);
+                    x_id = xn;
+                }
+                (Variant::FalPlus, _) => {
+                    // FAL+ main block: h = x + a, MLP consumes this
+                    // block's own LNf_i(fa). Two all-reduces like Pre-LN,
+                    // but lnf_fwd depends only on the block-1 signal — it
+                    // overlaps the in-flight MHA all-reduce under
+                    // `--sched overlap`.
+                    let fa = fa_id.expect("fa node set in block 1");
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, li, FwdStage::Attn, x_id, None,
+                    );
+                    let ar_a = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.attn"), &ranks, 0, sim,
+                    );
+                    let h_id = g.node(
+                        format!("L{li}.resid.h"),
+                        &[x_id, ar_a],
+                        move |_, j| {
+                            let mut h = dep_t(j, x_id)?.clone();
+                            h.add_assign(dep_t(j, ar_a)?);
+                            Ok(vec![h])
+                        },
+                    );
+                    let lnf = &self.shards[li][0].lnf;
+                    let fan = g.node(
+                        format!("L{li}.lnf_fwd"),
+                        &[fa],
+                        move |sub, j| {
+                            let a = dep_t(j, fa)?;
+                            let _s = self.breakdown.span("stage.lnf_fwd");
+                            self.exec_in(
+                                sub, "lnf_fwd", &[a, &lnf[0], &lnf[1]],
+                            )
+                        },
+                    );
+                    let ranks = self.fwd_rank_nodes(
+                        &mut g, li, FwdStage::MlpFal, h_id, Some(fan),
+                    );
+                    let ar_m = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.mlp"), &ranks, 0, sim,
+                    );
+                    let xn = g.node(
+                        format!("L{li}.resid.x"),
+                        &[h_id, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, h_id)?.clone();
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                    stash_ids.push((x_id, Some(h_id), Some(fan)));
                     x_id = xn;
                 }
                 _ => unreachable!(),
             }
         }
 
+        // Everything read after the run is a declared graph output (the
+        // auditor's reachability analysis starts from these).
+        for &(xin, ha, fan) in &stash_ids {
+            g.mark_output(xin);
+            if let Some(id) = ha {
+                g.mark_output(id);
+            }
+            if let Some(id) = fan {
+                g.mark_output(id);
+            }
+        }
+        if let Some(id) = fa_id {
+            g.mark_output(id);
+        }
+        g.mark_output(x_id);
+        Ok(FwdGraph { g, x_id, fa_id, stash_ids })
+    }
+
+    /// Forward pass as one StageGraph; returns (final hidden x, per-block
+    /// stash, FAL's fa signal).
+    fn forward_graph(
+        &self,
+        batch: &Batch,
+    ) -> Result<(HostTensor, Vec<BlockStash>, Option<HostTensor>)> {
+        let FwdGraph { g, x_id, fa_id, stash_ids } =
+            self.build_forward_graph(batch)?;
         let outs: Vec<Vec<HostTensor>> =
             g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
-        let mut stash = Vec::with_capacity(self.cfg.n_layer);
-        for &(xin, ha) in &stash_ids {
+        Ok(Self::collect_forward(&outs, x_id, fa_id, &stash_ids))
+    }
+
+    /// Assemble (final x, per-block stash, fa) from forward result slots.
+    fn collect_forward(
+        outs: &[Vec<HostTensor>],
+        x_id: usize,
+        fa_id: Option<usize>,
+        stash_ids: &[(usize, Option<usize>, Option<usize>)],
+    ) -> (HostTensor, Vec<BlockStash>, Option<HostTensor>) {
+        let mut stash = Vec::with_capacity(stash_ids.len());
+        for &(xin, ha, fan) in stash_ids {
             stash.push(BlockStash {
                 x: outs[xin][0].clone(),
                 h_or_a: ha.map(|id| outs[id][0].clone()),
+                fan: fan.map(|id| outs[id][0].clone()),
             });
         }
         let x_final = outs[x_id][0].clone();
         let fa = fa_id.map(|id| outs[id][0].clone());
-        Ok((x_final, stash, fa))
+        (x_final, stash, fa)
     }
 
     // ------------------------------------------------------------------
     // Backward
     // ------------------------------------------------------------------
 
-    /// Backward pass as one StageGraph (rank nodes + comm nodes + the
-    /// residual/dfa chain); gradient accumulation replays post-run in the
-    /// historical order. Returns the embedding cotangent dx.
-    fn backward_graph(
-        &self,
-        stash: &[BlockStash],
+    /// Wire the backward pass as one StageGraph without running it (rank
+    /// nodes + comm nodes + the residual/dfa chain).
+    fn build_backward_graph<'s>(
+        &'s self,
+        stash: &'s [BlockStash],
         dx_head: HostTensor,
-        grads: &mut NamedParams,
-    ) -> Result<HostTensor> {
+    ) -> Result<BwdGraph<'s>> {
         let sim = self.comm_sim_secs();
         let mut g: StageGraph<'_, StageOut> =
             StageGraph::new().with_breakdown(&self.breakdown);
@@ -723,10 +900,179 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
                     recs.push((li, BwdIds::Fal { fused_ranks }));
                     dx_id = new_dx;
                 }
+                (Variant::FalPlus, 0) => {
+                    // x2 = x1 + a1 + m(x1, a1): the MLP's fa primal is the
+                    // raw a1 (no LNf at the prep block), so its dfa output
+                    // joins da directly — plus the accumulated LNf_i
+                    // cotangents from every main block.
+                    let a1 = stash[0].h_or_a.as_ref().unwrap();
+                    let mlp_ranks = self.bwd_rank_nodes(
+                        &mut g,
+                        0,
+                        BwdStage::MlpFal { x: &stash[0].x, fa: a1 },
+                        dx_id,
+                    );
+                    let ar_dx_mlp = self.ar_node_at(
+                        &mut g, "L0.ar.dx_mlp".into(), &mlp_ranks, 0, sim,
+                    );
+                    let ar_dfa = self.ar_node_at(
+                        &mut g, "L0.ar.dfa".into(), &mlp_ranks, 1, sim,
+                    );
+                    let d0 = dx_id;
+                    let da_id = match dfa_acc_id {
+                        Some(acc) => g.node(
+                            "L0.da",
+                            &[d0, ar_dfa, acc],
+                            move |_, j| {
+                                let mut da = dep_t(j, d0)?.clone();
+                                da.add_assign(dep_t(j, ar_dfa)?);
+                                da.add_assign(dep_t(j, acc)?);
+                                Ok(vec![da])
+                            },
+                        ),
+                        None => g.node("L0.da", &[d0, ar_dfa], move |_, j| {
+                            let mut da = dep_t(j, d0)?.clone();
+                            da.add_assign(dep_t(j, ar_dfa)?);
+                            Ok(vec![da])
+                        }),
+                    };
+                    let attn_ranks = self.bwd_rank_nodes(
+                        &mut g, 0, BwdStage::Attn { x: &stash[0].x }, da_id,
+                    );
+                    let ar_dx_attn = self.ar_node_at(
+                        &mut g, "L0.ar.dx_attn".into(), &attn_ranks, 0, sim,
+                    );
+                    let new_dx = g.node(
+                        "L0.dx",
+                        &[ar_dx_attn, ar_dx_mlp, d0],
+                        move |_, j| {
+                            let mut dx = dep_t(j, ar_dx_attn)?.clone();
+                            dx.add_assign(dep_t(j, ar_dx_mlp)?);
+                            dx.add_assign(dep_t(j, d0)?); // direct residual
+                            Ok(vec![dx])
+                        },
+                    );
+                    recs.push((
+                        0,
+                        BwdIds::FalPlusPrep { mlp_ranks, attn_ranks },
+                    ));
+                    dx_id = new_dx;
+                }
+                (Variant::FalPlus, _) => {
+                    // x' = h + m(h, LNf_i(fa)), h = x + a. Two ledger
+                    // all-reduces per main block (dh, dx); the dfan
+                    // partials sum host-side (the same deferred-collective
+                    // convention as FAL's dfa chain) into ONE lnf_bwd per
+                    // block, whose dfa joins the cross-block accumulator
+                    // consumed at the prep block.
+                    let h = stash[li].h_or_a.as_ref().unwrap();
+                    let fan = stash[li].fan.as_ref().unwrap();
+                    let mlp_ranks = self.bwd_rank_nodes(
+                        &mut g,
+                        li,
+                        BwdStage::MlpFal { x: h, fa: fan },
+                        dx_id,
+                    );
+                    let ar_dh = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.dh"), &mlp_ranks, 0, sim,
+                    );
+                    let d0 = dx_id;
+                    let dh_id = g.node(
+                        format!("L{li}.dh"),
+                        &[ar_dh, d0],
+                        move |_, j| {
+                            let mut dh = dep_t(j, ar_dh)?.clone();
+                            dh.add_assign(dep_t(j, d0)?); // residual h -> x'
+                            Ok(vec![dh])
+                        },
+                    );
+                    let deps = mlp_ranks.clone();
+                    let dfan_id = g.node(
+                        format!("L{li}.dfan"),
+                        &mlp_ranks,
+                        move |_, j| {
+                            let mut acc = dep_outs(j, deps[0])?[1].clone();
+                            for &id in &deps[1..] {
+                                acc.add_assign(&dep_outs(j, id)?[1]);
+                            }
+                            Ok(vec![acc])
+                        },
+                    );
+                    // fan = LNf_i(fa): backward through this block's own
+                    // normalization (shard-0 parameters, replicated).
+                    let fa = self.fa_cache.as_ref().context("fa cache empty")?;
+                    let lnf = &self.shards[li][0].lnf;
+                    let lnf_id = g.node(
+                        format!("L{li}.lnf_bwd"),
+                        &[dfan_id],
+                        move |sub, j| {
+                            let d = dep_t(j, dfan_id)?;
+                            let _s = self.breakdown.span("stage.lnf_bwd");
+                            self.exec_in(
+                                sub,
+                                "lnf_bwd",
+                                &[fa, &lnf[0], &lnf[1], d],
+                            )
+                        },
+                    );
+                    dfa_acc_id = Some(match dfa_acc_id {
+                        None => lnf_id,
+                        Some(prev) => g.node(
+                            format!("L{li}.dfa.acc"),
+                            &[prev, lnf_id],
+                            move |_, j| {
+                                let mut acc = dep_t(j, prev)?.clone();
+                                acc.add_assign(&dep_outs(j, lnf_id)?[0]);
+                                Ok(vec![acc])
+                            },
+                        ),
+                    });
+                    let attn_ranks = self.bwd_rank_nodes(
+                        &mut g, li, BwdStage::Attn { x: &stash[li].x }, dh_id,
+                    );
+                    let ar_dx = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.dx"), &attn_ranks, 0, sim,
+                    );
+                    let new_dx = g.node(
+                        format!("L{li}.dx"),
+                        &[ar_dx, dh_id],
+                        move |_, j| {
+                            let mut dx = dep_t(j, ar_dx)?.clone();
+                            dx.add_assign(dep_t(j, dh_id)?); // residual x -> h
+                            Ok(vec![dx])
+                        },
+                    );
+                    recs.push((
+                        li,
+                        BwdIds::FalPlusMain { mlp_ranks, lnf_id, attn_ranks },
+                    ));
+                    dx_id = new_dx;
+                }
                 _ => unreachable!(),
             }
         }
 
+        // Everything the accumulation replay reads post-run is a declared
+        // graph output (the auditor's reachability starts from these).
+        for (_, rec) in &recs {
+            for id in rec.grad_nodes() {
+                g.mark_output(id);
+            }
+        }
+        g.mark_output(dx_id);
+        Ok(BwdGraph { g, dx_id, recs })
+    }
+
+    /// Backward pass as one StageGraph; gradient accumulation replays
+    /// post-run in the historical order. Returns the embedding cotangent.
+    fn backward_graph(
+        &self,
+        stash: &[BlockStash],
+        dx_head: HostTensor,
+        grads: &mut NamedParams,
+    ) -> Result<HostTensor> {
+        let BwdGraph { g, dx_id, recs } =
+            self.build_backward_graph(stash, dx_head)?;
         let outs: Vec<Vec<HostTensor>> =
             g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
 
@@ -763,9 +1109,76 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
                         self.accum_attn_grads(0, r, &outs[id][1..], grads);
                     }
                 }
+                BwdIds::FalPlusMain { mlp_ranks, lnf_id, attn_ranks } => {
+                    // mlp outputs: dh, dfan, dln2_g, dln2_b, dw1, db1,
+                    // dw2, db2; lnf outputs: dfa, dg, db (per-block LNf_i).
+                    for (r, &id) in mlp_ranks.iter().enumerate() {
+                        self.accum_mlp_grads(*li, r, &outs[id][2..], grads);
+                    }
+                    let key = |f: &str| format!("blocks.{li}.{f}");
+                    self.add_grad(grads, &key("lnf_g"), &outs[*lnf_id][1]);
+                    self.add_grad(grads, &key("lnf_b"), &outs[*lnf_id][2]);
+                    for (r, &id) in attn_ranks.iter().enumerate() {
+                        self.accum_attn_grads(*li, r, &outs[id][1..], grads);
+                    }
+                }
+                BwdIds::FalPlusPrep { mlp_ranks, attn_ranks } => {
+                    // Raw-a reuse: no LNf at the prep block, no lnf grads.
+                    for (r, &id) in mlp_ranks.iter().enumerate() {
+                        self.accum_mlp_grads(0, r, &outs[id][2..], grads);
+                    }
+                    for (r, &id) in attn_ranks.iter().enumerate() {
+                        self.accum_attn_grads(0, r, &outs[id][1..], grads);
+                    }
+                }
             }
         }
         Ok(outs[dx_id][0].clone())
+    }
+
+    // ------------------------------------------------------------------
+    // Audit capture
+    // ------------------------------------------------------------------
+
+    /// Build and capture-run the fwd + bwd StageGraphs for `fal audit`:
+    /// each graph executes serially with a read recorder threaded through
+    /// [`crate::runtime::Joined`], yielding the (name, spec, trace)
+    /// triples the static auditor checks. The backward graph is wired
+    /// from the captured forward's stash exactly as `train_step` would
+    /// (head cotangent = ones; parameters untouched).
+    pub fn captured_graphs(
+        &mut self,
+        batch: &Batch,
+    ) -> Result<Vec<(String, GraphSpec, GraphTrace)>> {
+        let tag = self.variant.name();
+        let (fwd_spec, fwd_trace, x_final, stash, fa) = {
+            let FwdGraph { g, x_id, fa_id, stash_ids } =
+                self.build_forward_graph(batch)?;
+            let spec = g.spec();
+            let (outs, trace) = g.run_captured(&self.ctx);
+            let outs: Vec<Vec<HostTensor>> =
+                outs.into_iter().collect::<Result<_>>()?;
+            let (x_final, stash, fa) =
+                Self::collect_forward(&outs, x_id, fa_id, &stash_ids);
+            (spec, trace, x_final, stash, fa)
+        };
+        if let Some(fa) = fa {
+            self.fa_cache = Some(fa);
+        }
+        let dx_head = HostTensor::ones(&x_final.shape);
+        let (bwd_spec, bwd_trace) = {
+            let BwdGraph { g, .. } =
+                self.build_backward_graph(&stash, dx_head)?;
+            let spec = g.spec();
+            let (outs, trace) = g.run_captured(&self.ctx);
+            let _: Vec<Vec<HostTensor>> =
+                outs.into_iter().collect::<Result<_>>()?;
+            (spec, trace)
+        };
+        Ok(vec![
+            (format!("tp{}.{tag}.fwd", self.tp), fwd_spec, fwd_trace),
+            (format!("tp{}.{tag}.bwd", self.tp), bwd_spec, bwd_trace),
+        ])
     }
 
     // ------------------------------------------------------------------

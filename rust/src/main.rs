@@ -5,6 +5,7 @@
 //! fal train --config small --variant fal [--steps 300] [--threads N] [--sched M] [--eval]
 //! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M] [--comm-sim S]
 //! fal pp --config tiny --stages 2 --micro 2 [--steps 4] [--threads N] [--sched M] [--comm-sim S]
+//! fal audit           # statically verify every registered StageGraph
 //! fal list            # artifacts + experiments
 //! ```
 //!
@@ -28,7 +29,7 @@ use fal::coordinator::dp_pp::PpTrainer;
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::experiments::{self, ExpCtx};
-use fal::runtime::{Backend, SchedMode};
+use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
 use fal::util::cli::Args;
 
 fn main() {
@@ -73,11 +74,12 @@ fn run() -> Result<()> {
         print_help();
         return Ok(());
     }
-    match args.expect_subcommand(&["exp", "train", "tp", "pp", "list"])? {
+    match args.expect_subcommand(&["exp", "train", "tp", "pp", "audit", "list"])? {
         "exp" => cmd_exp(&args),
         "train" => cmd_train(&args),
         "tp" => cmd_tp(&args),
         "pp" => cmd_pp(&args),
+        "audit" => cmd_audit(&args),
         "list" => cmd_list(&args),
         _ => {
             print_help();
@@ -94,6 +96,7 @@ fn print_help() {
          \x20 fal train --config small --variant fal [--steps N] [--threads N] [--sched M] [--eval]\n\
          \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
          \x20 fal pp --config tiny --stages 2 --micro 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
+         \x20 fal audit [--threads N] [--sched M]\n\
          \x20 fal list\n\
          \n\
          --threads N sizes the native backend's worker fan-out (default:\n\
@@ -224,6 +227,43 @@ fn cmd_pp(args: &Args) -> Result<()> {
     for (k, v) in t.breakdown.entries() {
         println!("  {k:<14} {v:.3}s");
     }
+    Ok(())
+}
+
+/// `fal audit`: construct every registered trainer StageGraph in capture
+/// mode, statically verify the scheduler contracts, and print per-graph
+/// violations plus the comm-overlap feasibility table. Exit is nonzero
+/// on hard violations (cycles, dangling/self deps, duplicate labels) —
+/// lints (unused deps, unreachable nodes, fully exposed collectives like
+/// Pre-LN's, the paper's Fig 2 claim) report without failing.
+fn cmd_audit(args: &Args) -> Result<()> {
+    // Strict env parsing: `fal audit` verifies the schedule the user
+    // thinks they configured, so an unparsable FAL_SCHED / FAL_THREADS
+    // is a hard error here, never a silent default.
+    let mut ctx = ExecCtx::from_env_strict()?;
+    if let Some(n) = threads_opt(args)? {
+        ctx = ExecCtx::new(n).with_sched(ctx.sched());
+    }
+    if let Some(m) = sched_opt(args)? {
+        ctx = ctx.with_sched(m);
+    }
+    let engine = NativeBackend::synthetic_with_ctx(ctx);
+    let audits =
+        fal::coordinator::audit::audit_registered_graphs(&engine)?;
+    let (mut hard, mut lints) = (0usize, 0usize);
+    for a in &audits {
+        print!("{}", a.report.render(&a.name));
+        hard += a.report.hard_count();
+        lints += a.report.lint_count();
+    }
+    println!(
+        "\naudited {} graphs: {hard} hard violation(s), {lints} lint(s)",
+        audits.len()
+    );
+    anyhow::ensure!(
+        hard == 0,
+        "{hard} hard violation(s) — these graphs cannot run"
+    );
     Ok(())
 }
 

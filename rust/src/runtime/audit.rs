@@ -1,0 +1,746 @@
+//! Static analysis for [`StageGraph`] schedules: audit a graph *before*
+//! it runs.
+//!
+//! The paper's contribution is a restructured dependency graph, so the
+//! repo's correctness rests on the scheduler honoring its contracts.
+//! Most of those contracts are checkable without executing anything: a
+//! [`GraphSpec`] (exported by [`StageGraph::spec`]) is the pure shape of
+//! a schedule — labels, data dependencies, ordering-only dependencies,
+//! and comm-node drain times — and [`structural_audit`] validates it for
+//! cycles, self-dependencies, dangling dependency ids, duplicate labels,
+//! and nodes unreachable from the declared outputs.
+//!
+//! The dynamic half, [`audit`], additionally takes a [`GraphTrace`]
+//! captured by [`StageGraph::run_captured`] (which dependencies each
+//! node actually read, and how long its value production took) and
+//! checks two schedule-quality properties:
+//!
+//! * **Unused declared dependencies** — a dep that is declared but never
+//!   read pessimizes the overlap scheduler (it delays the node for no
+//!   value) and hints at a stale hand-written schedule. Ordering-only
+//!   dependencies are exempt: they exist precisely to sequence without a
+//!   data flow.
+//! * **Exposed communication** — for every comm node, the set of nodes
+//!   neither upstream nor downstream of it is what [`SchedMode::Overlap`]
+//!   can run during the link drain. If that set holds *zero* compute,
+//!   the drain is fully serialized — the Fig 2 anti-pattern — and the
+//!   auditor reports the predicted exposed seconds using the same
+//!   `min(1, compute/comm)` bound as
+//!   [`crate::costmodel::timemodel::predicted_hidden_fraction`].
+//!
+//! Violations carry a [`Severity`]: `Hard` violations (cycles, self or
+//! dangling deps, duplicate labels) make a graph unrunnable or
+//! ambiguous and fail `fal audit` with a nonzero exit; `Lint`
+//! violations (unused deps, unreachable nodes, exposed comm) are
+//! reported but expected for some schedules — a Pre-LN graph is a
+//! strict chain, so its all-reduces being fully exposed *is* the
+//! paper's claim, not a bug.
+//!
+//! [`StageGraph`]: super::sched::StageGraph
+//! [`StageGraph::spec`]: super::sched::StageGraph::spec
+//! [`StageGraph::run_captured`]: super::sched::StageGraph::run_captured
+//! [`SchedMode::Overlap`]: super::sched::SchedMode::Overlap
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::costmodel::timemodel::predicted_hidden_fraction;
+
+/// The shape of one scheduled node, without its closure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    pub label: String,
+    /// Data dependencies: ids the node may read through `Joined`.
+    pub deps: Vec<usize>,
+    /// Ordering-only dependencies: scheduling edges with no data flow
+    /// (e.g. device exclusivity between pipeline microbatches).
+    pub ordering_deps: Vec<usize>,
+    /// `Some(secs)` for a communication node (the virtual link drain),
+    /// `None` for compute.
+    pub comm_sim_secs: Option<f64>,
+}
+
+impl NodeSpec {
+    /// Every scheduling edge: data deps then ordering deps.
+    pub fn all_deps(&self) -> impl Iterator<Item = usize> + '_ {
+        self.deps
+            .iter()
+            .chain(self.ordering_deps.iter())
+            .copied()
+    }
+
+    pub fn is_comm(&self) -> bool {
+        self.comm_sim_secs.is_some()
+    }
+}
+
+/// A schedule's pure shape — hand-constructible (the [`StageGraph`]
+/// builder rejects most hard violations at construction, so adversarial
+/// tests build specs directly).
+///
+/// [`StageGraph`]: super::sched::StageGraph
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GraphSpec {
+    pub nodes: Vec<NodeSpec>,
+    /// Node ids whose values the caller consumes after the run; the
+    /// roots of the reachability check. Empty = unknown, reachability
+    /// is skipped.
+    pub outputs: Vec<usize>,
+}
+
+/// What each node actually did during a captured run
+/// ([`StageGraph::run_captured`]).
+///
+/// [`StageGraph::run_captured`]: super::sched::StageGraph::run_captured
+#[derive(Debug, Clone, Default)]
+pub struct GraphTrace {
+    /// Per node: the dependency ids it read through `Joined::get`
+    /// (sorted, deduplicated).
+    pub reads: Vec<Vec<usize>>,
+    /// Per node: value-production wall-clock seconds (comm drains
+    /// excluded — the auditor models those from the spec).
+    pub secs: Vec<f64>,
+}
+
+/// How bad a violation is.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    /// The graph is unrunnable or ambiguous; `fal audit` exits nonzero.
+    Hard,
+    /// A schedule-quality hazard worth reporting, not a failure.
+    Lint,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Hard => "hard",
+            Severity::Lint => "lint",
+        })
+    }
+}
+
+/// One audit finding. `node`/`label` identify the offending node where
+/// there is a single one.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Violation {
+    /// A node depends on itself.
+    SelfDep { node: usize, label: String },
+    /// A dependency id that names no node in the graph.
+    DanglingDep { node: usize, label: String, dep: usize },
+    /// A dependency cycle; `nodes` are the ids stuck on it (sorted).
+    Cycle { nodes: Vec<usize> },
+    /// Two nodes share a label — reports and breakdowns would alias.
+    DuplicateLabel { label: String, nodes: Vec<usize> },
+    /// Declared data dependency never read in the captured run.
+    UnusedDep { node: usize, label: String, dep: usize },
+    /// No path from the node to any declared output.
+    Unreachable { node: usize, label: String },
+    /// A comm node with zero independent compute to hide its drain —
+    /// the Fig 2 serialization anti-pattern.
+    ExposedComm { node: usize, label: String, exposed_secs: f64 },
+}
+
+impl Violation {
+    pub fn severity(&self) -> Severity {
+        match self {
+            Violation::SelfDep { .. }
+            | Violation::DanglingDep { .. }
+            | Violation::Cycle { .. }
+            | Violation::DuplicateLabel { .. } => Severity::Hard,
+            Violation::UnusedDep { .. }
+            | Violation::Unreachable { .. }
+            | Violation::ExposedComm { .. } => Severity::Lint,
+        }
+    }
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Violation::SelfDep { node, label } => {
+                write!(f, "self-dep: node {node} {label:?} depends on itself")
+            }
+            Violation::DanglingDep { node, label, dep } => write!(
+                f,
+                "dangling-dep: node {node} {label:?} depends on {dep}, \
+                 which names no node"
+            ),
+            Violation::Cycle { nodes } => {
+                write!(f, "cycle: nodes {nodes:?} form a dependency cycle")
+            }
+            Violation::DuplicateLabel { label, nodes } => {
+                write!(f, "duplicate-label: {label:?} used by nodes {nodes:?}")
+            }
+            Violation::UnusedDep { node, label, dep } => write!(
+                f,
+                "unused-dep: node {node} {label:?} declares dependency \
+                 {dep} but never reads it"
+            ),
+            Violation::Unreachable { node, label } => write!(
+                f,
+                "unreachable: node {node} {label:?} has no path to any \
+                 declared output"
+            ),
+            Violation::ExposedComm { node, label, exposed_secs } => write!(
+                f,
+                "exposed-comm: comm node {node} {label:?} has no \
+                 independent compute to hide behind \
+                 ({exposed_secs:.6}s exposed)"
+            ),
+        }
+    }
+}
+
+/// Per-comm-node overlap feasibility: how much of the drain the overlap
+/// schedule could hide behind compute that is neither upstream nor
+/// downstream of it.
+#[derive(Debug, Clone)]
+pub struct CommOverlap {
+    pub node: usize,
+    pub label: String,
+    /// The modeled link drain (α–β ring time at the call site).
+    pub sim_secs: f64,
+    /// Captured seconds of compute independent of this node.
+    pub hideable_secs: f64,
+    /// `min(1, hideable/sim)` — the cost model's bound.
+    pub hidden_fraction: f64,
+    /// `max(0, sim - hideable)` — predicted serialized seconds.
+    pub exposed_secs: f64,
+}
+
+/// The result of a full audit: findings plus the comm-placement report.
+#[derive(Debug, Clone, Default)]
+pub struct AuditReport {
+    pub violations: Vec<Violation>,
+    pub comm: Vec<CommOverlap>,
+}
+
+impl AuditReport {
+    pub fn hard_count(&self) -> usize {
+        self.violations
+            .iter()
+            .filter(|v| v.severity() == Severity::Hard)
+            .count()
+    }
+
+    pub fn lint_count(&self) -> usize {
+        self.violations.len() - self.hard_count()
+    }
+
+    /// No hard violations (lints allowed).
+    pub fn is_clean(&self) -> bool {
+        self.hard_count() == 0
+    }
+
+    /// Total predicted exposed comm across the report's comm nodes.
+    pub fn exposed_secs(&self) -> f64 {
+        self.comm.iter().map(|c| c.exposed_secs).sum()
+    }
+
+    /// Human-readable report: one header line, then each violation and
+    /// the comm-overlap table.
+    pub fn render(&self, name: &str) -> String {
+        use fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "graph {name}: {} hard, {} lint, {} comm node(s), \
+             {:.6}s predicted exposed comm",
+            self.hard_count(),
+            self.lint_count(),
+            self.comm.len(),
+            self.exposed_secs(),
+        );
+        for v in &self.violations {
+            let _ = writeln!(out, "  [{}] {v}", v.severity());
+        }
+        if !self.comm.is_empty() {
+            let _ = writeln!(
+                out,
+                "  {:<28} {:>12} {:>12} {:>8} {:>12}",
+                "comm node", "sim_s", "hideable_s", "hidden", "exposed_s"
+            );
+            for c in &self.comm {
+                let _ = writeln!(
+                    out,
+                    "  {:<28} {:>12.6} {:>12.6} {:>7.0}% {:>12.6}",
+                    c.label,
+                    c.sim_secs,
+                    c.hideable_secs,
+                    c.hidden_fraction * 100.0,
+                    c.exposed_secs,
+                );
+            }
+        }
+        out
+    }
+}
+
+/// Structure-only checks: self/dangling deps, cycles, duplicate labels,
+/// unreachable nodes. Runs on any [`GraphSpec`], no execution needed —
+/// this is what the `debug_assertions` check at `StageGraph::run` entry
+/// uses.
+pub fn structural_audit(spec: &GraphSpec) -> Vec<Violation> {
+    let n = spec.nodes.len();
+    let mut out = vec![];
+
+    for (i, node) in spec.nodes.iter().enumerate() {
+        let mut flagged_self = false;
+        let mut dangling: Vec<usize> = vec![];
+        for d in node.all_deps() {
+            if d == i && !flagged_self {
+                flagged_self = true;
+                out.push(Violation::SelfDep { node: i, label: node.label.clone() });
+            }
+            if d >= n && !dangling.contains(&d) {
+                dangling.push(d);
+                out.push(Violation::DanglingDep {
+                    node: i,
+                    label: node.label.clone(),
+                    dep: d,
+                });
+            }
+        }
+    }
+
+    // Kahn's algorithm over the valid (in-range, non-self) edges: the
+    // nodes left unprocessed sit on (or behind) a cycle.
+    let mut indeg = vec![0usize; n];
+    let mut dependents: Vec<Vec<usize>> = vec![vec![]; n];
+    for (i, node) in spec.nodes.iter().enumerate() {
+        for d in node.all_deps() {
+            if d < n && d != i {
+                indeg[i] += 1;
+                dependents[d].push(i);
+            }
+        }
+    }
+    let mut queue: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut done = 0usize;
+    while let Some(i) = queue.pop() {
+        done += 1;
+        for &d in &dependents[i] {
+            indeg[d] -= 1;
+            if indeg[d] == 0 {
+                queue.push(d);
+            }
+        }
+    }
+    if done < n {
+        let nodes: Vec<usize> = (0..n).filter(|&i| indeg[i] > 0).collect();
+        out.push(Violation::Cycle { nodes });
+    }
+
+    let mut by_label: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, node) in spec.nodes.iter().enumerate() {
+        by_label.entry(&node.label).or_default().push(i);
+    }
+    for (label, nodes) in by_label {
+        if nodes.len() > 1 {
+            out.push(Violation::DuplicateLabel {
+                label: label.to_string(),
+                nodes,
+            });
+        }
+    }
+
+    if !spec.outputs.is_empty() {
+        let mut reached = vec![false; n];
+        let mut stack: Vec<usize> =
+            spec.outputs.iter().copied().filter(|&o| o < n).collect();
+        while let Some(i) = stack.pop() {
+            if reached[i] {
+                continue;
+            }
+            reached[i] = true;
+            for d in spec.nodes[i].all_deps() {
+                if d < n && d != i {
+                    stack.push(d);
+                }
+            }
+        }
+        for (i, node) in spec.nodes.iter().enumerate() {
+            if !reached[i] {
+                out.push(Violation::Unreachable {
+                    node: i,
+                    label: node.label.clone(),
+                });
+            }
+        }
+    }
+
+    out
+}
+
+/// Reachability over every scheduling edge: ancestors (`up = true`) or
+/// descendants (`up = false`) of `start`, excluding `start` itself.
+/// Robust to cycles.
+fn closure(spec: &GraphSpec, start: usize, up: bool) -> Vec<bool> {
+    let n = spec.nodes.len();
+    // edges[i] = neighbors of i in the walk direction.
+    let mut edges: Vec<Vec<usize>> = vec![vec![]; n];
+    for (i, node) in spec.nodes.iter().enumerate() {
+        for d in node.all_deps() {
+            if d < n && d != i {
+                if up {
+                    edges[i].push(d);
+                } else {
+                    edges[d].push(i);
+                }
+            }
+        }
+    }
+    let mut seen = vec![false; n];
+    let mut stack = edges[start].clone();
+    while let Some(i) = stack.pop() {
+        if seen[i] {
+            continue;
+        }
+        seen[i] = true;
+        stack.extend(edges[i].iter().copied());
+    }
+    seen
+}
+
+/// Full audit: structural checks plus the trace-driven ones — unused
+/// declared dependencies and the per-comm-node overlap feasibility
+/// report. `trace` must come from `run_captured` on the same graph
+/// (or be hand-built for adversarial tests).
+pub fn audit(spec: &GraphSpec, trace: &GraphTrace) -> AuditReport {
+    let n = spec.nodes.len();
+    let mut violations = structural_audit(spec);
+    let structurally_broken =
+        violations.iter().any(|v| v.severity() == Severity::Hard);
+
+    for (i, node) in spec.nodes.iter().enumerate() {
+        let Some(reads) = trace.reads.get(i) else { continue };
+        for &d in &node.deps {
+            if !reads.contains(&d) {
+                violations.push(Violation::UnusedDep {
+                    node: i,
+                    label: node.label.clone(),
+                    dep: d,
+                });
+            }
+        }
+    }
+
+    let mut comm = vec![];
+    if !structurally_broken {
+        for (c, node) in spec.nodes.iter().enumerate() {
+            let Some(sim_secs) = node.comm_sim_secs else { continue };
+            let anc = closure(spec, c, true);
+            let desc = closure(spec, c, false);
+            let independent: Vec<usize> = (0..n)
+                .filter(|&i| {
+                    i != c
+                        && !anc[i]
+                        && !desc[i]
+                        && !spec.nodes[i].is_comm()
+                })
+                .collect();
+            let hideable_secs: f64 = independent
+                .iter()
+                .map(|&i| trace.secs.get(i).copied().unwrap_or(0.0))
+                .sum();
+            let hidden_fraction =
+                predicted_hidden_fraction(hideable_secs, sim_secs);
+            let exposed_secs = (sim_secs - hideable_secs).max(0.0);
+            if independent.is_empty() && sim_secs > 0.0 {
+                violations.push(Violation::ExposedComm {
+                    node: c,
+                    label: node.label.clone(),
+                    exposed_secs,
+                });
+            }
+            comm.push(CommOverlap {
+                node: c,
+                label: node.label.clone(),
+                sim_secs,
+                hideable_secs,
+                hidden_fraction,
+                exposed_secs,
+            });
+        }
+    }
+
+    AuditReport { violations, comm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(label: &str, deps: &[usize]) -> NodeSpec {
+        NodeSpec {
+            label: label.to_string(),
+            deps: deps.to_vec(),
+            ordering_deps: vec![],
+            comm_sim_secs: None,
+        }
+    }
+
+    fn comm(label: &str, deps: &[usize], sim: f64) -> NodeSpec {
+        NodeSpec { comm_sim_secs: Some(sim), ..node(label, deps) }
+    }
+
+    fn full_trace(spec: &GraphSpec) -> GraphTrace {
+        // A trace where every declared data dep was read and every node
+        // took 1ms.
+        GraphTrace {
+            reads: spec.nodes.iter().map(|n| n.deps.clone()).collect(),
+            secs: vec![1e-3; spec.nodes.len()],
+        }
+    }
+
+    fn kinds(vs: &[Violation]) -> Vec<&'static str> {
+        vs.iter()
+            .map(|v| match v {
+                Violation::SelfDep { .. } => "self",
+                Violation::DanglingDep { .. } => "dangling",
+                Violation::Cycle { .. } => "cycle",
+                Violation::DuplicateLabel { .. } => "dup",
+                Violation::UnusedDep { .. } => "unused",
+                Violation::Unreachable { .. } => "unreachable",
+                Violation::ExposedComm { .. } => "exposed",
+            })
+            .collect()
+    }
+
+    #[test]
+    fn clean_graph_has_no_violations() {
+        let spec = GraphSpec {
+            nodes: vec![
+                node("a", &[]),
+                node("b", &[0]),
+                comm("ar", &[1], 1e-3),
+                node("busy", &[]),
+                node("tail", &[2, 3]),
+            ],
+            outputs: vec![4],
+        };
+        let report = audit(&spec, &full_trace(&spec));
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+        assert!(report.is_clean());
+        assert_eq!(report.comm.len(), 1);
+        // `busy` (1ms) fully hides the 1ms drain.
+        assert!((report.comm[0].hidden_fraction - 1.0).abs() < 1e-12);
+        assert_eq!(report.comm[0].exposed_secs, 0.0);
+    }
+
+    #[test]
+    fn self_dependency_is_hard() {
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[0])],
+            outputs: vec![],
+        };
+        let vs = structural_audit(&spec);
+        assert!(kinds(&vs).contains(&"self"), "{vs:?}");
+        assert_eq!(vs[0].severity(), Severity::Hard);
+    }
+
+    #[test]
+    fn dangling_dependency_is_hard() {
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[]), node("b", &[7])],
+            outputs: vec![],
+        };
+        let vs = structural_audit(&spec);
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::DanglingDep { node: 1, dep: 7, .. }
+            )),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn cycle_is_detected() {
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[1]), node("b", &[0]), node("c", &[1])],
+            outputs: vec![],
+        };
+        let vs = structural_audit(&spec);
+        // a and b form the cycle; c is stuck behind it.
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::Cycle { nodes } if nodes.contains(&0) && nodes.contains(&1)
+            )),
+            "{vs:?}"
+        );
+    }
+
+    #[test]
+    fn ordering_dep_cycle_is_detected() {
+        let mut a = node("a", &[]);
+        a.ordering_deps = vec![1];
+        let mut b = node("b", &[]);
+        b.ordering_deps = vec![0];
+        let spec = GraphSpec { nodes: vec![a, b], outputs: vec![] };
+        assert!(kinds(&structural_audit(&spec)).contains(&"cycle"));
+    }
+
+    #[test]
+    fn duplicate_labels_are_hard() {
+        let spec = GraphSpec {
+            nodes: vec![node("x", &[]), node("x", &[])],
+            outputs: vec![],
+        };
+        let vs = structural_audit(&spec);
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::DuplicateLabel { nodes, .. } if nodes == &[0, 1]
+            )),
+            "{vs:?}"
+        );
+        assert_eq!(vs[0].severity(), Severity::Hard);
+    }
+
+    #[test]
+    fn unused_declared_dep_is_linted() {
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[]), node("b", &[0])],
+            outputs: vec![],
+        };
+        let trace = GraphTrace {
+            reads: vec![vec![], vec![]], // b never read a
+            secs: vec![0.0, 0.0],
+        };
+        let report = audit(&spec, &trace);
+        assert_eq!(kinds(&report.violations), vec!["unused"]);
+        assert_eq!(report.violations[0].severity(), Severity::Lint);
+        assert!(report.is_clean());
+    }
+
+    #[test]
+    fn ordering_deps_are_exempt_from_unused_lint() {
+        let mut b = node("b", &[]);
+        b.ordering_deps = vec![0];
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[]), b],
+            outputs: vec![],
+        };
+        let trace = GraphTrace {
+            reads: vec![vec![], vec![]],
+            secs: vec![0.0, 0.0],
+        };
+        assert!(audit(&spec, &trace).violations.is_empty());
+    }
+
+    #[test]
+    fn unreachable_node_is_linted() {
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[]), node("b", &[0]), node("orphan", &[])],
+            outputs: vec![1],
+        };
+        let vs = structural_audit(&spec);
+        assert!(
+            vs.iter().any(|v| matches!(
+                v,
+                Violation::Unreachable { node: 2, .. }
+            )),
+            "{vs:?}"
+        );
+        // Without declared outputs the check is skipped.
+        let spec = GraphSpec { outputs: vec![], ..spec };
+        assert!(structural_audit(&spec).is_empty());
+    }
+
+    #[test]
+    fn fully_serialized_comm_is_flagged_with_exposed_seconds() {
+        // Strict chain a -> ar -> b: nothing can hide the drain.
+        let spec = GraphSpec {
+            nodes: vec![
+                node("a", &[]),
+                comm("ar", &[0], 0.25),
+                node("b", &[1]),
+            ],
+            outputs: vec![2],
+        };
+        let report = audit(&spec, &full_trace(&spec));
+        match &report.violations[..] {
+            [Violation::ExposedComm { node: 1, exposed_secs, .. }] => {
+                assert!((exposed_secs - 0.25).abs() < 1e-12);
+            }
+            other => panic!("expected one ExposedComm, got {other:?}"),
+        }
+        assert_eq!(report.comm[0].hidden_fraction, 0.0);
+        assert!(report.is_clean(), "exposed comm is a lint, not hard");
+    }
+
+    #[test]
+    fn partially_hidden_comm_reports_fraction_without_violation() {
+        // 2ms of independent compute vs a 4ms drain: half hidden.
+        let spec = GraphSpec {
+            nodes: vec![
+                node("a", &[]),
+                comm("ar", &[0], 4e-3),
+                node("busy1", &[]),
+                node("busy2", &[]),
+                node("tail", &[1, 2, 3]),
+            ],
+            outputs: vec![4],
+        };
+        let report = audit(&spec, &full_trace(&spec));
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+        let c = &report.comm[0];
+        assert!((c.hideable_secs - 2e-3).abs() < 1e-12);
+        assert!((c.hidden_fraction - 0.5).abs() < 1e-12);
+        assert!((c.exposed_secs - 2e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn other_comm_nodes_do_not_count_as_hideable_compute() {
+        // Two parallel comm nodes cannot hide each other (one link).
+        let spec = GraphSpec {
+            nodes: vec![
+                node("a", &[]),
+                comm("ar1", &[0], 1e-3),
+                comm("ar2", &[0], 1e-3),
+                node("tail", &[1, 2]),
+            ],
+            outputs: vec![3],
+        };
+        let report = audit(&spec, &full_trace(&spec));
+        assert_eq!(
+            kinds(&report.violations),
+            vec!["exposed", "exposed"],
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[test]
+    fn zero_sim_comm_is_not_flagged() {
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[]), comm("ar", &[0], 0.0)],
+            outputs: vec![],
+        };
+        let report = audit(&spec, &full_trace(&spec));
+        assert!(report.violations.is_empty());
+        assert_eq!(report.comm[0].hidden_fraction, 1.0);
+    }
+
+    #[test]
+    fn report_renders_header_violations_and_table() {
+        let spec = GraphSpec {
+            nodes: vec![node("a", &[]), comm("ar", &[0], 0.5)],
+            outputs: vec![],
+        };
+        let report = audit(&spec, &full_trace(&spec));
+        let text = report.render("tp.preln.fwd");
+        assert!(text.contains("graph tp.preln.fwd"), "{text}");
+        assert!(text.contains("exposed-comm"), "{text}");
+        assert!(text.contains("hideable_s"), "{text}");
+    }
+
+    #[test]
+    fn severity_displays() {
+        assert_eq!(Severity::Hard.to_string(), "hard");
+        assert_eq!(Severity::Lint.to_string(), "lint");
+    }
+}

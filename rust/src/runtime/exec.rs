@@ -100,6 +100,32 @@ impl ExecCtx {
         }
     }
 
+    /// Strict parse of a raw `FAL_THREADS` value: `None` (unset) is
+    /// auto-detect, an unparsable value is an error — the validating
+    /// counterpart of the [`ExecCtx::from_env`] warn-and-fallback path.
+    pub fn parse_threads_env_value(v: Option<&str>) -> anyhow::Result<usize> {
+        match v {
+            None => Ok(0),
+            Some(s) => s.trim().parse::<usize>().map_err(|_| {
+                anyhow::anyhow!(
+                    "invalid {THREADS_ENV}: {s:?} is not a thread count \
+                     (integer, 0 = auto)"
+                )
+            }),
+        }
+    }
+
+    /// Strict variant of [`ExecCtx::from_env`]: unparsable `FAL_SCHED`
+    /// or `FAL_THREADS` are hard errors rather than warnings. `fal
+    /// audit` uses this — a validation pass must not itself run on
+    /// silently-defaulted configuration.
+    pub fn from_env_strict() -> anyhow::Result<ExecCtx> {
+        let sched = SchedMode::from_env_strict()?;
+        let threads = std::env::var(THREADS_ENV).ok();
+        let threads = Self::parse_threads_env_value(threads.as_deref())?;
+        Ok(ExecCtx::new(threads).with_sched(sched))
+    }
+
     /// This context with an explicit schedule mode (the CLI `--sched`
     /// override).
     pub fn with_sched(self, sched: SchedMode) -> ExecCtx {
@@ -494,6 +520,24 @@ mod tests {
         assert_eq!(c.with_workers(0).workers(), 1);
         // Never grows beyond the current pool.
         assert_eq!(c.with_workers(3).with_workers(99).workers(), 3);
+    }
+
+    #[test]
+    fn threads_env_value_parses_strictly() {
+        // Pure parse of the raw env value — tests never mutate the real
+        // FAL_THREADS (the harness runs tests concurrently and CI pins
+        // it per matrix leg).
+        assert_eq!(ExecCtx::parse_threads_env_value(None).unwrap(), 0);
+        assert_eq!(ExecCtx::parse_threads_env_value(Some("4")).unwrap(), 4);
+        assert_eq!(
+            ExecCtx::parse_threads_env_value(Some(" 0 ")).unwrap(),
+            0
+        );
+        let err =
+            ExecCtx::parse_threads_env_value(Some("many")).unwrap_err();
+        assert!(err.to_string().contains(THREADS_ENV), "{err}");
+        assert!(ExecCtx::parse_threads_env_value(Some("")).is_err());
+        assert!(ExecCtx::parse_threads_env_value(Some("-1")).is_err());
     }
 
     #[test]

@@ -30,14 +30,21 @@
 //! module layers the [`StageGraph`] scheduler on top: stage closures with
 //! declared dependencies, executed rank-/branch-parallel under
 //! `--sched graph` (bit-identical to `--sched serial` at every thread
-//! count — docs/ARCHITECTURE.md §1c).
+//! count — docs/ARCHITECTURE.md §1c). The [`audit`] module statically
+//! verifies any [`StageGraph`] *before* it runs — structure (cycles,
+//! dangling/self deps, duplicate labels), read discipline against a
+//! captured trace, and comm placement (the Fig 2 exposure report) —
+//! and [`model_check`] exhaustively explores the overlap scheduler's
+//! interleavings on small model DAGs (docs/ARCHITECTURE.md §1e).
 
 pub mod artifact;
+pub mod audit;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod exec;
 #[cfg(feature = "pjrt")]
 pub mod literal;
+pub mod model_check;
 pub mod native;
 pub mod sched;
 pub mod slots;
@@ -51,6 +58,7 @@ use anyhow::{bail, Result};
 use crate::tensor::HostTensor;
 
 pub use artifact::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};
+pub use audit::{AuditReport, GraphSpec, GraphTrace, Severity, Violation};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
 pub use exec::ExecCtx;

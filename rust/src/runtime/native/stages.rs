@@ -277,15 +277,32 @@ pub fn mlp_bwd(
 /// `--sched serial`, bit-identical either way (the branch kernels chunk
 /// by [`ExecCtx::threads`], which forking leaves untouched).
 pub fn fal_fused_fwd(ctx: &ExecCtx, g: &AttnGeom, i: &[&HostTensor]) -> HostTensor {
-    let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
-    let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
-    let mut sg = StageGraph::new();
-    sg.node("mha_fwd", &[], |c, _| attn_fwd(c, g, i[0], &attn_p).out);
-    sg.node("mlp_fwd", &[], |c, _| mlp_fwd(c, i[0], Some(i[1]), &mlp_p).out);
-    let mut outs = sg.run(ctx);
+    let mut outs = fal_fused_fwd_graph(g, i).run(ctx);
     let m_p = outs.pop().unwrap();
     let a_p = outs.pop().unwrap();
     add(&a_p, &m_p)
+}
+
+/// The fused forward as a buildable [`StageGraph`] — two sibling output
+/// nodes (attention partial, MLP partial) the caller adds. Exposed so
+/// `fal audit` can capture and statically validate the fused-block
+/// schedule like any trainer graph.
+pub fn fal_fused_fwd_graph<'a>(
+    g: &'a AttnGeom,
+    i: &[&'a HostTensor],
+) -> StageGraph<'a, HostTensor> {
+    let x = i[0];
+    let fa = i[1];
+    let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
+    let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
+    let mut sg = StageGraph::new();
+    let a = sg.node("mha_fwd", &[], move |c, _| attn_fwd(c, g, x, &attn_p).out);
+    let m = sg.node("mlp_fwd", &[], move |c, _| {
+        mlp_fwd(c, x, Some(fa), &mlp_p).out
+    });
+    sg.mark_output(a);
+    sg.mark_output(m);
+    sg
 }
 
 /// VJP of `fal_fused_fwd`: outputs [dx, dfa, dln1_g, dln1_b, dln2_g,
@@ -297,14 +314,7 @@ pub fn fal_fused_bwd(
     i: &[&HostTensor],
     dout: &HostTensor,
 ) -> Vec<HostTensor> {
-    let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
-    let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
-    let mut sg = StageGraph::new();
-    sg.node("mha_bwd", &[], |c, _| attn_bwd(c, g, i[0], &attn_p, dout));
-    sg.node("mlp_bwd", &[], |c, _| {
-        mlp_bwd(c, i[0], Some(i[1]), &mlp_p, dout)
-    });
-    let mut outs = sg.run(ctx);
+    let mut outs = fal_fused_bwd_graph(g, i, dout).run(ctx);
     let m = outs.pop().unwrap();
     let a = outs.pop().unwrap();
     // a: [dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo]
@@ -326,6 +336,29 @@ pub fn fal_fused_bwd(
         m[6].clone(),
         m[7].clone(),
     ]
+}
+
+/// The fused backward as a buildable [`StageGraph`]: the sibling
+/// attention / MLP VJP nodes ([`fal_fused_fwd_graph`]'s counterpart).
+pub fn fal_fused_bwd_graph<'a>(
+    g: &'a AttnGeom,
+    i: &[&'a HostTensor],
+    dout: &'a HostTensor,
+) -> StageGraph<'a, Vec<HostTensor>> {
+    let x = i[0];
+    let fa = i[1];
+    let attn_p = [i[2], i[3], i[6], i[7], i[8], i[9]];
+    let mlp_p = [i[4], i[5], i[10], i[11], i[12], i[13]];
+    let mut sg = StageGraph::new();
+    let a = sg.node("mha_bwd", &[], move |c, _| {
+        attn_bwd(c, g, x, &attn_p, dout)
+    });
+    let m = sg.node("mlp_bwd", &[], move |c, _| {
+        mlp_bwd(c, x, Some(fa), &mlp_p, dout)
+    });
+    sg.mark_output(a);
+    sg.mark_output(m);
+    sg
 }
 
 // ---------------------------------------------------------------------------

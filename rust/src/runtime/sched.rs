@@ -62,8 +62,9 @@
 
 use std::sync::{Condvar, Mutex, OnceLock};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use super::audit::{GraphSpec, GraphTrace, NodeSpec};
 use super::exec::ExecCtx;
 use crate::util::timer::{Breakdown, SpanGuard};
 
@@ -120,6 +121,25 @@ impl SchedMode {
         }
     }
 
+    /// Strict parse of a raw environment value: `None` (unset) is the
+    /// default mode, an unparsable value is an error. [`SchedMode::from_env`]
+    /// warns and falls back instead — contexts that validate configuration
+    /// (`fal audit`) want the error.
+    pub fn parse_env_value(v: Option<&str>) -> Result<SchedMode> {
+        match v {
+            None => Ok(SchedMode::default()),
+            Some(s) => SchedMode::parse(s),
+        }
+    }
+
+    /// Strict variant of [`SchedMode::from_env`]: an unparsable
+    /// `FAL_SCHED` is a hard error rather than a warning.
+    pub fn from_env_strict() -> Result<SchedMode> {
+        let v = std::env::var(SCHED_ENV).ok();
+        SchedMode::parse_env_value(v.as_deref())
+            .with_context(|| format!("invalid {SCHED_ENV}"))
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             SchedMode::Serial => "serial",
@@ -147,13 +167,16 @@ pub struct Joined<'g, T> {
     results: &'g [OnceLock<T>],
     /// The reading node's declared dependencies — the only ids it may get.
     deps: &'g [usize],
+    /// Capture mode ([`StageGraph::run_captured`]): every `get` records
+    /// the id read, feeding the auditor's unused-dependency lint.
+    recorder: Option<&'g Mutex<Vec<usize>>>,
 }
 
 impl<'g, T> Joined<'g, T> {
     /// The result of dependency node `id`. Panics if `id` was not declared
-    /// in the reading node's dependency list — an undeclared read could
-    /// silently race the schedule, so the contract is enforced, not just
-    /// documented.
+    /// in the reading node's *data* dependency list (ordering-only deps
+    /// carry no value) — an undeclared read could silently race the
+    /// schedule, so the contract is enforced, not just documented.
     pub fn get(&self, id: usize) -> &T {
         assert!(
             self.deps.contains(&id),
@@ -161,6 +184,9 @@ impl<'g, T> Joined<'g, T> {
              (declared: {:?})",
             self.deps
         );
+        if let Some(rec) = self.recorder {
+            rec.lock().unwrap().push(id);
+        }
         self.results[id]
             .get()
             .expect("StageGraph: reading a node that has not completed")
@@ -178,11 +204,20 @@ enum NodeKind {
 }
 
 struct Node<'a, T> {
-    #[allow(dead_code)]
     label: String,
     deps: Vec<usize>,
+    /// Ordering-only dependencies: the scheduler waits on them, but
+    /// their values are not readable through [`Joined`].
+    ordering: Vec<usize>,
     kind: NodeKind,
     run: NodeFn<'a, T>,
+}
+
+impl<T> Node<'_, T> {
+    /// Every edge the scheduler honors: data deps then ordering deps.
+    fn sched_deps(&self) -> impl Iterator<Item = usize> + '_ {
+        self.deps.iter().chain(self.ordering.iter()).copied()
+    }
 }
 
 fn span_guard<'b>(bd: Option<&'b Breakdown>, kind: NodeKind) -> Option<SpanGuard<'b>> {
@@ -201,6 +236,9 @@ fn span_guard<'b>(bd: Option<&'b Breakdown>, kind: NodeKind) -> Option<SpanGuard
 /// smaller than the node's own id) — enforced at [`StageGraph::node`].
 pub struct StageGraph<'a, T> {
     nodes: Vec<Node<'a, T>>,
+    /// Node ids the caller reads after the run — metadata for the
+    /// auditor's reachability check ([`StageGraph::mark_output`]).
+    outputs: Vec<usize>,
     /// Optional wall-clock attribution: every node records a
     /// [`COMM_BUCKET`] / [`COMPUTE_BUCKET`] span here while it runs
     /// (comm spans include the drain).
@@ -209,7 +247,7 @@ pub struct StageGraph<'a, T> {
 
 impl<'a, T> Default for StageGraph<'a, T> {
     fn default() -> Self {
-        StageGraph { nodes: vec![], bd: None }
+        StageGraph { nodes: vec![], outputs: vec![], bd: None }
     }
 }
 
@@ -233,7 +271,23 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         deps: &[usize],
         f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
     ) -> usize {
-        self.push(label, deps, NodeKind::Compute, f)
+        self.push(label, deps, &[], NodeKind::Compute, f)
+    }
+
+    /// Like [`StageGraph::node`], with additional *ordering-only*
+    /// dependencies: edges the scheduler waits on but whose values the
+    /// closure never reads (e.g. the pipeline trainer's
+    /// device-exclusivity edge between consecutive microbatches on one
+    /// stage). Ordering deps are not readable through [`Joined`] and
+    /// are exempt from the auditor's unused-dependency lint.
+    pub fn node_with_ordering(
+        &mut self,
+        label: impl Into<String>,
+        deps: &[usize],
+        ordering: &[usize],
+        f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
+    ) -> usize {
+        self.push(label, deps, ordering, NodeKind::Compute, f)
     }
 
     /// Add a communication node: its closure produces the collective's
@@ -248,18 +302,19 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         sim_secs: f64,
         f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
     ) -> usize {
-        self.push(label, deps, NodeKind::Comm { sim_secs }, f)
+        self.push(label, deps, &[], NodeKind::Comm { sim_secs }, f)
     }
 
     fn push(
         &mut self,
         label: impl Into<String>,
         deps: &[usize],
+        ordering: &[usize],
         kind: NodeKind,
         f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
     ) -> usize {
         let id = self.nodes.len();
-        for &d in deps {
+        for &d in deps.iter().chain(ordering) {
             assert!(
                 d < id,
                 "StageGraph: node {id} depends on {d}, which must precede it"
@@ -268,10 +323,44 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         self.nodes.push(Node {
             label: label.into(),
             deps: deps.to_vec(),
+            ordering: ordering.to_vec(),
             kind,
             run: Box::new(f),
         });
         id
+    }
+
+    /// Declare node `id` as a graph output: a value the caller consumes
+    /// after [`StageGraph::run`]. Pure metadata — execution is
+    /// unaffected; the auditor uses it as the root set for its
+    /// unreachable-node check ([`StageGraph::spec`]).
+    pub fn mark_output(&mut self, id: usize) {
+        assert!(
+            id < self.nodes.len(),
+            "StageGraph: output {id} names no node"
+        );
+        self.outputs.push(id);
+    }
+
+    /// Export the graph's pure shape for static analysis
+    /// ([`crate::runtime::audit`]).
+    pub fn spec(&self) -> GraphSpec {
+        GraphSpec {
+            nodes: self
+                .nodes
+                .iter()
+                .map(|n| NodeSpec {
+                    label: n.label.clone(),
+                    deps: n.deps.clone(),
+                    ordering_deps: n.ordering.clone(),
+                    comm_sim_secs: match n.kind {
+                        NodeKind::Compute => None,
+                        NodeKind::Comm { sim_secs } => Some(sim_secs),
+                    },
+                })
+                .collect(),
+            outputs: self.outputs.clone(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -284,7 +373,26 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
 
     /// Execute the graph under `ctx` (mode = [`ExecCtx::sched`]); returns
     /// the node results in node-id order.
+    ///
+    /// Under `debug_assertions` every run first passes the structural
+    /// audit ([`crate::runtime::audit::structural_audit`]) — the
+    /// builder already rejects forward/self deps, so this mainly
+    /// catches duplicate labels and any spec-level contract a future
+    /// construction path might break. Test runs audit every graph for
+    /// free; release builds skip the check.
     pub fn run(self, ctx: &ExecCtx) -> Vec<T> {
+        #[cfg(debug_assertions)]
+        {
+            use super::audit::{structural_audit, Severity};
+            let hard: Vec<_> = structural_audit(&self.spec())
+                .into_iter()
+                .filter(|v| v.severity() == Severity::Hard)
+                .collect();
+            assert!(
+                hard.is_empty(),
+                "StageGraph: hard audit violations: {hard:?}"
+            );
+        }
         match ctx.sched() {
             _ if ctx.workers() <= 1 => self.run_serial(ctx),
             SchedMode::Serial => self.run_serial(ctx),
@@ -300,7 +408,11 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         let n = self.nodes.len();
         let results: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
         for (i, node) in self.nodes.into_iter().enumerate() {
-            let joined = Joined { results: &results, deps: &node.deps };
+            let joined = Joined {
+                results: &results,
+                deps: &node.deps,
+                recorder: None,
+            };
             let _g = span_guard(bd, node.kind);
             let out = (node.run)(ctx, &joined);
             if let NodeKind::Comm { sim_secs } = node.kind {
@@ -313,6 +425,40 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         collect(results)
     }
 
+    /// Capture mode: execute serially in node-id order, recording which
+    /// declared dependencies each node actually reads and how long its
+    /// value production takes — the [`GraphTrace`] half of the full
+    /// audit ([`crate::runtime::audit::audit`]). Comm drains are
+    /// skipped: the auditor models link occupancy from the spec, and
+    /// capture should stay cheap enough to run on every registered
+    /// graph.
+    pub fn run_captured(self, ctx: &ExecCtx) -> (Vec<T>, GraphTrace) {
+        let n = self.nodes.len();
+        let results: Vec<OnceLock<T>> =
+            (0..n).map(|_| OnceLock::new()).collect();
+        let mut reads = Vec::with_capacity(n);
+        let mut secs = Vec::with_capacity(n);
+        for (i, node) in self.nodes.into_iter().enumerate() {
+            let rec = Mutex::new(vec![]);
+            let joined = Joined {
+                results: &results,
+                deps: &node.deps,
+                recorder: Some(&rec),
+            };
+            let t0 = std::time::Instant::now();
+            let out = (node.run)(ctx, &joined);
+            secs.push(t0.elapsed().as_secs_f64());
+            if results[i].set(out).is_err() {
+                unreachable!("StageGraph: node {i} completed twice");
+            }
+            let mut r = rec.into_inner().unwrap();
+            r.sort_unstable();
+            r.dedup();
+            reads.push(r);
+        }
+        (collect(results), GraphTrace { reads, secs })
+    }
+
     /// Dependency waves: wave(i) = 1 + max(wave(dep)); independent nodes
     /// share a wave and fork across worker lanes; comm drains are inline
     /// on the node's lane (the wave barrier waits for them).
@@ -322,7 +468,7 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         let mut wave = vec![0usize; n];
         for (i, node) in self.nodes.iter().enumerate() {
             wave[i] =
-                node.deps.iter().map(|&d| wave[d] + 1).max().unwrap_or(0);
+                node.sched_deps().map(|d| wave[d] + 1).max().unwrap_or(0);
         }
         let max_wave = wave.iter().copied().max().unwrap_or(0);
         let mut nodes: Vec<Option<Node<'a, T>>> =
@@ -338,8 +484,11 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
                     .map(|node| {
                         let results = &results;
                         move |sub: &ExecCtx| {
-                            let joined =
-                                Joined { results, deps: &node.deps };
+                            let joined = Joined {
+                                results,
+                                deps: &node.deps,
+                                recorder: None,
+                            };
                             let _g = span_guard(bd, node.kind);
                             let out = (node.run)(sub, &joined);
                             if let NodeKind::Comm { sim_secs } = node.kind {
@@ -373,8 +522,8 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         let mut dependents: Vec<Vec<usize>> = vec![vec![]; n];
         let mut indeg = vec![0usize; n];
         for (i, node) in self.nodes.iter().enumerate() {
-            indeg[i] = node.deps.len();
-            for &d in &node.deps {
+            for d in node.sched_deps() {
+                indeg[i] += 1;
                 dependents[d].push(i);
             }
         }
@@ -428,8 +577,9 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
                     };
                     drop(guard);
 
-                    let Node { label: _, deps, kind, run } = node;
-                    let joined = Joined { results, deps: &deps };
+                    let Node { label: _, deps, ordering: _, kind, run } = node;
+                    let joined =
+                        Joined { results, deps: &deps, recorder: None };
                     let outcome = std::panic::catch_unwind(
                         std::panic::AssertUnwindSafe(|| {
                             let _g = span_guard(bd, kind);
@@ -586,6 +736,26 @@ mod tests {
     }
 
     #[test]
+    fn sched_mode_env_value_parses_strictly() {
+        // Pure parse of the raw env value — tests never mutate the real
+        // FAL_SCHED (the harness runs tests concurrently and CI pins it
+        // per matrix leg).
+        assert_eq!(
+            SchedMode::parse_env_value(None).unwrap(),
+            SchedMode::default()
+        );
+        assert_eq!(
+            SchedMode::parse_env_value(Some("overlap")).unwrap(),
+            SchedMode::Overlap
+        );
+        let err = SchedMode::parse_env_value(Some("fancy")).unwrap_err();
+        assert!(err.to_string().contains("serial|graph|overlap"), "{err}");
+        assert!(SchedMode::parse_env_value(Some("")).is_err());
+    }
+
+    #[test]
+    // Wall-clock spin timings are meaningless under the interpreter.
+    #[cfg_attr(miri, ignore)]
     fn overlap_hides_comm_drain_behind_independent_compute() {
         // comm node (long drain) + independent compute: overlap mode's
         // wall-clock is ~max of the two, not the sum. A single-core
@@ -635,6 +805,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)]
     fn overlap_releases_comm_value_before_drain() {
         // The dependent of a comm node starts while the drain is still in
         // flight: it must *complete* well before the 100ms drain could
@@ -786,5 +957,109 @@ mod tests {
         });
         let out = g.run(&ctx(4, SchedMode::Overlap));
         assert_eq!(out, vec![2]);
+    }
+
+    #[test]
+    fn ordering_deps_sequence_without_carrying_values() {
+        // b orders after a but reads nothing; every mode must still run
+        // it after a (observable via the shared counter), and the values
+        // are mode-invariant.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for mode in MODES {
+            for threads in [1usize, 4] {
+                let seq = AtomicUsize::new(0);
+                let mut g = StageGraph::new();
+                let a = g.node("a", &[], |_, _| {
+                    seq.fetch_add(1, Ordering::SeqCst)
+                });
+                let b = g.node_with_ordering("b", &[], &[a], |_, _| {
+                    seq.fetch_add(1, Ordering::SeqCst)
+                });
+                g.node("c", &[b], move |_, j| *j.get(b) * 10);
+                assert_eq!(
+                    g.run(&ctx(threads, mode)),
+                    vec![0, 1, 10],
+                    "{mode:?} t{threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "undeclared dependency")]
+    fn ordering_dep_value_is_not_readable() {
+        let mut g = StageGraph::new();
+        let a = g.node("a", &[], |_, _| 1usize);
+        g.node_with_ordering("b", &[], &[a], move |_, j| *j.get(a));
+        g.run(&ctx(1, SchedMode::Serial));
+    }
+
+    #[test]
+    fn spec_exports_shape_and_outputs() {
+        let mut g = StageGraph::new();
+        let a = g.node("a", &[], |_, _| 1usize);
+        let ar = g.comm_node("ar", &[a], 0.25, move |_, j| *j.get(a));
+        let b = g.node_with_ordering("b", &[ar], &[a], move |_, j| *j.get(ar));
+        g.mark_output(b);
+        let spec = g.spec();
+        assert_eq!(spec.nodes.len(), 3);
+        assert_eq!(spec.nodes[1].comm_sim_secs, Some(0.25));
+        assert_eq!(spec.nodes[2].deps, vec![ar]);
+        assert_eq!(spec.nodes[2].ordering_deps, vec![a]);
+        assert!(spec.nodes[2].comm_sim_secs.is_none());
+        assert_eq!(spec.outputs, vec![b]);
+        assert!(
+            crate::runtime::audit::structural_audit(&spec).is_empty(),
+            "builder graphs are structurally clean"
+        );
+    }
+
+    #[test]
+    fn run_captured_records_reads_and_skips_drains() {
+        let mut g = StageGraph::new();
+        let a = g.node("a", &[], |_, _| 2u64);
+        // Declares a twice-read dep and one it never touches.
+        let ar = g.comm_node("ar", &[a], 10.0, move |_, j| {
+            j.get(a) + j.get(a)
+        });
+        g.node_with_ordering("tail", &[ar], &[a], move |_, j| *j.get(ar));
+        let t0 = std::time::Instant::now();
+        let (out, trace) = g.run_captured(&ctx(1, SchedMode::Serial));
+        assert_eq!(out, vec![2, 4, 4]);
+        assert_eq!(trace.reads, vec![vec![], vec![a], vec![ar]]);
+        assert_eq!(trace.secs.len(), 3);
+        // The 10s drain was skipped, not waited out.
+        assert!(t0.elapsed().as_secs_f64() < 5.0, "drain not skipped");
+    }
+
+    #[test]
+    fn captured_trace_feeds_unused_dep_lint() {
+        use crate::runtime::audit::{audit, Violation};
+        let mut g = StageGraph::new();
+        let a = g.node("a", &[], |_, _| 1i32);
+        let b = g.node("b", &[], |_, _| 2i32);
+        // Declares both, reads only b.
+        g.node("tail", &[a, b], move |_, j| *j.get(b));
+        let spec = g.spec();
+        let (_, trace) = g.run_captured(&ctx(1, SchedMode::Serial));
+        let report = audit(&spec, &trace);
+        assert!(
+            report.violations.iter().any(|v| matches!(
+                v,
+                Violation::UnusedDep { node: 2, dep, .. } if *dep == a
+            )),
+            "{:?}",
+            report.violations
+        );
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "audit")]
+    fn duplicate_labels_are_rejected_at_run_in_debug() {
+        let mut g: StageGraph<'_, usize> = StageGraph::new();
+        g.node("same", &[], |_, _| 1);
+        g.node("same", &[], |_, _| 2);
+        g.run(&ctx(1, SchedMode::Serial));
     }
 }

@@ -56,13 +56,36 @@ fn tp_forward_matches_single_process_fal() {
 }
 
 #[test]
+fn tp_forward_matches_single_process_falplus() {
+    // FAL+ TP: prep block reuses the raw MHA out, every main block
+    // re-normalizes it with its own LNf_i — the sharded schedule must
+    // agree with the fused falplus train step.
+    let eng = engine();
+    let b = batch(&eng, 2);
+    let tc = TrainConfig::default();
+    let mut tp =
+        TpTrainer::new(&eng, "tiny", Variant::FalPlus, 2, PCIE_GEN4, tc)
+            .unwrap();
+    let tp_loss = tp.forward_loss(&b).unwrap();
+    let mut sp =
+        Trainer::new(&eng, "tiny", "falplus", Schedule::Constant).unwrap();
+    let sp_loss = sp.eval_loss(&b).unwrap();
+    let rel = ((tp_loss - sp_loss) / sp_loss).abs();
+    assert!(rel < 1e-3, "tp {tp_loss} vs sp {sp_loss} (rel {rel})");
+}
+
+#[test]
 fn tp_training_trajectory_matches_fused_step() {
     // Five full steps on a fixed batch: the Rust TP trainer (sharded bwd +
     // host AdamW) must track the fused train step closely.
     let eng = engine();
     let b = batch(&eng, 3);
     let tc = TrainConfig::default();
-    for (variant, tag) in [(Variant::PreLn, "preln"), (Variant::Fal, "fal")] {
+    for (variant, tag) in [
+        (Variant::PreLn, "preln"),
+        (Variant::Fal, "fal"),
+        (Variant::FalPlus, "falplus"),
+    ] {
         let mut tp =
             TpTrainer::new(&eng, "tiny", variant, 2, PCIE_GEN4, tc).unwrap();
         let mut sp = Trainer::new(&eng, "tiny", tag, Schedule::Constant).unwrap();
@@ -210,7 +233,7 @@ fn overlap_graph_serial_three_way_zero_ulp() {
             .collect();
         (losses, params, tp.ledger.stats())
     };
-    for variant in [Variant::PreLn, Variant::Fal] {
+    for variant in [Variant::PreLn, Variant::Fal, Variant::FalPlus] {
         for threads in [1usize, 2, 4, 7] {
             let (loss_s, params_s, stats_s) =
                 run(variant, threads, SchedMode::Serial);

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Determinism lint for the scheduler-facing Rust code.
+
+Usage: lint_determinism.py [REPO_ROOT]
+
+The StageGraph determinism contract (docs/ARCHITECTURE.md §1c) demands
+bit-identical results across schedules and thread counts. Three source
+patterns can silently break it, so they are banned from the runtime and
+coordinator layers unless explicitly allowlisted:
+
+  * HashMap/HashSet (iteration order is randomized per process) anywhere
+    in rust/src/runtime or rust/src/coordinator — use BTreeMap/BTreeSet;
+  * wall-clock reads (Instant::now) inside the native kernel files, where
+    timing must never influence produced values;
+  * ad-hoc floating-point reductions (.sum::<f32/f64>(), fold(0.0, ...))
+    outside the blessed fixed-order helpers — reassociation across chunk
+    boundaries breaks the 0-ulp cross-schedule equivalence.
+
+Known-good sites live in scripts/determinism_allowlist.txt as
+`path:substring` lines: a hit is accepted when its repo-relative path
+matches and the flagged line contains the substring. Comment-only lines
+are skipped. Exits nonzero listing every unallowlisted hit. Stdlib only.
+"""
+
+import os
+import re
+import sys
+
+SCHED_DIRS = ["rust/src/runtime", "rust/src/coordinator"]
+KERNEL_FILES = [
+    "rust/src/runtime/native/kernels.rs",
+    "rust/src/runtime/native/stages.rs",
+    "rust/src/runtime/native/train_step.rs",
+    "rust/src/runtime/native/model.rs",
+    "rust/src/runtime/native/moe.rs",
+]
+
+# (rule id, compiled regex, scope, human reason)
+RULES = [
+    (
+        "hash-order",
+        re.compile(r"\bHash(Map|Set)\b"),
+        "dirs",
+        "randomized iteration order; use BTreeMap/BTreeSet",
+    ),
+    (
+        "kernel-clock",
+        re.compile(r"Instant::now"),
+        "kernels",
+        "wall clock inside a value-producing kernel",
+    ),
+    (
+        "float-reduce",
+        re.compile(r"\.sum::<f(32|64)>\(\)|\bfold\(0(\.0|f32|f64)"),
+        "dirs",
+        "ad-hoc float reduction; use a blessed fixed-order helper",
+    ),
+]
+
+
+def load_allowlist(root):
+    path = os.path.join(root, "scripts", "determinism_allowlist.txt")
+    entries = []
+    if os.path.exists(path):
+        with open(path, encoding="utf-8") as fh:
+            for raw in fh:
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                fpath, _, substr = line.partition(":")
+                entries.append((fpath, substr))
+    return entries
+
+
+def rust_files(root, rule_scope):
+    if rule_scope == "kernels":
+        for rel in KERNEL_FILES:
+            path = os.path.join(root, rel)
+            if os.path.exists(path):
+                yield rel, path
+        return
+    for reldir in SCHED_DIRS:
+        base = os.path.join(root, reldir)
+        for dirpath, dirs, files in os.walk(base):
+            dirs.sort()
+            for name in sorted(files):
+                if name.endswith(".rs"):
+                    path = os.path.join(dirpath, name)
+                    yield os.path.relpath(path, root), path
+
+
+def main():
+    root = (
+        sys.argv[1]
+        if len(sys.argv) > 1
+        else os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+    allow = load_allowlist(root)
+    hits = 0
+    for rule, rx, scope, why in RULES:
+        for rel, path in rust_files(root, scope):
+            with open(path, encoding="utf-8") as fh:
+                for lineno, line in enumerate(fh, 1):
+                    if line.lstrip().startswith("//"):
+                        continue
+                    if not rx.search(line):
+                        continue
+                    if any(
+                        rel == apath and substr in line
+                        for apath, substr in allow
+                    ):
+                        continue
+                    print(f"{rel}:{lineno}: [{rule}] {why}")
+                    print(f"    {line.strip()}")
+                    hits += 1
+    if hits:
+        print(
+            f"\n{hits} determinism lint hit(s); if a site is provably "
+            "fixed-order, add `path:substring` to "
+            "scripts/determinism_allowlist.txt with a comment saying why."
+        )
+        return 1
+    print("determinism lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,10 @@
 //! times forward-only (TTFT path) and measures the **realized overlap
 //! fraction** under a simulated `costmodel` link — how much of the comm
 //! wall-clock hides inside compute spans — against
-//! `costmodel::timemodel::predicted_hidden_fraction`. Runs with default
+//! `costmodel::timemodel::predicted_hidden_fraction`. The executed
+//! pipeline gets the same treatment: gpipe-vs-1f1b fwd+bwd step rows at
+//! (stages 2, micro 4), plus realized-vs-predicted bubble-fraction rows
+//! against `timemodel::pipeline_bubble_fraction`. Runs with default
 //! features: no artifacts needed.
 //!
 //! Cases are persisted to `BENCH_native.json` (override with
@@ -20,8 +23,11 @@
 //! `cargo bench --bench tp_step`
 
 use fal::config::{TrainConfig, Variant, PCIE_GEN4};
+use fal::coordinator::dp_pp::{PpSched, PpTrainer};
 use fal::coordinator::tp_trainer::TpTrainer;
-use fal::costmodel::timemodel::predicted_hidden_fraction;
+use fal::costmodel::timemodel::{
+    pipeline_bubble_fraction, predicted_hidden_fraction,
+};
 use fal::data::{Corpus, CorpusSpec, Loader};
 use fal::runtime::sched::{COMM_BUCKET, COMPUTE_BUCKET};
 use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
@@ -157,6 +163,85 @@ fn main() {
                 CaseMeta::new(
                     "overlap_fraction",
                     &format!("tiny/{name}/{point}/predicted"),
+                    threads,
+                ),
+                &[predicted],
+                0.0,
+            );
+        }
+    }
+    // Executed pipeline fwd+bwd: gpipe vs 1f1b at the same (stages,
+    // micro) point. Same cells, same bits — the scoreboard rows track
+    // whether the 1F1B dependency structure costs (or saves) wall-clock
+    // next to its memory win, and the bubble rows compare the realized
+    // idle fraction against timemodel::pipeline_bubble_fraction.
+    {
+        let engine = NativeBackend::synthetic_with_ctx(
+            base_ctx.with_sched(SchedMode::Graph),
+        );
+        let (stages, micro) = (2usize, 4usize);
+        for sched in [PpSched::GPipe, PpSched::OneFOneB] {
+            let mut p =
+                PpTrainer::new(&engine, "tiny", stages, micro, PCIE_GEN4)
+                    .unwrap();
+            p.pp_sched = sched;
+            p.train_step(&batch).unwrap(); // warm
+            b.bench_case(
+                &format!(
+                    "pp2m4_tiny_train_step_{}_t{threads}_graph",
+                    sched.name()
+                ),
+                CaseMeta::new(
+                    "pp_train_step",
+                    &format!("tiny/{}/graph", sched.name()),
+                    threads,
+                ),
+                tokens_per_step,
+                || p.train_step(&batch).unwrap().0,
+            );
+            // Bubble fraction on a fresh trainer so the per-device busy
+            // buckets cover exactly the measured wall-clock window.
+            let mut q =
+                PpTrainer::new(&engine, "tiny", stages, micro, PCIE_GEN4)
+                    .unwrap();
+            q.pp_sched = sched;
+            let t0 = std::time::Instant::now();
+            for _ in 0..2 {
+                q.train_step(&batch).unwrap();
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let realized = q.realized_bubble_fraction(wall);
+            let predicted = pipeline_bubble_fraction(stages, micro);
+            println!(
+                "pp/{}: bubble realized {realized:.3}, predicted \
+                 {predicted:.3} (t{stages}m{micro}, {threads} threads; \
+                 realized needs >= {stages} workers to mean idle devices), \
+                 peak stashes {:?} (predicted {})",
+                sched.name(),
+                q.stash_peaks(),
+                q.predicted_peak_stash(),
+            );
+            b.record_case(
+                &format!(
+                    "pp2m4_tiny_bubble_fraction_realized_{}_t{threads}",
+                    sched.name()
+                ),
+                CaseMeta::new(
+                    "pp_bubble_fraction",
+                    &format!("tiny/{}/realized", sched.name()),
+                    threads,
+                ),
+                &[realized],
+                0.0,
+            );
+            b.record_case(
+                &format!(
+                    "pp2m4_tiny_bubble_fraction_predicted_{}_t{threads}",
+                    sched.name()
+                ),
+                CaseMeta::new(
+                    "pp_bubble_fraction",
+                    &format!("tiny/{}/predicted", sched.name()),
                     threads,
                 ),
                 &[predicted],

@@ -27,7 +27,7 @@ use crate::runtime::Backend;
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
-use super::dp_pp::PpTrainer;
+use super::dp_pp::{PpSched, PpTrainer};
 use super::tp_trainer::TpTrainer;
 
 /// One audited schedule: its registry name and the auditor's verdict.
@@ -50,9 +50,10 @@ fn token_batch(b: usize, s: usize, vocab: usize) -> Batch {
 
 /// Build, capture and audit every registered trainer graph on `engine`:
 /// the TP fwd+bwd schedules for preln/fal/falplus at tp=2, the GPipe
-/// pipeline forward, and the fused FAL block's intra-stage fork. Comm
-/// simulation runs at scale 1.0 so the overlap report predicts real
-/// exposed seconds on the ledger's link.
+/// pipeline forward, the full pipelined fwd+bwd step graphs under both
+/// `--pp-sched` linearizations (gpipe and 1f1b), and the fused FAL
+/// block's intra-stage fork. Comm simulation runs at scale 1.0 so the
+/// overlap report predicts real exposed seconds on the ledger's link.
 pub fn audit_registered_graphs(engine: &dyn Backend) -> Result<Vec<GraphAudit>> {
     let mut out = Vec::new();
 
@@ -77,6 +78,14 @@ pub fn audit_registered_graphs(engine: &dyn Backend) -> Result<Vec<GraphAudit>> 
     let batch = token_batch(p.batch, p.cfg.seq_len, p.cfg.vocab_size);
     let (name, spec, trace) = p.captured_graph(&batch)?;
     out.push(GraphAudit { name, report: audit(&spec, &trace) });
+    // The executed fwd+bwd step graphs: same cell set, both
+    // linearizations — the reversed gradient sends must audit clean and
+    // report their hideable compute like any other comm node.
+    for sched in [PpSched::GPipe, PpSched::OneFOneB] {
+        p.pp_sched = sched;
+        let (name, spec, trace) = p.captured_step_graph(&batch)?;
+        out.push(GraphAudit { name, report: audit(&spec, &trace) });
+    }
 
     // The fused FAL block's MHA ∥ MLP sibling fork (no collectives —
     // audited for structure and read discipline).

@@ -1,5 +1,5 @@
 //! Data- and pipeline-parallel schedules for the Apdx B comparison (Fig 10),
-//! plus an *executed* GPipe pipeline trainer on StageGraph.
+//! plus an *executed* pipeline trainer (GPipe and 1F1B) on StageGraph.
 //!
 //! The analytic half models each schedule's time and memory from the same
 //! cost primitives the TP model uses:
@@ -14,17 +14,33 @@
 //!
 //! [`PpTrainer`] is the comm-as-a-node machinery one level up from the TP
 //! trainer: micro-batch × stage cells are StageGraph compute nodes, the
-//! point-to-point boundary sends are [`StageGraph::comm_node`]s, and the
-//! GPipe staircase *is* the dependency structure — cell (μ, s) depends on
-//! the send from (μ, s−1) and, for device exclusivity, on cell (μ−1, s).
-//! Under `--sched overlap` a send's simulated wire time stays in flight
-//! while the upstream device starts the next micro-batch — the classic
-//! pipeline comm/compute overlap — and the loss is 0-ulp identical across
-//! serial/graph/overlap because node values read only declared deps.
+//! point-to-point boundary sends are comm nodes, and the pipeline schedule
+//! *is* the dependency structure. One training step is a single graph:
+//! the forward staircase, the *reversed* gradient sends, and the backward
+//! staircase, followed by a deterministic (micro-batch, stage) gradient
+//! replay and an AdamW step. `pp_sched` picks between two linearizations
+//! of the same cell set:
+//!
+//! * **GPipe** — every device runs all forwards, then all backwards; the
+//!   whole pass's activation stashes are live at once (peak `m`).
+//! * **1F1B** — after `min(m, t−1−s)` warmup forwards, each device
+//!   alternates one-forward/one-backward, so a stash is released (by its
+//!   backward cell, the last reader) after at most `min(m, t−s)` inserts —
+//!   bounded by the pipeline depth, not the micro-batch count.
+//!
+//! Both schedules are 0-ulp identical to each other and to the monolithic
+//! single-device loop ([`PpTrainer::reference_grads`]) under every
+//! `--sched serial|graph|overlap`, because node values read only declared
+//! deps, the kernels chunk by the partition knob (never the worker pool),
+//! and the accumulation replay order is fixed. `rust/tests/pp_backward.rs`
+//! is the differential harness that enforces all of this.
 
-use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
 
-use crate::config::{GpuSpec, LinkSpec, ModelConfig, Variant};
+use anyhow::{bail, Context, Result};
+
+use crate::config::{GpuSpec, LinkSpec, ModelConfig, TrainConfig, Variant};
 use crate::costmodel::{
     activation_bytes, block_cost, broadcast_time, compute_time,
     ring_allreduce_time,
@@ -37,6 +53,7 @@ use crate::tensor::HostTensor;
 use crate::util::timer::Breakdown;
 
 use super::collectives::CommLedger;
+use super::optim::{adamw_step, zeros_like};
 use super::topology::NamedParams;
 
 #[derive(Debug, Clone, Copy)]
@@ -150,21 +167,169 @@ pub fn tp_cost(
 }
 
 // ---------------------------------------------------------------------------
-// Executed GPipe pipeline on StageGraph (micro-batch cells + P2P comm nodes)
+// Executed pipeline on StageGraph (micro-batch cells + P2P comm nodes)
 // ---------------------------------------------------------------------------
 
 use super::{dep_outs, StageOut};
 
-/// A GPipe forward pipeline over the native tp=1 stage kernels: `stages`
-/// contiguous layer ranges ("devices"), the batch split into `micro`
-/// micro-batches, scheduled as one [`StageGraph`] per forward pass.
+/// `--pp-sched`: the executed linearization of the fwd+bwd cell set.
+/// Both schedules run the *same* cells with the same data dependencies —
+/// only the per-device ordering chain (and therefore the stash lifetime)
+/// differs — so they are bitwise interchangeable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PpSched {
+    /// All forwards, then all backwards, per device. Peak live stashes
+    /// per device: `micro`.
+    #[default]
+    GPipe,
+    /// One-forward-one-backward: each backward interleaves as soon as
+    /// its forward completes, after `min(m, t−1−s)` warmup forwards.
+    /// Peak live stashes on device `s`: `min(m, t−s)` ≤ pipeline depth.
+    OneFOneB,
+}
+
+impl PpSched {
+    pub fn parse(s: &str) -> Result<PpSched> {
+        match s.trim() {
+            "gpipe" => Ok(PpSched::GPipe),
+            "1f1b" => Ok(PpSched::OneFOneB),
+            other => bail!("unknown pipeline schedule {other:?}; one of gpipe|1f1b"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PpSched::GPipe => "gpipe",
+            PpSched::OneFOneB => "1f1b",
+        }
+    }
+}
+
+/// Per-layer forward residuals a backward cell replays from: the block
+/// input `x` and the post-attention residual `h` of every layer in the
+/// stage's range.
+type CellStash = Vec<(HostTensor, HostTensor)>;
+
+struct StashInner {
+    /// Live stashes keyed (micro-batch, stage). BTreeMap for the repo's
+    /// deterministic-iteration lint; the map is only ever keyed lookups.
+    map: BTreeMap<(usize, usize), CellStash>,
+    /// Live stash count per device, maintained under the same lock.
+    live: Vec<usize>,
+    /// High-water mark of `live` per device since construction/reset.
+    peak: Vec<usize>,
+}
+
+/// Last-reader-release activation stash table: a forward cell inserts its
+/// stage's residuals, the matching backward cell *removes* them (it is
+/// the only reader), so whole-pass memory growth is bounded by the
+/// schedule — `m` per device under GPipe, pipeline depth under 1F1B —
+/// and the table is empty again at step end (asserted every step).
+struct StashTable {
+    inner: Mutex<StashInner>,
+}
+
+impl StashTable {
+    fn new(stages: usize) -> StashTable {
+        StashTable {
+            inner: Mutex::new(StashInner {
+                map: BTreeMap::new(),
+                live: vec![0; stages],
+                peak: vec![0; stages],
+            }),
+        }
+    }
+
+    fn insert(&self, u: usize, s: usize, v: CellStash) {
+        let mut g = self.inner.lock().unwrap();
+        let prev = g.map.insert((u, s), v);
+        assert!(prev.is_none(), "stash (u{u},s{s}) inserted twice");
+        g.live[s] += 1;
+        g.peak[s] = g.peak[s].max(g.live[s]);
+    }
+
+    fn take(&self, u: usize, s: usize) -> Option<CellStash> {
+        let mut g = self.inner.lock().unwrap();
+        let v = g.map.remove(&(u, s));
+        if v.is_some() {
+            g.live[s] -= 1;
+        }
+        v
+    }
+
+    fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    fn peaks(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().peak.clone()
+    }
+
+    /// Drop any leftover stashes (a previous failed run may have leaked
+    /// some); peaks are kept — they are a high-water mark.
+    fn reset_live(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.live.iter_mut().for_each(|l| *l = 0);
+    }
+
+    fn reset_peaks(&self) {
+        let mut g = self.inner.lock().unwrap();
+        let live = g.live.clone();
+        g.peak.copy_from_slice(&live);
+    }
+}
+
+/// One entry in a device's executed schedule: the forward or backward
+/// cell of a micro-batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CellRef {
+    Fwd(usize),
+    Bwd(usize),
+}
+
+/// Node ids of the step graph the post-run replay reads:
+/// `fwd[u][s]` / `bwd[u][s]` are the cells of (micro-batch u, stage s);
+/// the last stage's forward cells carry the head outputs.
+struct StepIds {
+    fwd: Vec<Vec<usize>>,
+    bwd: Vec<Vec<usize>>,
+}
+
+/// Result of one pipelined fwd+bwd pass (before the optimizer).
+pub struct PpStep {
+    /// Token-weighted mean loss over the full batch (the reported loss).
+    pub loss: f64,
+    /// Mean of the per-micro-batch mean losses — the scalar the
+    /// accumulated, 1/m-scaled gradients differentiate (identical to
+    /// `loss` when every micro-batch carries the same target count).
+    pub objective: f64,
+    /// Accumulated gradients, scaled to the micro-batch mean.
+    pub grads: NamedParams,
+}
+
+/// Order of the 12 per-layer gradients a backward cell emits: MLP then
+/// attention, mirroring reverse execution order within the block. The
+/// shared replay order both the pipeline and the monolithic reference
+/// accumulate in — bitwise equivalence depends on it.
+const LAYER_GRAD_FIELDS: [&str; 12] = [
+    "ln2_g", "ln2_b", "w1", "b1", "w2", "b2", //
+    "ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+];
+
+/// An executed pipeline trainer over the native tp=1 stage kernels:
+/// `stages` contiguous layer ranges ("devices"), the batch split into
+/// `micro` micro-batches, one full training step scheduled as a single
+/// [`StageGraph`] — forward staircase, reversed gradient sends, backward
+/// staircase — under the GPipe or 1F1B linearization ([`PpSched`]).
 ///
 /// Pre-LN only (the Fig 10 baseline schedule); the loss head runs on the
-/// last device as part of its cell. Boundary activations between devices
-/// are comm nodes whose wire time is `comm_sim_scale ×` the `costmodel`
-/// point-to-point time and whose bytes land in the [`CommLedger`] via
-/// [`CommLedger::send`] (one-peer transfer, identically in every schedule
-/// mode).
+/// last device as part of its forward cell (which therefore also emits
+/// the head gradients and the backward's seed cotangent). Boundary
+/// activations and reversed boundary gradients are comm nodes whose wire
+/// time is `comm_sim_scale ×` the `costmodel` point-to-point time and
+/// whose bytes land in the [`CommLedger`] via [`CommLedger::send`]
+/// (one-peer transfer, identically in every schedule mode).
 pub struct PpTrainer<'e, B: Backend + ?Sized> {
     pub engine: &'e B,
     pub cfg: ModelConfig,
@@ -178,11 +343,20 @@ pub struct PpTrainer<'e, B: Backend + ?Sized> {
     pub batch: usize,
     pub ledger: CommLedger,
     pub params: NamedParams,
-    /// `sched.comm` / `sched.compute` node spans land here.
+    /// `sched.comm` / `sched.compute` node spans land here, plus one
+    /// `pp.dev{s}` busy bucket per device (realized-bubble measurement).
     pub breakdown: Breakdown,
     /// Virtual wire-time scale for the boundary sends (0 = off).
     pub comm_sim_scale: f64,
     pub ctx: ExecCtx,
+    /// Executed linearization of the step graph (`--pp-sched`).
+    pub pp_sched: PpSched,
+    pub tc: TrainConfig,
+    /// Optimizer steps taken (1-based inside AdamW).
+    pub step: usize,
+    m: NamedParams,
+    v: NamedParams,
+    stash: StashTable,
     /// Layer range [start, end) per stage.
     layer_ranges: Vec<(usize, usize)>,
 }
@@ -228,6 +402,8 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         );
         let schema = engine.manifest().schema(config)?.to_vec();
         let params = NamedParams::from_flat(&schema, engine.load_params(config, 0)?);
+        let m = zeros_like(&params);
+        let v = zeros_like(&params);
         let per = cfg.n_layer / stages;
         let layer_ranges =
             (0..stages).map(|s| (s * per, (s + 1) * per)).collect();
@@ -243,6 +419,12 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
             breakdown: Breakdown::new(),
             comm_sim_scale: 0.0,
             ctx: engine.exec_ctx(),
+            pp_sched: PpSched::default(),
+            tc: TrainConfig::default(),
+            step: 0,
+            m,
+            v,
+            stash: StashTable::new(stages),
             layer_ranges,
         })
     }
@@ -262,7 +444,8 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
             .with_context(|| format!("pp stage {stage}"))
     }
 
-    /// Simulated wire time for one boundary activation hand-off.
+    /// Simulated wire time for one boundary hand-off (activation forward,
+    /// gradient backward — same [B,S,D] payload either direction).
     fn send_sim_secs(&self) -> f64 {
         if self.comm_sim_scale <= 0.0 {
             return 0.0;
@@ -272,29 +455,33 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         self.comm_sim_scale * broadcast_time(bytes, 2, &self.ledger.link)
     }
 
-    /// Run the layers of pipeline stage `s` on boundary input `x`
-    /// (stage 0 starts from the embedding; the last stage finishes with
-    /// the loss head and returns `[loss, count]`).
-    fn run_cell(
+    // ------------------------------------------------------------------
+    // Shared layer-walk helpers (cells and the monolithic reference both
+    // run exactly these, so stage partitioning never changes the math)
+    // ------------------------------------------------------------------
+
+    /// Embed `tokens` into the layer-0 input.
+    fn run_embed(&self, sub: &ExecCtx, tokens: &HostTensor) -> Result<HostTensor> {
+        let out = self.exec_in(
+            sub,
+            "embed_fwd",
+            &[tokens, self.params.get("wte")?, self.params.get("wpe")?],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Forward layers [l0, l1) from boundary input `x`; with `keep`, also
+    /// return the per-layer (block input, post-attention residual) pairs
+    /// the backward replays from.
+    fn fwd_layers(
         &self,
         sub: &ExecCtx,
-        s: usize,
-        tokens: &HostTensor,
-        targets: &HostTensor,
-        boundary: Option<&HostTensor>,
-    ) -> Result<Vec<HostTensor>> {
-        let mut x = match boundary {
-            Some(b) => b.clone(),
-            None => {
-                let out = self.exec_in(
-                    sub,
-                    "embed_fwd",
-                    &[tokens, self.params.get("wte")?, self.params.get("wpe")?],
-                )?;
-                out.into_iter().next().unwrap()
-            }
-        };
-        let (l0, l1) = self.layer_ranges[s];
+        l0: usize,
+        l1: usize,
+        mut x: HostTensor,
+        keep: bool,
+    ) -> Result<(HostTensor, CellStash)> {
+        let mut kept: CellStash = Vec::with_capacity(if keep { l1 - l0 } else { 0 });
         for li in l0..l1 {
             let p = |f: &str| self.params.blk(li, f);
             let attn_in: Vec<&HostTensor> = vec![
@@ -309,25 +496,160 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
                 p("b2")?,
             ];
             let m = self.exec_in(sub, "mlp_preln_fwd", &mlp_in)?;
-            x = h;
-            x.add_assign(&m[0]);
+            if keep {
+                let mut xn = h.clone();
+                xn.add_assign(&m[0]);
+                kept.push((std::mem::replace(&mut x, xn), h));
+            } else {
+                x = h;
+                x.add_assign(&m[0]);
+            }
+        }
+        Ok((x, kept))
+    }
+
+    /// Loss head on the final residual: `[loss, count, dx, dlnF_g,
+    /// dlnF_b, dwte]` (dx pre-scaled to the micro-batch mean).
+    fn run_head(
+        &self,
+        sub: &ExecCtx,
+        x: &HostTensor,
+        targets: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        self.exec_in(
+            sub,
+            "head_fwd_bwd",
+            &[
+                x,
+                self.params.get("lnF_g")?,
+                self.params.get("lnF_b")?,
+                self.params.get("wte")?,
+                targets,
+            ],
+        )
+    }
+
+    /// Backward through layers [l0, l1) (descending) given the cotangent
+    /// of the range's output; returns the cotangent of the range's input
+    /// plus the flat per-layer gradients in replay order
+    /// ([`LAYER_GRAD_FIELDS`], layer l1−1 first). Every `add_assign`
+    /// mirrors a residual `+` in the forward.
+    fn bwd_layers(
+        &self,
+        sub: &ExecCtx,
+        l0: usize,
+        l1: usize,
+        stash: &[(HostTensor, HostTensor)],
+        dout: &HostTensor,
+    ) -> Result<(HostTensor, Vec<HostTensor>)> {
+        anyhow::ensure!(
+            stash.len() == l1 - l0,
+            "stash holds {} layers, range [{l0},{l1}) needs {}",
+            stash.len(),
+            l1 - l0
+        );
+        let mut d = dout.clone();
+        let mut grads: Vec<HostTensor> = Vec::with_capacity(12 * (l1 - l0));
+        for (li, (x, h)) in (l0..l1).zip(stash.iter()).rev() {
+            let p = |f: &str| self.params.blk(li, f);
+            let mlp_in: Vec<&HostTensor> = vec![
+                h, p("ln2_g")?, p("ln2_b")?, p("w1")?, p("b1")?, p("w2")?,
+                p("b2")?, &d,
+            ];
+            let mo = self.exec_in(sub, "mlp_preln_bwd", &mlp_in)?;
+            // Residual h -> x': cotangents add.
+            let mut dh = mo[0].clone();
+            dh.add_assign(&d);
+            let attn_in: Vec<&HostTensor> = vec![
+                x, p("ln1_g")?, p("ln1_b")?, p("wq")?, p("wk")?, p("wv")?,
+                p("wo")?, &dh,
+            ];
+            let ao = self.exec_in(sub, "attn_bwd", &attn_in)?;
+            // Residual x -> h: cotangents add.
+            let mut dx = ao[0].clone();
+            dx.add_assign(&dh);
+            grads.extend(mo.into_iter().skip(1));
+            grads.extend(ao.into_iter().skip(1));
+            d = dx;
+        }
+        Ok((d, grads))
+    }
+
+    // ------------------------------------------------------------------
+    // Graph cells
+    // ------------------------------------------------------------------
+
+    /// Forward cell of (micro-batch `stash_for`/anonymous, stage `s`):
+    /// stage 0 starts from the embedding, the last stage finishes with
+    /// the loss head (returning all six head outputs — loss, count, and
+    /// the backward's seed gradients); inner stages return the boundary
+    /// activation. With `stash_for = Some(u)` the per-layer residuals are
+    /// stashed for backward cell (u, s).
+    fn run_fwd_cell(
+        &self,
+        sub: &ExecCtx,
+        s: usize,
+        tokens: &HostTensor,
+        targets: &HostTensor,
+        boundary: Option<&HostTensor>,
+        stash_for: Option<usize>,
+    ) -> Result<Vec<HostTensor>> {
+        let _dev = self.breakdown.span(&format!("pp.dev{s}"));
+        let x = match boundary {
+            Some(b) => b.clone(),
+            None => self.run_embed(sub, tokens)?,
+        };
+        let (l0, l1) = self.layer_ranges[s];
+        let (x, kept) = self.fwd_layers(sub, l0, l1, x, stash_for.is_some())?;
+        if let Some(u) = stash_for {
+            self.stash.insert(u, s, kept);
         }
         if s + 1 == self.stages {
-            let head = self.exec_in(
-                sub,
-                "head_fwd_bwd",
-                &[
-                    &x,
-                    self.params.get("lnF_g")?,
-                    self.params.get("lnF_b")?,
-                    self.params.get("wte")?,
-                    targets,
-                ],
-            )?;
-            Ok(vec![head[0].clone(), head[1].clone()])
+            self.run_head(sub, &x, targets)
         } else {
             Ok(vec![x])
         }
+    }
+
+    /// Backward cell of (micro-batch u, stage s): consume the forward
+    /// stash (last-reader release), walk the stage's layers in reverse
+    /// from the boundary cotangent `dout`, and return `[d_input,
+    /// <12 grads per layer, last layer first>, (stage 0: dwte, dwpe)]`.
+    fn run_bwd_cell(
+        &self,
+        sub: &ExecCtx,
+        s: usize,
+        u: usize,
+        tokens: &HostTensor,
+        dout: &HostTensor,
+    ) -> Result<Vec<HostTensor>> {
+        let _dev = self.breakdown.span(&format!("pp.dev{s}"));
+        let stash = self.stash.take(u, s).with_context(|| {
+            format!("backward cell [u{u},s{s}] ran before its forward stashed")
+        })?;
+        let (l0, l1) = self.layer_ranges[s];
+        let (dx, grads) = self.bwd_layers(sub, l0, l1, &stash, dout)?;
+        let embed = if s == 0 {
+            Some(self.exec_in(
+                sub,
+                "embed_bwd",
+                &[
+                    tokens,
+                    self.params.get("wte")?,
+                    self.params.get("wpe")?,
+                    &dx,
+                ],
+            )?)
+        } else {
+            None
+        };
+        let mut out = Vec::with_capacity(1 + grads.len() + 2);
+        out.push(dx);
+        out.extend(grads);
+        if let Some(eb) = embed {
+            out.extend(eb);
+        }
+        Ok(out)
     }
 
     /// Split the step batch into per-micro-batch token/target slices.
@@ -351,8 +673,38 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         Ok((toks, tgts))
     }
 
-    /// Wire the GPipe staircase as one StageGraph without running it;
-    /// returns the graph plus the last stage's head cells (the outputs).
+    // ------------------------------------------------------------------
+    // Graph construction
+    // ------------------------------------------------------------------
+
+    /// The executed cell order on device `s` under the active `pp_sched`.
+    /// GPipe: all forwards (micro ascending), then all backwards. 1F1B:
+    /// `min(m, t−1−s)` warmup forwards, then strict forward/backward
+    /// alternation, then the backward drain.
+    fn device_sequence(&self, s: usize) -> Vec<CellRef> {
+        let m = self.micro;
+        let mut seq = Vec::with_capacity(2 * m);
+        match self.pp_sched {
+            PpSched::GPipe => {
+                seq.extend((0..m).map(CellRef::Fwd));
+                seq.extend((0..m).map(CellRef::Bwd));
+            }
+            PpSched::OneFOneB => {
+                let w = m.min(self.stages - 1 - s);
+                seq.extend((0..w).map(CellRef::Fwd));
+                for k in 0..m - w {
+                    seq.push(CellRef::Fwd(w + k));
+                    seq.push(CellRef::Bwd(k));
+                }
+                seq.extend((m - w..m).map(CellRef::Bwd));
+            }
+        }
+        seq
+    }
+
+    /// Wire the GPipe forward staircase only (no stashes, no backward) —
+    /// the inference/audit-forward path of [`PpTrainer::forward_loss`];
+    /// returns the graph plus the last stage's head cells.
     fn build_forward_graph<'s>(
         &'s self,
         micro_tokens: &'s [HostTensor],
@@ -385,7 +737,7 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
                             Some(c) => Some(&dep_outs(j, c)?[0]),
                             None => None,
                         };
-                        self.run_cell(sub, s, toks, tgts, boundary)
+                        self.run_fwd_cell(sub, s, toks, tgts, boundary, None)
                     },
                 );
                 prev_cell[s] = Some(cell);
@@ -413,6 +765,193 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         (g, head_ids)
     }
 
+    /// Wire one *complete* training step — forward staircase, reversed
+    /// gradient sends, backward staircase — as a single StageGraph. The
+    /// active [`PpSched`] is realized purely as dependency structure:
+    /// cells are emitted from the per-device sequences by a worklist
+    /// sweep (a cell is emitted once its data dependencies exist, which
+    /// keeps construction topological), consecutive cells on one device
+    /// are chained with ordering edges (device exclusivity — the edges
+    /// that bound 1F1B's live stashes), each backward cell carries a
+    /// stash hand-off ordering edge from its own forward, and each P2P
+    /// channel (boundary × direction) chains its sends.
+    fn build_step_graph<'s>(
+        &'s self,
+        micro_tokens: &'s [HostTensor],
+        micro_targets: &'s [HostTensor],
+    ) -> (StageGraph<'s, StageOut>, StepIds) {
+        let sim = self.send_sim_secs();
+        let (t, m) = (self.stages, self.micro);
+        let mut g: StageGraph<'_, StageOut> =
+            StageGraph::new().with_breakdown(&self.breakdown);
+        let seqs: Vec<Vec<CellRef>> =
+            (0..t).map(|s| self.device_sequence(s)).collect();
+        let mut pos = vec![0usize; t];
+        let mut prev: Vec<Option<usize>> = vec![None; t];
+        // fsend[u][s] / bsend[u][s]: the send node feeding stage s's
+        // forward / backward cell of micro-batch u.
+        let mut fsend = vec![vec![None::<usize>; t]; m];
+        let mut bsend = vec![vec![None::<usize>; t]; m];
+        // Per-boundary link chains, one per direction.
+        let mut flink: Vec<Option<usize>> = vec![None; t.saturating_sub(1)];
+        let mut blink: Vec<Option<usize>> = vec![None; t.saturating_sub(1)];
+        let mut ids = StepIds {
+            fwd: vec![vec![usize::MAX; t]; m],
+            bwd: vec![vec![usize::MAX; t]; m],
+        };
+        let total = 2 * t * m;
+        let mut emitted = 0usize;
+        while emitted < total {
+            let mut progressed = false;
+            for s in 0..t {
+                while pos[s] < seqs[s].len() {
+                    let r = seqs[s][pos[s]];
+                    let ready = match r {
+                        CellRef::Fwd(u) => s == 0 || fsend[u][s].is_some(),
+                        CellRef::Bwd(u) => {
+                            s + 1 == t || bsend[u][s].is_some()
+                        }
+                    };
+                    if !ready {
+                        break;
+                    }
+                    match r {
+                        CellRef::Fwd(u) => {
+                            let carry = fsend[u][s];
+                            let deps: Vec<usize> =
+                                carry.into_iter().collect();
+                            let ordering: Vec<usize> =
+                                prev[s].into_iter().collect();
+                            let toks = &micro_tokens[u];
+                            let tgts = &micro_targets[u];
+                            let cell = g.node_with_ordering(
+                                format!("fwd[u{u},s{s}]"),
+                                &deps,
+                                &ordering,
+                                move |sub, j| {
+                                    let boundary = match carry {
+                                        Some(c) => Some(&dep_outs(j, c)?[0]),
+                                        None => None,
+                                    };
+                                    self.run_fwd_cell(
+                                        sub, s, toks, tgts, boundary,
+                                        Some(u),
+                                    )
+                                },
+                            );
+                            ids.fwd[u][s] = cell;
+                            prev[s] = Some(cell);
+                            if s + 1 < t {
+                                let chain: Vec<usize> =
+                                    flink[s].into_iter().collect();
+                                let send = g.comm_node_with_ordering(
+                                    format!("send[u{u},s{s}->{}]", s + 1),
+                                    &[cell],
+                                    &chain,
+                                    sim,
+                                    move |_, j| {
+                                        let x = &dep_outs(j, cell)?[0];
+                                        Ok(vec![self.ledger.send(x)])
+                                    },
+                                );
+                                flink[s] = Some(send);
+                                fsend[u][s + 1] = Some(send);
+                            }
+                        }
+                        CellRef::Bwd(u) => {
+                            let fwd_cell = ids.fwd[u][s];
+                            debug_assert_ne!(
+                                fwd_cell,
+                                usize::MAX,
+                                "bwd[u{u},s{s}] emitted before its forward"
+                            );
+                            // Last stage seeds from its own head cell's
+                            // dx; inner stages from the reversed send.
+                            let last = s + 1 == t;
+                            let from = if last {
+                                fwd_cell
+                            } else {
+                                bsend[u][s].unwrap()
+                            };
+                            let deps = vec![from];
+                            // Ordering: the device chain, plus the stash
+                            // hand-off edge from the cell's own forward
+                            // (redundant with the chain but it makes the
+                            // fwd→bwd lifetime auditable); dedup against
+                            // the data deps.
+                            let mut ordering: Vec<usize> = Vec::new();
+                            if let Some(p) = prev[s] {
+                                if !deps.contains(&p) {
+                                    ordering.push(p);
+                                }
+                            }
+                            if !deps.contains(&fwd_cell)
+                                && !ordering.contains(&fwd_cell)
+                            {
+                                ordering.push(fwd_cell);
+                            }
+                            let toks = &micro_tokens[u];
+                            let cell = g.node_with_ordering(
+                                format!("bwd[u{u},s{s}]"),
+                                &deps,
+                                &ordering,
+                                move |sub, j| {
+                                    let outs = dep_outs(j, from)?;
+                                    let dout = if last {
+                                        &outs[2] // head dx
+                                    } else {
+                                        &outs[0]
+                                    };
+                                    self.run_bwd_cell(sub, s, u, toks, dout)
+                                },
+                            );
+                            ids.bwd[u][s] = cell;
+                            prev[s] = Some(cell);
+                            if s > 0 {
+                                let chain: Vec<usize> =
+                                    blink[s - 1].into_iter().collect();
+                                let send = g.comm_node_with_ordering(
+                                    format!("bsend[u{u},s{s}->{}]", s - 1),
+                                    &[cell],
+                                    &chain,
+                                    sim,
+                                    move |_, j| {
+                                        let d = &dep_outs(j, cell)?[0];
+                                        // Reversed P2P hand-off: one
+                                        // gradient to one peer.
+                                        Ok(vec![self.ledger.send(d)])
+                                    },
+                                );
+                                blink[s - 1] = Some(send);
+                                bsend[u][s - 1] = Some(send);
+                            }
+                        }
+                    }
+                    pos[s] += 1;
+                    emitted += 1;
+                    progressed = true;
+                }
+            }
+            assert!(
+                progressed,
+                "pp schedule deadlocked — {:?} device sequences are \
+                 inconsistent with the staircase dependencies",
+                self.pp_sched
+            );
+        }
+        for u in 0..m {
+            g.mark_output(ids.fwd[u][t - 1]);
+            for s in 0..t {
+                g.mark_output(ids.bwd[u][s]);
+            }
+        }
+        (g, ids)
+    }
+
+    // ------------------------------------------------------------------
+    // Executed passes
+    // ------------------------------------------------------------------
+
     /// One pipelined forward pass over `batch` (which must carry
     /// [`PpTrainer::batch`] rows); returns the token-weighted mean loss.
     /// `&self`: the pipeline mutates nothing — the ledger and breakdown
@@ -432,6 +971,191 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         }
         Ok((num / den.max(1.0)) as f32)
     }
+
+    fn add_grad(&self, grads: &mut NamedParams, name: &str, t: &HostTensor) {
+        grads.by_name.get_mut(name).unwrap().add_assign(t);
+    }
+
+    /// Accumulate one backward cell's flat layer gradients (layer l1−1
+    /// first, [`LAYER_GRAD_FIELDS`] within each layer) into the named
+    /// grad set — the shared replay both the pipeline and the monolithic
+    /// reference walk, in the same order.
+    fn accum_layer_grads(
+        &self,
+        l0: usize,
+        l1: usize,
+        flat: &[HostTensor],
+        grads: &mut NamedParams,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            flat.len() >= 12 * (l1 - l0),
+            "backward cell emitted {} grads for range [{l0},{l1})",
+            flat.len()
+        );
+        for (i, li) in (l0..l1).rev().enumerate() {
+            for (k, f) in LAYER_GRAD_FIELDS.iter().enumerate() {
+                let name = format!("blocks.{li}.{f}");
+                grads
+                    .by_name
+                    .get_mut(&name)
+                    .with_context(|| format!("no grad slot {name}"))?
+                    .add_assign(&flat[12 * i + k]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Scale accumulated gradients to the micro-batch mean (exact when
+    /// `micro` is a power of two — every registered pp bundle is).
+    fn scale_grads(&self, grads: &mut NamedParams) {
+        if self.micro <= 1 {
+            return;
+        }
+        let inv = 1.0 / self.micro as f32;
+        for name in grads.order.clone() {
+            grads.by_name.get_mut(&name).unwrap().scale(inv);
+        }
+    }
+
+    /// One pipelined fwd+bwd pass: build and run the step graph under the
+    /// active [`PpSched`] and `--sched` mode, then replay the per-cell
+    /// gradients in deterministic (micro-batch ascending, stage
+    /// descending) order. Parameters are untouched — [`PpTrainer::train_step`]
+    /// adds the optimizer.
+    pub fn compute_grads(&self, batch: &Batch) -> Result<PpStep> {
+        let (micro_tokens, micro_targets) = self.micro_slices(batch)?;
+        self.stash.reset_live();
+        let ids;
+        let outs: Vec<Vec<HostTensor>>;
+        {
+            let (g, step_ids) =
+                self.build_step_graph(&micro_tokens, &micro_targets);
+            ids = step_ids;
+            outs = g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
+        }
+        // Last-reader release: every forward stash was consumed by its
+        // backward cell — whole-pass memory does not outlive the step.
+        anyhow::ensure!(
+            self.stash.len() == 0,
+            "{} activation stash(es) leaked past step end",
+            self.stash.len()
+        );
+        let t = self.stages;
+        let (mut num, mut den, mut objective) = (0.0f64, 0.0f64, 0.0f64);
+        let mut grads = zeros_like(&self.params);
+        for u in 0..self.micro {
+            let head = &outs[ids.fwd[u][t - 1]];
+            let (loss_u, count_u) =
+                (head[0].data[0] as f64, head[1].data[0] as f64);
+            num += loss_u * count_u;
+            den += count_u;
+            objective += loss_u;
+            self.add_grad(&mut grads, "lnF_g", &head[3]);
+            self.add_grad(&mut grads, "lnF_b", &head[4]);
+            self.add_grad(&mut grads, "wte", &head[5]);
+            for s in (0..t).rev() {
+                let o = &outs[ids.bwd[u][s]];
+                let (l0, l1) = self.layer_ranges[s];
+                self.accum_layer_grads(l0, l1, &o[1..], &mut grads)?;
+                if s == 0 {
+                    let base = 1 + 12 * (l1 - l0);
+                    self.add_grad(&mut grads, "wte", &o[base]);
+                    self.add_grad(&mut grads, "wpe", &o[base + 1]);
+                }
+            }
+        }
+        self.scale_grads(&mut grads);
+        Ok(PpStep {
+            loss: num / den.max(1.0),
+            objective: objective / self.micro as f64,
+            grads,
+        })
+    }
+
+    /// The monolithic single-device reference: the same micro-batch loop
+    /// over the same kernels with the same accumulation replay, executed
+    /// as a plain sequential loop — no graph, no stashes table, no
+    /// sends. The pipeline must match it bit for bit under every
+    /// (pp_sched × sched mode) pair at a fixed thread count.
+    pub fn reference_grads(&self, batch: &Batch) -> Result<PpStep> {
+        let (micro_tokens, micro_targets) = self.micro_slices(batch)?;
+        let n_layer = self.cfg.n_layer;
+        let (mut num, mut den, mut objective) = (0.0f64, 0.0f64, 0.0f64);
+        let mut grads = zeros_like(&self.params);
+        for u in 0..self.micro {
+            let x0 = self.run_embed(&self.ctx, &micro_tokens[u])?;
+            let (x, kept) =
+                self.fwd_layers(&self.ctx, 0, n_layer, x0, true)?;
+            let head = self.run_head(&self.ctx, &x, &micro_targets[u])?;
+            let (loss_u, count_u) =
+                (head[0].data[0] as f64, head[1].data[0] as f64);
+            num += loss_u * count_u;
+            den += count_u;
+            objective += loss_u;
+            self.add_grad(&mut grads, "lnF_g", &head[3]);
+            self.add_grad(&mut grads, "lnF_b", &head[4]);
+            self.add_grad(&mut grads, "wte", &head[5]);
+            let (dx, flat) =
+                self.bwd_layers(&self.ctx, 0, n_layer, &kept, &head[2])?;
+            self.accum_layer_grads(0, n_layer, &flat, &mut grads)?;
+            let eb = self.exec_in(
+                &self.ctx,
+                "embed_bwd",
+                &[
+                    &micro_tokens[u],
+                    self.params.get("wte")?,
+                    self.params.get("wpe")?,
+                    &dx,
+                ],
+            )?;
+            self.add_grad(&mut grads, "wte", &eb[0]);
+            self.add_grad(&mut grads, "wpe", &eb[1]);
+        }
+        self.scale_grads(&mut grads);
+        Ok(PpStep {
+            loss: num / den.max(1.0),
+            objective: objective / self.micro as f64,
+            grads,
+        })
+    }
+
+    /// AdamW on the accumulated mean gradients; returns the pre-clip
+    /// global gradient norm.
+    fn optimize(&mut self, st: &PpStep) -> f32 {
+        self.step += 1;
+        adamw_step(
+            &self.ctx,
+            &mut self.params,
+            &st.grads,
+            &mut self.m,
+            &mut self.v,
+            self.step,
+            &self.tc,
+            1.0,
+        ) as f32
+    }
+
+    /// One full pipelined training step — executed fwd+bwd staircase
+    /// under the active [`PpSched`], deterministic replay accumulation,
+    /// AdamW per stage's parameters (held here as one named set).
+    /// Returns (loss, pre-clip grad norm).
+    pub fn train_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        let st = self.compute_grads(batch)?;
+        let gnorm = self.optimize(&st);
+        Ok((st.loss as f32, gnorm))
+    }
+
+    /// The monolithic counterpart of [`PpTrainer::train_step`]: identical
+    /// math through [`PpTrainer::reference_grads`] and the same AdamW.
+    pub fn reference_step(&mut self, batch: &Batch) -> Result<(f32, f32)> {
+        let st = self.reference_grads(batch)?;
+        let gnorm = self.optimize(&st);
+        Ok((st.loss as f32, gnorm))
+    }
+
+    // ------------------------------------------------------------------
+    // Audit / introspection
+    // ------------------------------------------------------------------
 
     /// Build and capture-run the GPipe forward graph for `fal audit`:
     /// a forced-serial run with a read recorder, yielding the (name,
@@ -456,11 +1180,95 @@ impl<'e, B: Backend + ?Sized> PpTrainer<'e, B> {
         ))
     }
 
-    /// GPipe bubble fraction of this pipeline's schedule, (t−1)/(m+t−1) —
-    /// the analytic quantity [`pp_cost`] charges, exposed for reports.
+    /// Capture-run the full fwd+bwd step graph under the active
+    /// [`PpSched`] for `fal audit`; the capture run consumes the stashes
+    /// exactly as a real step would (asserted empty afterwards).
+    pub fn captured_step_graph(
+        &self,
+        batch: &Batch,
+    ) -> Result<(String, GraphSpec, GraphTrace)> {
+        let (micro_tokens, micro_targets) = self.micro_slices(batch)?;
+        self.stash.reset_live();
+        let (g, _ids) =
+            self.build_step_graph(&micro_tokens, &micro_targets);
+        let spec = g.spec();
+        let (outs, trace) = g.run_captured(&self.ctx);
+        let _: Vec<Vec<HostTensor>> =
+            outs.into_iter().collect::<Result<_>>()?;
+        anyhow::ensure!(
+            self.stash.len() == 0,
+            "capture run leaked {} stash(es)",
+            self.stash.len()
+        );
+        Ok((
+            format!(
+                "pp.{}.t{}m{}.step",
+                self.pp_sched.name(),
+                self.stages,
+                self.micro
+            ),
+            spec,
+            trace,
+        ))
+    }
+
+    /// Ideal bubble fraction of this pipeline, (t−1)/(m+t−1) — the
+    /// analytic quantity [`pp_cost`] charges, identical for both
+    /// schedules (see `costmodel::timemodel`).
     pub fn bubble_fraction(&self) -> f64 {
-        let (t, m) = (self.stages as f64, self.micro as f64);
-        (t - 1.0) / (m + t - 1.0)
+        crate::costmodel::timemodel::pipeline_bubble_fraction(
+            self.stages,
+            self.micro,
+        )
+    }
+
+    /// Predicted peak live activation stashes on the most-loaded device
+    /// under the active schedule: `m` for GPipe, `min(m, t)` for 1F1B.
+    pub fn predicted_peak_stash(&self) -> usize {
+        match self.pp_sched {
+            PpSched::GPipe => {
+                crate::costmodel::timemodel::gpipe_peak_stash(
+                    self.stages,
+                    self.micro,
+                )
+            }
+            PpSched::OneFOneB => {
+                crate::costmodel::timemodel::one_f_one_b_peak_stash(
+                    self.stages,
+                    self.micro,
+                )
+            }
+        }
+    }
+
+    /// Live stashes right now (0 between well-formed steps).
+    pub fn stash_len(&self) -> usize {
+        self.stash.len()
+    }
+
+    /// Measured per-device peak live stash counts since construction
+    /// (or the last [`PpTrainer::reset_stash_peaks`]).
+    pub fn stash_peaks(&self) -> Vec<usize> {
+        self.stash.peaks()
+    }
+
+    pub fn reset_stash_peaks(&self) {
+        self.stash.reset_peaks()
+    }
+
+    /// Realized bubble fraction over `wall_secs` of pipeline execution:
+    /// 1 − Σ_dev busy / (t × wall), from the per-device `pp.dev{s}`
+    /// breakdown buckets. Meaningful under concurrent schedules
+    /// (graph/overlap with ≥ t workers); a serial run reports the
+    /// serialization itself.
+    pub fn realized_bubble_fraction(&self, wall_secs: f64) -> f64 {
+        if wall_secs <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = (0..self.stages)
+            .map(|s| self.breakdown.get(&format!("pp.dev{s}")))
+            .sum();
+        (1.0 - busy / (self.stages as f64 * wall_secs)).max(0.0)
     }
 }
 
@@ -532,5 +1340,107 @@ mod tests {
         // Indivisible layer or batch splits are rejected.
         assert!(PpTrainer::new(&eng, "tiny", 3, 2, PCIE_GEN4).is_err());
         assert!(PpTrainer::new(&eng, "tiny", 2, 3, PCIE_GEN4).is_err());
+    }
+
+    #[test]
+    fn pp_sched_parses() {
+        assert_eq!(PpSched::parse("gpipe").unwrap(), PpSched::GPipe);
+        assert_eq!(PpSched::parse("1f1b").unwrap(), PpSched::OneFOneB);
+        assert!(PpSched::parse("zigzag").is_err());
+        assert_eq!(PpSched::default(), PpSched::GPipe);
+        assert_eq!(PpSched::GPipe.name(), "gpipe");
+        assert_eq!(PpSched::OneFOneB.name(), "1f1b");
+    }
+
+    #[test]
+    fn device_sequences_follow_the_schedule() {
+        use CellRef::{Bwd, Fwd};
+        let eng = crate::runtime::NativeBackend::synthetic();
+        let mut t = PpTrainer::new(&eng, "tiny", 4, 4, PCIE_GEN4).unwrap();
+        // GPipe: all F then all B on every device.
+        assert_eq!(
+            t.device_sequence(0),
+            vec![Fwd(0), Fwd(1), Fwd(2), Fwd(3), Bwd(0), Bwd(1), Bwd(2), Bwd(3)]
+        );
+        t.pp_sched = PpSched::OneFOneB;
+        // Device 0: 3 warmup forwards, one F/B pair, backward drain.
+        assert_eq!(
+            t.device_sequence(0),
+            vec![Fwd(0), Fwd(1), Fwd(2), Fwd(3), Bwd(0), Bwd(1), Bwd(2), Bwd(3)]
+        );
+        // Device 1: 2 warmup forwards.
+        assert_eq!(
+            t.device_sequence(1),
+            vec![Fwd(0), Fwd(1), Fwd(2), Bwd(0), Fwd(3), Bwd(1), Bwd(2), Bwd(3)]
+        );
+        // Last device: no warmup — strict alternation.
+        assert_eq!(
+            t.device_sequence(3),
+            vec![Fwd(0), Bwd(0), Fwd(1), Bwd(1), Fwd(2), Bwd(2), Fwd(3), Bwd(3)]
+        );
+        // Every device runs each cell exactly once.
+        for s in 0..4 {
+            let seq = t.device_sequence(s);
+            assert_eq!(seq.len(), 8);
+            for u in 0..4 {
+                assert_eq!(seq.iter().filter(|&&c| c == Fwd(u)).count(), 1);
+                assert_eq!(seq.iter().filter(|&&c| c == Bwd(u)).count(), 1);
+            }
+        }
+    }
+
+    /// Deterministic synthetic token batch matching the trainer's shape.
+    fn tok_batch(b: usize, s: usize, vocab: usize) -> Batch {
+        let toks: Vec<i32> =
+            (0..b * s).map(|i| ((i * 7 + 3) % vocab) as i32).collect();
+        let tgts: Vec<i32> =
+            (0..b * s).map(|i| ((i * 5 + 1) % vocab) as i32).collect();
+        Batch {
+            tokens: HostTensor::from_i32(&[b, s], &toks),
+            targets: HostTensor::from_i32(&[b, s], &tgts),
+        }
+    }
+
+    #[test]
+    fn gpipe_step_trains_and_releases_stashes() {
+        let eng = crate::runtime::NativeBackend::synthetic();
+        let mut t = PpTrainer::new(&eng, "tiny", 2, 2, PCIE_GEN4).unwrap();
+        let b = tok_batch(t.batch, t.cfg.seq_len, t.cfg.vocab_size);
+        let (loss, gnorm) = t.train_step(&b).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        assert!(gnorm.is_finite() && gnorm > 0.0, "gnorm {gnorm}");
+        // Last-reader release drained every stash; GPipe peaked at m per
+        // device.
+        assert_eq!(t.stash_len(), 0);
+        assert_eq!(t.stash_peaks(), vec![2, 2]);
+        assert_eq!(t.predicted_peak_stash(), 2);
+        // Every boundary crossed twice per micro-batch (fwd + reversed).
+        let s = t.ledger.stats();
+        assert_eq!(s.broadcasts, (2 * t.micro * (t.stages - 1)) as u64);
+        // A second step keeps training (params actually moved).
+        let (loss2, _) = t.train_step(&b).unwrap();
+        assert!(loss2 < loss, "step did not descend: {loss2} vs {loss}");
+    }
+
+    #[test]
+    fn one_f_one_b_bounds_live_stashes_to_depth() {
+        let eng = crate::runtime::NativeBackend::synthetic();
+        let b;
+        {
+            let t = PpTrainer::new(&eng, "tiny", 2, 4, PCIE_GEN4).unwrap();
+            b = tok_batch(t.batch, t.cfg.seq_len, t.cfg.vocab_size);
+        }
+        // GPipe: every device stashes all four micro-batches.
+        let mut g = PpTrainer::new(&eng, "tiny", 2, 4, PCIE_GEN4).unwrap();
+        g.train_step(&b).unwrap();
+        assert_eq!(g.stash_peaks(), vec![4, 4]);
+        assert_eq!(g.predicted_peak_stash(), 4);
+        // 1F1B: device s peaks at min(m, t - s) — bounded by the depth.
+        let mut f = PpTrainer::new(&eng, "tiny", 2, 4, PCIE_GEN4).unwrap();
+        f.pp_sched = PpSched::OneFOneB;
+        f.train_step(&b).unwrap();
+        assert_eq!(f.stash_peaks(), vec![2, 1]);
+        assert_eq!(f.predicted_peak_stash(), 2);
+        assert_eq!(f.stash_len(), 0);
     }
 }

@@ -144,6 +144,35 @@ pub fn predicted_hidden_fraction(compute_secs: f64, comm_secs: f64) -> f64 {
     (compute_secs.max(0.0) / comm_secs).min(1.0)
 }
 
+/// Ideal pipeline bubble fraction of a `stages`-deep, `micro`-micro-batch
+/// schedule: (t−1)/(m+t−1), the idle share of each device while the
+/// staircase fills and drains. Identical for GPipe and 1F1B — 1F1B
+/// reorders cells to bound activation *memory*; the fwd+bwd dependency
+/// staircase (and therefore the bubble) is unchanged. The `fal pp` CLI
+/// and the pipeline bench report the realized fraction (measured from
+/// per-device `Breakdown` busy spans) against this prediction.
+pub fn pipeline_bubble_fraction(stages: usize, micro: usize) -> f64 {
+    let (t, m) = (stages.max(1) as f64, micro.max(1) as f64);
+    (t - 1.0) / (m + t - 1.0)
+}
+
+/// Peak live activation stashes on the most-loaded device under GPipe:
+/// every device runs all `micro` forwards before its first backward, so
+/// the whole pass's stashes are live at once — the memory growth 1F1B
+/// exists to fix.
+pub fn gpipe_peak_stash(_stages: usize, micro: usize) -> usize {
+    micro.max(1)
+}
+
+/// Peak live activation stashes under 1F1B: device `s` interleaves each
+/// backward as soon as its forward completes after `min(m, t−1−s)`
+/// warmup forwards, holding at most `min(m, t−s)` stashes — bounded by
+/// the pipeline depth on the most-loaded device (s = 0), independent of
+/// the micro-batch count.
+pub fn one_f_one_b_peak_stash(stages: usize, micro: usize) -> usize {
+    micro.max(1).min(stages.max(1))
+}
+
 /// Single-GPU tokens/sec (Fig 8a): TP=1, no interconnect.
 pub fn single_gpu_throughput(
     cfg: &ModelConfig,
@@ -249,6 +278,37 @@ mod tests {
         assert_eq!(predicted_hidden_fraction(5.0, 1.0), 1.0);
         // Never negative, never above 1.
         assert_eq!(predicted_hidden_fraction(-1.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn pipeline_bubble_fraction_matches_gpipe_formula() {
+        assert_eq!(pipeline_bubble_fraction(1, 4), 0.0);
+        assert!((pipeline_bubble_fraction(2, 2) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((pipeline_bubble_fraction(4, 4) - 3.0 / 7.0).abs() < 1e-12);
+        // More micro-batches shrink the bubble; more stages grow it.
+        assert!(
+            pipeline_bubble_fraction(2, 8) < pipeline_bubble_fraction(2, 2)
+        );
+        assert!(
+            pipeline_bubble_fraction(4, 4) > pipeline_bubble_fraction(2, 4)
+        );
+    }
+
+    #[test]
+    fn one_f_one_b_peak_stash_bounded_by_depth() {
+        // GPipe holds every micro-batch; 1F1B caps at the pipeline depth.
+        assert_eq!(gpipe_peak_stash(2, 8), 8);
+        assert_eq!(one_f_one_b_peak_stash(2, 8), 2);
+        assert_eq!(one_f_one_b_peak_stash(4, 2), 2); // fewer micros than depth
+        assert_eq!(one_f_one_b_peak_stash(1, 4), 1);
+        for t in 1..=8 {
+            for m in 1..=8 {
+                assert!(
+                    one_f_one_b_peak_stash(t, m) <= gpipe_peak_stash(t, m)
+                );
+                assert!(one_f_one_b_peak_stash(t, m) <= t);
+            }
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! fal exp <id|all> [--scale 1.0] [--threads N] [--sched graph|serial|overlap] [--artifacts DIR] [--out reports]
 //! fal train --config small --variant fal [--steps 300] [--threads N] [--sched M] [--eval]
 //! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M] [--comm-sim S]
-//! fal pp --config tiny --stages 2 --micro 2 [--steps 4] [--threads N] [--sched M] [--comm-sim S]
+//! fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps 4] [--threads N] [--sched M] [--comm-sim S]
 //! fal audit           # statically verify every registered StageGraph
 //! fal list            # artifacts + experiments
 //! ```
@@ -25,7 +25,7 @@ use std::path::PathBuf;
 
 use anyhow::Result;
 use fal::config::{TrainConfig, Variant, PCIE_GEN4};
-use fal::coordinator::dp_pp::PpTrainer;
+use fal::coordinator::dp_pp::{PpSched, PpTrainer};
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::experiments::{self, ExpCtx};
@@ -95,7 +95,7 @@ fn print_help() {
          USAGE:\n  fal exp <id|all> [--scale S] [--threads N] [--sched M] [--artifacts DIR] [--out DIR]\n\
          \x20 fal train --config small --variant fal [--steps N] [--threads N] [--sched M] [--eval]\n\
          \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
-         \x20 fal pp --config tiny --stages 2 --micro 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
+         \x20 fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
          \x20 fal audit [--threads N] [--sched M]\n\
          \x20 fal list\n\
          \n\
@@ -108,6 +108,9 @@ fn print_help() {
          bit-identical at every thread count).\n\
          --comm-sim S scales each collective's simulated link occupancy\n\
          (0 = off) so the overlap win is measurable on CPU.\n\
+         --pp-sched gpipe|1f1b picks the pipeline linearization: same\n\
+         cells, same bits, different stash lifetime (gpipe peaks at m\n\
+         live stashes per device, 1f1b at the pipeline depth).\n\
          \n\
          Every experiment id runs on the default (native CPU) build — no\n\
          Python, artifacts/ directory, or `--features pjrt` required.\n\
@@ -202,23 +205,37 @@ fn cmd_pp(args: &Args) -> Result<()> {
     let stages = args.usize_or("stages", 2)?;
     let micro = args.usize_or("micro", 2)?;
     let steps = args.usize_or("steps", 4)?;
+    let pp_sched = PpSched::parse(&args.str_or("pp-sched", "gpipe"))?;
     let ctx = exp_ctx(args, 1.0)?;
     let (_, mut loader) = ctx.loader(&config, 0)?;
     let mut t = PpTrainer::new(
         ctx.engine.as_ref(), &config, stages, micro, PCIE_GEN4)?;
     t.comm_sim_scale = args.f64_or("comm-sim", 0.0)?;
+    t.pp_sched = pp_sched;
+    let t0 = std::time::Instant::now();
     for i in 0..steps {
         let b = loader.next_train();
-        let loss = t.forward_loss(&b)?;
-        println!("pipeline pass {:>3}  loss {loss:.4}", i + 1);
+        let (loss, gnorm) = t.train_step(&b)?;
+        println!(
+            "pipeline step {:>3}  loss {loss:.4}  gnorm {gnorm:.4}",
+            i + 1
+        );
     }
+    let wall = t0.elapsed().as_secs_f64();
     let s = t.ledger.stats();
     println!(
-        "\npipeline: {} stages x {} micro-batches (bubble {:.1}%), {} \
-         boundary sends ({:.2} MB), modeled comm {:.5}s on {}",
+        "\npipeline: {} stages x {} micro-batches, {} schedule\n\
+         bubble: predicted {:.1}%, realized {:.1}% over {:.3}s wall\n\
+         peak live stashes: predicted {}, measured {:?} per device\n\
+         {} boundary sends ({:.2} MB), modeled comm {:.5}s on {}",
         t.stages,
         t.micro,
+        t.pp_sched.name(),
         100.0 * t.bubble_fraction(),
+        100.0 * t.realized_bubble_fraction(wall),
+        wall,
+        t.predicted_peak_stash(),
+        t.stash_peaks(),
         s.broadcasts,
         s.broadcast_bytes / 1e6,
         s.modeled_secs,

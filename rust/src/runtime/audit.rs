@@ -238,6 +238,16 @@ impl AuditReport {
         self.comm.iter().map(|c| c.exposed_secs).sum()
     }
 
+    /// Comm-placement rows whose label starts with `prefix` — e.g.
+    /// `"bsend["` selects the pipeline's reversed P2P gradient sends, so
+    /// callers can interrogate one traffic class of a mixed graph.
+    pub fn comm_with_prefix<'a>(
+        &'a self,
+        prefix: &'a str,
+    ) -> impl Iterator<Item = &'a CommOverlap> {
+        self.comm.iter().filter(move |c| c.label.starts_with(prefix))
+    }
+
     /// Human-readable report: one header line, then each violation and
     /// the comm-overlap table.
     pub fn render(&self, name: &str) -> String {

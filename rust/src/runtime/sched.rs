@@ -305,6 +305,24 @@ impl<'a, T: Send + Sync + 'a> StageGraph<'a, T> {
         self.push(label, deps, &[], NodeKind::Comm { sim_secs }, f)
     }
 
+    /// Like [`StageGraph::comm_node`], with additional *ordering-only*
+    /// dependencies (see [`StageGraph::node_with_ordering`]). The
+    /// pipeline trainer uses these for its per-channel link chains — one
+    /// in-flight transfer per P2P boundary and direction — and for the
+    /// stash-bounding edges of the 1F1B schedule. Ordering deps gate the
+    /// node's *start* (value production); under overlap the drain still
+    /// stays in flight on the node's own lane.
+    pub fn comm_node_with_ordering(
+        &mut self,
+        label: impl Into<String>,
+        deps: &[usize],
+        ordering: &[usize],
+        sim_secs: f64,
+        f: impl FnOnce(&ExecCtx, &Joined<'_, T>) -> T + Send + 'a,
+    ) -> usize {
+        self.push(label, deps, ordering, NodeKind::Comm { sim_secs }, f)
+    }
+
     fn push(
         &mut self,
         label: impl Into<String>,
@@ -979,6 +997,50 @@ mod tests {
                 assert_eq!(
                     g.run(&ctx(threads, mode)),
                     vec![0, 1, 10],
+                    "{mode:?} t{threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn comm_ordering_deps_chain_a_channel_without_carrying_values() {
+        // Two sends sharing one virtual channel: the second orders after
+        // the first but reads only its own producer — values are
+        // mode-invariant and the spec exports the ordering edge.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for mode in MODES {
+            for threads in [1usize, 4] {
+                let seq = AtomicUsize::new(0);
+                let sr = &seq;
+                let mut g = StageGraph::new();
+                let a = g.node("a", &[], |_, _| 2i64);
+                let b = g.node("b", &[], |_, _| 5i64);
+                let s1 = g.comm_node("s1", &[a], 0.0, move |_, j| {
+                    sr.fetch_add(1, Ordering::SeqCst);
+                    j.get(a) * 10
+                });
+                let s2 = g.comm_node_with_ordering(
+                    "s2",
+                    &[b],
+                    &[s1],
+                    0.0,
+                    move |_, j| {
+                        assert_eq!(
+                            sr.fetch_add(1, Ordering::SeqCst),
+                            1,
+                            "s2 started before s1 produced"
+                        );
+                        j.get(b) * 10
+                    },
+                );
+                let spec = g.spec();
+                assert_eq!(spec.nodes[s2].deps, vec![b]);
+                assert_eq!(spec.nodes[s2].ordering_deps, vec![s1]);
+                assert!(spec.nodes[s2].comm_sim_secs.is_some());
+                assert_eq!(
+                    g.run(&ctx(threads, mode)),
+                    vec![2, 5, 20, 50],
                     "{mode:?} t{threads}"
                 );
             }

@@ -487,7 +487,10 @@ pub fn synthetic_manifest(specs: &[SyntheticSpec]) -> Manifest {
             }
         }
 
-        // Micro-batch (tp = 1) stage bundles for the GPipe pipeline.
+        // Micro-batch (tp = 1) stage bundles for the executed pipeline:
+        // stage_specs emits the full fwd+bwd kernel set, so every pp
+        // batch also carries attn_bwd / mlp_preln_bwd / head_fwd_bwd /
+        // embed_bwd — the cells of the GPipe/1F1B backward staircase.
         for &pb in &spec.pp_batches {
             if pb == spec.batch && spec.tps.contains(&1) {
                 continue; // already registered above
@@ -664,6 +667,18 @@ mod tests {
                 .artifact(&Manifest::tp_stage_name("tiny", 1, b, "attn_fwd"))
                 .unwrap();
             assert_eq!(a.inputs[0].shape, vec![b, 64, 64], "b={b}");
+            // The pipeline backward staircase needs the bwd kernels at
+            // every micro-batch size too.
+            for stage in
+                ["attn_bwd", "mlp_preln_bwd", "head_fwd_bwd", "embed_bwd"]
+            {
+                assert!(
+                    m.artifacts.contains_key(
+                        &Manifest::tp_stage_name("tiny", 1, b, stage)
+                    ),
+                    "missing {stage} bundle at b={b}"
+                );
+            }
         }
         // Other configs register no micro-batch extras.
         assert!(m

@@ -1,6 +1,7 @@
 //! Acceptance for the graph auditor over the *real* trainer schedules:
 //! every registered StageGraph — TP preln/fal/falplus forward+backward,
-//! the GPipe pipeline, the fused FAL block fork — must audit clean (no
+//! the GPipe pipeline forward, the full pipelined fwd+bwd step graphs
+//! (gpipe and 1f1b), the fused FAL block fork — must audit clean (no
 //! hard violations, no unused-dependency or unreachable-node lints), and
 //! the comm-placement report must reproduce the paper's Fig 2 story:
 //! Pre-LN's strict chains fully expose their all-reduces, while FAL's
@@ -33,6 +34,8 @@ fn registry_covers_every_trainer_schedule() {
         "tp2.falplus.fwd",
         "tp2.falplus.bwd",
         "pp.gpipe.t2m2.fwd",
+        "pp.gpipe.t2m2.step",
+        "pp.1f1b.t2m2.step",
         "block.fal_fused.fwd",
         "block.fal_fused.bwd",
     ] {
@@ -146,6 +149,33 @@ fn falplus_lnf_overlaps_the_attention_allreduce() {
             a.name,
             c.label
         );
+    }
+}
+
+#[test]
+fn pipeline_step_reversed_sends_report_hideable_comm() {
+    // The full fwd+bwd step graphs: the reversed P2P gradient sends
+    // (bsend[...]) are comm nodes like any other, and under both
+    // linearizations the auditor finds compute that is neither upstream
+    // nor downstream of them — the other micro-batch's cells — so the
+    // overlap scheduler has something to hide them behind.
+    let audits = audits();
+    for name in ["pp.gpipe.t2m2.step", "pp.1f1b.t2m2.step"] {
+        let a = find(&audits, name);
+        let bsends: Vec<_> = a.report.comm_with_prefix("bsend[").collect();
+        assert_eq!(
+            bsends.len(),
+            2,
+            "{name}: one reversed send per (micro-batch, boundary)\n{}",
+            a.report.render(name)
+        );
+        assert!(
+            bsends.iter().any(|c| c.hideable_secs > 0.0),
+            "{name}: no reversed send has independent compute\n{}",
+            a.report.render(name)
+        );
+        // Forward sends are still present and also priced.
+        assert_eq!(a.report.comm_with_prefix("send[").count(), 2, "{name}");
     }
 }
 

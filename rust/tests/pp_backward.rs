@@ -1,0 +1,356 @@
+//! Differential harness for the executed pipeline backward.
+//!
+//! The pipeline trainer schedules one full training step — forward
+//! staircase, reversed P2P gradient sends, backward staircase — as a
+//! single StageGraph under two linearizations (`--pp-sched gpipe|1f1b`)
+//! and three scheduler modes (`--sched serial|graph|overlap`). This
+//! harness pins the correctness story from three independent directions:
+//!
+//! 1. **Finite differences**: the executed pipeline's gradients on every
+//!    stage's parameters (plus the shared embedding/head set) match a
+//!    central-difference probe of the objective.
+//! 2. **Bitwise differential**: losses, gradients, gnorm, and post-step
+//!    parameters are 0-ulp identical to the monolithic single-device
+//!    reference loop under every (threads × mode × pp-sched) combination
+//!    — including randomly drawn (stages × micro × threads × mode) grids.
+//! 3. **Schedule structure**: replaying the captured step-graph spec with
+//!    atomic done-flags proves no cell starts before its declared deps at
+//!    any worker count, and the stash table's live counts show 1F1B
+//!    bounding activation memory to the pipeline depth with last-reader
+//!    release draining the table by step end.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use fal::config::PCIE_GEN4;
+use fal::coordinator::dp_pp::{PpSched, PpTrainer};
+use fal::coordinator::topology::NamedParams;
+use fal::data::{Batch, Corpus, CorpusSpec, Loader};
+use fal::runtime::{
+    Backend, ExecCtx, GraphSpec, NativeBackend, SchedMode, StageGraph,
+};
+use fal::util::proptest::Prop;
+
+const MODES: [SchedMode; 3] =
+    [SchedMode::Serial, SchedMode::Graph, SchedMode::Overlap];
+const SCHEDS: [PpSched; 2] = [PpSched::GPipe, PpSched::OneFOneB];
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+fn batch(engine: &NativeBackend, seed: u64) -> Batch {
+    let cfg = engine.manifest().config("tiny").unwrap();
+    let corpus =
+        Corpus::generate(CorpusSpec::for_vocab(cfg.vocab_size), 20_000, 3);
+    let loader = Loader::new(&corpus, cfg.seq_len, 4, 0.1, seed);
+    loader.fixed_batch(seed)
+}
+
+fn trainer<'e>(
+    eng: &'e NativeBackend,
+    stages: usize,
+    micro: usize,
+    threads: usize,
+    mode: SchedMode,
+    sched: PpSched,
+) -> PpTrainer<'e, NativeBackend> {
+    let mut t = PpTrainer::new(eng, "tiny", stages, micro, PCIE_GEN4).unwrap();
+    t.ctx = ExecCtx::new(threads).with_sched(mode);
+    t.pp_sched = sched;
+    t.comm_sim_scale = 2.0;
+    t
+}
+
+/// Bitwise equality over two named tensor sets (params or grads).
+fn named_identical(a: &NamedParams, b: &NamedParams) -> bool {
+    a.order == b.order
+        && a.order.iter().all(|n| {
+            let (x, y) = (&a.by_name[n], &b.by_name[n]);
+            x.data.len() == y.data.len()
+                && x.data
+                    .iter()
+                    .zip(&y.data)
+                    .all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+fn assert_named_identical(a: &NamedParams, b: &NamedParams, what: &str) {
+    assert_eq!(a.order, b.order, "{what}: name sets differ");
+    for n in &a.order {
+        let (x, y) = (&a.by_name[n], &b.by_name[n]);
+        assert_eq!(x.data.len(), y.data.len(), "{what}: {n} length");
+        for i in 0..x.data.len() {
+            assert!(
+                x.data[i].to_bits() == y.data[i].to_bits(),
+                "{what}: {n}[{i}] = {:e} vs {:e}",
+                x.data[i],
+                y.data[i]
+            );
+        }
+    }
+}
+
+/// Finite-difference probes on every stage's parameters: the executed
+/// pipeline gradient at the largest-|g| coordinate of each probed tensor
+/// must match a central difference of the objective (the mean of
+/// per-micro-batch mean losses — exactly what the 1/m-scaled accumulated
+/// gradients differentiate).
+#[test]
+fn fd_gradients_every_stage() {
+    let eng = NativeBackend::synthetic();
+    let b = batch(&eng, 31);
+    // 2 stages × 2 layers: blocks.{0,1} live on device 0, blocks.{2,3}
+    // on device 1; embeddings enter on device 0, the head on device 1.
+    let mut t = trainer(&eng, 2, 2, 2, SchedMode::Graph, PpSched::GPipe);
+    let st = t.compute_grads(&b).unwrap();
+    let probes = [
+        "blocks.0.wq",
+        "blocks.0.w1",
+        "blocks.0.ln1_g",
+        "blocks.1.wo",
+        "blocks.2.w2",
+        "blocks.2.ln2_b",
+        "blocks.3.wv",
+        "blocks.3.b1",
+        "wte",
+        "wpe",
+        "lnF_g",
+        "lnF_b",
+    ];
+    for name in probes {
+        let g = st.grads.by_name.get(name).unwrap();
+        let (idx, &gv) = g
+            .data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+            .unwrap();
+        let analytic = gv as f64;
+        let eps = 1e-2f32;
+        let orig = t.params.by_name.get(name).unwrap().data[idx];
+        t.params.by_name.get_mut(name).unwrap().data[idx] = orig + eps;
+        let up = t.compute_grads(&b).unwrap().objective;
+        t.params.by_name.get_mut(name).unwrap().data[idx] = orig - eps;
+        let dn = t.compute_grads(&b).unwrap().objective;
+        t.params.by_name.get_mut(name).unwrap().data[idx] = orig;
+        let fd = (up - dn) / (2.0 * eps as f64);
+        // f32 kernels under an f64 probe: generous relative band plus an
+        // absolute floor for coordinates near the noise level.
+        let tol = 0.08 * fd.abs().max(analytic.abs()) + 3e-4;
+        assert!(
+            (fd - analytic).abs() <= tol,
+            "{name}[{idx}]: fd {fd:.6e} vs pipeline grad {analytic:.6e} \
+             (tol {tol:.2e})"
+        );
+    }
+}
+
+/// The executed pipeline is 0-ulp identical to the monolithic
+/// single-device loop on loss, objective, every gradient, the gradient
+/// norm, and the post-AdamW parameters — for both pp schedules, all
+/// three scheduler modes, at every thread count. (The reference is
+/// recomputed per thread count: the partition knob legitimately changes
+/// reduction bits; schedules and modes must not.)
+#[test]
+fn pipeline_matches_monolithic_bitwise_everywhere() {
+    let eng = NativeBackend::synthetic();
+    let b = batch(&eng, 32);
+    for &threads in &THREADS {
+        let mut rt =
+            trainer(&eng, 2, 2, threads, SchedMode::Serial, PpSched::GPipe);
+        let rst = rt.reference_grads(&b).unwrap();
+        let (rloss, rgnorm) = rt.reference_step(&b).unwrap();
+        for mode in MODES {
+            for sched in SCHEDS {
+                let what = format!("t{threads} {mode:?} {}", sched.name());
+                let mut t = trainer(&eng, 2, 2, threads, mode, sched);
+                let st = t.compute_grads(&b).unwrap();
+                assert_eq!(
+                    st.loss.to_bits(),
+                    rst.loss.to_bits(),
+                    "{what}: loss diverged"
+                );
+                assert_eq!(
+                    st.objective.to_bits(),
+                    rst.objective.to_bits(),
+                    "{what}: objective diverged"
+                );
+                assert_named_identical(
+                    &st.grads,
+                    &rst.grads,
+                    &format!("{what} grads"),
+                );
+                let (loss, gnorm) = t.train_step(&b).unwrap();
+                assert_eq!(
+                    loss.to_bits(),
+                    rloss.to_bits(),
+                    "{what}: step loss diverged"
+                );
+                assert_eq!(
+                    gnorm.to_bits(),
+                    rgnorm.to_bits(),
+                    "{what}: gnorm diverged"
+                );
+                assert_named_identical(
+                    &t.params,
+                    &rt.params,
+                    &format!("{what} post-step params"),
+                );
+            }
+        }
+    }
+}
+
+/// Random (stages × micro × threads × mode) grids: gpipe ≡ 1f1b ≡
+/// monolithic, 0-ulp, and the measured peak live-stash count never
+/// exceeds the schedule's prediction (for 1F1B: the pipeline depth).
+#[test]
+fn random_grids_gpipe_1f1b_monolithic_agree() {
+    let eng = NativeBackend::synthetic();
+    let b = batch(&eng, 33);
+    Prop::new(10).check(
+        "gpipe/1f1b/monolithic 0-ulp on random pipeline grids",
+        |r| vec![r.below(3), r.below(3), r.below(4), r.below(3)],
+        |raw| {
+            let get = |i: usize| raw.get(i).copied().unwrap_or(0);
+            // tiny has 4 layers and pp bundles at b ∈ {4, 2, 1}.
+            let stages = 1usize << (get(0) % 3);
+            let micro = 1usize << (get(1) % 3);
+            let threads = THREADS[get(2) % THREADS.len()];
+            let mode = MODES[get(3) % MODES.len()];
+            let mut rt = trainer(
+                &eng,
+                stages,
+                micro,
+                threads,
+                SchedMode::Serial,
+                PpSched::GPipe,
+            );
+            let r = rt.reference_grads(&b).unwrap();
+            SCHEDS.iter().all(|&sched| {
+                let mut t = trainer(&eng, stages, micro, threads, mode, sched);
+                let st = t.compute_grads(&b).unwrap();
+                let peak =
+                    t.stash_peaks().into_iter().max().unwrap_or(0);
+                st.loss.to_bits() == r.loss.to_bits()
+                    && st.objective.to_bits() == r.objective.to_bits()
+                    && named_identical(&st.grads, &r.grads)
+                    && t.stash_len() == 0
+                    && peak <= t.predicted_peak_stash()
+                    && (sched != PpSched::OneFOneB
+                        || peak <= micro.min(stages))
+            })
+        },
+    );
+}
+
+/// Replay the captured step-graph spec with atomic done-flags: under the
+/// concurrent scheduler modes at several worker counts, no node may start
+/// before every declared data *and* ordering dependency has finished.
+fn replay_spec_with_flags(spec: &GraphSpec, threads: usize, mode: SchedMode) {
+    let n = spec.nodes.len();
+    let flags: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+    let fr = &flags;
+    let mut g: StageGraph<'_, usize> = StageGraph::new();
+    for (i, node) in spec.nodes.iter().enumerate() {
+        let mut all: Vec<usize> = node.deps.clone();
+        all.extend(node.ordering_deps.iter().copied());
+        let label = node.label.clone();
+        let run = move |_: &ExecCtx, _j: &fal::runtime::Joined<'_, usize>| {
+            for &d in &all {
+                assert!(
+                    fr[d].load(Ordering::SeqCst),
+                    "node {i} ({label}) started before dep {d} finished \
+                     ({threads} threads, {mode:?})"
+                );
+            }
+            fr[i].store(true, Ordering::SeqCst);
+            i
+        };
+        if let Some(sim) = node.comm_sim_secs {
+            g.comm_node_with_ordering(
+                node.label.clone(),
+                &node.deps,
+                &node.ordering_deps,
+                sim,
+                run,
+            );
+        } else {
+            g.node_with_ordering(
+                node.label.clone(),
+                &node.deps,
+                &node.ordering_deps,
+                run,
+            );
+        }
+    }
+    let out = g.run(&ExecCtx::new(threads).with_sched(mode));
+    assert_eq!(out.len(), n);
+    assert!(flags.iter().all(|f| f.load(Ordering::SeqCst)));
+}
+
+#[test]
+fn no_cell_starts_before_its_dependencies() {
+    let eng = NativeBackend::synthetic();
+    let b = batch(&eng, 34);
+    for sched in SCHEDS {
+        let mut t = PpTrainer::new(&eng, "tiny", 2, 2, PCIE_GEN4).unwrap();
+        t.pp_sched = sched;
+        t.comm_sim_scale = 1.0;
+        let (_name, spec, _trace) = t.captured_step_graph(&b).unwrap();
+        for threads in [2usize, 4, 7] {
+            for mode in [SchedMode::Graph, SchedMode::Overlap] {
+                replay_spec_with_flags(&spec, threads, mode);
+            }
+        }
+    }
+}
+
+/// Last-reader release drains the stash table by step end in every mode,
+/// and the per-device peaks realize the schedule's memory claim: GPipe
+/// keeps all `m` stashes live per device, 1F1B caps device `s` at
+/// `min(m, t−s)`.
+#[test]
+fn stash_table_drains_and_peaks_follow_the_schedule() {
+    let eng = NativeBackend::synthetic();
+    let b = batch(&eng, 35);
+    for &threads in &[1usize, 4] {
+        for mode in MODES {
+            let mut g = trainer(&eng, 2, 4, threads, mode, PpSched::GPipe);
+            g.train_step(&b).unwrap();
+            assert_eq!(g.stash_len(), 0, "gpipe {mode:?} t{threads}");
+            assert_eq!(g.stash_peaks(), vec![4, 4]);
+            let mut f =
+                trainer(&eng, 2, 4, threads, mode, PpSched::OneFOneB);
+            f.train_step(&b).unwrap();
+            assert_eq!(f.stash_len(), 0, "1f1b {mode:?} t{threads}");
+            assert_eq!(f.stash_peaks(), vec![2, 1]);
+            assert_eq!(f.predicted_peak_stash(), 2);
+        }
+    }
+}
+
+/// Reversed gradient sends hit the ledger with single-peer accounting:
+/// one forward and one backward hand-off per (micro-batch, boundary),
+/// payload = one [micro_batch, seq, d_model] f32 tensor each way,
+/// identical bytes under both schedules.
+#[test]
+fn reversed_sends_are_accounted_per_boundary() {
+    let eng = NativeBackend::synthetic();
+    let b = batch(&eng, 36);
+    let mut counts = Vec::new();
+    for sched in SCHEDS {
+        let mut t = trainer(&eng, 4, 2, 2, SchedMode::Graph, sched);
+        t.train_step(&b).unwrap();
+        let s = t.ledger.stats();
+        let sends = (2 * t.micro * (t.stages - 1)) as u64;
+        assert_eq!(s.broadcasts, sends, "{}", sched.name());
+        let payload =
+            (t.micro_batch * t.cfg.seq_len * t.cfg.d_model * 4) as f64;
+        assert_eq!(
+            s.broadcast_bytes,
+            sends as f64 * payload,
+            "{}",
+            sched.name()
+        );
+        counts.push((s.broadcasts, s.broadcast_bytes.to_bits()));
+    }
+    assert_eq!(counts[0], counts[1], "schedules moved different bytes");
+}

@@ -1,0 +1,144 @@
+//! `fal serve` decode-path bench: KV-cache decode step wall-clock under
+//! all three StageGraph schedules, plus the continuous-batching engine's
+//! *virtual* serving scoreboard — tokens/sec against the costmodel clock,
+//! p50/p99 per-token and time-to-first-token latencies, and mean batch
+//! occupancy — for Pre-LN vs FAL vs FAL+ at tp=2 on the micro config.
+//!
+//! Wall-clock rows (`serve_decode_step_*`) track the real cost of one
+//! `[B, 1, D]` decode step across PRs; the virtual rows are deterministic
+//! (seeded workload + costmodel clock, no wall time), so their scoreboard
+//! trajectory moves only when the schedule or the cost model does.
+//! Latency rows encode virtual seconds directly (ns_per_iter = secs ×
+//! 1e9); the throughput row samples the virtual run time with generated
+//! tokens as units, so `thr` is virtual tokens/sec. Runs with default
+//! features: no artifacts needed.
+//!
+//! `cargo bench --bench serve`
+
+use fal::config::{Variant, PCIE_GEN4, RTX_3090};
+use fal::coordinator::serve::{poisson_workload, Decoder, ServeEngine};
+use fal::runtime::{ExecCtx, NativeBackend, SchedMode};
+use fal::util::benchkit::{Bench, CaseMeta};
+
+fn main() {
+    let base_ctx = ExecCtx::from_env();
+    let threads = base_ctx.threads();
+    let mut b = Bench::from_env();
+
+    for (variant, name) in [
+        (Variant::PreLn, "preln"),
+        (Variant::Fal, "fal"),
+        (Variant::FalPlus, "falplus"),
+    ] {
+        // One decode step (admit-free, fixed batch) under each schedule:
+        // graph-vs-serial is the rank-/branch-parallel win, overlap-vs-
+        // graph the comm-node drain win once comm is simulated.
+        for sched in
+            [SchedMode::Serial, SchedMode::Graph, SchedMode::Overlap]
+        {
+            let engine = NativeBackend::synthetic_with_ctx(
+                base_ctx.with_sched(sched),
+            );
+            let mut dec =
+                Decoder::new(&engine, "micro", variant, 2, PCIE_GEN4)
+                    .unwrap();
+            let batch = dec.batch;
+            let seq = dec.cfg.seq_len;
+            let toks: Vec<i32> = (0..batch)
+                .map(|i| ((i * 7 + 3) % dec.cfg.vocab_size) as i32)
+                .collect();
+            dec.step(&toks, &vec![0; batch]).unwrap(); // warm
+            let mut p = 0usize;
+            b.bench_case(
+                &format!(
+                    "serve_micro_decode_step_{name}_t{threads}_{}",
+                    sched.name()
+                ),
+                CaseMeta::new(
+                    "serve_decode_step",
+                    &format!("micro/{name}/{}", sched.name()),
+                    threads,
+                ),
+                batch as f64,
+                || {
+                    p = (p + 1) % seq;
+                    dec.step(&toks, &vec![p; batch]).unwrap()
+                },
+            );
+        }
+
+        // The virtual serving scoreboard: one deterministic 64-request
+        // run per variant. These numbers are clock-model outputs, not
+        // wall time — bit-identical across machines and thread counts.
+        let engine = NativeBackend::synthetic_with_ctx(
+            base_ctx.with_sched(SchedMode::Graph),
+        );
+        let dec =
+            Decoder::new(&engine, "micro", variant, 2, PCIE_GEN4).unwrap();
+        let cfg = dec.cfg.clone();
+        let reqs = poisson_workload(&cfg, 64, 17, 400.0);
+        let mut srv = ServeEngine::new(dec, RTX_3090);
+        let r = srv.run(&reqs).unwrap();
+        println!(
+            "{name}: {} tok in {:.3} virtual ms — {:.0} tok/s, occupancy \
+             {:.2}, p50/p99 token {:.1}/{:.1} us, p50/p99 ttft \
+             {:.1}/{:.1} us",
+            r.generated_tokens,
+            r.virtual_secs * 1e3,
+            r.tokens_per_sec,
+            r.mean_occupancy,
+            r.p50_token_secs * 1e6,
+            r.p99_token_secs * 1e6,
+            r.p50_ttft_secs * 1e6,
+            r.p99_ttft_secs * 1e6,
+        );
+        b.record_case(
+            &format!("serve_micro_virtual_tput_{name}_t{threads}"),
+            CaseMeta::new(
+                "serve_virtual_tput",
+                &format!("micro/{name}/tp2"),
+                threads,
+            ),
+            &[r.virtual_secs],
+            r.generated_tokens as f64,
+        );
+        for (tag, secs) in [
+            ("p50_token", r.p50_token_secs),
+            ("p99_token", r.p99_token_secs),
+            ("p50_ttft", r.p50_ttft_secs),
+            ("p99_ttft", r.p99_ttft_secs),
+        ] {
+            b.record_case(
+                &format!("serve_micro_{tag}_{name}_t{threads}"),
+                CaseMeta::new(
+                    "serve_virtual_latency",
+                    &format!("micro/{name}/tp2/{tag}"),
+                    threads,
+                ),
+                &[secs],
+                0.0,
+            );
+        }
+        b.record_case(
+            &format!("serve_micro_occupancy_{name}_t{threads}"),
+            CaseMeta::new(
+                "serve_occupancy",
+                &format!("micro/{name}/tp2"),
+                threads,
+            ),
+            &[r.mean_occupancy],
+            0.0,
+        );
+    }
+
+    println!("\n== summary ==\n{}", b.summary());
+    println!(
+        "(decode-vs-full-forward bitwise equality is asserted in \
+         tests/serve_decode.rs; the virtual rows move only with the \
+         schedule or cost model, the decode_step rows with the kernels)"
+    );
+    match b.write_json_default() {
+        Ok(path) => println!("scoreboard: {}", path.display()),
+        Err(e) => eprintln!("warning: could not write scoreboard: {e}"),
+    }
+}

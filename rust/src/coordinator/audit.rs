@@ -28,6 +28,7 @@ use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 
 use super::dp_pp::{PpSched, PpTrainer};
+use super::serve::Decoder;
 use super::tp_trainer::TpTrainer;
 
 /// One audited schedule: its registry name and the auditor's verdict.
@@ -49,9 +50,10 @@ fn token_batch(b: usize, s: usize, vocab: usize) -> Batch {
 }
 
 /// Build, capture and audit every registered trainer graph on `engine`:
-/// the TP fwd+bwd schedules for preln/fal/falplus at tp=2, the GPipe
-/// pipeline forward, the full pipelined fwd+bwd step graphs under both
-/// `--pp-sched` linearizations (gpipe and 1f1b), and the fused FAL
+/// the TP fwd+bwd schedules for preln/fal/falplus at tp=2, the serve
+/// decode-step schedules for the same variants at tp=1 and tp=2, the
+/// GPipe pipeline forward, the full pipelined fwd+bwd step graphs under
+/// both `--pp-sched` linearizations (gpipe and 1f1b), and the fused FAL
 /// block's intra-stage fork. Comm simulation runs at scale 1.0 so the
 /// overlap report predicts real exposed seconds on the ledger's link.
 pub fn audit_registered_graphs(engine: &dyn Backend) -> Result<Vec<GraphAudit>> {
@@ -69,6 +71,18 @@ pub fn audit_registered_graphs(engine: &dyn Backend) -> Result<Vec<GraphAudit>> 
         t.comm_sim_scale = 1.0;
         let batch = token_batch(t.batch, t.cfg.seq_len, t.cfg.vocab_size);
         for (name, spec, trace) in t.captured_graphs(&batch)? {
+            out.push(GraphAudit { name, report: audit(&spec, &trace) });
+        }
+    }
+
+    // The serve decode step (Fig 2 forward on [B, 1, D] rows): one graph
+    // per (tp, variant). tp=1 audits the structure with world-1
+    // collectives; tp=2 prices the per-token all-reduce exposure.
+    for tp in [1usize, 2] {
+        for variant in [Variant::PreLn, Variant::Fal, Variant::FalPlus] {
+            let mut d = Decoder::new(engine, "tiny", variant, tp, PCIE_GEN4)?;
+            d.comm_sim_scale = 1.0;
+            let (name, spec, trace) = d.captured_step_graph()?;
             out.push(GraphAudit { name, report: audit(&spec, &trace) });
         }
     }

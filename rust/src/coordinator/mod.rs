@@ -14,6 +14,9 @@
 //!   Apdx B comparison (Fig 10).
 //! * [`audit`] — the registry of auditable schedules: every trainer
 //!   StageGraph, capture-run and statically checked (`fal audit`).
+//! * [`serve`] — KV-cache autoregressive decoding with continuous
+//!   batching (`fal serve`): the rank-sharded decode step as a StageGraph
+//!   plus a deterministic virtual-clock request simulation.
 //!
 //! # The invariants the coordinator rests on
 //!
@@ -44,6 +47,7 @@ pub mod collectives;
 pub mod dp_pp;
 pub mod optim;
 pub mod overlap;
+pub mod serve;
 pub mod sp_trainer;
 pub mod topology;
 pub mod tp_trainer;

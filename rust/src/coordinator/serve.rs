@@ -1,0 +1,911 @@
+//! `fal serve` — KV-cache autoregressive decoding with continuous
+//! batching over the TP shard layout.
+//!
+//! Two layers:
+//!
+//! * [`Decoder`] — one decode step as a [`StageGraph`]: per-rank
+//!   `decode_attn` / `decode_mlp_*` nodes (runtime/native/decode.rs)
+//!   feeding [`StageGraph::comm_node`] all-reduces, exactly the Fig 2
+//!   schedule of the TP trainer but on `[B, 1, D]` activations. The FAL
+//!   first-attention signal is produced once in the preparation block's
+//!   decode step and re-injected into every later block's MLP — the
+//!   paper's reuse carries to generation, where FAL's 1-AR/block halves
+//!   the per-token collective count. Per-layer, per-rank K/V caches are
+//!   full-capacity `[B, S, d_kv]` append buffers owned here; rows above a
+//!   slot's position are garbage and never read, so slot reuse needs no
+//!   explicit reset.
+//! * [`ServeEngine`] — deterministic continuous batching: a seeded
+//!   Poisson-ish arrival process ([`poisson_workload`]), per-step
+//!   admission into free batch slots, eviction on completion, and a
+//!   **virtual clock** advanced by the costmodel's
+//!   [`decode_step_time`] — wall time never feeds a decision or a
+//!   reported number, so every run at a given (config, variant, tp,
+//!   seed) reproduces bit-identically at any thread count and `--sched`
+//!   mode.
+//!
+//! # Bitwise contract
+//!
+//! A slot's logits at position `p` equal row `p` of the full-sequence
+//! forward bit-for-bit (tests/serve_decode.rs): every decode kernel is
+//! row-independent with fixed accumulation order (see
+//! [`crate::runtime::native::decode`]), the all-reduce sums shards in
+//! ascending rank order, and the residual adds here mirror the training
+//! forward's statement order (`fal_fused_fwd` = attention partial +
+//! MLP partial, then `x +`). Padded (inactive) slots flow garbage rows
+//! through the same batch — harmless, because no kernel mixes batch
+//! rows — and their FLOPs are charged to the ledger's wasted-work
+//! account, the quantity continuous batching exists to shrink.
+
+use anyhow::{Context, Result};
+
+use crate::config::{GpuSpec, LinkSpec, ModelConfig, Variant};
+use crate::costmodel::timemodel::{decode_flops_per_token, decode_step_time};
+use crate::runtime::{
+    Backend, ExecCtx, GraphSpec, GraphTrace, Manifest, StageGraph,
+};
+use crate::tensor::HostTensor;
+use crate::util::rng::Rng;
+use crate::util::timer::Breakdown;
+
+use super::collectives::CommLedger;
+use super::topology::{shard_block, shard_dims, BlockShard, NamedParams};
+use super::{dep_outs, dep_t, StageOut};
+
+// ---------------------------------------------------------------------------
+// Decoder: one KV-cache decode step as a StageGraph
+// ---------------------------------------------------------------------------
+
+pub struct Decoder<'e, B: Backend + ?Sized> {
+    pub engine: &'e B,
+    pub cfg: ModelConfig,
+    pub variant: Variant,
+    pub tp: usize,
+    /// Batch slot count — the lowered decode-stage bundle's batch.
+    pub batch: usize,
+    pub ledger: CommLedger,
+    pub params: NamedParams,
+    /// Per-layer, per-rank parameter slices (static: no optimizer here).
+    shards: Vec<Vec<BlockShard>>,
+    /// Per-layer, per-rank K/V append caches `[B, S, d_kv]`; rows
+    /// `0..pos[b]` are slot `b`'s valid history.
+    k_cache: Vec<Vec<HostTensor>>,
+    v_cache: Vec<Vec<HostTensor>>,
+    /// This step's per-slot positions as an i32 tensor — a field so the
+    /// graph's rank-node closures can borrow it alongside the caches.
+    pos_scratch: HostTensor,
+    pub breakdown: Breakdown,
+    /// Virtual-clock scale for the simulated all-reduce drain (same knob
+    /// as the TP trainer): `0.0` disables; accounting is unaffected.
+    pub comm_sim_scale: f64,
+    pub ctx: ExecCtx,
+}
+
+/// A built (not yet run) decode-step graph plus the ids read post-run.
+struct DecodeGraph<'s> {
+    g: StageGraph<'s, StageOut>,
+    head_id: usize,
+    /// Per layer: per-rank `decode_attn` node ids (outputs
+    /// `[out, k_new, v_new]` — the K/V rows appended after the run).
+    attn_ids: Vec<Vec<usize>>,
+}
+
+impl<'e, B: Backend + ?Sized> Decoder<'e, B> {
+    pub fn new(
+        engine: &'e B,
+        config: &str,
+        variant: Variant,
+        tp: usize,
+        link: LinkSpec,
+    ) -> Result<Decoder<'e, B>> {
+        anyhow::ensure!(
+            matches!(
+                variant,
+                Variant::PreLn | Variant::Fal | Variant::FalPlus
+            ),
+            "decode schedules implemented for preln, fal and falplus"
+        );
+        let cfg = engine.manifest().config(config)?.clone();
+        let dims = shard_dims(&cfg, tp)?;
+        let schema = engine.manifest().schema(config)?.to_vec();
+        let flat = engine.load_params(config, 0)?;
+        let params = NamedParams::from_flat(&schema, flat);
+        let batch = [8usize, 4, 2]
+            .into_iter()
+            .find(|b| {
+                engine.manifest().artifacts.contains_key(
+                    &Manifest::tp_stage_name(config, tp, *b, "decode_attn"),
+                )
+            })
+            .with_context(|| {
+                format!("no tp{tp} decode stages for config {config}")
+            })?;
+        let mut shards = Vec::with_capacity(cfg.n_layer);
+        for li in 0..cfg.n_layer {
+            shards.push(shard_block(&params, li, dims)?);
+        }
+        let cache = || -> Vec<Vec<HostTensor>> {
+            (0..cfg.n_layer)
+                .map(|_| {
+                    (0..tp)
+                        .map(|_| {
+                            HostTensor::zeros(&[batch, cfg.seq_len, dims.d_kv])
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let ctx = engine.exec_ctx();
+        Ok(Decoder {
+            engine,
+            cfg,
+            variant,
+            tp,
+            batch,
+            ledger: CommLedger::new(link, tp),
+            params,
+            shards,
+            k_cache: cache(),
+            v_cache: cache(),
+            pos_scratch: HostTensor::from_i32(&[batch], &vec![0; batch]),
+            breakdown: Breakdown::new(),
+            comm_sim_scale: 0.0,
+            ctx,
+        })
+    }
+
+    fn stage(&self, stage: &str) -> String {
+        Manifest::tp_stage_name(&self.cfg.name, self.tp, self.batch, stage)
+    }
+
+    fn exec_in(
+        &self,
+        ctx: &ExecCtx,
+        stage: &str,
+        inputs: &[&HostTensor],
+    ) -> Result<Vec<HostTensor>> {
+        self.engine
+            .execute_in(ctx, &self.stage(stage), inputs)
+            .with_context(|| format!("stage {stage}"))
+    }
+
+    /// Simulated link drain per decode all-reduce: one `[B, 1, D]` f32
+    /// activation per collective.
+    fn comm_sim_secs(&self) -> f64 {
+        if self.comm_sim_scale <= 0.0 {
+            return 0.0;
+        }
+        let bytes = (self.batch * self.cfg.d_model * 4) as f64;
+        self.comm_sim_scale * self.ledger.allreduce_model_secs(bytes)
+    }
+
+    /// One `decode_attn` node per rank: reads the activation node plus
+    /// this layer's rank-local cache and the shared position vector.
+    fn attn_rank_nodes<'s>(
+        &'s self,
+        g: &mut StageGraph<'s, StageOut>,
+        li: usize,
+        x_id: usize,
+    ) -> Vec<usize> {
+        let mut ids = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let shard = &self.shards[li][r];
+            let kc = &self.k_cache[li][r];
+            let vc = &self.v_cache[li][r];
+            let pos = &self.pos_scratch;
+            ids.push(g.node(
+                format!("L{li}.decode_attn[r{r}]"),
+                &[x_id],
+                move |sub, j| {
+                    let x = dep_t(j, x_id)?;
+                    let mut v: Vec<&HostTensor> = vec![x, kc, vc, pos];
+                    v.extend(shard.attn.iter());
+                    let _s = self.breakdown.span("stage.decode_attn");
+                    self.exec_in(sub, "decode_attn", &v)
+                },
+            ));
+        }
+        ids
+    }
+
+    /// One MLP node per rank; `fa_id` selects the FAL stage.
+    fn mlp_rank_nodes<'s>(
+        &'s self,
+        g: &mut StageGraph<'s, StageOut>,
+        li: usize,
+        x_id: usize,
+        fa_id: Option<usize>,
+    ) -> Vec<usize> {
+        let stage = if fa_id.is_some() {
+            "decode_mlp_fal"
+        } else {
+            "decode_mlp_preln"
+        };
+        let mut deps = vec![x_id];
+        if let Some(fa) = fa_id {
+            deps.push(fa);
+        }
+        let mut ids = Vec::with_capacity(self.tp);
+        for r in 0..self.tp {
+            let shard = &self.shards[li][r];
+            ids.push(g.node(
+                format!("L{li}.{stage}[r{r}]"),
+                &deps,
+                move |sub, j| {
+                    let x = dep_t(j, x_id)?;
+                    let mut v: Vec<&HostTensor> = vec![x];
+                    if let Some(fa) = fa_id {
+                        v.push(dep_t(j, fa)?);
+                    }
+                    v.extend(shard.mlp.iter());
+                    let _s = self.breakdown.span(if fa_id.is_some() {
+                        "stage.decode_mlp_fal"
+                    } else {
+                        "stage.decode_mlp_preln"
+                    });
+                    self.exec_in(sub, stage, &v)
+                },
+            ));
+        }
+        ids
+    }
+
+    /// The decode all-reduce as a comm node — ascending-rank shard sum of
+    /// the `part`-th outputs, identical 0-ulp contract as the trainer's.
+    fn ar_node_at<'s>(
+        &'s self,
+        g: &mut StageGraph<'s, StageOut>,
+        label: String,
+        ranks: &[usize],
+        part: usize,
+        sim: f64,
+    ) -> usize {
+        let deps = ranks.to_vec();
+        g.comm_node(label, ranks, sim, move |sub, j| {
+            let mut parts: Vec<&HostTensor> = Vec::with_capacity(deps.len());
+            for &id in &deps {
+                parts.push(&dep_outs(j, id)?[part]);
+            }
+            Ok(vec![self.ledger.all_reduce_refs(sub, &parts)])
+        })
+    }
+
+    /// Wire one decode step as a StageGraph (Fig 2 on `[B, 1, D]` rows).
+    fn build_decode_graph(&self, x0: HostTensor) -> DecodeGraph<'_> {
+        let sim = self.comm_sim_secs();
+        let mut g: StageGraph<'_, StageOut> =
+            StageGraph::new().with_breakdown(&self.breakdown);
+        let mut x_id = g.node("embed.x", &[], move |_, _| Ok(vec![x0]));
+        let mut fa_id: Option<usize> = None;
+        let mut attn_ids: Vec<Vec<usize>> =
+            Vec::with_capacity(self.cfg.n_layer);
+
+        for li in 0..self.cfg.n_layer {
+            let ranks = self.attn_rank_nodes(&mut g, li, x_id);
+            for &id in &ranks {
+                g.mark_output(id); // k_new/v_new read post-run
+            }
+            match (self.variant, li) {
+                (Variant::PreLn, _) => {
+                    let ar_a = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.attn"), &ranks, 0, sim,
+                    );
+                    let h_id = g.node(
+                        format!("L{li}.resid.h"),
+                        &[x_id, ar_a],
+                        move |_, j| {
+                            let mut h = dep_t(j, x_id)?.clone();
+                            h.add_assign(dep_t(j, ar_a)?);
+                            Ok(vec![h])
+                        },
+                    );
+                    let mlp = self.mlp_rank_nodes(&mut g, li, h_id, None);
+                    let ar_m = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.mlp"), &mlp, 0, sim,
+                    );
+                    x_id = g.node(
+                        format!("L{li}.resid.x"),
+                        &[h_id, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, h_id)?.clone();
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                }
+                (Variant::Fal, 0) => {
+                    // Preparation block: assemble MHA_1, normalize once,
+                    // feed this step's own MLP — and every later block's.
+                    let ar_a = self.ar_node_at(
+                        &mut g, "L0.ar.attn".into(), &ranks, 0, sim,
+                    );
+                    let lnf = &self.shards[0][0].lnf;
+                    let fa = g.node("L0.lnf_fwd", &[ar_a], move |sub, j| {
+                        let a = dep_t(j, ar_a)?;
+                        let _s = self.breakdown.span("stage.decode_lnf");
+                        self.exec_in(sub, "decode_lnf", &[a, &lnf[0], &lnf[1]])
+                    });
+                    let mlp =
+                        self.mlp_rank_nodes(&mut g, 0, x_id, Some(fa));
+                    let ar_m = self.ar_node_at(
+                        &mut g, "L0.ar.mlp".into(), &mlp, 0, sim,
+                    );
+                    x_id = g.node(
+                        "L0.resid.x",
+                        &[x_id, ar_a, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, x_id)?.clone();
+                            x.add_assign(dep_t(j, ar_a)?);
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                    fa_id = Some(fa);
+                }
+                (Variant::Fal, _) => {
+                    // Main block, one all-reduce: MHA and MLP are sibling
+                    // rank nodes (the MLP reads only x and the block-1
+                    // signal), their partials sum per rank, and a single
+                    // comm node reduces the fused partial — `fal_fused_fwd`
+                    // semantics on one token row.
+                    let fa = fa_id.expect("fa node set in block 1");
+                    let mlp =
+                        self.mlp_rank_nodes(&mut g, li, x_id, Some(fa));
+                    let mut sums = Vec::with_capacity(self.tp);
+                    for r in 0..self.tp {
+                        let (a_id, m_id) = (ranks[r], mlp[r]);
+                        sums.push(g.node(
+                            format!("L{li}.fused.sum[r{r}]"),
+                            &[a_id, m_id],
+                            move |_, j| {
+                                let mut s = dep_outs(j, a_id)?[0].clone();
+                                s.add_assign(dep_t(j, m_id)?);
+                                Ok(vec![s])
+                            },
+                        ));
+                    }
+                    let ar = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.fused"), &sums, 0, sim,
+                    );
+                    x_id = g.node(
+                        format!("L{li}.resid.x"),
+                        &[x_id, ar],
+                        move |_, j| {
+                            let mut x = dep_t(j, x_id)?.clone();
+                            x.add_assign(dep_t(j, ar)?);
+                            Ok(vec![x])
+                        },
+                    );
+                }
+                (Variant::FalPlus, 0) => {
+                    // FAL+ prep: the raw assembled MHA out is the signal.
+                    let ar_a = self.ar_node_at(
+                        &mut g, "L0.ar.attn".into(), &ranks, 0, sim,
+                    );
+                    let mlp =
+                        self.mlp_rank_nodes(&mut g, 0, x_id, Some(ar_a));
+                    let ar_m = self.ar_node_at(
+                        &mut g, "L0.ar.mlp".into(), &mlp, 0, sim,
+                    );
+                    x_id = g.node(
+                        "L0.resid.x",
+                        &[x_id, ar_a, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, x_id)?.clone();
+                            x.add_assign(dep_t(j, ar_a)?);
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                    fa_id = Some(ar_a);
+                }
+                (Variant::FalPlus, _) => {
+                    // FAL+ main: two all-reduces like Pre-LN, but LNf_i
+                    // depends only on the block-1 signal — a sibling of
+                    // the MHA all-reduce, i.e. hideable compute under
+                    // `--sched overlap`.
+                    let fa = fa_id.expect("fa node set in block 1");
+                    let ar_a = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.attn"), &ranks, 0, sim,
+                    );
+                    let lnf = &self.shards[li][0].lnf;
+                    let fan = g.node(
+                        format!("L{li}.lnf_fwd"),
+                        &[fa],
+                        move |sub, j| {
+                            let a = dep_t(j, fa)?;
+                            let _s = self.breakdown.span("stage.decode_lnf");
+                            self.exec_in(
+                                sub, "decode_lnf", &[a, &lnf[0], &lnf[1]],
+                            )
+                        },
+                    );
+                    let h_id = g.node(
+                        format!("L{li}.resid.h"),
+                        &[x_id, ar_a],
+                        move |_, j| {
+                            let mut h = dep_t(j, x_id)?.clone();
+                            h.add_assign(dep_t(j, ar_a)?);
+                            Ok(vec![h])
+                        },
+                    );
+                    let mlp =
+                        self.mlp_rank_nodes(&mut g, li, h_id, Some(fan));
+                    let ar_m = self.ar_node_at(
+                        &mut g, format!("L{li}.ar.mlp"), &mlp, 0, sim,
+                    );
+                    x_id = g.node(
+                        format!("L{li}.resid.x"),
+                        &[h_id, ar_m],
+                        move |_, j| {
+                            let mut x = dep_t(j, h_id)?.clone();
+                            x.add_assign(dep_t(j, ar_m)?);
+                            Ok(vec![x])
+                        },
+                    );
+                }
+                _ => unreachable!(),
+            }
+            attn_ids.push(ranks);
+        }
+
+        let lnf_g = self.params.get("lnF_g").expect("lnF_g");
+        let lnf_b = self.params.get("lnF_b").expect("lnF_b");
+        let wte = self.params.get("wte").expect("wte");
+        let head_id = g.node("head.decode", &[x_id], move |sub, j| {
+            let x = dep_t(j, x_id)?;
+            let _s = self.breakdown.span("stage.decode_head");
+            self.exec_in(sub, "decode_head", &[x, lnf_g, lnf_b, wte])
+        });
+        g.mark_output(head_id);
+        DecodeGraph { g, head_id, attn_ids }
+    }
+
+    /// Advance every batch slot one position: slot `b` consumes
+    /// `tokens[b]` at position `pos[b]` against its cached history and
+    /// returns its next-token logits row. Returns `[B, V]` logits; the
+    /// new K/V rows are appended to the caches at each slot's position.
+    pub fn step(
+        &mut self,
+        tokens: &[i32],
+        pos: &[usize],
+    ) -> Result<HostTensor> {
+        anyhow::ensure!(
+            tokens.len() == self.batch && pos.len() == self.batch,
+            "step wants {} slots, got {}/{}",
+            self.batch,
+            tokens.len(),
+            pos.len()
+        );
+        for &p in pos {
+            anyhow::ensure!(
+                p < self.cfg.seq_len,
+                "position {p} >= seq_len {}",
+                self.cfg.seq_len
+            );
+        }
+        let pos_i32: Vec<i32> = pos.iter().map(|&p| p as i32).collect();
+        self.pos_scratch = HostTensor::from_i32(&[self.batch], &pos_i32);
+        let tok_t = HostTensor::from_i32(&[self.batch], tokens);
+        let x0 = self
+            .exec_in(
+                &self.ctx,
+                "decode_embed",
+                &[
+                    &tok_t,
+                    &self.pos_scratch,
+                    self.params.get("wte")?,
+                    self.params.get("wpe")?,
+                ],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+        // Fig 2 "Broadcast": the token row is replicated to every rank.
+        self.ledger.broadcast(&x0);
+
+        let (outs, head_id, attn_ids) = {
+            let DecodeGraph { g, head_id, attn_ids } =
+                self.build_decode_graph(x0);
+            let outs: Vec<Vec<HostTensor>> =
+                g.run(&self.ctx).into_iter().collect::<Result<_>>()?;
+            (outs, head_id, attn_ids)
+        };
+        self.append_kv(&outs, &attn_ids, pos);
+        Ok(outs[head_id][0].clone())
+    }
+
+    /// Write each rank's `k_new`/`v_new` rows into the caches at every
+    /// slot's position. Padded slots write too — their rows are garbage a
+    /// later request overwrites from position 0 before ever reading.
+    fn append_kv(
+        &mut self,
+        outs: &[Vec<HostTensor>],
+        attn_ids: &[Vec<usize>],
+        pos: &[usize],
+    ) {
+        let s = self.cfg.seq_len;
+        for (li, ranks) in attn_ids.iter().enumerate() {
+            for (r, &id) in ranks.iter().enumerate() {
+                let (k_new, v_new) = (&outs[id][1], &outs[id][2]);
+                let w = k_new.shape[2];
+                for bi in 0..self.batch {
+                    let dst = (bi * s + pos[bi]) * w;
+                    let src = bi * w;
+                    self.k_cache[li][r].data[dst..dst + w]
+                        .copy_from_slice(&k_new.data[src..src + w]);
+                    self.v_cache[li][r].data[dst..dst + w]
+                        .copy_from_slice(&v_new.data[src..src + w]);
+                }
+            }
+        }
+    }
+
+    /// Build and capture-run one decode-step graph for `fal audit`:
+    /// deterministic tokens, all slots at position 0.
+    pub fn captured_step_graph(
+        &mut self,
+    ) -> Result<(String, GraphSpec, GraphTrace)> {
+        let tokens: Vec<i32> = (0..self.batch)
+            .map(|i| ((i * 7 + 3) % self.cfg.vocab_size) as i32)
+            .collect();
+        let pos = vec![0usize; self.batch];
+        let pos_i32: Vec<i32> = pos.iter().map(|&p| p as i32).collect();
+        self.pos_scratch = HostTensor::from_i32(&[self.batch], &pos_i32);
+        let tok_t = HostTensor::from_i32(&[self.batch], &tokens);
+        let x0 = self
+            .exec_in(
+                &self.ctx,
+                "decode_embed",
+                &[
+                    &tok_t,
+                    &self.pos_scratch,
+                    self.params.get("wte")?,
+                    self.params.get("wpe")?,
+                ],
+            )?
+            .into_iter()
+            .next()
+            .unwrap();
+        let name =
+            format!("serve.tp{}.{}.decode", self.tp, self.variant.name());
+        let (spec, trace) = {
+            let DecodeGraph { g, .. } = self.build_decode_graph(x0);
+            let spec = g.spec();
+            let (outs, trace) = g.run_captured(&self.ctx);
+            let _: Vec<Vec<HostTensor>> =
+                outs.into_iter().collect::<Result<_>>()?;
+            (spec, trace)
+        };
+        Ok((name, spec, trace))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Continuous-batching engine
+// ---------------------------------------------------------------------------
+
+/// One simulated request: arrives at a virtual time, carries a prompt,
+/// wants `max_new` generated tokens.
+#[derive(Debug, Clone)]
+pub struct ServeRequest {
+    pub id: usize,
+    /// Virtual arrival time, seconds.
+    pub arrival: f64,
+    pub prompt: Vec<i32>,
+    pub max_new: usize,
+}
+
+/// Deterministic Poisson-ish workload: exponential inter-arrivals at
+/// `rate` req/s from a seeded [`Rng`], prompt and generation lengths
+/// bounded so `prompt + max_new <= seq_len`. Same seed, same workload —
+/// no wall clock anywhere.
+pub fn poisson_workload(
+    cfg: &ModelConfig,
+    n: usize,
+    seed: u64,
+    rate: f64,
+) -> Vec<ServeRequest> {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5E17E);
+    let mut clock = 0.0f64;
+    let max_prompt = (cfg.seq_len / 2).max(1);
+    (0..n)
+        .map(|id| {
+            clock += -(1.0 - rng.f64()).ln() / rate.max(1e-9);
+            let prompt_len = 1 + rng.below(max_prompt);
+            let gen_cap = (cfg.seq_len - prompt_len).max(1);
+            let max_new = 1 + rng.below(gen_cap);
+            let prompt = (0..prompt_len)
+                .map(|_| rng.below(cfg.vocab_size) as i32)
+                .collect();
+            ServeRequest { id, arrival: clock, prompt, max_new }
+        })
+        .collect()
+}
+
+/// A request occupying a batch slot.
+struct Active {
+    req: ServeRequest,
+    /// Positions processed so far == the next position to decode.
+    len: usize,
+    generated: usize,
+    last_token: i32,
+    ttft_recorded: bool,
+}
+
+/// Aggregate serving statistics (all times virtual).
+#[derive(Debug, Clone, Default)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub completed: usize,
+    pub steps: usize,
+    pub virtual_secs: f64,
+    pub generated_tokens: usize,
+    pub tokens_per_sec: f64,
+    pub p50_token_secs: f64,
+    pub p99_token_secs: f64,
+    pub p50_ttft_secs: f64,
+    pub p99_ttft_secs: f64,
+    /// Mean fraction of batch slots holding a live request per step.
+    pub mean_occupancy: f64,
+    /// FLOPs spent on live slots vs. burned on padded slots — the
+    /// ragged-vs-padded accounting continuous batching optimizes.
+    pub useful_flops: f64,
+    pub wasted_flops: f64,
+    pub allreduces: u64,
+    pub comm_gb: f64,
+}
+
+/// `sorted` ascending; nearest-rank percentile.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Greedy decoding with a strict first-max tie-break — deterministic
+/// across thread counts because the logits themselves are.
+fn argmax_row(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Continuous batching over a [`Decoder`]: admit in arrival order, evict
+/// on completion, advance a virtual clock by the costmodel's per-step
+/// decode time on `gpu`/`link`.
+pub struct ServeEngine<'e, B: Backend + ?Sized> {
+    pub dec: Decoder<'e, B>,
+    pub gpu: GpuSpec,
+    pub link: LinkSpec,
+}
+
+impl<'e, B: Backend + ?Sized> ServeEngine<'e, B> {
+    pub fn new(dec: Decoder<'e, B>, gpu: GpuSpec) -> Self {
+        let link = dec.ledger.link;
+        ServeEngine { dec, gpu, link }
+    }
+
+    /// Run the workload to completion and report. Requests must be
+    /// sorted by arrival (as [`poisson_workload`] emits them).
+    pub fn run(&mut self, requests: &[ServeRequest]) -> Result<ServeReport> {
+        let b = self.dec.batch;
+        let seq = self.dec.cfg.seq_len;
+        let total = requests.len();
+        for w in requests.windows(2) {
+            anyhow::ensure!(
+                w[0].arrival <= w[1].arrival,
+                "requests must be sorted by arrival"
+            );
+        }
+        for r in requests {
+            anyhow::ensure!(
+                !r.prompt.is_empty() && r.prompt.len() + r.max_new <= seq,
+                "request {} exceeds seq_len {seq}",
+                r.id
+            );
+        }
+        let mut next_req = 0usize;
+        let mut slots: Vec<Option<Active>> =
+            (0..b).map(|_| None).collect();
+        let mut clock = 0.0f64;
+        let mut token_lats: Vec<f64> = Vec::new();
+        let mut ttfts: Vec<f64> = Vec::new();
+        let mut rep = ServeReport { requests: total, ..Default::default() };
+        let mut occupancy_sum = 0.0f64;
+
+        while rep.completed < total {
+            // Admit arrived requests into free slots, arrival order.
+            for slot in slots.iter_mut() {
+                if slot.is_none()
+                    && next_req < total
+                    && requests[next_req].arrival <= clock
+                {
+                    let req = requests[next_req].clone();
+                    next_req += 1;
+                    let first = req.prompt[0];
+                    *slot = Some(Active {
+                        req,
+                        len: 0,
+                        generated: 0,
+                        last_token: first,
+                        ttft_recorded: false,
+                    });
+                }
+            }
+            let active_n = slots.iter().flatten().count();
+            if active_n == 0 {
+                // Idle: jump to the next arrival.
+                clock = clock.max(requests[next_req].arrival);
+                continue;
+            }
+
+            // Assemble the padded step batch.
+            let mut tokens = vec![0i32; b];
+            let mut pos = vec![0usize; b];
+            let mut kv_len = 0usize;
+            for (bi, slot) in slots.iter().enumerate() {
+                if let Some(a) = slot {
+                    tokens[bi] = if a.len < a.req.prompt.len() {
+                        a.req.prompt[a.len]
+                    } else {
+                        a.last_token
+                    };
+                    pos[bi] = a.len;
+                    kv_len = kv_len.max(a.len + 1);
+                }
+            }
+            let logits = self.dec.step(&tokens, &pos)?;
+            let st = decode_step_time(
+                &self.dec.cfg,
+                self.dec.variant,
+                &self.gpu,
+                &self.link,
+                self.dec.tp,
+                b,
+                kv_len,
+            );
+            clock += st.total();
+            rep.steps += 1;
+            occupancy_sum += active_n as f64 / b as f64;
+            let per_tok = decode_flops_per_token(&self.dec.cfg, kv_len);
+            rep.useful_flops += active_n as f64 * per_tok;
+            rep.wasted_flops += (b - active_n) as f64 * per_tok;
+
+            // Advance live slots; sample where the prompt is exhausted.
+            let vocab = self.dec.cfg.vocab_size;
+            for (bi, slot) in slots.iter_mut().enumerate() {
+                let Some(a) = slot.as_mut() else { continue };
+                let processed = a.len;
+                a.len += 1;
+                if processed + 1 >= a.req.prompt.len() {
+                    let row = &logits.data[bi * vocab..][..vocab];
+                    a.last_token = argmax_row(row);
+                    a.generated += 1;
+                    rep.generated_tokens += 1;
+                    token_lats.push(st.total());
+                    if !a.ttft_recorded {
+                        a.ttft_recorded = true;
+                        ttfts.push(clock - a.req.arrival);
+                    }
+                    if a.generated >= a.req.max_new || a.len >= seq {
+                        rep.completed += 1;
+                        *slot = None;
+                    }
+                }
+            }
+        }
+
+        rep.virtual_secs = clock;
+        rep.tokens_per_sec = if clock > 0.0 {
+            rep.generated_tokens as f64 / clock
+        } else {
+            0.0
+        };
+        token_lats.sort_by(f64::total_cmp);
+        ttfts.sort_by(f64::total_cmp);
+        rep.p50_token_secs = percentile(&token_lats, 50.0);
+        rep.p99_token_secs = percentile(&token_lats, 99.0);
+        rep.p50_ttft_secs = percentile(&ttfts, 50.0);
+        rep.p99_ttft_secs = percentile(&ttfts, 99.0);
+        rep.mean_occupancy = if rep.steps > 0 {
+            occupancy_sum / rep.steps as f64
+        } else {
+            0.0
+        };
+        let stats = self.dec.ledger.stats();
+        rep.allreduces = stats.allreduces;
+        rep.comm_gb = stats.allreduce_bytes / 1e9;
+        Ok(rep)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PCIE_GEN4, RTX_3090};
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn workload_is_deterministic_and_bounded() {
+        let b = NativeBackend::synthetic();
+        let cfg = b.manifest().config("micro").unwrap().clone();
+        let w1 = poisson_workload(&cfg, 50, 7, 100.0);
+        let w2 = poisson_workload(&cfg, 50, 7, 100.0);
+        assert_eq!(w1.len(), 50);
+        for (a, c) in w1.iter().zip(&w2) {
+            assert_eq!(a.arrival.to_bits(), c.arrival.to_bits());
+            assert_eq!(a.prompt, c.prompt);
+            assert_eq!(a.max_new, c.max_new);
+        }
+        let mut last = 0.0;
+        for r in &w1 {
+            assert!(r.arrival >= last);
+            last = r.arrival;
+            assert!(!r.prompt.is_empty());
+            assert!(r.prompt.len() + r.max_new <= cfg.seq_len);
+            assert!(r.prompt.iter().all(|&t| (t as usize) < cfg.vocab_size));
+        }
+        // Different seed, different arrivals.
+        let w3 = poisson_workload(&cfg, 50, 8, 100.0);
+        assert!(w1.iter().zip(&w3).any(|(a, c)| a.arrival != c.arrival));
+    }
+
+    #[test]
+    fn decode_step_shapes_and_cache_append() {
+        let b = NativeBackend::synthetic();
+        let mut dec =
+            Decoder::new(&b, "micro", Variant::PreLn, 1, PCIE_GEN4).unwrap();
+        let nb = dec.batch;
+        let toks: Vec<i32> = (0..nb).map(|i| i as i32).collect();
+        let logits = dec.step(&toks, &vec![0; nb]).unwrap();
+        assert_eq!(logits.shape, vec![nb, dec.cfg.vocab_size]);
+        // Cache row 0 of layer 0 rank 0 now holds this step's K rows.
+        let k = &dec.k_cache[0][0];
+        let w = k.shape[2];
+        assert!(k.data[..w].iter().any(|&v| v != 0.0));
+        assert_eq!(dec.ledger.stats().broadcasts, 1);
+    }
+
+    #[test]
+    fn serve_run_completes_and_reproduces() {
+        let b = NativeBackend::synthetic();
+        let run = || {
+            let dec =
+                Decoder::new(&b, "micro", Variant::Fal, 1, PCIE_GEN4).unwrap();
+            let cfg = dec.cfg.clone();
+            let reqs = poisson_workload(&cfg, 12, 3, 1000.0);
+            let mut eng = ServeEngine::new(dec, RTX_3090);
+            eng.run(&reqs).unwrap()
+        };
+        let r1 = run();
+        assert_eq!(r1.completed, 12);
+        assert!(r1.generated_tokens > 0);
+        assert!(r1.tokens_per_sec > 0.0);
+        assert!(r1.mean_occupancy > 0.0 && r1.mean_occupancy <= 1.0);
+        assert!(r1.p99_token_secs >= r1.p50_token_secs);
+        assert!(r1.useful_flops > 0.0);
+        let r2 = run();
+        assert_eq!(r1.generated_tokens, r2.generated_tokens);
+        assert_eq!(r1.steps, r2.steps);
+        assert_eq!(r1.virtual_secs.to_bits(), r2.virtual_secs.to_bits());
+        assert_eq!(r1.p99_ttft_secs.to_bits(), r2.p99_ttft_secs.to_bits());
+    }
+
+    #[test]
+    fn percentile_and_argmax_edges() {
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 50.0), 2.0);
+        assert_eq!(percentile(&[1.0, 2.0, 3.0], 99.0), 3.0);
+        // Strict first-max tie-break.
+        assert_eq!(argmax_row(&[0.5, 0.5, 0.1]), 0);
+        assert_eq!(argmax_row(&[0.1, 0.7, 0.7]), 1);
+    }
+}

@@ -10,7 +10,7 @@ use crate::coordinator::overlap::{overlap_block, Phases};
 
 use super::{
     activation_bytes, block_cost, compute_time, ring_allreduce_time,
-    BlockCost, GEMM_EFF, MEM_EFF,
+    BlockCost, ELEM, GEMM_EFF, MEM_EFF,
 };
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -126,6 +126,80 @@ pub fn inference_time(
         gpu,
     );
     total
+}
+
+/// GEMM FLOPs to decode ONE token of ONE sequence with `kv_len` cached
+/// positions: QKV/output projections + incremental attention over the
+/// cache + MLP + LM head. This is also the wasted-work unit `fal serve`
+/// charges for every padded (inactive) batch slot.
+pub fn decode_flops_per_token(cfg: &ModelConfig, kv_len: usize) -> f64 {
+    let d = cfg.d_model as f64;
+    let dkv = d * cfg.n_kv_head as f64 / cfg.n_head as f64;
+    let k = kv_len.max(1) as f64;
+    // q/o projections (2 d^2 each), k/v projections (2 d dkv each),
+    // score + weighted-V attention matmuls (2 k d each), two MLP GEMMs.
+    let per_block = 2.0 * d * (2.0 * d + 2.0 * dkv)
+        + 4.0 * k * d
+        + 4.0 * d * cfg.d_ff as f64;
+    cfg.n_layer as f64 * per_block + 2.0 * d * cfg.vocab_size as f64
+}
+
+/// One continuous-batching decode step (compute, comm), seconds.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DecodeStepTime {
+    pub compute: f64,
+    pub comm: f64,
+}
+
+impl DecodeStepTime {
+    pub fn total(&self) -> f64 {
+        self.compute + self.comm
+    }
+}
+
+/// One decode step in which every one of `batch` slots advances a single
+/// token against a KV cache of `kv_len` positions. Decode is
+/// weight-bandwidth-bound: the whole parameter set streams from HBM once
+/// per step *regardless of batch size*, so batching amortizes the weight
+/// reads — the effect continuous batching exists to exploit. Comm is one
+/// `[B, 1, D]` all-reduce per collective the variant's forward schedule
+/// requires (FAL: 1/block after the preparation block), which is why the
+/// FAL decode step keeps its TP advantage at generation time (Fig 19).
+pub fn decode_step_time(
+    cfg: &ModelConfig,
+    variant: Variant,
+    gpu: &GpuSpec,
+    link: &LinkSpec,
+    tp: usize,
+    batch: usize,
+    kv_len: usize,
+) -> DecodeStepTime {
+    let b = batch.max(1) as f64;
+    let d = cfg.d_model as f64;
+    let dkv = d * cfg.n_kv_head as f64 / cfg.n_head as f64;
+    let k = kv_len.max(1) as f64;
+    // Weights read once per step; the KV cache once per sequence.
+    let weight_bytes = cfg.n_layer as f64
+        * (2.0 * d * d + 2.0 * d * dkv + 2.0 * d * cfg.d_ff as f64)
+        * ELEM
+        + d * cfg.vocab_size as f64 * ELEM;
+    let kv_bytes = b * cfg.n_layer as f64 * 2.0 * k * dkv * ELEM;
+    let flops = b * decode_flops_per_token(cfg, kv_len);
+    let t = tp as f64;
+    let mut st = DecodeStepTime {
+        compute: compute_time(
+            flops / t,
+            (weight_bytes + kv_bytes) / t,
+            gpu,
+        ),
+        comm: 0.0,
+    };
+    let ar_bytes = b * d * ELEM;
+    for i in 0..cfg.n_layer {
+        st.comm += variant.fwd_allreduces_per_block(i) as f64
+            * ring_allreduce_time(ar_bytes, tp, link);
+    }
+    st
 }
 
 /// Predicted fraction of collective wall-clock an overlap-aware schedule
@@ -309,6 +383,51 @@ mod tests {
                 assert!(one_f_one_b_peak_stash(t, m) <= t);
             }
         }
+    }
+
+    #[test]
+    fn decode_flops_track_param_count() {
+        // At short KV lengths decode FLOPs/token ~ 2 * n_params (the
+        // standard rule); the attention term grows them with kv_len.
+        let c = cfg("774M");
+        let f = decode_flops_per_token(&c, 1);
+        let ratio = f / (2.0 * c.n_params as f64);
+        assert!((0.8..1.4).contains(&ratio), "ratio {ratio}");
+        assert!(
+            decode_flops_per_token(&c, 2048) > decode_flops_per_token(&c, 64)
+        );
+    }
+
+    #[test]
+    fn decode_batching_amortizes_weight_reads() {
+        // Per-token decode time must drop sharply with batch size: the
+        // weight stream is paid once per step, not once per sequence.
+        let c = cfg("774M");
+        let per_tok = |b: usize| {
+            decode_step_time(&c, Variant::PreLn, &H200, &NVLINK, 1, b, 256)
+                .total()
+                / b as f64
+        };
+        assert!(per_tok(8) < 0.5 * per_tok(1));
+        assert!(per_tok(32) < per_tok(8));
+    }
+
+    #[test]
+    fn fal_decode_comm_below_preln() {
+        // FAL's 1-AR/block schedule carries over to decode: comm term
+        // roughly halves, total strictly improves on a slow link.
+        let c = cfg("1.5B");
+        let preln = decode_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 4, 8, 512);
+        let fal = decode_step_time(
+            &c, Variant::Fal, &RTX_3090, &PCIE_GEN4, 4, 8, 512);
+        assert!(fal.comm < 0.6 * preln.comm);
+        assert_eq!(fal.compute, preln.compute);
+        assert!(fal.total() < preln.total());
+        // TP=1: no interconnect, no comm.
+        let solo = decode_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 1, 8, 512);
+        assert_eq!(solo.comm, 0.0);
     }
 
     #[test]

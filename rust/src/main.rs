@@ -5,6 +5,7 @@
 //! fal train --config small --variant fal [--steps 300] [--threads N] [--sched M] [--eval]
 //! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M] [--comm-sim S]
 //! fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps 4] [--threads N] [--sched M] [--comm-sim S]
+//! fal serve --config tiny --variant fal --tp 2 [--requests 200] [--rate R] [--seed S] [--threads N] [--sched M] [--comm-sim S]
 //! fal audit           # statically verify every registered StageGraph
 //! fal list            # artifacts + experiments
 //! ```
@@ -24,8 +25,9 @@
 use std::path::PathBuf;
 
 use anyhow::Result;
-use fal::config::{TrainConfig, Variant, PCIE_GEN4};
+use fal::config::{TrainConfig, Variant, PCIE_GEN4, RTX_3090};
 use fal::coordinator::dp_pp::{PpSched, PpTrainer};
+use fal::coordinator::serve::{poisson_workload, Decoder, ServeEngine};
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::experiments::{self, ExpCtx};
@@ -74,11 +76,14 @@ fn run() -> Result<()> {
         print_help();
         return Ok(());
     }
-    match args.expect_subcommand(&["exp", "train", "tp", "pp", "audit", "list"])? {
+    match args.expect_subcommand(&[
+        "exp", "train", "tp", "pp", "serve", "audit", "list",
+    ])? {
         "exp" => cmd_exp(&args),
         "train" => cmd_train(&args),
         "tp" => cmd_tp(&args),
         "pp" => cmd_pp(&args),
+        "serve" => cmd_serve(&args),
         "audit" => cmd_audit(&args),
         "list" => cmd_list(&args),
         _ => {
@@ -96,6 +101,7 @@ fn print_help() {
          \x20 fal train --config small --variant fal [--steps N] [--threads N] [--sched M] [--eval]\n\
          \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
          \x20 fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
+         \x20 fal serve --config tiny --variant fal --tp 2 [--requests N] [--rate R] [--seed S] [--threads N] [--sched M] [--comm-sim S]\n\
          \x20 fal audit [--threads N] [--sched M]\n\
          \x20 fal list\n\
          \n\
@@ -243,6 +249,61 @@ fn cmd_pp(args: &Args) -> Result<()> {
     );
     for (k, v) in t.breakdown.entries() {
         println!("  {k:<14} {v:.3}s");
+    }
+    Ok(())
+}
+
+/// `fal serve`: KV-cache continuous-batching decode over a deterministic
+/// Poisson-ish workload. All reported times come from the costmodel's
+/// virtual clock — tokens/sec, p50/p99 per-token and TTFT latency, batch
+/// occupancy and the ragged-vs-padded wasted-FLOP share reproduce
+/// bit-identically per (config, variant, tp, seed) at any thread count.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let variant = Variant::parse(&args.str_or("variant", "fal"))?;
+    let tp = args.usize_or("tp", 1)?;
+    let n = args.usize_or("requests", 200)?;
+    let seed = args.usize_or("seed", 0)? as u64;
+    let rate = args.f64_or("rate", 200.0)?;
+    let ctx = exp_ctx(args, 1.0)?;
+    let mut dec =
+        Decoder::new(ctx.engine.as_ref(), &config, variant, tp, PCIE_GEN4)?;
+    dec.comm_sim_scale = args.f64_or("comm-sim", 0.0)?;
+    let reqs = poisson_workload(&dec.cfg, n, seed, rate);
+    let batch = dec.batch;
+    let mut eng = ServeEngine::new(dec, RTX_3090);
+    let t0 = std::time::Instant::now();
+    let r = eng.run(&reqs)?;
+    println!(
+        "served {}/{} requests on {config}/{} tp{tp} (batch {batch}, \
+         {} steps, {:.1}s wall)\n\
+         throughput: {:.1} tok/s over {:.3} virtual s ({} tokens)\n\
+         latency: token p50 {:.2} ms, p99 {:.2} ms; TTFT p50 {:.2} ms, \
+         p99 {:.2} ms\n\
+         occupancy: {:.1}% mean; FLOPs useful {:.3e}, padded-waste {:.3e} \
+         ({:.1}%)\n\
+         collectives: {} all-reduces, {:.3} GB",
+        r.completed,
+        r.requests,
+        variant.name(),
+        r.steps,
+        t0.elapsed().as_secs_f64(),
+        r.tokens_per_sec,
+        r.virtual_secs,
+        r.generated_tokens,
+        1e3 * r.p50_token_secs,
+        1e3 * r.p99_token_secs,
+        1e3 * r.p50_ttft_secs,
+        1e3 * r.p99_ttft_secs,
+        100.0 * r.mean_occupancy,
+        r.useful_flops,
+        r.wasted_flops,
+        100.0 * r.wasted_flops / (r.useful_flops + r.wasted_flops).max(1.0),
+        r.allreduces,
+        r.comm_gb,
+    );
+    for (k, v) in eng.dec.breakdown.entries() {
+        println!("  {k:<22} {v:.3}s");
     }
     Ok(())
 }

@@ -1,0 +1,330 @@
+//! KV-cache autoregressive decode stages for the native backend.
+//!
+//! One decode step advances every batch slot by a single position: the
+//! stage family below consumes `x [B, 1, D]` activations plus per-layer
+//! K/V append buffers (`[B, S, d_kv]` capacity tensors owned by the
+//! serving coordinator) and produces this step's logits `[B, V]` together
+//! with the new K/V rows the coordinator appends at each slot's position.
+//!
+//! # Bitwise contract
+//!
+//! Decoding must reproduce the full-sequence forward **bit for bit**
+//! (tests/serve_decode.rs): position `p`'s logits from the decode loop
+//! equal row `p` of the full forward's logits. That works because every
+//! kernel on this path is row-independent with a fixed per-element
+//! accumulation order:
+//!
+//! * `layernorm` / `matmul` / `matmul_nt` operate per output row with
+//!   ascending inner-dim accumulators — row `p` of the full-sequence call
+//!   is the same arithmetic as the `[B, 1, D]` call on row `p` alone.
+//! * [`incremental_attention`] replicates the exact statement order of
+//!   `kernels::attn_unit_fwd` for the single query row `p`: ascending-`j`
+//!   score dots (ascending `t` inside each), running max, ascending-`j`
+//!   exp-normalize, ascending-`j` weighted-V accumulation. The cached K/V
+//!   rows were produced by the identical 1-row matmuls of earlier steps,
+//!   so by induction the whole generation matches the full forward.
+//!
+//! Like the training kernels, the attention core fans out over
+//! `(batch, head)` units through [`ExecCtx::chunk_ranges`] +
+//! [`ExecCtx::scatter`] (the kernels.rs panel partitioner) with a
+//! sequential write-back, so results are bit-identical at every thread
+//! count and under every `--sched` mode.
+
+use crate::runtime::exec::ExecCtx;
+use crate::tensor::HostTensor;
+
+use super::kernels::{layernorm, matmul, matmul_nt, AttnGeom};
+
+/// Single-query causal attention against an append cache.
+///
+/// * `q` `[B, 1, H*dh]` — this step's query rows.
+/// * `k_cache` / `v_cache` `[B, s_cap, Hkv*dh]` — rows `0..pos[b]` are
+///   valid history for slot `b`; later rows are garbage and never read.
+/// * `k_new` / `v_new` `[B, 1, Hkv*dh]` — this step's K/V rows (logical
+///   position `pos[b]`, not yet appended to the cache).
+/// * `pos` — per-slot position of the query row (`0`-based).
+///
+/// Returns `o [B, 1, H*dh]`.
+pub fn incremental_attention(
+    ctx: &ExecCtx,
+    g: &AttnGeom,
+    s_cap: usize,
+    q: &HostTensor,
+    k_cache: &HostTensor,
+    v_cache: &HostTensor,
+    k_new: &HostTensor,
+    v_new: &HostTensor,
+    pos: &[usize],
+) -> HostTensor {
+    let (b, h, dh) = (g.batch, g.heads, g.head_dim);
+    let (dq_w, dkv_w) = (h * dh, g.kv_heads * dh);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut out = vec![0.0f32; b * dq_w];
+    // Same grain as one causal row sweep: a unit touches ~pos*dh cache
+    // elements; size by the capacity so the split is stable across steps.
+    let ranges = ctx.chunk_ranges(b * h, ExecCtx::grain_rows(s_cap * dh));
+    let chunks = ctx.scatter(ranges, |r| {
+        let mut probs = vec![0.0f32; s_cap];
+        let mut bufs = Vec::with_capacity(r.len());
+        for u in r {
+            let (bi, hi) = (u / h, u % h);
+            let kh = hi / (h / g.kv_heads);
+            let p = pos[bi];
+            debug_assert!(p < s_cap, "decode position {p} >= capacity {s_cap}");
+            let qrow = &q.data[bi * dq_w + hi * dh..][..dh];
+            let krow_at = |j: usize| -> &[f32] {
+                if j < p {
+                    &k_cache.data[(bi * s_cap + j) * dkv_w + kh * dh..][..dh]
+                } else {
+                    &k_new.data[bi * dkv_w + kh * dh..][..dh]
+                }
+            };
+            // Scores over keys j <= p, stable softmax — statement-for-
+            // statement the single-row body of kernels::attn_unit_fwd.
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=p {
+                let krow = krow_at(j);
+                let mut dot = 0.0f32;
+                for t in 0..dh {
+                    dot += qrow[t] * krow[t];
+                }
+                probs[j] = dot * scale;
+                mx = mx.max(probs[j]);
+            }
+            let mut sum = 0.0f32;
+            for pr in probs[..=p].iter_mut() {
+                *pr = (*pr - mx).exp();
+                sum += *pr;
+            }
+            let mut buf = vec![0.0f32; dh];
+            for j in 0..=p {
+                let w = probs[j] / sum;
+                let vrow = if j < p {
+                    &v_cache.data[(bi * s_cap + j) * dkv_w + kh * dh..][..dh]
+                } else {
+                    &v_new.data[bi * dkv_w + kh * dh..][..dh]
+                };
+                for t in 0..dh {
+                    buf[t] += w * vrow[t];
+                }
+            }
+            bufs.push((u, buf));
+        }
+        bufs
+    });
+    for (u, buf) in chunks.into_iter().flatten() {
+        let (bi, hi) = (u / h, u % h);
+        out[bi * dq_w + hi * dh..][..dh].copy_from_slice(&buf);
+    }
+    HostTensor::from_vec(&[b, 1, dq_w], out)
+}
+
+/// One-token embedding: `tokens [B] i32`, `pos [B] i32` -> `x [B, 1, D]`.
+/// Row `b` is `wte[tokens[b]] + wpe[pos[b]]` — the same single add per
+/// element as `stages::embed_fwd`, so it matches the full forward bitwise.
+pub fn decode_embed(
+    tokens: &HostTensor,
+    pos: &HostTensor,
+    wte: &HostTensor,
+    wpe: &HostTensor,
+) -> HostTensor {
+    let b = tokens.shape[0];
+    let d = wte.shape[1];
+    let ids = tokens.as_i32();
+    let ps = pos.as_i32();
+    let mut out = vec![0.0f32; b * d];
+    for bi in 0..b {
+        let tok = ids[bi] as usize;
+        let si = ps[bi] as usize;
+        let wrow = &wte.data[tok * d..][..d];
+        let prow = &wpe.data[si * d..][..d];
+        let orow = &mut out[bi * d..][..d];
+        for t in 0..d {
+            orow[t] = wrow[t] + prow[t];
+        }
+    }
+    HostTensor::from_vec(&[b, 1, d], out)
+}
+
+/// Per-shard incremental attention stage.
+///
+/// Inputs: `x [B, 1, D]`, the shard's K/V caches, per-slot positions, and
+/// the shard attention bundle `[ln1_g, ln1_b, wq, wk, wv, wo]`. Outputs
+/// `[out [B, 1, D], k_new [B, 1, d_kv], v_new [B, 1, d_kv]]` — the caller
+/// appends `k_new`/`v_new` at each slot's position after the step.
+pub fn decode_attn(
+    ctx: &ExecCtx,
+    g: &AttnGeom,
+    s_cap: usize,
+    x: &HostTensor,
+    k_cache: &HostTensor,
+    v_cache: &HostTensor,
+    pos: &HostTensor,
+    p: &[&HostTensor],
+) -> Vec<HostTensor> {
+    let positions: Vec<usize> =
+        pos.as_i32().iter().map(|&v| v as usize).collect();
+    let xn = layernorm(ctx, x, p[0], p[1]);
+    let q = matmul(ctx, &xn, p[2]);
+    let k_new = matmul(ctx, &xn, p[3]);
+    let v_new = matmul(ctx, &xn, p[4]);
+    let o = incremental_attention(
+        ctx, g, s_cap, &q, k_cache, v_cache, &k_new, &v_new, &positions,
+    );
+    let out = matmul(ctx, &o, p[5]);
+    vec![out, k_new, v_new]
+}
+
+/// Final-LN + weight-tied projection: `x [B, 1, D]` -> `logits [B, V]`.
+/// The same `layernorm` + `matmul_nt` pair as the training head's logits
+/// path, minus the loss reduction.
+pub fn decode_head(
+    ctx: &ExecCtx,
+    x: &HostTensor,
+    lnf_g: &HostTensor,
+    lnf_b: &HostTensor,
+    wte: &HostTensor,
+) -> HostTensor {
+    let b = x.shape[0];
+    let vocab = wte.shape[0];
+    let xn = layernorm(ctx, x, lnf_g, lnf_b);
+    let logits = matmul_nt(ctx, &xn, wte); // [B, 1, V]
+    HostTensor::from_vec(&[b, vocab], logits.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::kernels::causal_attention;
+    use crate::util::rng::Rng;
+
+    fn geom(b: usize, s: usize, h: usize, kv: usize, dh: usize) -> AttnGeom {
+        AttnGeom { batch: b, seq: s, heads: h, kv_heads: kv, head_dim: dh }
+    }
+
+    /// Row `p` of the full causal attention must equal the incremental
+    /// kernel fed with the earlier rows as cache — bitwise, at several
+    /// thread counts and positions, including a GQA head grouping.
+    #[test]
+    fn incremental_matches_full_rows_bitwise() {
+        for (h, kv) in [(4usize, 4usize), (4, 2)] {
+            let (b, s, dh) = (2usize, 8usize, 4usize);
+            let g = geom(b, s, h, kv, dh);
+            let (dq_w, dkv_w) = (h * dh, kv * dh);
+            let mut rng = Rng::new(17 + h as u64 + kv as u64);
+            let q = HostTensor::randn(&[b, s, dq_w], 0.7, &mut rng);
+            let k = HostTensor::randn(&[b, s, dkv_w], 0.7, &mut rng);
+            let v = HostTensor::randn(&[b, s, dkv_w], 0.7, &mut rng);
+            let full = causal_attention(&ExecCtx::serial(), &g, &q, &k, &v);
+            for p in [0usize, 1, 3, s - 1] {
+                // Cache = rows 0..p; new row = row p; one query row p.
+                let g1 = geom(b, 1, h, kv, dh);
+                let pick = |t: &HostTensor, w: usize| {
+                    let mut out = vec![0.0f32; b * w];
+                    for bi in 0..b {
+                        out[bi * w..][..w].copy_from_slice(
+                            &t.data[(bi * s + p) * w..][..w],
+                        );
+                    }
+                    HostTensor::from_vec(&[b, 1, w], out)
+                };
+                let q1 = pick(&q, dq_w);
+                let kn = pick(&k, dkv_w);
+                let vn = pick(&v, dkv_w);
+                let pos = vec![p; b];
+                for threads in [1usize, 2, 4] {
+                    let ctx = ExecCtx::new(threads);
+                    let o = incremental_attention(
+                        &ctx, &g1, s, &q1, &k, &v, &kn, &vn, &pos,
+                    );
+                    for bi in 0..b {
+                        let got = &o.data[bi * dq_w..][..dq_w];
+                        let want = &full.data[(bi * s + p) * dq_w..][..dq_w];
+                        let eq = got
+                            .iter()
+                            .zip(want)
+                            .all(|(a, b)| a.to_bits() == b.to_bits());
+                        assert!(
+                            eq,
+                            "h{h}/kv{kv} pos {p} slot {bi} t{threads}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Slots at *different* positions in one batch (the continuous-batching
+    /// case) each match their own full-forward row.
+    #[test]
+    fn ragged_positions_per_slot() {
+        let (b, s, h, dh) = (3usize, 6usize, 2usize, 4usize);
+        let g = geom(b, s, h, h, dh);
+        let w = h * dh;
+        let mut rng = Rng::new(5);
+        let q = HostTensor::randn(&[b, s, w], 0.5, &mut rng);
+        let k = HostTensor::randn(&[b, s, w], 0.5, &mut rng);
+        let v = HostTensor::randn(&[b, s, w], 0.5, &mut rng);
+        let full = causal_attention(&ExecCtx::serial(), &g, &q, &k, &v);
+        let pos = vec![0usize, 2, 5];
+        let pick = |t: &HostTensor| {
+            let mut out = vec![0.0f32; b * w];
+            for bi in 0..b {
+                out[bi * w..][..w]
+                    .copy_from_slice(&t.data[(bi * s + pos[bi]) * w..][..w]);
+            }
+            HostTensor::from_vec(&[b, 1, w], out)
+        };
+        let g1 = geom(b, 1, h, h, dh);
+        let o = incremental_attention(
+            &ExecCtx::new(2),
+            &g1,
+            s,
+            &pick(&q),
+            &k,
+            &v,
+            &pick(&k),
+            &pick(&v),
+            &pos,
+        );
+        for bi in 0..b {
+            let got = &o.data[bi * w..][..w];
+            let want = &full.data[(bi * s + pos[bi]) * w..][..w];
+            assert!(
+                got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "slot {bi} pos {}",
+                pos[bi]
+            );
+        }
+    }
+
+    #[test]
+    fn decode_embed_matches_full_embed_rows() {
+        use crate::runtime::native::stages::embed_fwd;
+        let (b, s, d, vocab) = (2usize, 4usize, 6usize, 9usize);
+        let mut rng = Rng::new(11);
+        let wte = HostTensor::randn(&[vocab, d], 0.3, &mut rng);
+        let wpe = HostTensor::randn(&[s, d], 0.3, &mut rng);
+        let toks: Vec<i32> = (0..b * s).map(|i| ((i * 7 + 3) % vocab) as i32).collect();
+        let tok_t = HostTensor::from_i32(&[b, s], &toks);
+        let full = embed_fwd(&ExecCtx::serial(), &tok_t, &wte, &wpe);
+        for p in 0..s {
+            let step_toks: Vec<i32> =
+                (0..b).map(|bi| toks[bi * s + p]).collect();
+            let x = decode_embed(
+                &HostTensor::from_i32(&[b], &step_toks),
+                &HostTensor::from_i32(&[b], &vec![p as i32; b]),
+                &wte,
+                &wpe,
+            );
+            for bi in 0..b {
+                let got = &x.data[bi * d..][..d];
+                let want = &full.data[(bi * s + p) * d..][..d];
+                assert!(
+                    got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "pos {p} slot {bi}"
+                );
+            }
+        }
+    }
+}

@@ -15,7 +15,7 @@
 //!
 //! | kind | module | role |
 //! |---|---|---|
-//! | `tp_stage` | [`stages`] | the 13 per-shard TP stage computations |
+//! | `tp_stage` | [`stages`] | the 19 per-shard TP stage computations (13 training + 6 KV-cache decode) |
 //! | `train_step` | [`train_step`] | fused loss + grads + AdamW, all variants |
 //! | `grad_step` | [`train_step`] | loss + raw grads (Fig 7 compression) |
 //! | `gradmag` | [`train_step`] | per-block ‖dLoss/d MHA out‖ (Fig 4a) |
@@ -37,6 +37,7 @@
 //! replicated, mlp `b2` on shard 0). rust/tests/native_backend.rs enforces
 //! it; the TP trainer's all-reduce schedule is built on it.
 
+pub mod decode;
 pub mod kernels;
 pub mod model;
 pub mod moe;

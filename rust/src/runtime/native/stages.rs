@@ -34,6 +34,7 @@ use crate::runtime::sched::StageGraph;
 use crate::runtime::Manifest;
 use crate::tensor::HostTensor;
 
+use super::decode;
 use super::kernels::{
     add, add_bias, causal_attention, causal_attention_bwd, gelu, gelu_bwd,
     layernorm, layernorm_bwd, matmul, matmul_nt, matmul_tn, softmax_rows,
@@ -90,6 +91,18 @@ pub fn run_stage(
         "fal_fused_fwd" => vec![fal_fused_fwd(ctx, &g, &i)],
         "fal_fused_bwd" => fal_fused_bwd(ctx, &g, &i[..14], i[14]),
         "head_fwd_bwd" => head_fwd_bwd(ctx, i[0], i[1], i[2], i[3], i[4]),
+        // Decode-step family (see super::decode): [B, 1, D] activations
+        // against per-layer K/V append caches. The MLP / LNf steps reuse
+        // the training stage bodies verbatim — they are row-count-agnostic
+        // — so decode matches the full forward bitwise by construction.
+        "decode_embed" => vec![decode::decode_embed(i[0], i[1], i[2], i[3])],
+        "decode_attn" => decode::decode_attn(
+            ctx, &g, cfg.seq_len, i[0], i[1], i[2], i[3], &i[4..],
+        ),
+        "decode_mlp_preln" => vec![mlp_fwd(ctx, i[0], None, &i[1..]).out],
+        "decode_mlp_fal" => vec![mlp_fwd(ctx, i[0], Some(i[1]), &i[2..]).out],
+        "decode_lnf" => vec![layernorm(ctx, i[0], i[1], i[2])],
+        "decode_head" => vec![decode::decode_head(ctx, i[0], i[1], i[2], i[3])],
         other => bail!("native backend: unknown stage {other:?}"),
     })
 }

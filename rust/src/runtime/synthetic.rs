@@ -5,9 +5,11 @@
 //! per-stage tensor specs) without any files on disk. This module generates
 //! it from a [`ModelConfig`], registering:
 //!
-//! * the 13 TP stage artifacts of python/compile/stages.py per registered
-//!   (config, tp, batch), named with [`Manifest::tp_stage_name`] so the
-//!   trainers cannot tell the difference from lowered artifacts,
+//! * the 19 TP stage artifacts — the 13 training stages of
+//!   python/compile/stages.py plus the 6 KV-cache decode-step stages of
+//!   `runtime/native/decode.rs` — per registered (config, tp, batch),
+//!   named with [`Manifest::tp_stage_name`] so the trainers cannot tell
+//!   the difference from lowered artifacts,
 //! * fused `train_step` artifacts for every architecture variant (preln,
 //!   parallel, fal, falplus incl. `falplus_k2`/`falplus_k3` reuse-layer
 //!   ablations, ablation1, ablation2 — per config as listed in
@@ -307,6 +309,7 @@ fn stage_specs(
     let d_ff = cfg.d_ff / tp;
 
     let x = |n: &str| f32_spec(n, &[b, s, d]);
+    let x1 = |n: &str| f32_spec(n, &[b, 1, d]);
     let vec_ = |n: &str| f32_spec(n, &[d]);
     let tok = |n: &str| i32_spec(n, &[b, s]);
     let scalar = |n: &str| f32_spec(n, &[]);
@@ -418,6 +421,74 @@ fn stage_specs(
                 vec_("dlnF_b"),
                 f32_spec("dwte", &[v, d]),
             ],
+        ),
+        // KV-cache decode-step family (runtime/native/decode.rs): one
+        // token per batch slot against per-layer K/V append caches. The
+        // caches are full-capacity [b, s, d_kv] shard tensors owned by the
+        // serving coordinator; `pos` marks each slot's current position.
+        (
+            "decode_embed",
+            vec![
+                i32_spec("tokens", &[b]),
+                i32_spec("pos", &[b]),
+                f32_spec("wte", &[v, d]),
+                f32_spec("wpe", &[s, d]),
+            ],
+            vec![x1("x")],
+        ),
+        (
+            "decode_attn",
+            {
+                let mut ins = vec![
+                    x1("x"),
+                    f32_spec("k_cache", &[b, s, d_kv]),
+                    f32_spec("v_cache", &[b, s, d_kv]),
+                    i32_spec("pos", &[b]),
+                    vec_("ln1_g"),
+                    vec_("ln1_b"),
+                ];
+                ins.extend(attn_w.iter().cloned());
+                ins
+            },
+            vec![
+                x1("out"),
+                f32_spec("k_new", &[b, 1, d_kv]),
+                f32_spec("v_new", &[b, 1, d_kv]),
+            ],
+        ),
+        (
+            "decode_mlp_preln",
+            {
+                let mut ins = vec![x1("h"), vec_("ln2_g"), vec_("ln2_b")];
+                ins.extend(mlp_w.iter().cloned());
+                ins
+            },
+            vec![x1("out")],
+        ),
+        (
+            "decode_mlp_fal",
+            {
+                let mut ins =
+                    vec![x1("x"), x1("fa"), vec_("ln2_g"), vec_("ln2_b")];
+                ins.extend(mlp_w.iter().cloned());
+                ins
+            },
+            vec![x1("out")],
+        ),
+        (
+            "decode_lnf",
+            vec![x1("a"), vec_("g"), vec_("b")],
+            vec![x1("fa")],
+        ),
+        (
+            "decode_head",
+            vec![
+                x1("x"),
+                vec_("lnF_g"),
+                vec_("lnF_b"),
+                f32_spec("wte", &[v, d]),
+            ],
+            vec![f32_spec("logits", &[b, v])],
         ),
     ]
 }

@@ -1,6 +1,7 @@
 //! Acceptance for the graph auditor over the *real* trainer schedules:
 //! every registered StageGraph — TP preln/fal/falplus forward+backward,
-//! the GPipe pipeline forward, the full pipelined fwd+bwd step graphs
+//! the serve decode step at tp 1 and 2, the GPipe pipeline forward, the
+//! full pipelined fwd+bwd step graphs
 //! (gpipe and 1f1b), the fused FAL block fork — must audit clean (no
 //! hard violations, no unused-dependency or unreachable-node lints), and
 //! the comm-placement report must reproduce the paper's Fig 2 story:
@@ -33,6 +34,12 @@ fn registry_covers_every_trainer_schedule() {
         "tp2.fal.bwd",
         "tp2.falplus.fwd",
         "tp2.falplus.bwd",
+        "serve.tp1.preln.decode",
+        "serve.tp1.fal.decode",
+        "serve.tp1.falplus.decode",
+        "serve.tp2.preln.decode",
+        "serve.tp2.fal.decode",
+        "serve.tp2.falplus.decode",
         "pp.gpipe.t2m2.fwd",
         "pp.gpipe.t2m2.step",
         "pp.1f1b.t2m2.step",
@@ -150,6 +157,44 @@ fn falplus_lnf_overlaps_the_attention_allreduce() {
             c.label
         );
     }
+}
+
+#[test]
+fn serve_decode_keeps_the_fig2_comm_story() {
+    // The decode step inherits the training schedule's structure: FAL+
+    // main blocks' per-token MHA all-reduce has the LNf_i node (which
+    // depends only on the block-1 signal) as independent compute, and
+    // FAL's fused decode blocks need strictly fewer collectives per
+    // token than Pre-LN's.
+    let audits = audits();
+    let a = find(&audits, "serve.tp2.falplus.decode");
+    let main_ars: Vec<_> = a
+        .report
+        .comm
+        .iter()
+        .filter(|c| c.label.ends_with(".ar.attn") && c.label != "L0.ar.attn")
+        .collect();
+    assert!(!main_ars.is_empty(), "no main-block decode attn all-reduces");
+    for c in main_ars {
+        assert!(
+            c.hideable_secs > 0.0,
+            "{}: decode {} has nothing to hide behind",
+            a.name,
+            c.label
+        );
+    }
+    let fal = find(&audits, "serve.tp2.fal.decode");
+    let preln = find(&audits, "serve.tp2.preln.decode");
+    assert!(
+        !fal.report.comm.is_empty() && !preln.report.comm.is_empty(),
+        "decode graphs lost their comm nodes"
+    );
+    assert!(
+        fal.report.comm.len() < preln.report.comm.len(),
+        "fal decode {} ARs vs preln {}",
+        fal.report.comm.len(),
+        preln.report.comm.len()
+    );
 }
 
 #[test]

@@ -1,0 +1,196 @@
+//! Integration coverage for the gradient-compression baselines' *public*
+//! APIs — the surface the Fig 7 harness consumes: the [`Compressor`]
+//! trait (`compress`/`decompress`/`ratio`), the [`Payload`] wire formats,
+//! [`Qsgd`], [`PowerSgd`], and the [`ErrorFeedback`] wrapper. The
+//! in-module unit tests own the math properties (unbiasedness, cell
+//! bounds, orthonormality); these tests pin the contracts a caller
+//! outside the crate relies on: wire-size formulas, shape round-trips,
+//! seed determinism, trait-object usability, and the EF invariants.
+
+use fal::comm::error_feedback::{transmit_dense, ErrorFeedback};
+use fal::comm::powersgd::PowerSgd;
+use fal::comm::qsgd::Qsgd;
+use fal::comm::{Compressor, DenseCodec, Payload};
+use fal::tensor::HostTensor;
+use fal::util::rng::Rng;
+
+#[test]
+fn qsgd_wire_format_and_ratio() {
+    // n=100, bucket=32: 4 buckets -> 4 scale f32s + one i8 per element.
+    let mut rng = Rng::new(21);
+    let g = HostTensor::randn(&[100], 0.5, &mut rng);
+    let mut c = Qsgd::new(4, 32, 0);
+    let (p, wire) = c.compress(&g);
+    assert_eq!(wire, 4 * 4 + 100);
+    assert!(c.ratio(100, wire) > 3.0);
+    let Payload::Quantized { scales, levels, bucket } = &p else {
+        panic!("qsgd must emit Payload::Quantized");
+    };
+    assert_eq!(*bucket, 32);
+    assert_eq!(scales.len(), 4);
+    assert_eq!(levels.len(), 100);
+    // Levels live on the grid: |lv| <= positive level count.
+    assert!(levels.iter().all(|&l| l.abs() <= 4));
+    let d = c.decompress(&p, &[100]);
+    assert_eq!(d.shape, vec![100]);
+    // Reconstruction never exceeds its bucket's max-abs scale.
+    let gmax = g.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    assert!(d.data.iter().all(|v| v.abs() <= gmax + 1e-6));
+}
+
+#[test]
+fn qsgd_same_seed_same_bits() {
+    let mut rng = Rng::new(22);
+    let g = HostTensor::randn(&[257], 1.0, &mut rng);
+    let enc = |seed: u64| {
+        let mut c = Qsgd::new(8, 64, seed);
+        let (p, _) = c.compress(&g);
+        c.decompress(&p, &[257]).data
+    };
+    let (a, b) = (enc(42), enc(42));
+    assert!(a
+        .iter()
+        .zip(&b)
+        .all(|(x, y)| x.to_bits() == y.to_bits()));
+    // And a different seed actually changes the stochastic rounding.
+    let c = enc(43);
+    assert!(a.iter().zip(&c).any(|(x, y)| x != y));
+}
+
+#[test]
+fn powersgd_full_rank_reconstructs_any_matrix() {
+    // r = min(n, m): P spans the full column space, so P Q'^T = M up to
+    // f32 rounding — the exactness limit of the codec.
+    let mut rng = Rng::new(23);
+    let mut g = HostTensor::zeros(&[12, 7]);
+    rng.fill_normal(&mut g.data, 1.0);
+    let mut c = PowerSgd::new(7, 0);
+    let (p, wire) = c.compress(&g);
+    assert_eq!(wire, (12 + 7) * 7 * 4);
+    let d = c.decompress(&p, &[12, 7]);
+    assert!(d.rel_err(&g) < 1e-4, "rel err {}", d.rel_err(&g));
+}
+
+#[test]
+fn powersgd_flattens_higher_dims_and_passes_vectors_dense() {
+    // A [4, 3, 2] gradient compresses as a 4 x 6 matrix...
+    let mut rng = Rng::new(24);
+    let g = HostTensor::randn(&[4, 3, 2], 1.0, &mut rng);
+    let mut c = PowerSgd::new(2, 0);
+    let (p, wire) = c.compress(&g);
+    assert_eq!(wire, (4 + 6) * 2 * 4);
+    let Payload::LowRank { rows, cols, .. } = &p else {
+        panic!("matrix-shaped gradient must emit Payload::LowRank");
+    };
+    assert_eq!((*rows, *cols), (4, 6));
+    // ...and decompresses back to the original 3-D shape.
+    assert_eq!(c.decompress(&p, &[4, 3, 2]).shape, vec![4, 3, 2]);
+    // 1-D gradients bypass the factorization entirely.
+    let v = HostTensor::from_vec(&[6], vec![1., 2., 3., 4., 5., 6.]);
+    let (pv, wv) = c.compress(&v);
+    assert_eq!(wv, v.size_bytes());
+    assert!(matches!(pv, Payload::Dense(_)));
+    assert_eq!(c.decompress(&pv, &[6]), v);
+}
+
+#[test]
+fn powersgd_rank_is_capped_by_matrix_dims() {
+    // rank 16 on an 8 x 4 gradient silently clamps to 4 — the wire size
+    // proves it, and reconstruction is the full-rank (near-exact) one.
+    let mut rng = Rng::new(25);
+    let mut g = HostTensor::zeros(&[8, 4]);
+    rng.fill_normal(&mut g.data, 1.0);
+    let mut c = PowerSgd::new(16, 0);
+    let (p, wire) = c.compress(&g);
+    assert_eq!(wire, (8 + 4) * 4 * 4);
+    assert!(c.decompress(&p, &[8, 4]).rel_err(&g) < 1e-4);
+}
+
+#[test]
+fn error_feedback_around_dense_is_the_identity() {
+    // EF's residual of a lossless codec is identically zero: transmit
+    // returns the gradient bit-for-bit and the diagnostic norm stays 0.
+    let mut ef = ErrorFeedback::new(DenseCodec);
+    let mut rng = Rng::new(26);
+    for step in 0..5 {
+        let g = HostTensor::randn(&[33], 1.0, &mut rng);
+        let (d, wire) = ef.transmit("w", &g);
+        assert_eq!(wire, g.size_bytes(), "step {step}");
+        assert!(d
+            .data
+            .iter()
+            .zip(&g.data)
+            .all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert_eq!(ef.residual_norm(), 0.0);
+    }
+}
+
+#[test]
+fn error_feedback_sum_of_transmissions_tracks_the_signal() {
+    // The defining EF identity: sum_t decode_t = T*g + e_0 - e_T, so with
+    // a bounded residual the accumulated reconstruction tracks T*g.
+    let g = HostTensor::from_vec(&[4], vec![0.2, -0.4, 0.6, -0.8]);
+    let mut ef = ErrorFeedback::new(Qsgd::new(3, 16, 11));
+    let mut acc = HostTensor::zeros(&[4]);
+    let t = 100;
+    for _ in 0..t {
+        let (d, _) = ef.transmit("w", &g);
+        acc.add_assign(&d);
+    }
+    for (a, x) in acc.data.iter().zip(&g.data) {
+        let want = x * t as f32;
+        assert!((a - want).abs() < 0.5, "accumulated {a} vs {want}");
+    }
+    assert!(ef.residual_norm() < 1.0, "{}", ef.residual_norm());
+}
+
+#[test]
+fn error_feedback_with_powersgd_stays_bounded() {
+    // PowerSGD requires EF; over repeated steps on a varying full-rank
+    // gradient the residual must not blow up and every transmission
+    // keeps the low-rank wire cost.
+    let mut rng = Rng::new(27);
+    let mut ef = ErrorFeedback::new(PowerSgd::new(2, 1));
+    let n = 16 * 12;
+    for _ in 0..30 {
+        let g = HostTensor::randn(&[16, 12], 1.0, &mut rng);
+        let (d, wire) = ef.transmit("w", &g);
+        assert_eq!(d.shape, vec![16, 12]);
+        assert_eq!(wire, (16 + 12) * 2 * 4);
+        assert!(wire < n * 4);
+    }
+    let per_elem = ef.residual_norm() / (n as f64).sqrt();
+    assert!(per_elem < 6.0, "residual per element {per_elem}");
+}
+
+#[test]
+fn transmit_dense_is_the_uniform_baseline_path() {
+    let g = HostTensor::from_vec(&[3], vec![1.0, -1.0, 0.5]);
+    let (d, wire) = transmit_dense(&g);
+    assert_eq!(d, g);
+    assert_eq!(wire, 12);
+}
+
+#[test]
+fn codecs_are_usable_as_trait_objects() {
+    // The Fig 7 harness iterates Box<dyn Compressor>; every codec must
+    // round-trip shape-correctly through the trait and undercut (or
+    // match) the dense wire size.
+    let mut rng = Rng::new(28);
+    let g = HostTensor::randn(&[16, 16], 1.0, &mut rng);
+    let mut codecs: Vec<Box<dyn Compressor>> = vec![
+        Box::new(DenseCodec),
+        Box::new(Qsgd::new(4, 64, 9)),
+        Box::new(PowerSgd::new(4, 9)),
+    ];
+    let mut names = Vec::new();
+    for c in codecs.iter_mut() {
+        let (p, wire) = c.compress(&g);
+        assert!(wire <= g.size_bytes(), "{}: wire {wire}", c.name());
+        let d = c.decompress(&p, &[16, 16]);
+        assert_eq!(d.shape, g.shape, "{}", c.name());
+        assert!(c.ratio(256, wire) >= 1.0 - 1e-9);
+        names.push(c.name());
+    }
+    assert_eq!(names, vec!["dense", "qsgd", "powersgd"]);
+}

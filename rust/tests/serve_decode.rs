@@ -1,0 +1,281 @@
+//! Correctness anchor for `fal serve`: the KV-cache decode loop must
+//! reproduce the full-sequence forward **bit for bit**, position by
+//! position — the decode analogue of tests/tp_equivalence.rs.
+//!
+//! The reference forward below composes the public full-sequence stage
+//! kernels (`embed_fwd`/`attn_fwd`/`mlp_fwd`/`layernorm`/`matmul_nt`) in
+//! the exact residual order the trainers use; the decode path re-derives
+//! every row incrementally against its K/V cache. Equality is
+//! `f32::to_bits` at multiple thread counts for all three TP variants,
+//! plus 0-ulp agreement across `--sched serial|graph|overlap`, a
+//! tp=2-vs-tp=1 reassociation tolerance, and the acceptance workload:
+//! a ≥200-request continuous-batching run per (variant, tp).
+
+use fal::config::{Variant, PCIE_GEN4, RTX_3090};
+use fal::coordinator::serve::{poisson_workload, Decoder, ServeEngine};
+use fal::coordinator::topology::NamedParams;
+use fal::runtime::native::kernels::{layernorm, matmul_nt, AttnGeom};
+use fal::runtime::native::stages::{attn_fwd, embed_fwd, mlp_fwd};
+use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
+use fal::tensor::HostTensor;
+
+const CONFIG: &str = "micro";
+const VARIANTS: [Variant; 3] = [Variant::PreLn, Variant::Fal, Variant::FalPlus];
+
+fn deterministic_tokens(b: usize, s: usize, vocab: usize) -> Vec<i32> {
+    (0..b * s).map(|i| ((i * 7 + 3) % vocab) as i32).collect()
+}
+
+/// Full-sequence forward logits `[B, S, V]` from the same parameters the
+/// decoder loads, composed in the trainers' residual order.
+fn reference_logits(
+    eng: &NativeBackend,
+    variant: Variant,
+    toks: &[i32],
+    b: usize,
+) -> HostTensor {
+    let ctx = eng.exec_ctx();
+    let cfg = eng.manifest().config(CONFIG).unwrap().clone();
+    let schema = eng.manifest().schema(CONFIG).unwrap().to_vec();
+    let params = NamedParams::from_flat(&schema, eng.load_params(CONFIG, 0).unwrap());
+    let s = cfg.seq_len;
+    let tok_t = HostTensor::from_i32(&[b, s], toks);
+    let mut x = embed_fwd(
+        &ctx,
+        &tok_t,
+        params.get("wte").unwrap(),
+        params.get("wpe").unwrap(),
+    );
+    let g = AttnGeom {
+        batch: b,
+        seq: s,
+        heads: cfg.n_head,
+        kv_heads: cfg.n_kv_head,
+        head_dim: cfg.head_dim(),
+    };
+    let mut fa: Option<HostTensor> = None;
+    for li in 0..cfg.n_layer {
+        let ap: Vec<&HostTensor> = ["ln1_g", "ln1_b", "wq", "wk", "wv", "wo"]
+            .iter()
+            .map(|f| params.blk(li, f).unwrap())
+            .collect();
+        let mp: Vec<&HostTensor> = ["ln2_g", "ln2_b", "w1", "b1", "w2", "b2"]
+            .iter()
+            .map(|f| params.blk(li, f).unwrap())
+            .collect();
+        let a = attn_fwd(&ctx, &g, &x, &ap).out;
+        match (variant, li) {
+            (Variant::PreLn, _) => {
+                let mut h = x.clone();
+                h.add_assign(&a);
+                let m = mlp_fwd(&ctx, &h, None, &mp).out;
+                h.add_assign(&m);
+                x = h;
+            }
+            (Variant::Fal, 0) => {
+                let f = layernorm(
+                    &ctx,
+                    &a,
+                    params.blk(0, "lnf_g").unwrap(),
+                    params.blk(0, "lnf_b").unwrap(),
+                );
+                let m = mlp_fwd(&ctx, &x, Some(&f), &mp).out;
+                x.add_assign(&a);
+                x.add_assign(&m);
+                fa = Some(f);
+            }
+            (Variant::Fal, _) => {
+                // fal_fused_fwd semantics: out = a + m, then x + out.
+                let m = mlp_fwd(&ctx, &x, fa.as_ref(), &mp).out;
+                let mut out = a.clone();
+                out.add_assign(&m);
+                x.add_assign(&out);
+            }
+            (Variant::FalPlus, 0) => {
+                let m = mlp_fwd(&ctx, &x, Some(&a), &mp).out;
+                x.add_assign(&a);
+                x.add_assign(&m);
+                fa = Some(a);
+            }
+            (Variant::FalPlus, _) => {
+                let mut h = x.clone();
+                h.add_assign(&a);
+                let fan = layernorm(
+                    &ctx,
+                    fa.as_ref().unwrap(),
+                    params.blk(li, "lnf_g").unwrap(),
+                    params.blk(li, "lnf_b").unwrap(),
+                );
+                let m = mlp_fwd(&ctx, &h, Some(&fan), &mp).out;
+                h.add_assign(&m);
+                x = h;
+            }
+            _ => unreachable!(),
+        }
+    }
+    let xn = layernorm(
+        &ctx,
+        &x,
+        params.get("lnF_g").unwrap(),
+        params.get("lnF_b").unwrap(),
+    );
+    matmul_nt(&ctx, &xn, params.get("wte").unwrap())
+}
+
+/// Teacher-forced decode: feed token column `p` at position `p` for every
+/// slot; returns one `[B, V]` logits tensor per position.
+fn decode_all_positions(
+    dec: &mut Decoder<'_, NativeBackend>,
+    toks: &[i32],
+    s: usize,
+) -> Vec<HostTensor> {
+    let b = dec.batch;
+    (0..s)
+        .map(|p| {
+            let col: Vec<i32> = (0..b).map(|bi| toks[bi * s + p]).collect();
+            dec.step(&col, &vec![p; b]).unwrap()
+        })
+        .collect()
+}
+
+#[test]
+fn decode_matches_full_forward_bitwise() {
+    for threads in [1usize, 4] {
+        let eng = NativeBackend::synthetic_with_ctx(ExecCtx::new(threads));
+        for variant in VARIANTS {
+            let mut dec =
+                Decoder::new(&eng, CONFIG, variant, 1, PCIE_GEN4).unwrap();
+            let (b, s, v) =
+                (dec.batch, dec.cfg.seq_len, dec.cfg.vocab_size);
+            let toks = deterministic_tokens(b, s, v);
+            let full = reference_logits(&eng, variant, &toks, b);
+            let steps = decode_all_positions(&mut dec, &toks, s);
+            for (p, logits) in steps.iter().enumerate() {
+                assert_eq!(logits.shape, vec![b, v]);
+                for bi in 0..b {
+                    let got = &logits.data[bi * v..][..v];
+                    let want = &full.data[(bi * s + p) * v..][..v];
+                    let eq = got
+                        .iter()
+                        .zip(want)
+                        .all(|(x, y)| x.to_bits() == y.to_bits());
+                    assert!(
+                        eq,
+                        "{} t{threads} pos {p} slot {bi}: decode logits \
+                         diverge from full forward",
+                        variant.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_identical_across_sched_modes() {
+    // serial / graph / overlap (with a nonzero simulated drain) must be
+    // 0-ulp identical — the same contract the training graphs keep.
+    let mut per_sched: Vec<Vec<u32>> = Vec::new();
+    for sched in [SchedMode::Serial, SchedMode::Graph, SchedMode::Overlap] {
+        let eng = NativeBackend::synthetic_with_ctx(
+            ExecCtx::new(2).with_sched(sched),
+        );
+        let mut dec =
+            Decoder::new(&eng, CONFIG, Variant::Fal, 2, PCIE_GEN4).unwrap();
+        dec.comm_sim_scale = 1.0;
+        let (b, s, v) = (dec.batch, dec.cfg.seq_len, dec.cfg.vocab_size);
+        let toks = deterministic_tokens(b, s, v);
+        let bits: Vec<u32> = decode_all_positions(&mut dec, &toks, s)
+            .iter()
+            .flat_map(|t| t.data.iter().map(|x| x.to_bits()))
+            .collect();
+        per_sched.push(bits);
+    }
+    assert_eq!(per_sched[0], per_sched[1], "serial vs graph");
+    assert_eq!(per_sched[0], per_sched[2], "serial vs overlap");
+}
+
+#[test]
+fn tp2_decode_matches_tp1_up_to_reassociation() {
+    let eng = NativeBackend::synthetic();
+    for variant in VARIANTS {
+        let run = |tp: usize| {
+            let mut dec =
+                Decoder::new(&eng, CONFIG, variant, tp, PCIE_GEN4).unwrap();
+            let (b, s, v) = (dec.batch, dec.cfg.seq_len, dec.cfg.vocab_size);
+            let toks = deterministic_tokens(b, s, v);
+            decode_all_positions(&mut dec, &toks, s)
+        };
+        let (t1, t2) = (run(1), run(2));
+        for (p, (a, b_)) in t1.iter().zip(&t2).enumerate() {
+            let max = a
+                .data
+                .iter()
+                .zip(&b_.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max < 1e-3,
+                "{} pos {p}: tp2 deviates from tp1 by {max}",
+                variant.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_completes_200_requests_every_variant_and_tp() {
+    // The acceptance workload: a 200-request continuous-batching run per
+    // (variant, tp) must drain completely with sane statistics.
+    let eng = NativeBackend::synthetic();
+    for variant in VARIANTS {
+        for tp in [1usize, 2] {
+            let dec =
+                Decoder::new(&eng, CONFIG, variant, tp, PCIE_GEN4).unwrap();
+            let cfg = dec.cfg.clone();
+            let reqs = poisson_workload(&cfg, 200, 11, 500.0);
+            let mut srv = ServeEngine::new(dec, RTX_3090);
+            let r = srv.run(&reqs).unwrap();
+            assert_eq!(
+                r.completed,
+                200,
+                "{} tp{tp}: incomplete drain",
+                variant.name()
+            );
+            assert!(r.generated_tokens >= 200);
+            assert!(r.tokens_per_sec > 0.0);
+            assert!(r.mean_occupancy > 0.0 && r.mean_occupancy <= 1.0);
+            assert!(r.p99_token_secs >= r.p50_token_secs);
+            assert!(r.p99_ttft_secs >= r.p50_ttft_secs);
+            assert!(r.useful_flops > 0.0);
+            if tp >= 2 {
+                assert!(r.allreduces > 0, "{} tp{tp}", variant.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn fal_decode_moves_fewer_bytes_than_preln() {
+    // The paper's claim at generation time: FAL's 1-AR/block schedule
+    // roughly halves per-token collective volume under TP.
+    let eng = NativeBackend::synthetic();
+    let comm = |variant: Variant| {
+        let mut dec =
+            Decoder::new(&eng, CONFIG, variant, 2, PCIE_GEN4).unwrap();
+        let (b, s, v) = (dec.batch, dec.cfg.seq_len, dec.cfg.vocab_size);
+        let toks = deterministic_tokens(b, s, v);
+        decode_all_positions(&mut dec, &toks, s);
+        dec.ledger.stats().allreduce_bytes
+    };
+    let preln = comm(Variant::PreLn);
+    let fal = comm(Variant::Fal);
+    assert!(fal < preln, "fal {fal} vs preln {preln}");
+    let l = eng.manifest().config(CONFIG).unwrap().n_layer as f64;
+    let expect = (l + 1.0) / (2.0 * l);
+    let ratio = fal / preln;
+    assert!(
+        (ratio - expect).abs() < 1e-6,
+        "AR byte ratio {ratio} != (L+1)/2L = {expect}"
+    );
+}

@@ -33,6 +33,11 @@ KERNEL_FILES = [
     "rust/src/runtime/native/train_step.rs",
     "rust/src/runtime/native/model.rs",
     "rust/src/runtime/native/moe.rs",
+    # KV-cache decode kernels and the serving engine: `fal serve` reports
+    # come off a *virtual* clock (costmodel decode_step_time), so a wall
+    # clock read here would leak nondeterminism into reported numbers.
+    "rust/src/runtime/native/decode.rs",
+    "rust/src/coordinator/serve.rs",
 ]
 
 # (rule id, compiled regex, scope, human reason)

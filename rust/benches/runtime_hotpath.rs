@@ -19,7 +19,9 @@ use fal::coordinator::collectives::CommLedger;
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::data::{Corpus, CorpusSpec, Loader};
 use fal::runtime::native::kernels;
-use fal::runtime::{Backend, ExecCtx, Manifest, NativeBackend, SchedMode};
+use fal::runtime::{
+    Backend, ExecCtx, KernelTier, Manifest, NativeBackend, SchedMode,
+};
 use fal::tensor::HostTensor;
 use fal::util::benchkit::{Bench, CaseMeta};
 use fal::util::rng::Rng;
@@ -47,16 +49,37 @@ fn main() {
     // ------------------------------------------------------------------
     let a = HostTensor::randn(&[1024, 192], 0.5, &mut rng);
     let w = HostTensor::randn(&[192, 768], 0.02, &mut rng);
+    let wt = HostTensor::randn(&[768, 192], 0.02, &mut rng);
     let up = HostTensor::randn(&[1024, 768], 0.5, &mut rng);
     let flops_mm = (2 * 1024 * 192 * 768) as f64;
     for threads in THREADS {
-        let ctx = ExecCtx::new(threads);
-        b.bench_case(
-            &format!("matmul_1024x192x768_t{threads}"),
-            CaseMeta::new("matmul", "1024x192x768", threads),
-            flops_mm,
-            || kernels::matmul(&ctx, &a, &w).data[0],
-        );
+        // matmul / matmul_nt carry exact-vs-fast scoreboard pairs: the
+        // fast rows are the SIMD microkernel tier (`--kernels fast`), the
+        // acceptance bar being >= 1.2x over the exact rows at t4.
+        for tier in [KernelTier::Exact, KernelTier::Fast] {
+            let ctx = ExecCtx::new(threads).with_kernels(tier);
+            b.bench_case(
+                &format!("matmul_1024x192x768_{}_t{threads}", tier.name()),
+                CaseMeta::new(
+                    "matmul",
+                    &format!("1024x192x768/kernels={}", tier.name()),
+                    threads,
+                ),
+                flops_mm,
+                || kernels::matmul(&ctx, &a, &w).data[0],
+            );
+            b.bench_case(
+                &format!("matmul_nt_1024x192x768_{}_t{threads}", tier.name()),
+                CaseMeta::new(
+                    "matmul_nt",
+                    &format!("1024x192x768/kernels={}", tier.name()),
+                    threads,
+                ),
+                flops_mm,
+                || kernels::matmul_nt(&ctx, &a, &wt).data[0],
+            );
+        }
+        let ctx = ExecCtx::new(threads).with_kernels(KernelTier::Exact);
         b.bench_case(
             &format!("matmul_tn_1024x192x768_t{threads}"),
             CaseMeta::new("matmul_tn", "1024x192x768", threads),

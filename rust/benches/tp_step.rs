@@ -30,7 +30,7 @@ use fal::costmodel::timemodel::{
 };
 use fal::data::{Corpus, CorpusSpec, Loader};
 use fal::runtime::sched::{COMM_BUCKET, COMPUTE_BUCKET};
-use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
+use fal::runtime::{Backend, ExecCtx, KernelTier, NativeBackend, SchedMode};
 use fal::util::benchkit::{Bench, CaseMeta};
 
 fn main() {
@@ -123,51 +123,66 @@ fn main() {
         for (point, scale) in
             [("light", 0.25 * base_scale), ("commheavy", 2.0 * base_scale)]
         {
-            let mut t = TpTrainer::new(
-                &engine, "tiny", variant, 2, PCIE_GEN4,
-                TrainConfig::default())
-            .unwrap();
-            t.comm_sim_scale = scale.max(1.0);
-            t.breakdown.retain_intervals(COMM_BUCKET);
-            t.breakdown.retain_intervals(COMPUTE_BUCKET);
-            t.train_step(&batch).unwrap();
-            let comm = t.breakdown.get(COMM_BUCKET);
-            let compute = t.breakdown.get(COMPUTE_BUCKET);
-            let hidden =
-                t.breakdown.intersection_secs(COMM_BUCKET, COMPUTE_BUCKET);
-            let realized = if comm > 0.0 { hidden / comm } else { 0.0 };
-            let predicted = predicted_hidden_fraction(compute, comm);
-            println!(
-                "{name}/{point}: comm {:.2}ms / compute {:.2}ms per sim \
-                 step — overlap fraction realized {realized:.3}, predicted \
-                 {predicted:.3}",
-                comm * 1e3,
-                compute * 1e3
-            );
-            b.record_case(
-                &format!(
-                    "tp2_tiny_overlap_fraction_realized_{point}_{name}_t{threads}"
-                ),
-                CaseMeta::new(
-                    "overlap_fraction",
-                    &format!("tiny/{name}/{point}/realized"),
-                    threads,
-                ),
-                &[realized],
-                0.0,
-            );
-            b.record_case(
-                &format!(
-                    "tp2_tiny_overlap_fraction_predicted_{point}_{name}_t{threads}"
-                ),
-                CaseMeta::new(
-                    "overlap_fraction",
-                    &format!("tiny/{name}/{point}/predicted"),
-                    threads,
-                ),
-                &[predicted],
-                0.0,
-            );
+            // Each operating point runs twice: the exact tier drains each
+            // all-reduce as ONE comm node (eager-release baseline), the
+            // fast tier splits it into AR_CHUNKS chunk nodes whose drains
+            // occupy separate worker lanes concurrently — the `_chunked`
+            // rows, whose commheavy realized fraction is expected to beat
+            // the unchunked row (the chunked-collective overlap win).
+            for tier in [KernelTier::Exact, KernelTier::Fast] {
+                let suffix =
+                    if tier == KernelTier::Fast { "_chunked" } else { "" };
+                let eng = NativeBackend::synthetic_with_ctx(
+                    base_ctx.with_sched(SchedMode::Overlap).with_kernels(tier),
+                );
+                let mut t = TpTrainer::new(
+                    &eng, "tiny", variant, 2, PCIE_GEN4,
+                    TrainConfig::default())
+                .unwrap();
+                t.comm_sim_scale = scale.max(1.0);
+                t.breakdown.retain_intervals(COMM_BUCKET);
+                t.breakdown.retain_intervals(COMPUTE_BUCKET);
+                t.train_step(&batch).unwrap();
+                let comm = t.breakdown.get(COMM_BUCKET);
+                let compute = t.breakdown.get(COMPUTE_BUCKET);
+                let hidden =
+                    t.breakdown.intersection_secs(COMM_BUCKET, COMPUTE_BUCKET);
+                let realized = if comm > 0.0 { hidden / comm } else { 0.0 };
+                let predicted = predicted_hidden_fraction(compute, comm);
+                println!(
+                    "{name}/{point}{suffix}: comm {:.2}ms / compute {:.2}ms \
+                     per sim step — overlap fraction realized \
+                     {realized:.3}, predicted {predicted:.3}",
+                    comm * 1e3,
+                    compute * 1e3
+                );
+                b.record_case(
+                    &format!(
+                        "tp2_tiny_overlap_fraction_realized_{point}{suffix}_{name}_t{threads}"
+                    ),
+                    CaseMeta::new(
+                        "overlap_fraction",
+                        &format!("tiny/{name}/{point}{suffix}/realized"),
+                        threads,
+                    ),
+                    &[realized],
+                    0.0,
+                );
+                if tier == KernelTier::Exact {
+                    b.record_case(
+                        &format!(
+                            "tp2_tiny_overlap_fraction_predicted_{point}_{name}_t{threads}"
+                        ),
+                        CaseMeta::new(
+                            "overlap_fraction",
+                            &format!("tiny/{name}/{point}/predicted"),
+                            threads,
+                        ),
+                        &[predicted],
+                        0.0,
+                    );
+                }
+            }
         }
     }
     // Executed pipeline fwd+bwd: gpipe vs 1f1b at the same (stages,

@@ -30,6 +30,24 @@ pub trait Compressor {
     }
 }
 
+/// Boxed codecs are codecs too, so callers can pick one at runtime
+/// (`fal tp --compress qsgd|powersgd`) and still use [`Compressor`]-generic
+/// wrappers like `ErrorFeedback`. `Send + Sync` because the trainer holding
+/// the box is shared across scoped worker threads.
+impl Compressor for Box<dyn Compressor + Send + Sync> {
+    fn name(&self) -> &'static str {
+        self.as_ref().name()
+    }
+
+    fn compress(&mut self, grad: &HostTensor) -> (Payload, usize) {
+        self.as_mut().compress(grad)
+    }
+
+    fn decompress(&self, payload: &Payload, shape: &[usize]) -> HostTensor {
+        self.as_ref().decompress(payload, shape)
+    }
+}
+
 /// Encoded gradient payloads.
 #[derive(Debug, Clone)]
 pub enum Payload {

@@ -141,6 +141,98 @@ impl CommLedger {
         s.allreduce_bytes += bytes;
         s.modeled_secs += ring_allreduce_time(bytes, self.world, &self.link);
     }
+
+    /// Reduce one row-chunk of `parts` (rows `rows.start..rows.end` of the
+    /// flattened 2-D row view) in ascending rank order, **without**
+    /// accounting — the data-movement half of one chunk of a chunked
+    /// all-reduce. Accounting happens once per logical collective (the
+    /// gather side), keeping ledger stats chunk-count-invariant.
+    pub fn reduce_row_chunk(
+        &self,
+        ctx: &ExecCtx,
+        parts: &[&HostTensor],
+        rows: std::ops::Range<usize>,
+    ) -> HostTensor {
+        assert!(!parts.is_empty());
+        let (m, n) = parts[0].rows_cols();
+        assert!(rows.end <= m, "chunk rows {rows:?} out of {m}");
+        let (e0, e1) = (rows.start * n, rows.end * n);
+        let mut out = HostTensor::from_vec(
+            &[rows.end - rows.start, n],
+            parts[0].data[e0..e1].to_vec(),
+        );
+        let rest = &parts[1..];
+        ctx.par_rows(
+            &mut out.data,
+            1,
+            ExecCtx::grain_rows(rest.len().max(1)),
+            |c0, chunk| {
+                for p in rest {
+                    let seg = &p.data[e0 + c0..e0 + c0 + chunk.len()];
+                    for (o, &v) in chunk.iter_mut().zip(seg) {
+                        *o += v;
+                    }
+                }
+            },
+        );
+        out
+    }
+
+    /// Concatenate reduced chunk tensors (in chunk order) back into the
+    /// original payload `shape` and account the whole collective once —
+    /// the gather side of a chunked all-reduce.
+    pub fn gather_chunks(&self, shape: &[usize], chunks: &[&HostTensor]) -> HostTensor {
+        let mut data = Vec::with_capacity(chunks.iter().map(|c| c.len()).sum());
+        for c in chunks {
+            data.extend_from_slice(&c.data);
+        }
+        let out = HostTensor::from_vec(shape, data);
+        self.account_allreduce_bytes(out.size_bytes() as f64);
+        out
+    }
+
+    /// Chunk-split all-reduce: reduces `chunks` contiguous row chunks
+    /// independently — each element still accumulates ranks in ascending
+    /// order, so the result is **bit-identical** to
+    /// [`CommLedger::all_reduce_refs`] — and accounts the collective once.
+    /// The in-process form of the fast tier's chunked comm nodes
+    /// (docs/ARCHITECTURE.md §1h): the graph builders emit one comm node
+    /// per [`chunk_row_ranges`] range so dependent consumers can start as
+    /// soon as *their* chunk lands.
+    pub fn all_reduce_chunked(
+        &self,
+        ctx: &ExecCtx,
+        parts: &[&HostTensor],
+        chunks: usize,
+    ) -> HostTensor {
+        assert!(!parts.is_empty());
+        let (m, _) = parts[0].rows_cols();
+        let pieces: Vec<HostTensor> = chunk_row_ranges(m, chunks)
+            .into_iter()
+            .map(|r| self.reduce_row_chunk(ctx, parts, r))
+            .collect();
+        let refs: Vec<&HostTensor> = pieces.iter().collect();
+        self.gather_chunks(&parts[0].shape, &refs)
+    }
+}
+
+/// Row ranges of an `rows`-row payload split into (at most) `chunks`
+/// balanced contiguous chunks — the shared chunk boundaries of
+/// [`CommLedger::all_reduce_chunked`] and the trainers' chunked comm
+/// nodes. Depends only on `(rows, chunks)`, never on thread count or
+/// schedule, so chunked results are deterministic everywhere.
+pub fn chunk_row_ranges(rows: usize, chunks: usize) -> Vec<std::ops::Range<usize>> {
+    let c = chunks.max(1).min(rows.max(1));
+    let base = rows / c;
+    let extra = rows % c;
+    let mut out = Vec::with_capacity(c);
+    let mut start = 0;
+    for i in 0..c {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -299,6 +391,49 @@ mod tests {
                 .all(|(a, b)| a.to_bits() == b.to_bits());
             assert!(same, "threads = {threads}");
             assert_eq!(ledger.stats(), serial.stats());
+        }
+    }
+
+    #[test]
+    fn chunk_row_ranges_cover_and_balance() {
+        for (rows, chunks) in [(24usize, 4usize), (7, 3), (5, 64), (1, 4), (0, 4)] {
+            let rs = chunk_row_ranges(rows, chunks);
+            assert!(rs.len() <= chunks.max(1));
+            assert_eq!(rs[0].start, 0);
+            let mut covered = 0;
+            for (i, r) in rs.iter().enumerate() {
+                assert_eq!(r.start, covered, "gap at chunk {i}");
+                covered = r.end;
+            }
+            assert_eq!(covered, rows, "rows={rows} chunks={chunks}");
+            let lens: Vec<usize> = rs.iter().map(|r| r.end - r.start).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1, "unbalanced: {lens:?}");
+        }
+    }
+
+    #[test]
+    fn chunked_allreduce_matches_unchunked_bitwise_and_in_accounting() {
+        let mut rng = Rng::new(23);
+        let parts: Vec<HostTensor> = (0..4)
+            .map(|_| HostTensor::randn(&[24, 17], 1.0, &mut rng))
+            .collect();
+        let refs: Vec<&HostTensor> = parts.iter().collect();
+        let base_l = CommLedger::new(PCIE_GEN4, 4);
+        let base = base_l.all_reduce_refs(&ExecCtx::new(2), &refs);
+        for chunks in [1usize, 2, 3, 5, 64] {
+            let ledger = CommLedger::new(PCIE_GEN4, 4);
+            let out = ledger.all_reduce_chunked(&ExecCtx::new(2), &refs, chunks);
+            assert_eq!(out.shape, base.shape);
+            let same = out
+                .data
+                .iter()
+                .zip(&base.data)
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "chunks = {chunks}");
+            // One collective, full payload bytes, identical model time —
+            // no matter how many wire chunks carried it.
+            assert_eq!(ledger.stats(), base_l.stats(), "chunks = {chunks}");
         }
     }
 

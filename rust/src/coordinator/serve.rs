@@ -41,13 +41,14 @@ use anyhow::{Context, Result};
 use crate::config::{GpuSpec, LinkSpec, ModelConfig, Variant};
 use crate::costmodel::timemodel::{decode_flops_per_token, decode_step_time};
 use crate::runtime::{
-    Backend, ExecCtx, GraphSpec, GraphTrace, Manifest, StageGraph,
+    Backend, ExecCtx, GraphSpec, GraphTrace, KernelTier, Manifest, StageGraph,
 };
 use crate::tensor::HostTensor;
 use crate::util::rng::Rng;
 use crate::util::timer::Breakdown;
 
-use super::collectives::CommLedger;
+use super::collectives::{chunk_row_ranges, CommLedger};
+use super::tp_trainer::AR_CHUNKS;
 use super::topology::{shard_block, shard_dims, BlockShard, NamedParams};
 use super::{dep_outs, dep_t, StageOut};
 
@@ -251,6 +252,9 @@ impl<'e, B: Backend + ?Sized> Decoder<'e, B> {
 
     /// The decode all-reduce as a comm node — ascending-rank shard sum of
     /// the `part`-th outputs, identical 0-ulp contract as the trainer's.
+    /// Fast kernel tier: split into [`AR_CHUNKS`] chunk comm nodes plus an
+    /// accounting gather, exactly like
+    /// [`super::tp_trainer::TpTrainer`]'s `ar_node_at` (docs §1h).
     fn ar_node_at<'s>(
         &'s self,
         g: &mut StageGraph<'s, StageOut>,
@@ -259,13 +263,48 @@ impl<'e, B: Backend + ?Sized> Decoder<'e, B> {
         part: usize,
         sim: f64,
     ) -> usize {
-        let deps = ranks.to_vec();
-        g.comm_node(label, ranks, sim, move |sub, j| {
-            let mut parts: Vec<&HostTensor> = Vec::with_capacity(deps.len());
-            for &id in &deps {
-                parts.push(&dep_outs(j, id)?[part]);
+        if self.ctx.kernels() != KernelTier::Fast {
+            let deps = ranks.to_vec();
+            return g.comm_node(label, ranks, sim, move |sub, j| {
+                let mut parts: Vec<&HostTensor> =
+                    Vec::with_capacity(deps.len());
+                for &id in &deps {
+                    parts.push(&dep_outs(j, id)?[part]);
+                }
+                Ok(vec![self.ledger.all_reduce_refs(sub, &parts)])
+            });
+        }
+        let mut chunk_ids = Vec::with_capacity(AR_CHUNKS);
+        for ci in 0..AR_CHUNKS {
+            let deps = ranks.to_vec();
+            chunk_ids.push(g.comm_node(
+                format!("{label}.c{ci}"),
+                ranks,
+                sim / AR_CHUNKS as f64,
+                move |sub, j| {
+                    let mut parts: Vec<&HostTensor> =
+                        Vec::with_capacity(deps.len());
+                    for &id in &deps {
+                        parts.push(&dep_outs(j, id)?[part]);
+                    }
+                    let (m, _) = parts[0].rows_cols();
+                    let ranges = chunk_row_ranges(m, AR_CHUNKS);
+                    let r = ranges.get(ci).cloned().unwrap_or(0..0);
+                    Ok(vec![self.ledger.reduce_row_chunk(sub, &parts, r)])
+                },
+            ));
+        }
+        let shape_dep = ranks[0];
+        let ids = chunk_ids.clone();
+        let mut deps = chunk_ids;
+        deps.push(shape_dep);
+        g.node(label, &deps, move |_, j| {
+            let shape = dep_outs(j, shape_dep)?[part].shape.clone();
+            let mut cs: Vec<&HostTensor> = Vec::with_capacity(ids.len());
+            for &id in &ids {
+                cs.push(&dep_outs(j, id)?[0]);
             }
-            Ok(vec![self.ledger.all_reduce_refs(sub, &parts)])
+            Ok(vec![self.ledger.gather_chunks(&shape, &cs)])
         })
     }
 

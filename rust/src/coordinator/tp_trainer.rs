@@ -49,12 +49,21 @@ use anyhow::{Context, Result};
 use crate::config::{LinkSpec, ModelConfig, TrainConfig, Variant};
 use crate::data::Batch;
 use crate::runtime::{
-    Backend, ExecCtx, GraphSpec, GraphTrace, Manifest, StageGraph,
+    Backend, ExecCtx, GraphSpec, GraphTrace, KernelTier, Manifest, StageGraph,
 };
 use crate::tensor::HostTensor;
 use crate::util::timer::Breakdown;
 
-use super::collectives::CommLedger;
+use crate::comm::{error_feedback::ErrorFeedback, Compressor};
+
+use super::collectives::{chunk_row_ranges, CommLedger};
+
+/// Wire chunks per all-reduce under the fast kernel tier: each chunk is
+/// its own comm node with `1/AR_CHUNKS` of the simulated drain, so the
+/// drains spread across worker lanes instead of pinning one lane for the
+/// whole reduction (docs/ARCHITECTURE.md §1h). Exact tier keeps the
+/// single-node collective.
+pub const AR_CHUNKS: usize = 4;
 use super::topology::{
     scatter_1d, scatter_cols, scatter_rows, shard_block, shard_dims,
     BlockShard, NamedParams, ShardDims,
@@ -96,6 +105,15 @@ pub struct TpTrainer<'e, B: Backend + ?Sized> {
     /// host-side math (AdamW, all-reduce summation) and the StageGraph
     /// schedule mode all run under it.
     pub ctx: ExecCtx,
+    /// Opt-in gradient compression (`fal tp --compress qsgd|powersgd`):
+    /// assembled full-model gradients route through the codec with error
+    /// feedback before the optimizer, and the compressed wire bytes are
+    /// charged to the ledger as the step's (simulated data-parallel)
+    /// gradient all-reduces.
+    compression: Option<ErrorFeedback<Box<dyn Compressor + Send + Sync>>>,
+    /// Cumulative compressed gradient wire bytes (diagnostic; 0 when
+    /// compression is off).
+    pub compressed_wire_bytes: f64,
 }
 
 /// Forward stash for one block (primal inputs the bwd stages recompute from).
@@ -295,6 +313,8 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
             breakdown: Breakdown::new(),
             comm_sim_scale: 0.0,
             ctx,
+            compression: None,
+            compressed_wire_bytes: 0.0,
         };
         t.reshard()?;
         Ok(t)
@@ -438,6 +458,14 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
     /// nodes, sums their `part`-th outputs in ascending rank order (the
     /// 0-ulp contract) through the subdivided context, and carries the
     /// simulated link drain the scheduler overlaps under `--sched overlap`.
+    ///
+    /// Under the fast kernel tier the collective splits into [`AR_CHUNKS`]
+    /// row-chunk comm nodes (labels `{label}.c{i}`, each carrying
+    /// `sim / AR_CHUNKS` of the drain) plus a gather node that keeps the
+    /// original `label` and the single-collective ledger accounting —
+    /// downstream wiring is unchanged, and the summed values are bitwise
+    /// identical to the unchunked reduction (ascending-rank per element,
+    /// chunk boundaries from [`chunk_row_ranges`]).
     fn ar_node_at<'s>(
         &'s self,
         g: &mut StageGraph<'s, StageOut>,
@@ -446,13 +474,52 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
         part: usize,
         sim: f64,
     ) -> usize {
-        let deps = ranks.to_vec();
-        g.comm_node(label, ranks, sim, move |sub, j| {
-            let mut parts: Vec<&HostTensor> = Vec::with_capacity(deps.len());
-            for &id in &deps {
-                parts.push(&dep_outs(j, id)?[part]);
+        if self.ctx.kernels() != KernelTier::Fast {
+            let deps = ranks.to_vec();
+            return g.comm_node(label, ranks, sim, move |sub, j| {
+                let mut parts: Vec<&HostTensor> =
+                    Vec::with_capacity(deps.len());
+                for &id in &deps {
+                    parts.push(&dep_outs(j, id)?[part]);
+                }
+                Ok(vec![self.ledger.all_reduce_refs(sub, &parts)])
+            });
+        }
+        let mut chunk_ids = Vec::with_capacity(AR_CHUNKS);
+        for ci in 0..AR_CHUNKS {
+            let deps = ranks.to_vec();
+            chunk_ids.push(g.comm_node(
+                format!("{label}.c{ci}"),
+                ranks,
+                sim / AR_CHUNKS as f64,
+                move |sub, j| {
+                    let mut parts: Vec<&HostTensor> =
+                        Vec::with_capacity(deps.len());
+                    for &id in &deps {
+                        parts.push(&dep_outs(j, id)?[part]);
+                    }
+                    let (m, _) = parts[0].rows_cols();
+                    let ranges = chunk_row_ranges(m, AR_CHUNKS);
+                    // Payloads with fewer rows than chunks leave the
+                    // trailing chunk nodes empty.
+                    let r = ranges.get(ci).cloned().unwrap_or(0..0);
+                    Ok(vec![self.ledger.reduce_row_chunk(sub, &parts, r)])
+                },
+            ));
+        }
+        // The gather reads the chunk values plus one rank output (for the
+        // payload shape); it accounts the collective exactly once.
+        let shape_dep = ranks[0];
+        let ids = chunk_ids.clone();
+        let mut deps = chunk_ids;
+        deps.push(shape_dep);
+        g.node(label, &deps, move |_, j| {
+            let shape = dep_outs(j, shape_dep)?[part].shape.clone();
+            let mut cs: Vec<&HostTensor> = Vec::with_capacity(ids.len());
+            for &id in &ids {
+                cs.push(&dep_outs(j, id)?[0]);
             }
-            Ok(vec![self.ledger.all_reduce_refs(sub, &parts)])
+            Ok(vec![self.ledger.gather_chunks(&shape, &cs)])
         })
     }
 
@@ -1233,10 +1300,41 @@ impl<'e, B: Backend + ?Sized> TpTrainer<'e, B> {
         self.breakdown.add("bwd", t1.elapsed().as_secs_f64());
 
         let t2 = std::time::Instant::now();
+        if let Some(ef) = self.compression.as_mut() {
+            // Opt-in gradient compression: every assembled full-model
+            // gradient transits the codec with error feedback before the
+            // optimizer sees it, modelling a compressed data-parallel
+            // gradient all-reduce. BTreeMap iteration keeps the residual
+            // update order deterministic; the ledger is charged the
+            // compressed wire bytes instead of the dense payload.
+            let mut wire_total = 0.0f64;
+            for (name, g) in grads.by_name.iter_mut() {
+                let (decoded, wire) = ef.transmit(name, g);
+                *g = decoded;
+                wire_total += wire as f64;
+            }
+            self.ledger.account_allreduce_bytes(wire_total);
+            self.compressed_wire_bytes += wire_total;
+        }
         let gnorm = self.adamw(&grads);
         self.reshard()?;
         self.breakdown.add("opt", t2.elapsed().as_secs_f64());
         Ok((loss, gnorm as f32))
+    }
+
+    /// Route gradient all-reduces through `codec` (with error feedback)
+    /// from the next step onward. See `--compress qsgd|powersgd`.
+    pub fn set_compression(
+        &mut self,
+        codec: Box<dyn Compressor + Send + Sync>,
+    ) {
+        self.compression = Some(ErrorFeedback::new(codec));
+    }
+
+    /// Frobenius norm of the error-feedback residual across all params
+    /// (None when compression is off).
+    pub fn compression_residual_norm(&self) -> Option<f64> {
+        self.compression.as_ref().map(|ef| ef.residual_norm())
     }
 
     fn add_grad(&self, grads: &mut NamedParams, name: &str, t: &HostTensor) {

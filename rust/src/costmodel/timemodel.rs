@@ -174,6 +174,29 @@ pub fn decode_step_time(
     batch: usize,
     kv_len: usize,
 ) -> DecodeStepTime {
+    decode_step_time_dtyped(
+        cfg, variant, gpu, link, tp, batch, kv_len, ELEM, ELEM,
+    )
+}
+
+/// [`decode_step_time`] with explicit element sizes for the two HBM
+/// streams decode is bound by: `weight_elem` bytes per weight element and
+/// `kv_elem` bytes per KV-cache element. The `fast` kernel tier stores
+/// both in bf16 ([`crate::tensor::DType::Bf16`], 2 bytes), halving the
+/// weight-stream and KV-bytes terms relative to f32 storage; accumulation
+/// stays f32 so FLOPs are unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_step_time_dtyped(
+    cfg: &ModelConfig,
+    variant: Variant,
+    gpu: &GpuSpec,
+    link: &LinkSpec,
+    tp: usize,
+    batch: usize,
+    kv_len: usize,
+    weight_elem: f64,
+    kv_elem: f64,
+) -> DecodeStepTime {
     let b = batch.max(1) as f64;
     let d = cfg.d_model as f64;
     let dkv = d * cfg.n_kv_head as f64 / cfg.n_head as f64;
@@ -181,9 +204,9 @@ pub fn decode_step_time(
     // Weights read once per step; the KV cache once per sequence.
     let weight_bytes = cfg.n_layer as f64
         * (2.0 * d * d + 2.0 * d * dkv + 2.0 * d * cfg.d_ff as f64)
-        * ELEM
-        + d * cfg.vocab_size as f64 * ELEM;
-    let kv_bytes = b * cfg.n_layer as f64 * 2.0 * k * dkv * ELEM;
+        * weight_elem
+        + d * cfg.vocab_size as f64 * weight_elem;
+    let kv_bytes = b * cfg.n_layer as f64 * 2.0 * k * dkv * kv_elem;
     let flops = b * decode_flops_per_token(cfg, kv_len);
     let t = tp as f64;
     let mut st = DecodeStepTime {
@@ -428,6 +451,25 @@ mod tests {
         let solo = decode_step_time(
             &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 1, 8, 512);
         assert_eq!(solo.comm, 0.0);
+    }
+
+    #[test]
+    fn bf16_storage_shrinks_decode_memory_terms() {
+        // Halving the weight/KV element size must shorten the (memory-
+        // bound) compute term, leave comm untouched, and the default
+        // entry point must match dtyped at the model's native ELEM.
+        let c = cfg("1.5B");
+        let f32d = decode_step_time_dtyped(
+            &c, Variant::PreLn, &H200, &NVLINK, 4, 8, 512, 4.0, 4.0);
+        let bf16 = decode_step_time_dtyped(
+            &c, Variant::PreLn, &H200, &NVLINK, 4, 8, 512, 2.0, 2.0);
+        assert!(bf16.compute < f32d.compute);
+        assert_eq!(bf16.comm, f32d.comm);
+        let default = decode_step_time(
+            &c, Variant::PreLn, &H200, &NVLINK, 4, 8, 512);
+        let dtyped = decode_step_time_dtyped(
+            &c, Variant::PreLn, &H200, &NVLINK, 4, 8, 512, ELEM, ELEM);
+        assert_eq!(default.total(), dtyped.total());
     }
 
     #[test]

@@ -7,7 +7,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::sp_trainer::{Schedule, Trainer};
 use crate::data::{tasks, Corpus, CorpusSpec, Loader, TaskSuite};
-use crate::runtime::{default_backend_with_opts, Backend, SchedMode};
+use crate::runtime::{default_backend_with_opts, Backend, KernelTier, SchedMode};
 use crate::tensor::HostTensor;
 
 pub struct ExpCtx {
@@ -31,19 +31,24 @@ impl ExpCtx {
         scale: f64,
         threads: Option<usize>,
     ) -> Result<ExpCtx> {
-        Self::with_opts(artifact_dir, scale, threads, None)
+        Self::with_opts(artifact_dir, scale, threads, None, None)
     }
 
-    /// [`ExpCtx::with_threads`] plus an explicit StageGraph schedule mode —
-    /// the CLI's `--sched` flag (`None` = `FAL_SCHED` env, default graph).
+    /// [`ExpCtx::with_threads`] plus an explicit StageGraph schedule mode
+    /// — the CLI's `--sched` flag (`None` = `FAL_SCHED` env, default
+    /// graph) — and kernel tier — the CLI's `--kernels` flag (`None` =
+    /// `FAL_KERNELS` env, default exact).
     pub fn with_opts(
         artifact_dir: &std::path::Path,
         scale: f64,
         threads: Option<usize>,
         sched: Option<SchedMode>,
+        kernels: Option<KernelTier>,
     ) -> Result<ExpCtx> {
         Ok(ExpCtx {
-            engine: default_backend_with_opts(artifact_dir, threads, sched)?,
+            engine: default_backend_with_opts(
+                artifact_dir, threads, sched, kernels,
+            )?,
             scale,
             out_dir: PathBuf::from("reports"),
             seed: 42,

@@ -1,11 +1,11 @@
 //! `fal` — launcher CLI for the FAL framework.
 //!
 //! ```text
-//! fal exp <id|all> [--scale 1.0] [--threads N] [--sched graph|serial|overlap] [--artifacts DIR] [--out reports]
-//! fal train --config small --variant fal [--steps 300] [--threads N] [--sched M] [--eval]
-//! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M] [--comm-sim S]
+//! fal exp <id|all> [--scale 1.0] [--threads N] [--sched graph|serial|overlap] [--kernels exact|fast] [--artifacts DIR] [--out reports]
+//! fal train --config small --variant fal [--steps 300] [--threads N] [--sched M] [--kernels K] [--eval]
+//! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M] [--kernels K] [--compress qsgd|powersgd] [--comm-sim S]
 //! fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps 4] [--threads N] [--sched M] [--comm-sim S]
-//! fal serve --config tiny --variant fal --tp 2 [--requests 200] [--rate R] [--seed S] [--threads N] [--sched M] [--comm-sim S]
+//! fal serve --config tiny --variant fal --tp 2 [--requests 200] [--rate R] [--seed S] [--threads N] [--sched M] [--kernels K] [--comm-sim S]
 //! fal audit           # statically verify every registered StageGraph
 //! fal list            # artifacts + experiments
 //! ```
@@ -18,6 +18,14 @@
 //! escape hatch running the historical sequential loops; `overlap` runs
 //! dependency-driven with in-flight all-reduce drains hidden behind the
 //! next block's compute — all three bit-identical at every thread count).
+//! `--kernels` picks the kernel tier (default: `FAL_KERNELS` env, else
+//! `exact` — the bit-exact scalar-reference kernels; `fast` enables the
+//! SIMD microkernels with multi-accumulator reductions plus chunked
+//! all-reduces — tolerance-bounded against exact, still deterministic per
+//! tier at every thread count).
+//! `--compress qsgd|powersgd` (fal tp) routes assembled gradients through
+//! the Fig 7 codecs with error feedback, ledger-accounting the compressed
+//! wire bytes.
 //! `--comm-sim S` scales the simulated link occupancy of each collective
 //! (0 = off): the virtual clock that makes the overlap win measurable on
 //! CPU (reported in the trainer's `sched.comm` / `sched.compute` buckets).
@@ -30,8 +38,9 @@ use fal::coordinator::dp_pp::{PpSched, PpTrainer};
 use fal::coordinator::serve::{poisson_workload, Decoder, ServeEngine};
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
+use fal::comm::{powersgd::PowerSgd, qsgd::Qsgd, Compressor};
 use fal::experiments::{self, ExpCtx};
-use fal::runtime::{Backend, ExecCtx, NativeBackend, SchedMode};
+use fal::runtime::{Backend, ExecCtx, KernelTier, NativeBackend, SchedMode};
 use fal::util::cli::Args;
 
 fn main() {
@@ -61,12 +70,37 @@ fn sched_opt(args: &Args) -> Result<Option<SchedMode>> {
     })
 }
 
+/// `--kernels exact|fast`; `None` falls back to `FAL_KERNELS` (default
+/// exact).
+fn kernels_opt(args: &Args) -> Result<Option<KernelTier>> {
+    Ok(match args.get("kernels") {
+        None => None,
+        Some(v) => Some(KernelTier::parse(v)?),
+    })
+}
+
+/// `--compress qsgd|powersgd`: gradient codec for `fal tp`.
+fn compress_opt(
+    args: &Args,
+) -> Result<Option<Box<dyn Compressor + Send + Sync>>> {
+    Ok(match args.get("compress") {
+        None => None,
+        // Fig 7 operating points: 4-bit/512-bucket QSGD, rank-4 PowerSGD.
+        Some("qsgd") => Some(Box::new(Qsgd::new(4, 512, 7))),
+        Some("powersgd") => Some(Box::new(PowerSgd::new(4, 7))),
+        Some(v) => anyhow::bail!(
+            "invalid --compress '{v}' (expected qsgd|powersgd)"
+        ),
+    })
+}
+
 fn exp_ctx(args: &Args, scale: f64) -> Result<ExpCtx> {
     ExpCtx::with_opts(
         &artifact_dir(args),
         scale,
         threads_opt(args)?,
         sched_opt(args)?,
+        kernels_opt(args)?,
     )
 }
 
@@ -97,12 +131,12 @@ fn print_help() {
     println!(
         "fal — First Attentions Last (NeurIPS 2025) reproduction framework\n\
          \n\
-         USAGE:\n  fal exp <id|all> [--scale S] [--threads N] [--sched M] [--artifacts DIR] [--out DIR]\n\
-         \x20 fal train --config small --variant fal [--steps N] [--threads N] [--sched M] [--eval]\n\
-         \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
+         USAGE:\n  fal exp <id|all> [--scale S] [--threads N] [--sched M] [--kernels K] [--artifacts DIR] [--out DIR]\n\
+         \x20 fal train --config small --variant fal [--steps N] [--threads N] [--sched M] [--kernels K] [--eval]\n\
+         \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M] [--kernels K] [--compress qsgd|powersgd] [--comm-sim S]\n\
          \x20 fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
-         \x20 fal serve --config tiny --variant fal --tp 2 [--requests N] [--rate R] [--seed S] [--threads N] [--sched M] [--comm-sim S]\n\
-         \x20 fal audit [--threads N] [--sched M]\n\
+         \x20 fal serve --config tiny --variant fal --tp 2 [--requests N] [--rate R] [--seed S] [--threads N] [--sched M] [--kernels K] [--comm-sim S]\n\
+         \x20 fal audit [--threads N] [--sched M] [--kernels K]\n\
          \x20 fal list\n\
          \n\
          --threads N sizes the native backend's worker fan-out (default:\n\
@@ -112,6 +146,14 @@ fn print_help() {
          sequential loops; overlap = dependency-driven with all-reduce\n\
          drains overlapped by the next block's compute — all three\n\
          bit-identical at every thread count).\n\
+         --kernels exact|fast picks the kernel tier (default: FAL_KERNELS\n\
+         env, else exact). exact = bit-exact scalar-reference kernels;\n\
+         fast = SIMD microkernels (multi-accumulator reductions) + chunked\n\
+         all-reduces, tolerance-bounded against exact and deterministic\n\
+         per tier at every thread count.\n\
+         --compress qsgd|powersgd (fal tp) routes gradients through the\n\
+         Fig 7 codecs with error feedback, accounting compressed wire\n\
+         bytes to the ledger.\n\
          --comm-sim S scales each collective's simulated link occupancy\n\
          (0 = off) so the overlap win is measurable on CPU.\n\
          --pp-sched gpipe|1f1b picks the pipeline linearization: same\n\
@@ -184,6 +226,11 @@ fn cmd_tp(args: &Args) -> Result<()> {
         ctx.engine.as_ref(), &config, variant, tp, PCIE_GEN4,
         TrainConfig::default())?;
     t.comm_sim_scale = args.f64_or("comm-sim", 0.0)?;
+    let compress_name = compress_opt(args)?.map(|codec| {
+        let name = codec.name();
+        t.set_compression(codec);
+        name
+    });
     for i in 0..steps {
         let b = loader.next_train();
         let (loss, gnorm) = t.train_step(&b)?;
@@ -200,6 +247,14 @@ fn cmd_tp(args: &Args) -> Result<()> {
         tp,
         t.ledger.link.name,
     );
+    if let Some(name) = compress_name {
+        println!(
+            "compression: {name} — {:.2} MB on the wire, EF residual \
+             norm {:.3e}",
+            t.compressed_wire_bytes / 1e6,
+            t.compression_residual_norm().unwrap_or(0.0),
+        );
+    }
     for (k, v) in t.breakdown.entries() {
         println!("  {k:<6} {v:.2}s");
     }
@@ -320,10 +375,15 @@ fn cmd_audit(args: &Args) -> Result<()> {
     // is a hard error here, never a silent default.
     let mut ctx = ExecCtx::from_env_strict()?;
     if let Some(n) = threads_opt(args)? {
-        ctx = ExecCtx::new(n).with_sched(ctx.sched());
+        ctx = ExecCtx::new(n)
+            .with_sched(ctx.sched())
+            .with_kernels(ctx.kernels());
     }
     if let Some(m) = sched_opt(args)? {
         ctx = ctx.with_sched(m);
+    }
+    if let Some(k) = kernels_opt(args)? {
+        ctx = ctx.with_kernels(k);
     }
     let engine = NativeBackend::synthetic_with_ctx(ctx);
     let audits =

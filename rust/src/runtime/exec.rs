@@ -38,10 +38,94 @@
 
 use std::ops::Range;
 
+use anyhow::{bail, Context, Result};
+
 use super::sched::SchedMode;
 
 /// Environment fallback for the thread count (`0` = auto-detect).
 pub const THREADS_ENV: &str = "FAL_THREADS";
+
+/// Environment fallback for the kernel tier (`exact` | `fast`).
+pub const KERNELS_ENV: &str = "FAL_KERNELS";
+
+/// Which kernel implementations the native backend dispatches to: the
+/// `--kernels` knob.
+///
+/// [`KernelTier::Exact`] (the default) keeps the full bit-exactness
+/// contract: every kernel preserves the scalar reference's per-element
+/// accumulation order, so results are identical at every thread count and
+/// schedule. [`KernelTier::Fast`] opts into the relaxed-determinism tier:
+/// multi-accumulator SIMD-width reductions (matmul_nt, layernorm,
+/// softmax), a rational GeLU approximation, and chunked collectives.
+/// Fast results are still deterministic (chunk boundaries depend only on
+/// the partition knob, accumulator width is fixed), but they are
+/// *tolerance*-checked against the exact tier rather than 0-ulp — the
+/// same contract the attention dk/dv partials already live under. See
+/// docs/ARCHITECTURE.md §1h.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelTier {
+    /// Bit-exact reference kernels (per-element scalar accumulation
+    /// order preserved at every thread count).
+    #[default]
+    Exact,
+    /// SIMD-width multi-accumulator kernels + chunked collectives,
+    /// tolerance-checked against [`KernelTier::Exact`].
+    Fast,
+}
+
+impl KernelTier {
+    pub fn parse(s: &str) -> Result<KernelTier> {
+        match s.trim() {
+            "exact" => Ok(KernelTier::Exact),
+            "fast" => Ok(KernelTier::Fast),
+            other => bail!("unknown kernel tier {other:?}; one of exact|fast"),
+        }
+    }
+
+    /// `FAL_KERNELS` env; default [`KernelTier::Exact`] when unset. An
+    /// unparsable value also falls back to the default, but loudly — a
+    /// typo'd tier pin must never silently run the wrong kernels
+    /// (mirrors the `FAL_SCHED` warning in [`SchedMode::from_env`]).
+    pub fn from_env() -> KernelTier {
+        match std::env::var(KERNELS_ENV) {
+            Ok(v) => KernelTier::parse(&v).unwrap_or_else(|_| {
+                eprintln!(
+                    "warning: {KERNELS_ENV}={v:?} is not exact|fast — \
+                     using the default ({}) tier",
+                    KernelTier::default().name()
+                );
+                KernelTier::default()
+            }),
+            Err(_) => KernelTier::default(),
+        }
+    }
+
+    /// Strict parse of a raw environment value: `None` (unset) is the
+    /// default tier, an unparsable value is an error.
+    /// [`KernelTier::from_env`] warns and falls back instead — contexts
+    /// that validate configuration (`fal audit`) want the error.
+    pub fn parse_env_value(v: Option<&str>) -> Result<KernelTier> {
+        match v {
+            None => Ok(KernelTier::default()),
+            Some(s) => KernelTier::parse(s),
+        }
+    }
+
+    /// Strict variant of [`KernelTier::from_env`]: an unparsable
+    /// `FAL_KERNELS` is a hard error rather than a warning.
+    pub fn from_env_strict() -> Result<KernelTier> {
+        let v = std::env::var(KERNELS_ENV).ok();
+        KernelTier::parse_env_value(v.as_deref())
+            .with_context(|| format!("invalid {KERNELS_ENV}"))
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Exact => "exact",
+            KernelTier::Fast => "fast",
+        }
+    }
+}
 
 /// Execution context: how many worker threads a kernel may fan out to.
 ///
@@ -56,6 +140,8 @@ pub struct ExecCtx {
     workers: usize,
     /// Schedule mode StageGraph runs consult (serial escape hatch).
     sched: SchedMode,
+    /// Kernel tier the native kernels dispatch on (`--kernels`).
+    kernels: KernelTier,
 }
 
 impl ExecCtx {
@@ -66,17 +152,28 @@ impl ExecCtx {
 
     /// Context with an explicit thread count (`0` = auto-detect from the
     /// machine, like the `FAL_THREADS=0` env setting). The schedule mode
-    /// comes from `FAL_SCHED` (default graph).
+    /// comes from `FAL_SCHED` (default graph), the kernel tier from
+    /// `FAL_KERNELS` (default exact).
     pub fn new(threads: usize) -> ExecCtx {
         let threads = if threads == 0 { available() } else { threads };
         let threads = threads.max(1);
-        ExecCtx { threads, workers: threads, sched: SchedMode::from_env() }
+        ExecCtx {
+            threads,
+            workers: threads,
+            sched: SchedMode::from_env(),
+            kernels: KernelTier::from_env(),
+        }
     }
 
     /// Single-threaded context: every kernel runs the scalar reference
     /// path on the calling thread (bit-for-bit the historical results).
     pub fn serial() -> ExecCtx {
-        ExecCtx { threads: 1, workers: 1, sched: SchedMode::Serial }
+        ExecCtx {
+            threads: 1,
+            workers: 1,
+            sched: SchedMode::Serial,
+            kernels: KernelTier::Exact,
+        }
     }
 
     /// Context from the `FAL_THREADS` / `FAL_SCHED` environment variables,
@@ -115,21 +212,28 @@ impl ExecCtx {
         }
     }
 
-    /// Strict variant of [`ExecCtx::from_env`]: unparsable `FAL_SCHED`
-    /// or `FAL_THREADS` are hard errors rather than warnings. `fal
-    /// audit` uses this — a validation pass must not itself run on
-    /// silently-defaulted configuration.
+    /// Strict variant of [`ExecCtx::from_env`]: unparsable `FAL_SCHED`,
+    /// `FAL_THREADS` or `FAL_KERNELS` are hard errors rather than
+    /// warnings. `fal audit` uses this — a validation pass must not
+    /// itself run on silently-defaulted configuration.
     pub fn from_env_strict() -> anyhow::Result<ExecCtx> {
         let sched = SchedMode::from_env_strict()?;
+        let kernels = KernelTier::from_env_strict()?;
         let threads = std::env::var(THREADS_ENV).ok();
         let threads = Self::parse_threads_env_value(threads.as_deref())?;
-        Ok(ExecCtx::new(threads).with_sched(sched))
+        Ok(ExecCtx::new(threads).with_sched(sched).with_kernels(kernels))
     }
 
     /// This context with an explicit schedule mode (the CLI `--sched`
     /// override).
     pub fn with_sched(self, sched: SchedMode) -> ExecCtx {
         ExecCtx { sched, ..self }
+    }
+
+    /// This context with an explicit kernel tier (the CLI `--kernels`
+    /// override).
+    pub fn with_kernels(self, kernels: KernelTier) -> ExecCtx {
+        ExecCtx { kernels, ..self }
     }
 
     pub fn threads(&self) -> usize {
@@ -144,6 +248,11 @@ impl ExecCtx {
 
     pub fn sched(&self) -> SchedMode {
         self.sched
+    }
+
+    /// Kernel tier the native kernels dispatch on (default exact).
+    pub fn kernels(&self) -> KernelTier {
+        self.kernels
     }
 
     /// This context restricted to at most `n` workers, partition knob
@@ -538,6 +647,41 @@ mod tests {
         assert!(err.to_string().contains(THREADS_ENV), "{err}");
         assert!(ExecCtx::parse_threads_env_value(Some("")).is_err());
         assert!(ExecCtx::parse_threads_env_value(Some("-1")).is_err());
+    }
+
+    #[test]
+    fn kernel_tier_parses_strictly() {
+        // Pure parse of the raw env value — tests never mutate the real
+        // FAL_KERNELS (CI pins it per matrix leg).
+        assert_eq!(KernelTier::parse("exact").unwrap(), KernelTier::Exact);
+        assert_eq!(KernelTier::parse(" fast ").unwrap(), KernelTier::Fast);
+        assert!(KernelTier::parse("").is_err());
+        assert!(KernelTier::parse("turbo").is_err());
+        assert_eq!(
+            KernelTier::parse_env_value(None).unwrap(),
+            KernelTier::Exact
+        );
+        assert!(KernelTier::parse_env_value(Some("")).is_err());
+        assert_eq!(KernelTier::Exact.name(), "exact");
+        assert_eq!(KernelTier::Fast.name(), "fast");
+    }
+
+    #[test]
+    fn kernel_tier_override_and_defaults() {
+        // serial() always pins the exact tier (the scalar reference path).
+        assert_eq!(ExecCtx::serial().kernels(), KernelTier::Exact);
+        let f = ExecCtx::new(2).with_kernels(KernelTier::Fast);
+        assert_eq!(f.kernels(), KernelTier::Fast);
+        // Tier override leaves the other knobs untouched.
+        assert_eq!(f.threads(), 2);
+        assert_eq!(
+            f.with_kernels(KernelTier::Exact).kernels(),
+            KernelTier::Exact
+        );
+        // Worker subdivision preserves the tier (same-bits-per-tier
+        // contract under --sched graph).
+        assert_eq!(f.with_workers(1).kernels(), KernelTier::Fast);
+        assert_eq!(f.with_sched(SchedMode::Overlap).kernels(), KernelTier::Fast);
     }
 
     #[test]

@@ -61,7 +61,7 @@ pub use artifact::{ArtifactSpec, Manifest, ParamSpec, TensorSpec};
 pub use audit::{AuditReport, GraphSpec, GraphTrace, Severity, Violation};
 #[cfg(feature = "pjrt")]
 pub use engine::Engine;
-pub use exec::ExecCtx;
+pub use exec::{ExecCtx, KernelTier};
 #[cfg(feature = "pjrt")]
 pub use literal::{from_literal, to_literal, untuple};
 pub use native::NativeBackend;
@@ -189,7 +189,7 @@ pub fn validate_inputs(spec: &ArtifactSpec, inputs: &[&HostTensor]) -> Result<()
 /// `pjrt` feature is on and a manifest exists on disk, the native CPU
 /// backend (with the built-in synthetic manifest) otherwise.
 pub fn default_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
-    default_backend_with_opts(artifact_dir, None, None)
+    default_backend_with_opts(artifact_dir, None, None, None)
 }
 
 /// [`default_backend`] with an explicit thread count for the native
@@ -200,16 +200,18 @@ pub fn default_backend_with_threads(
     artifact_dir: &Path,
     threads: Option<usize>,
 ) -> Result<Box<dyn Backend>> {
-    default_backend_with_opts(artifact_dir, threads, None)
+    default_backend_with_opts(artifact_dir, threads, None, None)
 }
 
 /// [`default_backend_with_threads`] plus an explicit StageGraph schedule
-/// mode for the native backend (`None` = `FAL_SCHED` env, default graph)
-/// — what the CLI's `--threads` / `--sched` construct.
+/// mode (`None` = `FAL_SCHED` env, default graph) and kernel tier
+/// (`None` = `FAL_KERNELS` env, default exact) for the native backend —
+/// what the CLI's `--threads` / `--sched` / `--kernels` construct.
 pub fn default_backend_with_opts(
     artifact_dir: &Path,
     threads: Option<usize>,
     sched: Option<SchedMode>,
+    kernels: Option<KernelTier>,
 ) -> Result<Box<dyn Backend>> {
     #[cfg(feature = "pjrt")]
     {
@@ -231,6 +233,9 @@ pub fn default_backend_with_opts(
     };
     if let Some(mode) = sched {
         ctx = ctx.with_sched(mode);
+    }
+    if let Some(tier) = kernels {
+        ctx = ctx.with_kernels(tier);
     }
     Ok(Box::new(NativeBackend::synthetic_with_ctx(ctx)))
 }

@@ -20,9 +20,24 @@
 //!   historical scalar path at `threads = 1`, and within ~1e-6 of it at
 //!   any other thread count (f32 reassociation only).
 //!
+//! # Kernel tiers
+//!
+//! The bullets above describe [`KernelTier::Exact`], the default. Under
+//! [`KernelTier::Fast`] (`--kernels fast` / `FAL_KERNELS=fast`) the
+//! matmul family, GeLU, layernorm and softmax dispatch to SIMD-width
+//! microkernels: [`SIMD_LANES`] k-strided accumulators per reduction
+//! (a fixed-width reassociation the stable autovectorizer lifts to
+//! vector FMAs) and a rational tanh approximation for GeLU. Fast results
+//! are still deterministic — lane count is a compile-time constant and
+//! chunk boundaries depend only on the partition knob — but they are
+//! *tolerance*-checked against the exact tier (tests/kernels_fast.rs)
+//! rather than 0-ulp. `matmul_tn` keeps the exact microkernel in both
+//! tiers (its token-outermost loop already vectorizes over the output
+//! row). See docs/ARCHITECTURE.md §1h.
+//!
 //! Everything operates on [`HostTensor`]s viewed as row-major matrices.
 
-use crate::runtime::exec::{split_rows, ExecCtx};
+use crate::runtime::exec::{split_rows, ExecCtx, KernelTier};
 use crate::tensor::{DType, HostTensor, MatView, MatViewMut, LN_EPS};
 
 /// tanh-GeLU constant sqrt(2/pi) (matches GPT-2 and ref.py).
@@ -33,6 +48,81 @@ const GELU_A: f32 = 0.044_715;
 /// the streamed `b` row across several output rows without growing the
 /// panel's L1 footprint.
 const MATMUL_TILE_ROWS: usize = 4;
+
+/// Accumulator width of the fast-tier microkernels: one f32x8 vector
+/// register's worth of independent partial sums. Fixed at compile time so
+/// fast results are identical at every thread count and schedule.
+pub const SIMD_LANES: usize = 8;
+
+/// Fast-tier dot product: lane `l` accumulates elements `l, l + 8, ...`;
+/// lanes combine in ascending order, then the scalar tail. The
+/// reassociation relative to the ascending-k scalar reference is what the
+/// fast tier trades for vectorizable, dependency-free inner loops.
+fn dot_fast(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0.0f32; SIMD_LANES];
+    let mut ca = a.chunks_exact(SIMD_LANES);
+    let mut cb = b.chunks_exact(SIMD_LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for l in 0..SIMD_LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        tail += x * y;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Fast-tier sum of a slice via [`SIMD_LANES`] strided accumulators
+/// (ascending-lane horizontal combine, scalar tail).
+fn sum_fast(xs: &[f32]) -> f32 {
+    let mut acc = [0.0f32; SIMD_LANES];
+    let mut it = xs.chunks_exact(SIMD_LANES);
+    for c in &mut it {
+        for l in 0..SIMD_LANES {
+            acc[l] += c[l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for &x in it.remainder() {
+        tail += x;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Fast-tier sum of squared deviations from `mu` (layernorm variance).
+fn sum_sq_dev_fast(xs: &[f32], mu: f32) -> f32 {
+    let mut acc = [0.0f32; SIMD_LANES];
+    let mut it = xs.chunks_exact(SIMD_LANES);
+    for c in &mut it {
+        for l in 0..SIMD_LANES {
+            let d = c[l] - mu;
+            acc[l] += d * d;
+        }
+    }
+    let mut tail = 0.0f32;
+    for &x in it.remainder() {
+        let d = x - mu;
+        tail += d * d;
+    }
+    acc.iter().sum::<f32>() + tail
+}
+
+/// Fast-tier tanh: the Padé(7,6) rational approximation (Lambert's
+/// continued fraction), clamped to ±1 and short-circuited where f32 tanh
+/// saturates. Max absolute error ~1e-4 near the cutoff — far inside the
+/// fast tier's GeLU tolerance — with no transcendental call.
+fn tanh_fast(x: f32) -> f32 {
+    if !(x.abs() < 4.97) {
+        // Saturated (or NaN -> NaN propagates through copysign's input).
+        return if x.is_nan() { x } else { 1.0f32.copysign(x) };
+    }
+    let x2 = x * x;
+    let p = x * (135_135.0 + x2 * (17_325.0 + x2 * (378.0 + x2)));
+    let q = 135_135.0 + x2 * (62_370.0 + x2 * (3_150.0 + x2 * 28.0));
+    (p / q).clamp(-1.0, 1.0)
+}
 
 // ---------------------------------------------------------------------------
 // BLAS-3: the three matmul variants
@@ -47,12 +137,51 @@ pub fn matmul(ctx: &ExecCtx, a: &HostTensor, b: &HostTensor) -> HostTensor {
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul: inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
-    ctx.par_rows(&mut out, n, ExecCtx::grain_rows(2 * k * n), |r0, panel| {
-        matmul_panel(&a.data[r0 * k..], k, &b.data, n, panel);
-    });
+    match ctx.kernels() {
+        KernelTier::Exact => {
+            ctx.par_rows(&mut out, n, ExecCtx::grain_rows(2 * k * n), |r0, panel| {
+                matmul_panel(&a.data[r0 * k..], k, &b.data, n, panel);
+            });
+        }
+        KernelTier::Fast => {
+            // One transpose of `b` (k*n elements, negligible next to the
+            // m*k*n MACs) buys contiguous dot products: no per-k store
+            // traffic on the output row and [`SIMD_LANES`] independent
+            // accumulators instead of a serial FP add chain.
+            let bt = transpose_mat(&b.data, k, n);
+            ctx.par_rows(&mut out, n, ExecCtx::grain_rows(2 * k * n), |r0, panel| {
+                nt_panel_fast(&a.data[r0 * k..], k, &bt, n, panel);
+            });
+        }
+    }
     let mut shape = a.shape.clone();
     *shape.last_mut().unwrap() = n;
     HostTensor::from_vec(&shape, out)
+}
+
+/// Dense row-major transpose: `m` [rows, cols] -> [cols, rows].
+fn transpose_mat(m_: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m_.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = m_[r * cols + c];
+        }
+    }
+    out
+}
+
+/// Fast-tier panel microkernel shared by `matmul` (via a transposed rhs)
+/// and `matmul_nt`: `out` (rows x n, dense) = `a_panel` @ `bt`^T with
+/// `bt` [n, k] row-major, every element a [`dot_fast`].
+fn nt_panel_fast(a: &[f32], k: usize, bt: &[f32], n: usize, out: &mut [f32]) {
+    let rows = if n == 0 { 0 } else { out.len() / n };
+    for r in 0..rows {
+        let arow = &a[r * k..(r + 1) * k];
+        let orow = &mut out[r * n..(r + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot_fast(arow, &bt[j * k..(j + 1) * k]);
+        }
+    }
 }
 
 /// Panel microkernel: `out` (rows x n, dense, zeroed) += `a_panel` @ `b`.
@@ -87,7 +216,14 @@ pub fn matmul_nt(ctx: &ExecCtx, a: &HostTensor, b: &HostTensor) -> HostTensor {
     let (n, k2) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul_nt: inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
+    let fast = ctx.kernels() == KernelTier::Fast;
     ctx.par_rows(&mut out, n, ExecCtx::grain_rows(2 * k * n), |r0, panel| {
+        if fast {
+            // `b` is already [n, k] row-major — exactly the layout
+            // `nt_panel_fast` wants.
+            nt_panel_fast(&a.data[r0 * k..], k, &b.data, n, panel);
+            return;
+        }
         let prows = if n == 0 { 0 } else { panel.len() / n };
         for ri in 0..prows {
             let r = r0 + ri;
@@ -139,22 +275,32 @@ pub fn matmul_tn(ctx: &ExecCtx, a: &HostTensor, b: &HostTensor) -> HostTensor {
 // Elementwise / reductions
 // ---------------------------------------------------------------------------
 
-/// Elementwise sum of two tensors.
-pub fn add(a: &HostTensor, b: &HostTensor) -> HostTensor {
+/// Elementwise sum of two tensors. Chunk-parallel; every output element is
+/// `a[i] + b[i]` regardless of the partition — 0-ulp at any thread count.
+pub fn add(ctx: &ExecCtx, a: &HostTensor, b: &HostTensor) -> HostTensor {
+    assert_eq!(a.len(), b.len(), "add: length mismatch");
     let mut out = a.clone();
-    out.add_assign(b);
+    ctx.par_rows(&mut out.data, 1, ExecCtx::grain_rows(2), |e0, chunk| {
+        let bs = &b.data[e0..e0 + chunk.len()];
+        for (v, &x) in chunk.iter_mut().zip(bs) {
+            *v += x;
+        }
+    });
     out
 }
 
 /// Add a `[n]`-shaped bias to every row of a `[..., n]` tensor, in place.
-pub fn add_bias(t: &mut HostTensor, bias: &HostTensor) {
+/// Row-panel parallel, element-independent — 0-ulp at any thread count.
+pub fn add_bias(ctx: &ExecCtx, t: &mut HostTensor, bias: &HostTensor) {
     let (_, n) = t.rows_cols();
     assert_eq!(bias.len(), n, "add_bias: bias length");
-    for row in t.data.chunks_mut(n) {
-        for (v, b) in row.iter_mut().zip(&bias.data) {
-            *v += b;
+    ctx.par_rows(&mut t.data, n, ExecCtx::grain_rows(2 * n), |_, panel| {
+        for row in panel.chunks_mut(n) {
+            for (v, b) in row.iter_mut().zip(&bias.data) {
+                *v += b;
+            }
         }
-    }
+    });
 }
 
 /// Sum a `[..., n]` tensor over all leading axes -> `[n]` (bias gradient).
@@ -175,27 +321,33 @@ pub fn sum_rows(ctx: &ExecCtx, t: &HostTensor) -> HostTensor {
     HostTensor::from_vec(&[n], out)
 }
 
-/// tanh-approximated GeLU, elementwise.
+/// tanh-approximated GeLU, elementwise. Fast tier swaps `f32::tanh` for
+/// the rational [`tanh_fast`] (error ~1e-4 worst case, ~1e-6 typical).
 pub fn gelu(ctx: &ExecCtx, x: &HostTensor) -> HostTensor {
+    let fast = ctx.kernels() == KernelTier::Fast;
     let mut out = x.clone();
     ctx.par_rows(&mut out.data, 1, ExecCtx::grain_rows(8), |_, chunk| {
         for v in chunk.iter_mut() {
             let u = GELU_C * (*v + GELU_A * *v * *v * *v);
-            *v = 0.5 * *v * (1.0 + u.tanh());
+            let t = if fast { tanh_fast(u) } else { u.tanh() };
+            *v = 0.5 * *v * (1.0 + t);
         }
     });
     out
 }
 
-/// GeLU VJP: dx = dout * gelu'(x).
+/// GeLU VJP: dx = dout * gelu'(x). The fast tier differentiates the same
+/// [`tanh_fast`]-based forward it computes, keeping finite differences
+/// consistent within the tier.
 pub fn gelu_bwd(ctx: &ExecCtx, x: &HostTensor, dout: &HostTensor) -> HostTensor {
     assert_eq!(x.len(), dout.len());
+    let fast = ctx.kernels() == KernelTier::Fast;
     let mut out = dout.clone();
     ctx.par_rows(&mut out.data, 1, ExecCtx::grain_rows(12), |e0, chunk| {
         let xs = &x.data[e0..e0 + chunk.len()];
         for (d, &v) in chunk.iter_mut().zip(xs) {
             let u = GELU_C * (v + GELU_A * v * v * v);
-            let t = u.tanh();
+            let t = if fast { tanh_fast(u) } else { u.tanh() };
             let du = GELU_C * (1.0 + 3.0 * GELU_A * v * v);
             *d *= 0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du;
         }
@@ -219,14 +371,21 @@ pub fn layernorm(
     let (m, n) = x.rows_cols();
     assert_eq!(gamma.len(), n, "layernorm: gamma length");
     assert_eq!(beta.len(), n, "layernorm: beta length");
+    let fast = ctx.kernels() == KernelTier::Fast;
     let mut out = vec![0.0f32; m * n];
     ctx.par_rows(&mut out, n, ExecCtx::grain_rows(6 * n), |r0, panel| {
         for (ri, orow) in panel.chunks_mut(n).enumerate() {
             let r = r0 + ri;
             let row = &x.data[r * n..(r + 1) * n];
-            let mu = row.iter().sum::<f32>() / n as f32;
-            let var =
-                row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+            let (mu, var) = if fast {
+                let mu = sum_fast(row) / n as f32;
+                (mu, sum_sq_dev_fast(row, mu) / n as f32)
+            } else {
+                let mu = row.iter().sum::<f32>() / n as f32;
+                let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>()
+                    / n as f32;
+                (mu, var)
+            };
             let inv = 1.0 / (var + LN_EPS).sqrt();
             for j in 0..n {
                 orow[j] = (row[j] - mu) * inv * gamma.data[j] + beta.data[j];
@@ -245,14 +404,25 @@ pub fn softmax_rows(ctx: &ExecCtx, t: &HostTensor) -> HostTensor {
         dtype: DType::F32,
         data: t.data.clone(),
     };
+    let fast = ctx.kernels() == KernelTier::Fast;
     ctx.par_rows(&mut out.data, n, ExecCtx::grain_rows(3 * n), |_, panel| {
         for row in panel.chunks_mut(n) {
+            // max is order-independent bitwise; only the exp-sum differs
+            // between tiers (multi-accumulator reassociation).
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-            let mut sum = 0.0f32;
-            for v in row.iter_mut() {
-                *v = (*v - mx).exp();
-                sum += *v;
-            }
+            let sum = if fast {
+                for v in row.iter_mut() {
+                    *v = (*v - mx).exp();
+                }
+                sum_fast(row)
+            } else {
+                let mut s = 0.0f32;
+                for v in row.iter_mut() {
+                    *v = (*v - mx).exp();
+                    s += *v;
+                }
+                s
+            };
             for v in row.iter_mut() {
                 *v /= sum;
             }
@@ -680,13 +850,52 @@ mod tests {
         let b = HostTensor::randn(&[13, 9], 1.0, &mut rng);
         let reference = a.matmul(&b);
         for threads in [1usize, 2, 4, 7] {
-            let ctx = ExecCtx::new(threads);
+            // Pin the exact tier: the 0-ulp contract is the exact tier's;
+            // the fast tier is tolerance-checked in tests/kernels_fast.rs.
+            let ctx = ExecCtx::new(threads).with_kernels(KernelTier::Exact);
             assert_eq!(
                 bits(&matmul(&ctx, &a, &b)),
                 bits(&reference),
                 "threads = {threads}"
             );
         }
+    }
+
+    #[test]
+    fn fast_tier_matmuls_within_tolerance_and_thread_invariant() {
+        let mut rng = Rng::new(31);
+        let a = HostTensor::randn(&[2, 19, 21], 1.0, &mut rng);
+        let b = HostTensor::randn(&[21, 11], 1.0, &mut rng);
+        let exact = matmul(&ser(), &a, &b);
+        let nt_exact = matmul_nt(&ser(), &a, &b.transpose());
+        let mut prev: Option<(Vec<u32>, Vec<u32>)> = None;
+        for threads in [1usize, 2, 4, 7] {
+            let ctx = ExecCtx::new(threads).with_kernels(KernelTier::Fast);
+            let f = matmul(&ctx, &a, &b);
+            let fnt = matmul_nt(&ctx, &a, &b.transpose());
+            assert!(f.max_abs_err(&exact) < 1e-4, "threads = {threads}");
+            assert!(fnt.max_abs_err(&nt_exact) < 1e-4, "threads = {threads}");
+            // matmul and matmul_nt share the fast microkernel: identical.
+            assert_eq!(bits(&f), bits(&fnt), "threads = {threads}");
+            // Fast stays deterministic across thread counts.
+            if let Some((pf, pnt)) = &prev {
+                assert_eq!(&bits(&f), pf, "threads = {threads}");
+                assert_eq!(&bits(&fnt), pnt, "threads = {threads}");
+            }
+            prev = Some((bits(&f), bits(&fnt)));
+        }
+    }
+
+    #[test]
+    fn fast_tanh_tracks_reference() {
+        for i in -600..=600 {
+            let x = i as f32 * 0.01;
+            let err = (tanh_fast(x) - x.tanh()).abs();
+            assert!(err < 2e-4, "x = {x}: err {err}");
+        }
+        assert_eq!(tanh_fast(1e30), 1.0);
+        assert_eq!(tanh_fast(-1e30), -1.0);
+        assert!(tanh_fast(f32::NAN).is_nan());
     }
 
     #[test]
@@ -697,19 +906,39 @@ mod tests {
         let b = HostTensor::randn(&[16], 0.2, &mut rng);
         let reference = x.layernorm(&g, &b);
         for threads in [1usize, 4] {
-            let ctx = ExecCtx::new(threads);
+            // Exact-tier pin: see ctx_matmul_matches_scalar_reference_bitwise.
+            let ctx = ExecCtx::new(threads).with_kernels(KernelTier::Exact);
             assert_eq!(bits(&layernorm(&ctx, &x, &g, &b)), bits(&reference));
         }
         let sm = x.softmax_rows();
-        assert_eq!(bits(&softmax_rows(&ExecCtx::new(4), &x)), bits(&sm));
+        let ctx4 = ExecCtx::new(4).with_kernels(KernelTier::Exact);
+        assert_eq!(bits(&softmax_rows(&ctx4, &x)), bits(&sm));
     }
 
     #[test]
     fn bias_and_row_sums() {
         let mut t = HostTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
-        add_bias(&mut t, &HostTensor::from_vec(&[2], vec![10., 20.]));
+        add_bias(&ser(), &mut t, &HostTensor::from_vec(&[2], vec![10., 20.]));
         assert_eq!(t.data, vec![11., 22., 13., 24.]);
         assert_eq!(sum_rows(&ser(), &t).data, vec![24., 46.]);
+    }
+
+    #[test]
+    fn add_and_add_bias_parallel_bitwise() {
+        let mut rng = Rng::new(41);
+        let a = HostTensor::randn(&[7, 33], 1.0, &mut rng);
+        let b = HostTensor::randn(&[7, 33], 1.0, &mut rng);
+        let bias = HostTensor::randn(&[33], 1.0, &mut rng);
+        let sum1 = add(&ser(), &a, &b);
+        let mut biased1 = a.clone();
+        add_bias(&ser(), &mut biased1, &bias);
+        for threads in [2usize, 4, 7] {
+            let ctx = ExecCtx::new(threads);
+            assert_eq!(bits(&add(&ctx, &a, &b)), bits(&sum1), "t={threads}");
+            let mut biased = a.clone();
+            add_bias(&ctx, &mut biased, &bias);
+            assert_eq!(bits(&biased), bits(&biased1), "t={threads}");
+        }
     }
 
     #[test]

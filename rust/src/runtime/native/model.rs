@@ -99,7 +99,7 @@ fn forward_gated(
         let a_conn = scaled(&a, conn_scale[li]);
 
         let mlpf = match block_kind(mm.variant, li, mm.reuse_layer) {
-            BlockKind::PreLn => mlp_fwd(ctx, &add(&x, &a_conn), None, &mp),
+            BlockKind::PreLn => mlp_fwd(ctx, &add(ctx, &x, &a_conn), None, &mp),
             BlockKind::Parallel => mlp_fwd(ctx, &x, None, &mp),
             BlockKind::FalPrep => {
                 let f = lnf(&a_conn)?;
@@ -117,7 +117,7 @@ fn forward_gated(
             }
             BlockKind::FalPlusMain => {
                 let fan = lnf(fa.as_ref().expect("fa set"))?;
-                mlp_fwd(ctx, &add(&x, &a_conn), Some(&fan), &mp)
+                mlp_fwd(ctx, &add(ctx, &x, &a_conn), Some(&fan), &mp)
             }
             BlockKind::Ablation1 => {
                 let an = lnf(&a_conn)?;
@@ -129,7 +129,7 @@ fn forward_gated(
             c.mlp_in.push(mlpf.hn.clone());
             c.mlp_out.push(mlpf.out.clone());
         }
-        x = add(&add(&x, &a_out), &mlpf.out);
+        x = add(ctx, &add(ctx, &x, &a_out), &mlpf.out);
     }
     Ok((x, caps))
 }

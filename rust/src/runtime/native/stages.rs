@@ -244,10 +244,10 @@ pub fn mlp_fwd(
         hn.add_assign(fa);
     }
     let mut u = matmul(ctx, &hn, p[2]);
-    add_bias(&mut u, p[3]);
+    add_bias(ctx, &mut u, p[3]);
     let a = gelu(ctx, &u);
     let mut out = matmul(ctx, &a, p[4]);
-    add_bias(&mut out, p[5]);
+    add_bias(ctx, &mut out, p[5]);
     MlpFwd { out, hn, u, a }
 }
 
@@ -293,7 +293,7 @@ pub fn fal_fused_fwd(ctx: &ExecCtx, g: &AttnGeom, i: &[&HostTensor]) -> HostTens
     let mut outs = fal_fused_fwd_graph(g, i).run(ctx);
     let m_p = outs.pop().unwrap();
     let a_p = outs.pop().unwrap();
-    add(&a_p, &m_p)
+    add(ctx, &a_p, &m_p)
 }
 
 /// The fused forward as a buildable [`StageGraph`] — two sibling output
@@ -332,7 +332,7 @@ pub fn fal_fused_bwd(
     let a = outs.pop().unwrap();
     // a: [dx, dln1_g, dln1_b, dwq, dwk, dwv, dwo]
     // m: [dx, dfa, dln2_g, dln2_b, dw1, db1, dw2, db2]
-    let dx = add(&a[0], &m[0]);
+    let dx = add(ctx, &a[0], &m[0]);
     vec![
         dx,
         m[1].clone(),

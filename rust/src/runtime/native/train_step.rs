@@ -311,7 +311,7 @@ pub(crate) fn loss_and_grads(
                         Ok(v) => &v[0],
                         Err(e) => anyhow::bail!("mha_fwd failed: {e}"),
                     };
-                    let h = add(xr, a);
+                    let h = add(c, xr, a);
                     let mo =
                         mlp_fwd(c, &h, None, &mlp_params(params, li)?).out;
                     Ok(vec![h, mo])
@@ -322,13 +322,13 @@ pub(crate) fn loss_and_grads(
                 let mo = hm.pop().unwrap();
                 let h = hm.pop().unwrap();
                 stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
-                x = add(&h, &mo);
+                x = add(ctx, &h, &mo);
             }
             BlockKind::Parallel => {
                 let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
                 let mo = mlp_fwd(ctx, &x, None, &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: None });
-                x = add(&add(&x, &a), &mo);
+                x = add(ctx, &add(ctx, &x, &a), &mo);
             }
             BlockKind::FalPrep => {
                 let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
@@ -336,7 +336,7 @@ pub(crate) fn loss_and_grads(
                 let mo =
                     mlp_fwd(ctx, &x, Some(&f), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
-                x = add(&add(&x, &a), &mo);
+                x = add(ctx, &add(ctx, &x, &a), &mo);
                 fa = Some(f);
             }
             BlockKind::FalMain if !moe => {
@@ -350,7 +350,7 @@ pub(crate) fn loss_and_grads(
                     out.add_assign(p);
                 }
                 stash.push(Stash { x: x.clone(), h_or_a: None });
-                x = add(&x, &out);
+                x = add(ctx, &x, &out);
             }
             BlockKind::FalMain => {
                 // MoE attention has no fused stage; compose explicitly.
@@ -359,24 +359,24 @@ pub(crate) fn loss_and_grads(
                 let mo =
                     mlp_fwd(ctx, &x, Some(fa_t), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: None });
-                x = add(&add(&x, &a), &mo);
+                x = add(ctx, &add(ctx, &x, &a), &mo);
             }
             BlockKind::FalPlusPrep => {
                 let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
                 let mo =
                     mlp_fwd(ctx, &x, Some(&a), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
-                x = add(&add(&x, &a), &mo);
+                x = add(ctx, &add(ctx, &x, &a), &mo);
                 fa = Some(a);
             }
             BlockKind::FalPlusMain => {
                 let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
-                let h = add(&x, &a);
+                let h = add(ctx, &x, &a);
                 let fan = lnf(fa.as_ref().unwrap(), li)?;
                 let mo =
                     mlp_fwd(ctx, &h, Some(&fan), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(h.clone()) });
-                x = add(&h, &mo);
+                x = add(ctx, &h, &mo);
             }
             BlockKind::Ablation1 => {
                 let a = block_attn_fwd(ctx, mm, params, li, &x, probe(li))?;
@@ -384,7 +384,7 @@ pub(crate) fn loss_and_grads(
                 let mo =
                     mlp_fwd(ctx, &x, Some(&an), &mlp_params(params, li)?).out;
                 stash.push(Stash { x: x.clone(), h_or_a: Some(a.clone()) });
-                x = add(&add(&x, &a), &mo);
+                x = add(ctx, &add(ctx, &x, &a), &mo);
             }
         }
     }
@@ -418,7 +418,7 @@ pub(crate) fn loss_and_grads(
                 d_attn[li] = Some(dh.clone()); // h = x + a: da = dh
                 let dx_a = block_attn_bwd(
                     ctx, mm, params, li, &stash[li].x, &dh, &mut grads)?;
-                add(&dx_a, &dh) // residual x -> h
+                add(ctx, &dx_a, &dh) // residual x -> h
             }
             BlockKind::Parallel => {
                 let out = mlp_bwd(
@@ -427,7 +427,7 @@ pub(crate) fn loss_and_grads(
                 d_attn[li] = Some(dx.clone()); // a enters only the residual
                 let dx_a = block_attn_bwd(
                     ctx, mm, params, li, &stash[li].x, &dx, &mut grads)?;
-                let mut d = add(&out[0], &dx_a);
+                let mut d = add(ctx, &out[0], &dx_a);
                 d.add_assign(&dx); // direct residual
                 d
             }
@@ -457,7 +457,7 @@ pub(crate) fn loss_and_grads(
                 d_attn[li] = Some(da.clone());
                 let dx_a = block_attn_bwd(
                     ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
-                let mut d = add(&dx_a, &dx_mlp);
+                let mut d = add(ctx, &dx_a, &dx_mlp);
                 d.add_assign(&dx); // direct residual x -> x'
                 d
             }
@@ -491,7 +491,7 @@ pub(crate) fn loss_and_grads(
                 }
                 // out_fused = a + m is linear in a: da = dx (pre-residual).
                 d_attn[li] = Some(dx.clone());
-                add(&out[0], &dx) // residual
+                add(ctx, &out[0], &dx) // residual
             }
             BlockKind::FalMain => {
                 let fa_t = fa.as_ref().unwrap();
@@ -510,7 +510,7 @@ pub(crate) fn loss_and_grads(
                 d_attn[li] = Some(dx.clone());
                 let dx_a = block_attn_bwd(
                     ctx, mm, params, li, &stash[li].x, &dx, &mut grads)?;
-                let mut d = add(&out[0], &dx_a);
+                let mut d = add(ctx, &out[0], &dx_a);
                 d.add_assign(&dx);
                 d
             }
@@ -534,7 +534,7 @@ pub(crate) fn loss_and_grads(
                 d_attn[li] = Some(da.clone());
                 let dx_a = block_attn_bwd(
                     ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
-                let mut d = add(&dx_a, &out[0]);
+                let mut d = add(ctx, &dx_a, &out[0]);
                 d.add_assign(&dx);
                 d
             }
@@ -559,7 +559,7 @@ pub(crate) fn loss_and_grads(
                 d_attn[li] = Some(da.clone());
                 let dx_a = block_attn_bwd(
                     ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
-                let mut d = add(&dx_a, &out[0]);
+                let mut d = add(ctx, &dx_a, &out[0]);
                 d.add_assign(&dx);
                 d
             }
@@ -583,7 +583,7 @@ pub(crate) fn loss_and_grads(
                 d_attn[li] = Some(da.clone());
                 let dx_a = block_attn_bwd(
                     ctx, mm, params, li, &stash[li].x, &da, &mut grads)?;
-                let mut d = add(&dx_a, &out[0]);
+                let mut d = add(ctx, &dx_a, &out[0]);
                 d.add_assign(&dx);
                 d
             }

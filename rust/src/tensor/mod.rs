@@ -15,11 +15,19 @@ pub use view::{MatView, MatViewMut};
 /// Largest integer magnitude that survives an f32 round-trip exactly.
 pub const I32_EXACT_MAX: u32 = 1 << 24;
 
-/// Element type tag (only what the manifest emits).
+/// Element type tag (what the manifest emits, plus the bf16 storage
+/// dtype of the fast kernel tier).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DType {
     F32,
     I32,
+    /// bfloat16 *storage*: values live in the shared f32 buffer but are
+    /// rounded to the nearest bf16-representable value ([`bf16_round`]),
+    /// and [`DType::size`] charges 2 bytes/element — so comm-volume and
+    /// memory accounting (ledger bytes, KV-cache bytes, weight streams)
+    /// see the halved footprint while every kernel still accumulates in
+    /// f32 (the SNIPPETS #1 mixed-precision convention).
+    Bf16,
 }
 
 impl DType {
@@ -27,13 +35,30 @@ impl DType {
         match s {
             "f32" => Ok(DType::F32),
             "i32" => Ok(DType::I32),
+            "bf16" => Ok(DType::Bf16),
             other => bail!("unsupported dtype {other:?}"),
         }
     }
 
     pub fn size(&self) -> usize {
-        4
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::Bf16 => 2,
+        }
     }
+}
+
+/// Round an f32 to the nearest bf16-representable value (round-to-
+/// nearest-even on the top 16 mantissa-carrying bits), returned as f32.
+/// NaN payloads are normalized to a quiet NaN so a truncated signaling
+/// bit pattern can never appear.
+pub fn bf16_round(v: f32) -> f32 {
+    if v.is_nan() {
+        return f32::NAN;
+    }
+    let bits = v.to_bits();
+    let rounded = (bits + 0x7FFF + ((bits >> 16) & 1)) & 0xFFFF_0000;
+    f32::from_bits(rounded)
 }
 
 /// Dense row-major tensor. I32 tensors store bit-cast values in the same
@@ -106,6 +131,31 @@ impl HostTensor {
             "as_i32: |value| > 2^24 lost precision in the f32 store"
         );
         self.data.iter().map(|&v| v as i32).collect()
+    }
+
+    /// Convert to bf16 storage in place: every value is rounded to its
+    /// nearest bf16-representable neighbor ([`bf16_round`]) and the
+    /// dtype tag flips to [`DType::Bf16`], halving
+    /// [`HostTensor::size_bytes`]. Idempotent; rejects I32 (token ids
+    /// must stay exact). The per-element relative error is bounded by 2^-8
+    /// (the 8-bit bf16 mantissa) — asserted in tests/kernels_fast.rs.
+    pub fn to_bf16(&mut self) {
+        assert_ne!(
+            self.dtype,
+            DType::I32,
+            "to_bf16: integer tensors cannot be stored as bf16"
+        );
+        for v in self.data.iter_mut() {
+            *v = bf16_round(*v);
+        }
+        self.dtype = DType::Bf16;
+    }
+
+    /// A bf16-storage copy of this tensor (see [`HostTensor::to_bf16`]).
+    pub fn bf16(&self) -> HostTensor {
+        let mut t = self.clone();
+        t.to_bf16();
+        t
     }
 
     // ---------------- elementwise / BLAS-1 ops ----------------
@@ -477,6 +527,52 @@ mod tests {
             assert!(mu.abs() < 1e-5, "mean {mu}");
             assert!((var - 1.0).abs() < 1e-3, "var {var}");
         }
+    }
+
+    #[test]
+    fn bf16_round_matches_reference_points() {
+        // Exactly representable values pass through untouched.
+        for v in [0.0f32, -0.0, 1.0, -2.0, 0.5, 256.0] {
+            assert_eq!(bf16_round(v).to_bits(), v.to_bits(), "{v}");
+        }
+        // 1 + 2^-8 sits exactly between 1.0 and 1 + 2^-7 (the bf16 step
+        // at 1.0): round-to-even picks 1.0 (even low mantissa bit).
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-8)), 1.0);
+        // Just above the midpoint rounds up to the next bf16 step.
+        assert_eq!(
+            bf16_round(1.0 + 2f32.powi(-8) + 2f32.powi(-16)),
+            1.0 + 2f32.powi(-7)
+        );
+        // Infinities and NaN survive.
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(bf16_round(f32::NAN).is_nan());
+        // Overflow to infinity at the top of the f32 range.
+        assert_eq!(bf16_round(f32::MAX), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_storage_halves_bytes_and_bounds_error() {
+        let mut rng = Rng::new(3);
+        let t = HostTensor::randn(&[4, 8], 1.0, &mut rng);
+        let b = t.bf16();
+        assert_eq!(b.dtype, DType::Bf16);
+        assert_eq!(b.size_bytes(), t.size_bytes() / 2);
+        for (x, y) in t.data.iter().zip(&b.data) {
+            // Relative error bounded by the 8-bit mantissa step.
+            assert!((x - y).abs() <= x.abs() * 2f32.powi(-8), "{x} vs {y}");
+        }
+        // Idempotent: re-rounding changes nothing.
+        let mut b2 = b.clone();
+        b2.to_bf16();
+        assert_eq!(b2.data, b.data);
+    }
+
+    #[test]
+    #[should_panic(expected = "to_bf16")]
+    fn bf16_rejects_token_tensors() {
+        let mut t = HostTensor::from_i32(&[2], &[1, 2]);
+        t.to_bf16();
     }
 
     #[test]

@@ -10,10 +10,17 @@
 //! them behind.
 
 use fal::coordinator::audit::{audit_registered_graphs, GraphAudit};
-use fal::runtime::{NativeBackend, Severity, Violation};
+use fal::runtime::{ExecCtx, KernelTier, NativeBackend, Severity, Violation};
 
 fn audits() -> Vec<GraphAudit> {
-    let eng = NativeBackend::synthetic();
+    // Pinned to the exact kernel tier: the Fig 2 comm-placement story is
+    // a property of the logical schedule, orthogonal to how matmuls are
+    // computed, and the fast tier restructures every all-reduce into
+    // per-chunk comm drains (`{label}.c{i}` + a gather node) that these
+    // label-based assertions are not about. The chunked graphs get their
+    // own structural audit in `fast_tier_chunked_graphs_audit_clean`.
+    let ctx = ExecCtx::from_env().with_kernels(KernelTier::Exact);
+    let eng = NativeBackend::synthetic_with_ctx(ctx);
     audit_registered_graphs(&eng).unwrap()
 }
 
@@ -241,5 +248,55 @@ fn pipeline_ordering_edges_do_not_trip_the_unused_lint() {
     assert!(
         a.report.comm.iter().any(|c| c.hideable_secs > 0.0),
         "no pipeline send overlaps any cell"
+    );
+}
+
+#[test]
+fn fast_tier_chunked_graphs_audit_clean() {
+    // Under `--kernels fast` every TP/serve all-reduce is emitted as
+    // AR_CHUNKS per-chunk comm drains plus a compute gather node that
+    // inherits the original label. The chunked graphs must stay
+    // structurally clean — the gather reads every chunk and the shape
+    // dep, so no hard violations and no read-discipline lints appear —
+    // and the chunk drains must actually be there.
+    let ctx = ExecCtx::from_env().with_kernels(KernelTier::Fast);
+    let eng = NativeBackend::synthetic_with_ctx(ctx);
+    let audits = audit_registered_graphs(&eng).unwrap();
+    for a in &audits {
+        assert_eq!(
+            a.report.hard_count(),
+            0,
+            "{}: hard violations under the fast tier\n{}",
+            a.name,
+            a.report.render(&a.name)
+        );
+        for v in &a.report.violations {
+            assert!(
+                matches!(v, Violation::ExposedComm { .. }),
+                "{}: unexpected fast-tier lint {v}",
+                a.name
+            );
+        }
+    }
+    // The falplus forward's main-block attention all-reduces are now
+    // chunk drains: labels carry a `.c{i}` suffix, and the bare `.ar.*`
+    // label has moved to the (non-comm) gather node.
+    let a = find(&audits, "tp2.falplus.fwd");
+    let chunk_drains = a
+        .report
+        .comm
+        .iter()
+        .filter(|c| c.label.contains(".ar.attn.c"))
+        .count();
+    assert!(
+        chunk_drains >= 2,
+        "{}: expected per-chunk attn all-reduce drains, got comm {:?}",
+        a.name,
+        a.report.comm.iter().map(|c| &c.label).collect::<Vec<_>>()
+    );
+    assert!(
+        !a.report.comm.iter().any(|c| c.label.ends_with(".ar.attn")),
+        "{}: unchunked attn all-reduce leaked into the fast tier",
+        a.name
     );
 }

@@ -1,0 +1,204 @@
+//! Tolerance contract of the `fast` kernel tier (`--kernels fast` /
+//! `FAL_KERNELS=fast`) against the bit-exact `exact` tier.
+//!
+//! The fast tier trades the exact tier's fixed accumulation order for
+//! SIMD-width multi-accumulator reductions, a Padé tanh and bf16 storage,
+//! so it is *not* bit-identical to exact — but it must stay (a) within
+//! per-kernel atol/rtol bounds of the exact result, (b) deterministic in
+//! itself at every thread count and schedule, and (c) close enough that a
+//! short training run's loss trajectory tracks the exact tier. Chunked
+//! all-reduces (the fast tier's comm shape) must be bitwise identical to
+//! the unchunked collective with chunk-count-invariant ledger accounting.
+
+use fal::config::{TrainConfig, Variant, PCIE_GEN4};
+use fal::coordinator::collectives::{chunk_row_ranges, CommLedger};
+use fal::coordinator::tp_trainer::TpTrainer;
+use fal::data::{Corpus, CorpusSpec, Loader};
+use fal::runtime::native::kernels::{
+    gelu, layernorm, matmul, matmul_nt, softmax_rows,
+};
+use fal::runtime::{ExecCtx, KernelTier, NativeBackend};
+use fal::tensor::{bf16_round, DType, HostTensor};
+use fal::util::rng::Rng;
+
+const THREADS: [usize; 4] = [1, 2, 4, 7];
+
+fn exact(t: usize) -> ExecCtx {
+    ExecCtx::new(t).with_kernels(KernelTier::Exact)
+}
+
+fn fast(t: usize) -> ExecCtx {
+    ExecCtx::new(t).with_kernels(KernelTier::Fast)
+}
+
+/// Assert `got` is within `atol + rtol * |want|` of `want`, elementwise.
+fn assert_close(got: &HostTensor, want: &HostTensor, atol: f32, rtol: f32, what: &str) {
+    assert_eq!(got.shape, want.shape, "{what}: shape mismatch");
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        let bound = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= bound,
+            "{what}[{i}]: fast {g} vs exact {w} (bound {bound})"
+        );
+    }
+}
+
+fn bits(t: &HostTensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn fast_matmul_family_tolerance_and_thread_invariance() {
+    let mut rng = Rng::new(11);
+    let a = HostTensor::randn(&[3, 17, 29], 1.0, &mut rng);
+    let b = HostTensor::randn(&[29, 13], 1.0, &mut rng);
+    let bt = HostTensor::randn(&[13, 29], 1.0, &mut rng);
+    let mm_ref = matmul(&exact(1), &a, &b);
+    let nt_ref = matmul_nt(&exact(1), &a, &bt);
+    // k=29 at unit-variance inputs: reassociation error stays well under
+    // 1e-4 absolute / 1e-5 relative.
+    let (mm_bits, nt_bits) = (
+        bits(&matmul(&fast(1), &a, &b)),
+        bits(&matmul_nt(&fast(1), &a, &bt)),
+    );
+    for t in THREADS {
+        let mm = matmul(&fast(t), &a, &b);
+        let nt = matmul_nt(&fast(t), &a, &bt);
+        assert_close(&mm, &mm_ref, 1e-4, 1e-5, "matmul");
+        assert_close(&nt, &nt_ref, 1e-4, 1e-5, "matmul_nt");
+        // The fast tier is still deterministic per tier: identical bits
+        // at every thread count (lane count fixed, partition-independent).
+        assert_eq!(bits(&mm), mm_bits, "fast matmul drifts at t={t}");
+        assert_eq!(bits(&nt), nt_bits, "fast matmul_nt drifts at t={t}");
+    }
+}
+
+#[test]
+fn fast_elementwise_kernels_within_tolerance() {
+    let mut rng = Rng::new(23);
+    let x = HostTensor::randn(&[5, 9, 33], 1.5, &mut rng);
+    let g = HostTensor::randn(&[33], 0.3, &mut rng);
+    let b = HostTensor::randn(&[33], 0.1, &mut rng);
+    let gelu_ref = gelu(&exact(1), &x);
+    let ln_ref = layernorm(&exact(1), &x, &g, &b);
+    let sm_ref = softmax_rows(&exact(1), &x);
+    for t in THREADS {
+        // gelu: the Padé tanh is within 2e-4 of libm tanh, and the GeLU
+        // prefactor halves it.
+        assert_close(&gelu(&fast(t), &x), &gelu_ref, 2e-4, 1e-4, "gelu");
+        // layernorm: mean/variance via lane-split sums — pure
+        // reassociation noise on 33-element rows.
+        assert_close(
+            &layernorm(&fast(t), &x, &g, &b),
+            &ln_ref,
+            1e-5,
+            1e-5,
+            "layernorm",
+        );
+        // softmax: exp is shared; only the denominator sum reassociates.
+        assert_close(
+            &softmax_rows(&fast(t), &x),
+            &sm_ref,
+            1e-6,
+            1e-5,
+            "softmax_rows",
+        );
+    }
+}
+
+#[test]
+fn bf16_round_trip_bounds() {
+    // RNE to bf16's 7 explicit mantissa bits: relative error ≤ 2^-8 =
+    // 1/256 for normal values, exact on values already representable.
+    let mut rng = Rng::new(5);
+    let t = HostTensor::randn(&[64], 3.0, &mut rng);
+    let q = t.bf16();
+    assert_eq!(q.dtype, DType::Bf16);
+    assert_eq!(q.size_bytes(), t.size_bytes() / 2);
+    for (v, w) in t.data.iter().zip(&q.data) {
+        assert!(
+            (v - w).abs() <= v.abs() / 256.0,
+            "bf16 round {v} -> {w} out of bounds"
+        );
+    }
+    for v in [0.0f32, -1.0, 2.0, 0.5, 1.0 + 1.0 / 128.0, f32::INFINITY] {
+        assert_eq!(bf16_round(v), v, "representable value must be exact");
+    }
+    assert!(bf16_round(f32::NAN).is_nan());
+}
+
+#[test]
+fn chunked_allreduce_matches_unchunked_and_accounting_is_chunk_invariant() {
+    let mut rng = Rng::new(41);
+    let parts: Vec<HostTensor> = (0..4)
+        .map(|_| HostTensor::randn(&[19, 23], 1.0, &mut rng))
+        .collect();
+    let refs: Vec<&HostTensor> = parts.iter().collect();
+    let ctx = exact(4);
+    let base_l = CommLedger::new(PCIE_GEN4, 4);
+    let want = base_l.all_reduce_refs(&ctx, &refs);
+    for chunks in [1, 2, 3, 5, 64] {
+        let l = CommLedger::new(PCIE_GEN4, 4);
+        let got = l.all_reduce_chunked(&ctx, &refs, chunks);
+        // Chunking only splits rows across comm nodes; per-element the
+        // reduction is the same ascending-rank sum — bitwise equal.
+        assert_eq!(bits(&got), bits(&want), "chunks={chunks}");
+        assert_eq!(got.shape, want.shape);
+        // One step's ledger story (count, bytes, modeled secs) must not
+        // depend on how many wire chunks carried it.
+        assert_eq!(l.stats(), base_l.stats(), "chunks={chunks}");
+    }
+    // Degenerate payloads: fewer rows than chunks, single row.
+    for rows in [1usize, 3] {
+        let p: Vec<HostTensor> = (0..2)
+            .map(|_| HostTensor::randn(&[rows, 7], 1.0, &mut rng))
+            .collect();
+        let pr: Vec<&HostTensor> = p.iter().collect();
+        let l = CommLedger::new(PCIE_GEN4, 2);
+        let got = l.all_reduce_chunked(&ctx, &pr, 8);
+        let want = CommLedger::new(PCIE_GEN4, 2).all_reduce_refs(&ctx, &pr);
+        assert_eq!(bits(&got), bits(&want), "rows={rows}");
+    }
+    let covered: usize = chunk_row_ranges(19, 4).iter().map(|r| r.len()).sum();
+    assert_eq!(covered, 19);
+}
+
+#[test]
+fn fast_tier_loss_trajectory_tracks_exact() {
+    // Short TP train run (which also exercises the fast tier's chunked
+    // all-reduce graph nodes): the fast tier's per-step loss must track
+    // the exact tier within a small relative divergence bound.
+    let run = |tier: KernelTier| -> Vec<f32> {
+        let eng = NativeBackend::synthetic_with_ctx(
+            ExecCtx::new(4).with_kernels(tier),
+        );
+        let cfg = fal::runtime::Backend::manifest(&eng)
+            .config("tiny")
+            .unwrap()
+            .clone();
+        let corpus = Corpus::generate(
+            CorpusSpec::for_vocab(cfg.vocab_size), 20_000, 3);
+        let mut loader = Loader::new(&corpus, cfg.seq_len, 4, 0.1, 7);
+        let mut t = TpTrainer::new(
+            &eng, "tiny", Variant::Fal, 2, PCIE_GEN4,
+            TrainConfig::default(),
+        )
+        .unwrap();
+        (0..4)
+            .map(|_| {
+                let b = loader.next_train();
+                t.train_step(&b).unwrap().0
+            })
+            .collect()
+    };
+    let le = run(KernelTier::Exact);
+    let lf = run(KernelTier::Fast);
+    for (i, (e, f)) in le.iter().zip(&lf).enumerate() {
+        assert!(f.is_finite(), "fast loss diverged at step {i}");
+        let rel = (e - f).abs() / e.abs().max(1e-6);
+        assert!(
+            rel < 2e-2,
+            "step {i}: exact {e} vs fast {f} (rel {rel})"
+        );
+    }
+}

@@ -38,7 +38,9 @@ pub struct GraphAudit {
 }
 
 /// Deterministic synthetic token batch of `b` rows × `s` positions.
-fn token_batch(b: usize, s: usize, vocab: usize) -> Batch {
+/// Shared with the planner's validation pass so both execute the exact
+/// same inputs through the trainers.
+pub(crate) fn token_batch(b: usize, s: usize, vocab: usize) -> Batch {
     let toks: Vec<i32> =
         (0..b * s).map(|i| ((i * 7 + 3) % vocab) as i32).collect();
     let tgts: Vec<i32> =
@@ -143,6 +145,56 @@ pub fn audit_registered_graphs(engine: &dyn Backend) -> Result<Vec<GraphAudit>> 
             name: "block.fal_fused.bwd".into(),
             report: audit(&spec, &trace),
         });
+    }
+
+    // The planner's top executable pick on the default tiny grid: the
+    // exact schedule `fal plan` would execute first is captured and
+    // audited under its plan key, so the auditor's contracts cover the
+    // search output, not just hand-enumerated layouts.
+    {
+        let cfg = engine.manifest().config("tiny")?.clone();
+        let cluster = super::planner::ClusterSpec::pcie_3090(4);
+        let plan = super::planner::plan(
+            &cfg,
+            &cluster,
+            4,
+            super::planner::DEFAULT_VARIANTS,
+        );
+        if let Some(pick) = plan.executable_picks(1).first() {
+            let l = pick.layout;
+            let prefix = format!("plan.top1.{}", l.key());
+            if l.pp == 1 {
+                let mut t = TpTrainer::new(
+                    engine,
+                    "tiny",
+                    l.variant,
+                    l.tp,
+                    PCIE_GEN4,
+                    TrainConfig::default(),
+                )?;
+                t.comm_sim_scale = 1.0;
+                let b =
+                    token_batch(t.batch, t.cfg.seq_len, t.cfg.vocab_size);
+                for (name, spec, trace) in t.captured_graphs(&b)? {
+                    out.push(GraphAudit {
+                        name: format!("{prefix}.{name}"),
+                        report: audit(&spec, &trace),
+                    });
+                }
+            } else {
+                let mut t =
+                    PpTrainer::new(engine, "tiny", l.pp, l.micro, PCIE_GEN4)?;
+                t.comm_sim_scale = 1.0;
+                t.pp_sched = l.pp_sched;
+                let b =
+                    token_batch(t.batch, t.cfg.seq_len, t.cfg.vocab_size);
+                let (name, spec, trace) = t.captured_step_graph(&b)?;
+                out.push(GraphAudit {
+                    name: format!("{prefix}.{name}"),
+                    report: audit(&spec, &trace),
+                });
+            }
+        }
     }
 
     Ok(out)

@@ -43,7 +43,7 @@ use anyhow::{bail, Context, Result};
 use crate::config::{GpuSpec, LinkSpec, ModelConfig, TrainConfig, Variant};
 use crate::costmodel::{
     activation_bytes, block_cost, broadcast_time, compute_time,
-    ring_allreduce_time,
+    ring_allreduce_time, small_batch_gemm_util, STATE_BYTES,
 };
 use crate::data::Batch;
 use crate::runtime::{
@@ -65,10 +65,6 @@ pub struct ParallelCost {
     /// Peak per-GPU memory, bytes (params + optimizer + activations).
     pub mem_bytes: f64,
 }
-
-/// Parameter-state bytes per parameter for mixed-precision AdamW
-/// (fp16 weight + fp32 master + two fp32 moments + fp16 grad).
-const STATE_BYTES: f64 = 2.0 + 4.0 + 4.0 + 4.0 + 2.0;
 
 fn model_flops_fwd(cfg: &ModelConfig, batch: usize) -> f64 {
     let c = block_cost(cfg, batch, true);
@@ -124,8 +120,7 @@ pub fn pp_cost(
     // GPipe's Achilles heel on GPUs: GEMMs on few rows run far below peak
     // tensor-core efficiency, so stage compute is deflated by a row-count
     // utilization factor (rows / 2048 saturates a 3090-class GPU).
-    let rows = (micro_batch * cfg.seq_len) as f64;
-    let util = (rows / 2048.0).min(1.0).max(0.05);
+    let util = small_batch_gemm_util(micro_batch * cfg.seq_len);
     let stage_fwd = compute_time(
         model_flops_fwd(cfg, micro_batch) / t as f64,
         model_bytes_fwd(cfg, micro_batch) / t as f64,

@@ -17,6 +17,9 @@
 //! * [`serve`] — KV-cache autoregressive decoding with continuous
 //!   batching (`fal serve`): the rank-sharded decode step as a StageGraph
 //!   plus a deterministic virtual-clock request simulation.
+//! * [`planner`] — `fal plan`: auto-parallelism layout search
+//!   (dp × tp × pp × micro × sched × variant) against the costmodel,
+//!   Pareto pruning, and execution-backed validation of the top picks.
 //!
 //! # The invariants the coordinator rests on
 //!
@@ -47,6 +50,7 @@ pub mod collectives;
 pub mod dp_pp;
 pub mod optim;
 pub mod overlap;
+pub mod planner;
 pub mod serve;
 pub mod sp_trainer;
 pub mod topology;

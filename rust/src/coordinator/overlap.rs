@@ -140,4 +140,83 @@ mod tests {
         assert!(after.occupancy >= before.occupancy);
         assert!(after.compute_util <= 1.0 && after.mem_util <= 1.0);
     }
+
+    use crate::util::proptest::{vec_f32, Prop};
+
+    /// Decode four generated magnitudes into an (attn, mlp) phase pair.
+    fn pair(v: &[f32]) -> (Phases, Phases) {
+        let g = |i: usize| v.get(i).copied().unwrap_or(0.0).abs() as f64;
+        (
+            Phases { compute: g(0), memory: g(1) },
+            Phases { compute: g(2), memory: g(3) },
+        )
+    }
+
+    #[test]
+    fn overlap_block_phase_algebra_holds_everywhere() {
+        // The two-machine flow-shop algebra, as properties: the makespan
+        // is exactly the max of the four bounds, sits between serial/2
+        // and serial, and never undercuts either module's own chain.
+        Prop::new(300).check(
+            "overlap_block bounds",
+            |r| vec_f32(r, 4, 2.0),
+            |v| {
+                let (a, m) = pair(v);
+                let t = overlap_block(a, m);
+                let lower_bounds = (a.compute + m.compute)
+                    .max(a.memory + m.memory)
+                    .max(a.serial())
+                    .max(m.serial());
+                t.overlapped == lower_bounds
+                    && t.serial == a.serial() + m.serial()
+                    && t.overlapped <= t.serial + 1e-12
+                    && t.serial <= 2.0 * t.overlapped + 1e-12
+                    && t.overlapped + 1e-12 >= a.serial()
+                    && t.overlapped + 1e-12 >= m.serial()
+            },
+        );
+    }
+
+    #[test]
+    fn overlap_block_is_commutative() {
+        // Two streams on one device have no privileged order: swapping
+        // MHA and MLP must not change either timing.
+        Prop::new(300).check(
+            "overlap_block(a, m) == overlap_block(m, a)",
+            |r| vec_f32(r, 4, 2.0),
+            |v| {
+                let (a, m) = pair(v);
+                let ab = overlap_block(a, m);
+                let ba = overlap_block(m, a);
+                ab.serial == ba.serial && ab.overlapped == ba.overlapped
+            },
+        );
+    }
+
+    #[test]
+    fn counters_bounded_and_never_degrade_under_overlap() {
+        // Shrinking the window (serial -> overlapped makespan) can only
+        // raise busy fractions, and every counter stays within [0, 1].
+        Prop::new(300).check(
+            "counter gains bounded and monotone",
+            |r| vec_f32(r, 4, 2.0),
+            |v| {
+                let (a, m) = pair(v);
+                if a.serial() + m.serial() <= 0.0 {
+                    return true; // zero-work window is undefined
+                }
+                let (before, after) = counter_gains(a, m);
+                let bounded = |c: &Counters| {
+                    (0.0..=1.0).contains(&c.compute_util)
+                        && (0.0..=1.0).contains(&c.mem_util)
+                        && (0.0..=1.0).contains(&c.occupancy)
+                };
+                bounded(&before)
+                    && bounded(&after)
+                    && after.compute_util + 1e-12 >= before.compute_util
+                    && after.mem_util + 1e-12 >= before.mem_util
+                    && after.occupancy + 1e-12 >= before.occupancy
+            },
+        );
+    }
 }

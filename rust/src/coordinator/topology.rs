@@ -264,4 +264,96 @@ mod tests {
         assert_eq!(flat.len(), p.order.len());
         assert_eq!(flat[0], p.by_name[&p.order[0]]);
     }
+
+    #[test]
+    fn from_flat_to_flat_is_identity() {
+        // from_flat ∘ to_flat reproduces every tensor in schema order —
+        // the contract the trainers rely on when feeding full-model
+        // artifacts back through NamedParams.
+        let p = toy_params(2, 8, 16, 32, 8);
+        let flat = p.to_flat();
+        let schema: Vec<ParamSpec> = p
+            .order
+            .iter()
+            .zip(&flat)
+            .map(|(n, t)| ParamSpec { name: n.clone(), shape: t.shape.clone() })
+            .collect();
+        let p2 = NamedParams::from_flat(&schema, flat.clone());
+        assert_eq!(p2.order, p.order);
+        assert_eq!(p2.to_flat(), flat);
+        for n in &p.order {
+            assert_eq!(p2.by_name[n], p.by_name[n], "{n}");
+        }
+    }
+
+    #[test]
+    fn shard_roundtrip_every_field_at_every_tp() {
+        // Full shard-layout round-trip: every sharded matrix reassembles
+        // bit-exactly from its slices, every replicated tensor is carried
+        // whole on every shard, and the b2-on-shard-0 convention holds
+        // (shard 0 owns the full bias, the rest hold zeros, so the
+        // post-all-reduce sum equals the unsharded bias exactly once).
+        let p = toy_params(2, 16, 32, 64, 8);
+        let cfg = toy_cfg(16, 4, 32);
+        for tp in [1usize, 2, 4] {
+            let dims = shard_dims(&cfg, tp).unwrap();
+            for layer in 0..2 {
+                let shards = shard_block(&p, layer, dims).unwrap();
+                assert_eq!(shards.len(), tp);
+                // Column-sharded: wq by d_attn, wk/wv by d_kv, w1 by d_ff.
+                for (field, idx, width, cols) in [
+                    ("wq", 2usize, dims.d_attn, true),
+                    ("wk", 3, dims.d_kv, true),
+                    ("wv", 4, dims.d_kv, true),
+                    ("wo", 5, dims.d_attn, false), // row-sharded
+                ] {
+                    let full = p.blk(layer, field).unwrap();
+                    let mut re = HostTensor::zeros(&full.shape);
+                    for (r, s) in shards.iter().enumerate() {
+                        if cols {
+                            scatter_cols(&mut re, &s.attn[idx], r * width);
+                        } else {
+                            scatter_rows(&mut re, &s.attn[idx], r * width);
+                        }
+                    }
+                    assert_eq!(re, *full, "{field} tp {tp} layer {layer}");
+                }
+                let w1 = p.blk(layer, "w1").unwrap();
+                let mut re = HostTensor::zeros(&w1.shape);
+                for (r, s) in shards.iter().enumerate() {
+                    scatter_cols(&mut re, &s.mlp[2], r * dims.d_ff);
+                }
+                assert_eq!(re, *w1, "w1 tp {tp}");
+                let w2 = p.blk(layer, "w2").unwrap();
+                let mut re = HostTensor::zeros(&w2.shape);
+                for (r, s) in shards.iter().enumerate() {
+                    scatter_rows(&mut re, &s.mlp[4], r * dims.d_ff);
+                }
+                assert_eq!(re, *w2, "w2 tp {tp}");
+                let b1 = p.blk(layer, "b1").unwrap();
+                let mut re = HostTensor::zeros(&b1.shape);
+                for (r, s) in shards.iter().enumerate() {
+                    scatter_1d(&mut re, &s.mlp[3], r * dims.d_ff);
+                }
+                assert_eq!(re, *b1, "b1 tp {tp}");
+                // Replicated: LN params identical on every shard.
+                for s in &shards {
+                    assert_eq!(s.attn[0], *p.blk(layer, "ln1_g").unwrap());
+                    assert_eq!(s.attn[1], *p.blk(layer, "ln1_b").unwrap());
+                    assert_eq!(s.mlp[0], *p.blk(layer, "ln2_g").unwrap());
+                    assert_eq!(s.mlp[1], *p.blk(layer, "ln2_b").unwrap());
+                    assert_eq!(s.lnf[0], *p.blk(layer, "lnf_g").unwrap());
+                    assert_eq!(s.lnf[1], *p.blk(layer, "lnf_b").unwrap());
+                }
+                // b2 convention: shard 0 full, others zero, sum exact.
+                let b2 = p.blk(layer, "b2").unwrap();
+                assert_eq!(shards[0].mlp[5], *b2);
+                let mut sum = HostTensor::zeros(&b2.shape);
+                for s in &shards {
+                    sum.add_assign(&s.mlp[5]);
+                }
+                assert_eq!(sum, *b2, "b2 shard sum tp {tp}");
+            }
+        }
+    }
 }

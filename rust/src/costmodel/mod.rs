@@ -24,6 +24,9 @@ pub const GEMM_EFF: f64 = 0.45;
 pub const MEM_EFF: f64 = 0.70;
 /// Activation/weight element size (mixed-precision training).
 pub const ELEM: f64 = 2.0;
+/// Optimizer-state bytes per parameter under mixed-precision AdamW:
+/// f16 weight + f32 master copy + two f32 moments + f16 gradient.
+pub const STATE_BYTES: f64 = 2.0 + 4.0 + 4.0 + 4.0 + 2.0;
 
 /// Per-block FLOP and byte accounting for one token-batch.
 #[derive(Debug, Clone, Copy)]
@@ -135,6 +138,25 @@ pub fn block_compute_time(
 pub fn compute_time(flops: f64, bytes: f64, gpu: &GpuSpec) -> f64 {
     flops / (gpu.tensor_tflops * 1e12 * GEMM_EFF)
         + bytes / (gpu.mem_bw_gbs * 1e9 * MEM_EFF)
+}
+
+/// Achievable fraction of [`GEMM_EFF`] when a GEMM's row count (tokens in
+/// the micro-batch) is small: below ~2k rows the tensor cores starve, so
+/// micro-batching a pipeline is not free. Linear ramp to 1.0 at 2048 rows,
+/// floored at 5% (tiny configs still make progress).
+pub fn small_batch_gemm_util(rows: usize) -> f64 {
+    (rows as f64 / 2048.0).clamp(0.05, 1.0)
+}
+
+/// Total training-step GEMM FLOPs (fwd + bwd, bwd = 2x fwd) for the whole
+/// model at `batch`: per-block attention + MLP GEMMs plus the unsharded
+/// LM head. The testbed-calibration anchor of `fal plan` — a measured
+/// zero-comm step wall divided by this count gives seconds/FLOP.
+pub fn step_flops(cfg: &ModelConfig, batch: usize) -> f64 {
+    let c = block_cost(cfg, batch, true);
+    let t = (batch * cfg.seq_len) as f64;
+    let head = 2.0 * t * cfg.d_model as f64 * cfg.vocab_size as f64;
+    3.0 * ((c.attn_flops + c.mlp_flops) * cfg.n_layer as f64 + head)
 }
 
 #[cfg(test)]

@@ -9,8 +9,9 @@ use crate::config::{GpuSpec, LinkSpec, ModelConfig, Variant};
 use crate::coordinator::overlap::{overlap_block, Phases};
 
 use super::{
-    activation_bytes, block_cost, compute_time, ring_allreduce_time,
-    BlockCost, ELEM, GEMM_EFF, MEM_EFF,
+    activation_bytes, block_cost, broadcast_time, compute_time,
+    ring_allreduce_time, small_batch_gemm_util, BlockCost, ELEM, GEMM_EFF,
+    MEM_EFF, STATE_BYTES,
 };
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -270,6 +271,115 @@ pub fn one_f_one_b_peak_stash(stages: usize, micro: usize) -> usize {
     micro.max(1).min(stages.max(1))
 }
 
+/// Composite step-time estimate for one (dp × tp × pp × micro × sched)
+/// parallel layout — the quantity `fal plan` ranks.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayoutTime {
+    /// Per-device busy compute across all micro-batches, deflated by the
+    /// small-micro-batch GEMM-utilization penalty.
+    pub compute: f64,
+    /// Link seconds before any overlap hiding: TP activation all-reduces
+    /// + pipeline boundary hand-offs + the DP gradient all-reduce.
+    pub raw_comm: f64,
+    /// Comm left on the critical path after overlap hiding.
+    pub exposed_comm: f64,
+    /// Fraction of `raw_comm` the overlap schedule is predicted to hide.
+    pub hidden_fraction: f64,
+    /// Pipeline fill/drain idle share, (pp−1)/(m+pp−1).
+    pub bubble_fraction: f64,
+    /// End-to-end step seconds: (compute + exposed comm) inflated by the
+    /// pipeline staircase.
+    pub step: f64,
+}
+
+/// Step time of one full parallel layout: `dp` replicas × `tp`-way tensor
+/// sharding × `pp` pipeline stages running `micro` micro-batches, with or
+/// without comm/compute `overlap`. Composes the per-micro-batch
+/// [`train_step_time`] (TP compute + all-reduces at the micro-batch size),
+/// the small-GEMM utilization penalty micro-batching pays, the α–β
+/// boundary-send and DP gradient-all-reduce terms, the
+/// [`predicted_hidden_fraction`] overlap bound, and the
+/// [`pipeline_bubble_fraction`] staircase inflation.
+#[allow(clippy::too_many_arguments)]
+pub fn layout_step_time(
+    cfg: &ModelConfig,
+    variant: Variant,
+    gpu: &GpuSpec,
+    link: &LinkSpec,
+    dp: usize,
+    tp: usize,
+    pp: usize,
+    micro: usize,
+    overlap: bool,
+    batch: usize,
+) -> LayoutTime {
+    let (dp, tp, pp) = (dp.max(1), tp.max(1), pp.max(1));
+    let m = micro.max(1);
+    let per_replica = (batch / dp).max(1);
+    let micro_batch = (per_replica / m).max(1);
+    // Full-model cost of ONE micro-batch at this tp degree; each pipeline
+    // stage owns 1/pp of the layer stack.
+    let st = train_step_time(cfg, variant, gpu, link, tp, micro_batch, true);
+    let util = small_batch_gemm_util(micro_batch * cfg.seq_len);
+    let m_f = m as f64;
+    let compute =
+        m_f * (st.fwd_compute + st.bwd_compute + st.other) / util / pp as f64;
+    // Pipeline boundary hand-offs: one activation forward + one gradient
+    // backward per (micro-batch, stage boundary).
+    let act = activation_bytes(cfg, micro_batch);
+    let p2p = 2.0 * (m * (pp - 1)) as f64 * broadcast_time(act, 2, link);
+    // Data-parallel gradient all-reduce of this device's parameter slice.
+    let dp_bytes = cfg.n_params as f64 * ELEM / (tp * pp) as f64;
+    let dp_comm = ring_allreduce_time(dp_bytes, dp, link);
+    let raw_comm = m_f * st.comm / pp as f64 + p2p + dp_comm;
+    let hidden_fraction = if overlap {
+        predicted_hidden_fraction(compute, raw_comm)
+    } else {
+        0.0
+    };
+    let exposed_comm = raw_comm * (1.0 - hidden_fraction);
+    let bubble_fraction = pipeline_bubble_fraction(pp, m);
+    // Busy time inflated by the fill/drain staircase: busy / (1 − bubble).
+    let step = (compute + exposed_comm) * (m_f + pp as f64 - 1.0) / m_f;
+    LayoutTime {
+        compute,
+        raw_comm,
+        exposed_comm,
+        hidden_fraction,
+        bubble_fraction,
+        step,
+    }
+}
+
+/// Peak per-device memory gauge for one layout: the AdamW parameter state
+/// of the device's 1/(tp·pp) parameter slice ([`STATE_BYTES`]/param) plus
+/// the live activation stashes its pipeline linearization holds —
+/// `peak_stash` micro-batches × ~8 [B_micro, S, D] tensors per block for
+/// the stage's n_layer/pp blocks (the `coordinator::dp_pp` accounting).
+pub fn layout_peak_mem_bytes(
+    cfg: &ModelConfig,
+    tp: usize,
+    pp: usize,
+    micro: usize,
+    per_replica_batch: usize,
+    one_f_one_b: bool,
+) -> f64 {
+    let (tp, pp) = (tp.max(1), pp.max(1));
+    let m = micro.max(1);
+    let micro_batch = (per_replica_batch / m).max(1);
+    let stash = if one_f_one_b {
+        one_f_one_b_peak_stash(pp, m)
+    } else {
+        gpipe_peak_stash(pp, m)
+    };
+    let layers_per_stage = (cfg.n_layer / pp).max(1) as f64;
+    cfg.n_params as f64 * STATE_BYTES / (tp * pp) as f64
+        + stash as f64
+            * 8.0
+            * activation_bytes(cfg, micro_batch)
+            * layers_per_stage
+}
+
 /// Single-GPU tokens/sec (Fig 8a): TP=1, no interconnect.
 pub fn single_gpu_throughput(
     cfg: &ModelConfig,
@@ -470,6 +580,53 @@ mod tests {
         let dtyped = decode_step_time_dtyped(
             &c, Variant::PreLn, &H200, &NVLINK, 4, 8, 512, ELEM, ELEM);
         assert_eq!(default.total(), dtyped.total());
+    }
+
+    #[test]
+    fn layout_step_time_composes_the_primitives() {
+        let c = cfg("774M");
+        // Pure-TP layout degenerates to train_step_time (util = 1 at a
+        // full batch): compute matches, no bubble, serial exposes all.
+        let st = train_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 4, 8, true);
+        let lt = layout_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 1, 4, 1, 1, false, 8);
+        let util = crate::costmodel::small_batch_gemm_util(8 * c.seq_len);
+        let want = (st.fwd_compute + st.bwd_compute + st.other) / util;
+        assert!((lt.compute - want).abs() < 1e-12 * want.max(1.0));
+        assert_eq!(lt.bubble_fraction, 0.0);
+        assert_eq!(lt.hidden_fraction, 0.0);
+        assert!((lt.raw_comm - st.comm).abs() < 1e-15);
+        // Overlap never exposes more comm than serial; step reflects it.
+        let ov = layout_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 1, 4, 1, 1, true, 8);
+        assert!(ov.exposed_comm <= lt.exposed_comm);
+        assert!(ov.step <= lt.step);
+        assert_eq!(ov.raw_comm, lt.raw_comm);
+        // Pipelining pays the staircase: bubble matches the formula.
+        let pp = layout_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 1, 1, 4, 4, false, 8);
+        assert_eq!(pp.bubble_fraction, pipeline_bubble_fraction(4, 4));
+        assert!(pp.raw_comm > 0.0); // boundary sends even at tp=1
+        // More micro-batches shrink the staircase inflation.
+        let pp8 = layout_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 1, 1, 4, 8, false, 8);
+        assert!(pp8.bubble_fraction < pp.bubble_fraction);
+    }
+
+    #[test]
+    fn layout_peak_mem_shrinks_with_sharding() {
+        let c = cfg("774M");
+        let m1 = layout_peak_mem_bytes(&c, 1, 1, 1, 8, false);
+        let m4 = layout_peak_mem_bytes(&c, 4, 1, 1, 8, false);
+        assert!(m4 < m1);
+        // 1F1B's bounded stash beats GPipe's at deep micro-batching.
+        let gpipe = layout_peak_mem_bytes(&c, 1, 2, 8, 8, false);
+        let ofob = layout_peak_mem_bytes(&c, 1, 2, 8, 8, true);
+        assert!(ofob < gpipe);
+        // State term alone matches the shared constant.
+        let state_only = c.n_params as f64 * crate::costmodel::STATE_BYTES;
+        assert!(m1 > state_only);
     }
 
     #[test]

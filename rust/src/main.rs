@@ -6,6 +6,7 @@
 //! fal tp --config small --variant fal --tp 2 [--steps 10] [--threads N] [--sched M] [--kernels K] [--compress qsgd|powersgd] [--comm-sim S]
 //! fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps 4] [--threads N] [--sched M] [--comm-sim S]
 //! fal serve --config tiny --variant fal --tp 2 [--requests 200] [--rate R] [--seed S] [--threads N] [--sched M] [--kernels K] [--comm-sim S]
+//! fal plan --config tiny [--gpus 4] [--gpu rtx3090] [--link pcie4] [--batch B] [--top K] [--steps N] [--comm-sim S] [--tol T]
 //! fal audit           # statically verify every registered StageGraph
 //! fal list            # artifacts + experiments
 //! ```
@@ -33,14 +34,21 @@
 use std::path::PathBuf;
 
 use anyhow::Result;
-use fal::config::{TrainConfig, Variant, PCIE_GEN4, RTX_3090};
+use fal::config::{
+    TrainConfig, Variant, H200, NVLINK, PCIE_GEN4, RTX_3090, RTX_4090,
+    RTX_A6000,
+};
 use fal::coordinator::dp_pp::{PpSched, PpTrainer};
+use fal::coordinator::planner::{self, ClusterSpec, Layout};
 use fal::coordinator::serve::{poisson_workload, Decoder, ServeEngine};
 use fal::coordinator::sp_trainer::{Schedule, Trainer};
 use fal::coordinator::tp_trainer::TpTrainer;
 use fal::comm::{powersgd::PowerSgd, qsgd::Qsgd, Compressor};
 use fal::experiments::{self, ExpCtx};
-use fal::runtime::{Backend, ExecCtx, KernelTier, NativeBackend, SchedMode};
+use fal::runtime::{
+    Backend, ExecCtx, KernelTier, Manifest, NativeBackend, SchedMode,
+};
+use fal::util::benchkit::{Bench, CaseMeta};
 use fal::util::cli::Args;
 
 fn main() {
@@ -111,13 +119,14 @@ fn run() -> Result<()> {
         return Ok(());
     }
     match args.expect_subcommand(&[
-        "exp", "train", "tp", "pp", "serve", "audit", "list",
+        "exp", "train", "tp", "pp", "serve", "plan", "audit", "list",
     ])? {
         "exp" => cmd_exp(&args),
         "train" => cmd_train(&args),
         "tp" => cmd_tp(&args),
         "pp" => cmd_pp(&args),
         "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
         "audit" => cmd_audit(&args),
         "list" => cmd_list(&args),
         _ => {
@@ -136,6 +145,7 @@ fn print_help() {
          \x20 fal tp --config small --variant fal --tp 2 [--steps N] [--threads N] [--sched M] [--kernels K] [--compress qsgd|powersgd] [--comm-sim S]\n\
          \x20 fal pp --config tiny --stages 2 --micro 2 [--pp-sched gpipe|1f1b] [--steps N] [--threads N] [--sched M] [--comm-sim S]\n\
          \x20 fal serve --config tiny --variant fal --tp 2 [--requests N] [--rate R] [--seed S] [--threads N] [--sched M] [--kernels K] [--comm-sim S]\n\
+         \x20 fal plan --config tiny [--gpus 4] [--gpu rtx3090|rtx4090|rtxa6000|h200] [--link pcie4|nvlink] [--batch B] [--top K] [--steps N] [--comm-sim S] [--tol T]\n\
          \x20 fal audit [--threads N] [--sched M] [--kernels K]\n\
          \x20 fal list\n\
          \n\
@@ -159,6 +169,11 @@ fn print_help() {
          --pp-sched gpipe|1f1b picks the pipeline linearization: same\n\
          cells, same bits, different stash lifetime (gpipe peaks at m\n\
          live stashes per device, 1f1b at the pipeline depth).\n\
+         fal plan ranks every feasible dp/tp/pp/micro/sched/variant\n\
+         layout on a simulated cluster, then executes its --top K picks\n\
+         through the real trainers and fails (exit 1) if predicted vs\n\
+         realized step time diverges beyond --tol (rows land in\n\
+         BENCH_native.json).\n\
          \n\
          Every experiment id runs on the default (native CPU) build — no\n\
          Python, artifacts/ directory, or `--features pjrt` required.\n\
@@ -360,6 +375,128 @@ fn cmd_serve(args: &Args) -> Result<()> {
     for (k, v) in eng.dec.breakdown.entries() {
         println!("  {k:<22} {v:.3}s");
     }
+    Ok(())
+}
+
+/// `fal plan`: enumerate every feasible (dp × tp × pp × micro × sched ×
+/// variant) layout of `--config` on a simulated `--gpus`-device cluster,
+/// score each with the costmodel, prune Pareto-dominated points (step
+/// time × memory gauge) and print the ranked table. Then validate: the
+/// `--top` K executable frontier picks run for real through the
+/// TpTrainer/PpTrainer step schedules at `--comm-sim` link scale, and
+/// predicted-vs-realized step times land as `plan_*` scoreboard rows in
+/// BENCH_native.json. Exit is nonzero if any pick's relative error
+/// exceeds `--tol` — the execution-validated-cost-model contract.
+fn cmd_plan(args: &Args) -> Result<()> {
+    let config = args.str_or("config", "tiny");
+    let gpus = args.usize_or("gpus", 4)?;
+    let gpu = match args.str_or("gpu", "rtx3090").as_str() {
+        "rtx3090" => RTX_3090,
+        "rtx4090" => RTX_4090,
+        "rtxa6000" => RTX_A6000,
+        "h200" => H200,
+        other => anyhow::bail!(
+            "invalid --gpu '{other}' (expected rtx3090|rtx4090|rtxa6000|h200)"
+        ),
+    };
+    let link = match args.str_or("link", "pcie4").as_str() {
+        "pcie4" => PCIE_GEN4,
+        "nvlink" => NVLINK,
+        other => {
+            anyhow::bail!("invalid --link '{other}' (expected pcie4|nvlink)")
+        }
+    };
+    let top = args.usize_or("top", 2)?;
+    let steps = args.usize_or("steps", 3)?;
+    let comm_sim = args.f64_or("comm-sim", 50.0)?;
+    let ctx = exp_ctx(args, 1.0)?;
+    let engine = ctx.engine.as_ref();
+    let cfg = engine.manifest().config(&config)?.clone();
+    // Default batch: the largest registered tp=1 stage bundle — the same
+    // probe the executed trainers use, so the plan and the validation
+    // runs agree on the global batch.
+    let batch = match args.usize_or("batch", 0)? {
+        0 => [8usize, 4, 2]
+            .into_iter()
+            .find(|b| {
+                engine.manifest().artifacts.contains_key(
+                    &Manifest::tp_stage_name(&config, 1, *b, "attn_fwd"),
+                )
+            })
+            .unwrap_or(8),
+        b => b,
+    };
+    let cluster = ClusterSpec { gpus, gpu, link };
+    let mut plan =
+        planner::plan(&cfg, &cluster, batch, planner::DEFAULT_VARIANTS);
+    plan.tolerance = args.f64_or("tol", plan.tolerance)?;
+    print!("{}", plan.render_table().render_text());
+    println!(
+        "ranked {} layouts ({} on the Pareto frontier)",
+        plan.entries.len(),
+        plan.frontier().len()
+    );
+    if top == 0 {
+        return Ok(());
+    }
+
+    let picks: Vec<Layout> =
+        plan.executable_picks(top).iter().map(|e| e.layout).collect();
+    anyhow::ensure!(
+        !picks.is_empty(),
+        "no testbed-executable layout on the frontier"
+    );
+    let v = planner::validate_layouts(engine, &plan, &picks, steps, comm_sim)?;
+    println!();
+    print!("{}", v.render_table().render_text());
+    println!(
+        "rank agreement over {} executed pick(s): {}",
+        v.picks.len(),
+        if v.rank_agreement() { "yes" } else { "no" },
+    );
+
+    // Scoreboard rows: step seconds and the dimensionless rel-err, both
+    // recorded as "seconds" samples (ns_per_iter = value × 1e9).
+    let threads = engine.exec_ctx().threads();
+    let mut bench = Bench::with_iters(1, 0);
+    for p in &v.picks {
+        let key = p.layout.key();
+        bench.record_case(
+            &format!("plan_{config}_step_predicted_{key}_t{threads}"),
+            CaseMeta::new("plan_step_predicted", &format!("{config}/{key}"), threads),
+            &[p.predicted_secs],
+            0.0,
+        );
+        bench.record_case(
+            &format!("plan_{config}_step_realized_{key}_t{threads}"),
+            CaseMeta::new("plan_step_realized", &format!("{config}/{key}"), threads),
+            &[p.realized_secs],
+            0.0,
+        );
+        bench.record_case(
+            &format!("plan_{config}_rel_err_{key}_t{threads}"),
+            CaseMeta::new("plan_rel_err", &format!("{config}/{key}"), threads),
+            &[p.rel_err],
+            0.0,
+        );
+    }
+    let path = bench.write_json_default()?;
+    println!(
+        "scoreboard: {} plan_* rows -> {}",
+        3 * v.picks.len(),
+        path.display()
+    );
+
+    anyhow::ensure!(
+        v.within_tolerance(),
+        "predicted-vs-realized error exceeds tolerance {:.2}: {}",
+        v.tolerance,
+        v.picks
+            .iter()
+            .map(|p| format!("{}={:.3}", p.layout.key(), p.rel_err))
+            .collect::<Vec<_>>()
+            .join(", "),
+    );
     Ok(())
 }
 

@@ -58,6 +58,32 @@ fn registry_covers_every_trainer_schedule() {
 }
 
 #[test]
+fn planner_top_pick_is_registered_and_clean() {
+    // `fal plan`'s top executable pick on the default tiny grid is part
+    // of the audit registry under its plan key — the auditor's
+    // contracts cover the search output, not just hand-picked layouts —
+    // and like every other entry it must be structurally clean.
+    let audits = audits();
+    let picks: Vec<_> = audits
+        .iter()
+        .filter(|a| a.name.starts_with("plan.top1."))
+        .collect();
+    assert!(
+        !picks.is_empty(),
+        "planner top pick missing from the audit registry"
+    );
+    for a in picks {
+        assert_eq!(
+            a.report.hard_count(),
+            0,
+            "{}: hard violations\n{}",
+            a.name,
+            a.report.render(&a.name)
+        );
+    }
+}
+
+#[test]
 fn all_trainer_graphs_are_structurally_clean() {
     // No hard violations anywhere, and no read-discipline lints: every
     // declared data dependency is actually read through Joined, every

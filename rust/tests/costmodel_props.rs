@@ -1,0 +1,230 @@
+//! Property tests for the costmodel primitives `fal plan` ranks with.
+//!
+//! The planner trusts the timemodel blindly — if a primitive violates
+//! its bounds or loses monotonicity, the search silently returns wrong
+//! layouts, so every load-bearing shape gets pinned here: fraction
+//! bounds, step-time monotonicity in batch and model size, the
+//! tp-scaling crossover where the comm term takes over, dtype scaling
+//! of the decode model, and the paper's core inequality (FAL predicts
+//! strictly less TP comm than Pre-LN at every tp ≥ 2).
+
+use fal::config::{
+    ModelConfig, Variant, H200, NVLINK, PCIE_GEN4, RTX_3090,
+};
+use fal::costmodel::timemodel::{
+    decode_step_time_dtyped, layout_peak_mem_bytes, layout_step_time,
+    pipeline_bubble_fraction, predicted_hidden_fraction, train_step_time,
+};
+use fal::util::proptest::Prop;
+
+fn cfg(name: &str) -> ModelConfig {
+    ModelConfig::paper_scale(name).unwrap()
+}
+
+#[test]
+fn hidden_fraction_bounded_and_monotone_in_compute() {
+    Prop::new(300).check(
+        "hidden fraction in [0,1], monotone in compute",
+        |r| (r.below(1_000_000), r.below(1_000_000)),
+        |&(c, m)| {
+            let (c, m) = (c as f64 * 1e-5, m as f64 * 1e-5);
+            let f = predicted_hidden_fraction(c, m);
+            let more = predicted_hidden_fraction(c + 1.0, m);
+            (0.0..=1.0).contains(&f) && more >= f
+        },
+    );
+    // Edge cases the generator can't hit: negative compute clamps to 0,
+    // zero comm means nothing left to hide.
+    assert_eq!(predicted_hidden_fraction(-3.0, 1.0), 0.0);
+    assert_eq!(predicted_hidden_fraction(0.0, 0.0), 1.0);
+}
+
+#[test]
+fn bubble_fraction_bounded_and_monotone() {
+    Prop::new(300).check(
+        "bubble in [0,1), zero iff one stage, monotone both ways",
+        |r| (1 + r.below(64), 1 + r.below(64)),
+        |&(t, m)| {
+            let f = pipeline_bubble_fraction(t, m);
+            (0.0..1.0).contains(&f)
+                && (t != 1 || f == 0.0)
+                && (t == 1 || f > 0.0)
+                && pipeline_bubble_fraction(t + 1, m) >= f
+                && pipeline_bubble_fraction(t, m + 1) <= f
+        },
+    );
+}
+
+#[test]
+fn step_time_monotone_in_batch() {
+    // Doubling the batch must increase every component-total, on both a
+    // compute-rich and a comm-rich system.
+    for (gpu, link) in [(&RTX_3090, &PCIE_GEN4), (&H200, &NVLINK)] {
+        for variant in [Variant::PreLn, Variant::Fal] {
+            let c = cfg("774M");
+            let mut prev = 0.0;
+            for batch in [1usize, 2, 4, 8, 16, 32, 64] {
+                let t = train_step_time(&c, variant, gpu, link, 4, batch, true)
+                    .total();
+                assert!(
+                    t > prev,
+                    "{} batch {batch}: {t} !> {prev}",
+                    variant.name()
+                );
+                prev = t;
+            }
+        }
+    }
+}
+
+#[test]
+fn step_time_monotone_in_model_size() {
+    // The paper's scale ladder is strictly ordered in predicted step
+    // time at fixed (gpu, link, tp, batch).
+    let mut prev = 0.0;
+    for name in ["774M", "1.5B", "2.5B", "8.3B"] {
+        let t = train_step_time(
+            &cfg(name), Variant::PreLn, &H200, &NVLINK, 8, 8, true)
+        .total();
+        assert!(t > prev, "{name}: {t} !> {prev}");
+        prev = t;
+    }
+    // And in depth alone: same width, double the layers.
+    let base = cfg("774M");
+    let mut deep = base.clone();
+    deep.n_layer *= 2;
+    let t_base = train_step_time(
+        &base, Variant::Fal, &RTX_3090, &PCIE_GEN4, 4, 8, true);
+    let t_deep = train_step_time(
+        &deep, Variant::Fal, &RTX_3090, &PCIE_GEN4, 4, 8, true);
+    assert!(t_deep.total() > 1.8 * t_base.total());
+}
+
+#[test]
+fn tp_scaling_crossover_comm_eventually_dominates() {
+    // Per-device compute shrinks ~1/tp while each all-reduce grows with
+    // the ring, so the comm share must rise monotonically with tp and
+    // eventually pass 50% on a PCIe-class link.
+    let c = cfg("774M");
+    let mut prev_share = 0.0;
+    let mut crossed = false;
+    for tp in [2usize, 4, 8, 16] {
+        let st = train_step_time(
+            &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, tp, 8, true);
+        let share = st.comm / st.total();
+        assert!(share > prev_share, "tp {tp}: {share} !> {prev_share}");
+        prev_share = share;
+        crossed |= share > 0.5;
+    }
+    assert!(crossed, "comm never dominated (final share {prev_share:.3})");
+    // Compute itself keeps shrinking: the crossover is structural, not
+    // an artifact of compute growing.
+    let c4 = train_step_time(
+        &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 4, 8, true);
+    let c16 = train_step_time(
+        &c, Variant::PreLn, &RTX_3090, &PCIE_GEN4, 16, 8, true);
+    assert!(c16.fwd_compute < c4.fwd_compute);
+}
+
+#[test]
+fn decode_dtyped_f32_never_faster_than_bf16() {
+    // Halving the storage bytes can only shorten the memory-bound
+    // compute term; comm is activation-typed and must not move.
+    Prop::new(100).check(
+        "f32 decode >= bf16 decode",
+        |r| (1 + r.below(32), 1 + r.below(1024)),
+        |&(batch, kv)| {
+            let c = cfg("1.5B");
+            let f32d = decode_step_time_dtyped(
+                &c, Variant::Fal, &RTX_3090, &PCIE_GEN4, 4, batch, kv,
+                4.0, 4.0,
+            );
+            let bf16 = decode_step_time_dtyped(
+                &c, Variant::Fal, &RTX_3090, &PCIE_GEN4, 4, batch, kv,
+                2.0, 2.0,
+            );
+            f32d.total() >= bf16.total()
+                && f32d.compute > bf16.compute
+                && f32d.comm == bf16.comm
+        },
+    );
+}
+
+#[test]
+fn fal_comm_strictly_below_preln_at_every_tp() {
+    // The paper's Fig 2 inequality, as the cost model prices it: FAL's
+    // 1-AR-per-main-block schedule strictly undercuts Pre-LN's 2 at
+    // every tensor-parallel degree ≥ 2, on every link.
+    for link in [&PCIE_GEN4, &NVLINK] {
+        for tp in 2..=16usize {
+            let c = cfg("774M");
+            let preln = train_step_time(
+                &c, Variant::PreLn, &RTX_3090, link, tp, 8, true);
+            let fal = train_step_time(
+                &c, Variant::Fal, &RTX_3090, link, tp, 8, true);
+            assert!(
+                fal.comm < preln.comm,
+                "tp {tp} on {}: fal {} !< preln {}",
+                link.name,
+                fal.comm,
+                preln.comm
+            );
+            // Compute is identical — the win is pure comm structure.
+            assert!(
+                (fal.comm / preln.comm) < 0.62,
+                "tp {tp}: ratio {:.3} not near the (L+2)/(2L+2) band",
+                fal.comm / preln.comm
+            );
+        }
+    }
+    // tp = 1: no interconnect, both zero.
+    let c = cfg("774M");
+    let solo = train_step_time(
+        &c, Variant::Fal, &RTX_3090, &PCIE_GEN4, 1, 8, true);
+    assert_eq!(solo.comm, 0.0);
+}
+
+#[test]
+fn layout_step_time_invariants() {
+    // The composite the planner ranks: overlap never loses to serial on
+    // the same layout, raw comm is sched-invariant, the bubble matches
+    // the closed form, and the memory gauge orders 1f1b under gpipe.
+    let c = cfg("774M");
+    let grid: Vec<(usize, usize, usize, usize)> = vec![
+        (1, 4, 1, 1),
+        (1, 2, 2, 2),
+        (1, 1, 4, 4),
+        (2, 2, 1, 1),
+        (4, 1, 1, 1),
+        (2, 1, 2, 4),
+    ];
+    for &(dp, tp, pp, micro) in &grid {
+        for variant in [Variant::PreLn, Variant::Fal, Variant::FalPlus] {
+            let serial = layout_step_time(
+                &c, variant, &RTX_3090, &PCIE_GEN4, dp, tp, pp, micro,
+                false, 8,
+            );
+            let overlap = layout_step_time(
+                &c, variant, &RTX_3090, &PCIE_GEN4, dp, tp, pp, micro,
+                true, 8,
+            );
+            assert!(serial.step > 0.0 && serial.compute > 0.0);
+            assert_eq!(serial.hidden_fraction, 0.0);
+            assert_eq!(serial.raw_comm, overlap.raw_comm);
+            assert!(overlap.exposed_comm <= serial.exposed_comm);
+            assert!(overlap.step <= serial.step);
+            assert!((0.0..=1.0).contains(&overlap.hidden_fraction));
+            assert_eq!(
+                serial.bubble_fraction,
+                pipeline_bubble_fraction(pp, micro)
+            );
+            if pp == 1 {
+                assert_eq!(serial.bubble_fraction, 0.0);
+            }
+        }
+        let gpipe = layout_peak_mem_bytes(&c, tp, pp, micro, 8 / dp, false);
+        let ofob = layout_peak_mem_bytes(&c, tp, pp, micro, 8 / dp, true);
+        assert!(ofob <= gpipe, "1f1b gauge above gpipe at pp {pp}");
+        assert!(gpipe > 0.0);
+    }
+}

@@ -38,6 +38,11 @@ KERNEL_FILES = [
     # clock read here would leak nondeterminism into reported numbers.
     "rust/src/runtime/native/decode.rs",
     "rust/src/coordinator/serve.rs",
+    # The planner's ranking path must be a pure function of
+    # (config, cluster, batch): a wall-clock read there would make the
+    # plan table nondeterministic. Only the predicted-vs-realized
+    # validation pass may time real steps (allowlisted site).
+    "rust/src/coordinator/planner.rs",
 ]
 
 # (rule id, compiled regex, scope, human reason)
